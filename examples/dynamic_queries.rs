@@ -1,0 +1,32 @@
+//! Dynamic workload with amortized load balancing — the paper's §IV
+//! "dynamic application with explicit queries": a point database under
+//! insert/delete churn, with Adjustments (Algorithm 1) and the credit
+//! controller (Algorithm 3) deciding when to rebalance.
+//!
+//! ```sh
+//! cargo run --release --example dynamic_queries -- --points 50000 --iters 1000
+//! ```
+
+use sfc_part::cli::Args;
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::dynamic_driver::run_dynamic;
+
+fn main() {
+    let args = Args::parse();
+    let n = args.usize("points", 50_000);
+    let dim = args.usize("dim", 3);
+    let iters = args.usize("iters", 1000);
+    let step = args.usize("step", 100);
+    let bucket = args.usize("bucket", 32);
+
+    println!("initial dataset: {n} uniform points in {dim}-D, BUCKETSIZE={bucket}");
+    println!("running {iters} iterations, insert/delete every {step}, adjustments every {}", 2 * step);
+
+    for threads in args.usize_list("threads", &[1, 2, 4]) {
+        let ps = PointSet::uniform(n, dim, args.u64("seed", 7) as u32);
+        let s = run_dynamic(&ps, iters, step, threads, bucket, args.u64("seed", 7));
+        println!("{s}");
+    }
+    println!("\ncolumns match Table I: build / ins / del / adj accumulated over the run;");
+    println!("'lb' is the time the credit controller chose to spend on full rebalances.");
+}

@@ -1,0 +1,142 @@
+//! k-NN serving over a clustered point cloud (§V-A / Fig 13): the query
+//! router bins and batches queries; candidate windows come from the SFC
+//! bucket index; scoring runs through the PJRT `knn_topk` artifact
+//! (Pallas distance kernel + top-k) with the scalar path as oracle.
+//!
+//! ```sh
+//! cargo run --release --example point_cloud_knn -- --points 100000 --queries 2000
+//! ```
+
+use sfc_part::cli::Args;
+use sfc_part::geom::bbox::BoundingBox;
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::builder::KdTreeBuilder;
+use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use sfc_part::query::knn::{knn_exact, knn_sfc, recall};
+use sfc_part::query::point_location::BucketIndex;
+use sfc_part::runtime::exec::{Engine, KNN_C, KNN_D, KNN_K, KNN_Q};
+use sfc_part::sfc::traverse::assign_sfc;
+use sfc_part::sfc::Curve;
+use sfc_part::util::rng::{Rng, SplitMix64};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.usize("points", 100_000);
+    let nq = args.usize("queries", 2000);
+    let k = args.usize("knn", 3).min(KNN_K);
+    let cutoff = args.usize("cutoff", 1);
+
+    let ps = PointSet::uniform(n, 3, args.u64("seed", 42) as u32);
+    let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+    cfg.dim_rule = DimRule::Cycle;
+    let sw = sfc_part::util::timer::Stopwatch::start();
+    let mut tree = KdTreeBuilder::new().bucket_size(32).splitter(cfg).domain(BoundingBox::unit(3)).threads(4).build(&ps);
+    assign_sfc(&mut tree, Curve::Morton);
+    let index = BucketIndex::from_tree(&tree, BoundingBox::unit(3));
+    println!("indexed {n} points into {} buckets in {:.3}s", index.n_buckets(), sw.secs());
+
+    // Scalar path + recall measurement.
+    let mut rng = SplitMix64::new(7);
+    let queries: Vec<Vec<f64>> = (0..nq)
+        .map(|_| (0..3).map(|_| rng.next_f64()).collect())
+        .collect();
+    let sw = sfc_part::util::timer::Stopwatch::start();
+    let mut results = Vec::with_capacity(nq);
+    for q in &queries {
+        results.push(knn_sfc(&ps, &index, q, k, cutoff));
+    }
+    let scalar_secs = sw.secs();
+    let mut avg_recall = 0.0;
+    for (q, res) in queries.iter().zip(&results).take(50) {
+        avg_recall += recall(res, &knn_exact(&ps, q, k));
+    }
+    println!(
+        "scalar knn: {nq} queries in {:.3}s ({:.0} q/s), recall@{k} (50 sampled) = {:.3}",
+        scalar_secs,
+        nq as f64 / scalar_secs,
+        avg_recall / 50.0
+    );
+
+    // PJRT path: batch KNN_Q queries against fixed candidate windows.
+    match Engine::default_engine() {
+        Err(e) => println!("pjrt path skipped: {e}"),
+        Ok(engine) => {
+            let sw = sfc_part::util::timer::Stopwatch::start();
+            let mut served = 0usize;
+            let mut agree = 0usize;
+            let mut checked = 0usize;
+            // Presort queries along the curve (§V-A's binning) so each
+            // batch's candidate windows overlap heavily, then batch
+            // greedily under the artifact's candidate budget so no
+            // query's window is truncated.
+            let mut sorted_queries = queries.clone();
+            sorted_queries.sort_by_key(|q| {
+                sfc_part::sfc::morton::morton_key_cycling(q, &BoundingBox::unit(3), 30)
+            });
+            let mut batches: Vec<(Vec<&Vec<f64>>, Vec<u32>)> = Vec::new();
+            {
+                let mut cur_q: Vec<&Vec<f64>> = Vec::new();
+                let mut cur_c: Vec<u32> = Vec::new();
+                for q in &sorted_queries {
+                    let w = sfc_part::query::knn::candidate_window(&index, q, cutoff);
+                    let mut merged = cur_c.clone();
+                    merged.extend_from_slice(w);
+                    merged.sort_unstable();
+                    merged.dedup();
+                    if (!cur_q.is_empty() && merged.len() > KNN_C) || cur_q.len() == KNN_Q {
+                        batches.push((std::mem::take(&mut cur_q), std::mem::take(&mut cur_c)));
+                        cur_c = w.to_vec();
+                        cur_c.sort_unstable();
+                        cur_c.dedup();
+                        cur_c.truncate(KNN_C);
+                        cur_q.push(q);
+                    } else {
+                        cur_q.push(q);
+                        cur_c = merged;
+                        cur_c.truncate(KNN_C);
+                    }
+                }
+                if !cur_q.is_empty() {
+                    batches.push((cur_q, cur_c));
+                }
+            }
+            for (chunk, mut cand) in batches {
+                let pad_from = cand.len();
+                while cand.len() < KNN_C {
+                    cand.push(cand[cand.len() % pad_from.max(1)]);
+                }
+                let mut qbuf = vec![0.0f32; KNN_Q * KNN_D];
+                for (i, q) in chunk.iter().enumerate() {
+                    for d in 0..3 {
+                        qbuf[i * KNN_D + d] = q[d] as f32;
+                    }
+                }
+                let mut cbuf = vec![0.0f32; KNN_C * KNN_D];
+                for (i, &pi) in cand.iter().enumerate() {
+                    for d in 0..3 {
+                        cbuf[i * KNN_D + d] = ps.coord(pi as usize, d) as f32;
+                    }
+                }
+                let (_dist, idx) = engine.knn_topk(&qbuf, &cbuf)?;
+                served += chunk.len();
+                // Verify a few against the scalar window result.
+                for (i, q) in chunk.iter().enumerate().take(4) {
+                    let got: std::collections::HashSet<u32> =
+                        idx[i * KNN_K..i * KNN_K + k].iter().map(|&j| cand[j as usize]).collect();
+                    let want = knn_sfc(&ps, &index, q, k, cutoff);
+                    checked += k;
+                    agree += want.iter().filter(|nb| got.contains(&nb.index)).count();
+                }
+            }
+            let secs = sw.secs();
+            println!(
+                "pjrt knn  : {served} queries in {:.3}s ({:.0} q/s), batch={KNN_Q}, per-window agreement {}/{} (union may find closer)",
+                secs,
+                served as f64 / secs,
+                agree,
+                checked
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT compile path: lower the L2 jax functions to HLO **text** and write
+them to artifacts/ for the Rust PJRT runtime.
+
+HLO text, NOT ``lowered.compile()``/``.serialize()``: the image's
+xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Artifacts and their fixed shapes are listed in ``artifacts/manifest.txt``
+as tab-separated ``name<TAB>inputs<TAB>outputs`` lines the Rust side
+parses. Shapes here are the serving tile sizes; the coordinator tiles
+larger problems over repeated executions.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---- Fixed serving shapes (tile sizes for the rust coordinator) ----
+SPMV_NR = 32  # block rows per strip batch
+SPMV_KMAX = 8  # blocks per block row
+SPMV_BS = 32  # block edge (MXU tile)
+SPMV_N = SPMV_NR * SPMV_BS  # vector length per tile
+
+KNN_Q = 64  # queries per batch
+KNN_C = 1024  # candidates per batch
+KNN_D = 4  # padded coordinate dim (3-D points pad one zero)
+KNN_K = 8  # neighbors returned
+
+MORTON_N = 1024
+MORTON_D = 3
+MORTON_BITS = 10
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries():
+    """(name, fn, example_args, input desc, output desc) per artifact."""
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return [
+        (
+            "spmv_bell",
+            lambda blocks, cols, x: (model.spmv(blocks, cols, x),),
+            (
+                spec((SPMV_NR, SPMV_KMAX, SPMV_BS, SPMV_BS), f32),
+                spec((SPMV_NR, SPMV_KMAX), jnp.int32),
+                spec((SPMV_N,), f32),
+            ),
+            f"blocks:f32[{SPMV_NR},{SPMV_KMAX},{SPMV_BS},{SPMV_BS}] cols:i32[{SPMV_NR},{SPMV_KMAX}] x:f32[{SPMV_N}]",
+            f"y:f32[{SPMV_N}]",
+        ),
+        (
+            "pagerank_step",
+            lambda blocks, cols, x, d: (model.pagerank_step(blocks, cols, x, d),),
+            (
+                spec((SPMV_NR, SPMV_KMAX, SPMV_BS, SPMV_BS), f32),
+                spec((SPMV_NR, SPMV_KMAX), jnp.int32),
+                spec((SPMV_N,), f32),
+                spec((), f32),
+            ),
+            f"blocks:f32[{SPMV_NR},{SPMV_KMAX},{SPMV_BS},{SPMV_BS}] cols:i32[{SPMV_NR},{SPMV_KMAX}] x:f32[{SPMV_N}] damping:f32[]",
+            f"x':f32[{SPMV_N}]",
+        ),
+        (
+            "knn_topk",
+            lambda q, c: model.knn_query(q, c, KNN_K),
+            (spec((KNN_Q, KNN_D), f32), spec((KNN_C, KNN_D), f32)),
+            f"queries:f32[{KNN_Q},{KNN_D}] candidates:f32[{KNN_C},{KNN_D}]",
+            f"dist2:f32[{KNN_Q},{KNN_K}] idx:i32[{KNN_Q},{KNN_K}]",
+        ),
+        (
+            "morton_keys",
+            lambda c: (model.morton_batch(c, MORTON_BITS),),
+            (spec((MORTON_N, MORTON_D), f32),),
+            f"coords:f32[{MORTON_N},{MORTON_D}]",
+            f"keys:u32[{MORTON_N}]",
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="compat: single-artifact output path (ignored)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, example, ins, outs in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}\t{ins}\t{outs}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

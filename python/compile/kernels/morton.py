@@ -1,0 +1,46 @@
+"""Batch Morton-key generation Pallas kernel (§III-B / §V-A).
+
+Quantize each coordinate to ``bits`` bits and interleave MSB-first with
+cycling dimensions — the same key layout as the Rust
+``sfc::morton::morton_key_unit`` truncated to ``D*bits`` bits, so the
+coordinator can offload bulk key generation (query presorting, §V-A) to
+the PJRT executable and binary-search the results directly.
+
+Pure VPU work (shifts/masks); the grid tiles the point batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _morton_kernel(c_ref, o_ref, *, bits):
+    pts = c_ref[...]  # f32[TN, D]
+    d = pts.shape[1]
+    cells = jnp.uint32(1 << bits)
+    q = jnp.clip((pts * cells.astype(jnp.float32)).astype(jnp.uint32), 0, cells - 1)
+    key = jnp.zeros(pts.shape[0], jnp.uint32)
+    for b in range(bits):  # unrolled: bits is static
+        for k in range(d):
+            bit = (q[:, k] >> (bits - 1 - b)) & 1
+            pos = d * bits - 1 - (b * d + k)
+            key = key | (bit << pos)
+    o_ref[...] = key
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tn", "interpret"))
+def morton_keys(coords, *, bits=10, tn=256, interpret=True):
+    """uint32 Morton keys for f32[N, D] coords in [0,1); N % tn == 0."""
+    n, d = coords.shape
+    assert n % tn == 0 and d * bits <= 32
+    kern = functools.partial(_morton_kernel, bits=bits)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tn,),
+        in_specs=[pl.BlockSpec((tn, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(coords)

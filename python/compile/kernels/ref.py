@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference here with identical
+signature; pytest asserts allclose between the two across shape/dtype
+sweeps (hypothesis), and the Rust integration tests check the AOT
+artifacts against scalar Rust implementations of the same math.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_bell_ref(blocks, cols, x):
+    """Block-ELL SpMV reference.
+
+    blocks: f32[NR, KMAX, BS, BS] — dense blocks of each block row.
+    cols:   i32[NR, KMAX] — block-column index of each block (padding
+            blocks point anywhere and hold zeros).
+    x:      f32[N] with N = number of block cols * BS.
+    Returns f32[NR*BS].
+    """
+    nr, kmax, bs, _ = blocks.shape
+    xb = x.reshape(-1, bs)  # [NB, BS]
+    gathered = xb[cols]  # [NR, KMAX, BS]
+    # y[r] = sum_k blocks[r,k] @ gathered[r,k]
+    y = jnp.einsum("rkij,rkj->ri", blocks, gathered)
+    return y.reshape(nr * bs)
+
+
+def dist2_ref(queries, candidates):
+    """Pairwise squared L2 distances.
+
+    queries: f32[Q, D]; candidates: f32[C, D] -> f32[Q, C].
+    """
+    qq = jnp.sum(queries * queries, axis=1, keepdims=True)  # [Q,1]
+    cc = jnp.sum(candidates * candidates, axis=1)  # [C]
+    qc = queries @ candidates.T  # [Q,C]
+    return qq + cc[None, :] - 2.0 * qc
+
+
+def morton_ref(coords, bits=10):
+    """Morton keys (cycling-dimension interleave, MSB first).
+
+    coords: f32[N, D] in [0, 1). Returns uint32[N]; bit b of quantized
+    dim k lands at key bit position (D*bits - 1) - (b_from_msb*D + k),
+    matching ``sfc::morton::morton_key_unit`` truncated to D*bits bits.
+    """
+    n, d = coords.shape
+    cells = 1 << bits
+    q = jnp.clip((coords * cells).astype(jnp.uint32), 0, cells - 1)  # [N,D]
+    key = jnp.zeros(n, dtype=jnp.uint32)
+    for b in range(bits):  # b = 0 is MSB of each coordinate
+        for k in range(d):
+            bit = (q[:, k] >> (bits - 1 - b)) & 1
+            pos = d * bits - 1 - (b * d + k)
+            key = key | (bit << pos)
+    return key

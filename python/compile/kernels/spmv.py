@@ -1,0 +1,94 @@
+"""Block-ELL SpMV Pallas kernel — the hot spot of the paper's §V-B
+distributed sparse-matrix × dense-vector application.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper tunes a
+cache-blocked SpMV for KNL's MCDRAM; on TPU the same insight becomes a
+*block* layout that feeds the MXU dense ``BS×BS @ BS`` products out of
+VMEM. Rows are grouped into strips of ``BS``; each strip holds ``KMAX``
+dense blocks (padded with zero blocks), so one grid step streams one
+strip of blocks HBM→VMEM (the ``BlockSpec``) and runs ``KMAX`` MXU
+matmuls. Power-law row skew is handled by the *Rust coordinator* (strip
+splitting + partial-sum merges), not by inflating KMAX.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, blocks_ref, x_ref, y_ref):
+    """One grid step: block row r.
+
+    blocks_ref: f32[1, KMAX, BS, BS] (this strip's blocks, in VMEM)
+    cols_ref:   i32[1, KMAX]
+    x_ref:      f32[N] (whole vector; VMEM-resident at these sizes)
+    y_ref:      f32[1, BS] output strip
+    """
+    kmax = blocks_ref.shape[1]
+    bs = blocks_ref.shape[2]
+
+    def body(k, acc):
+        c = cols_ref[0, k]
+        xk = pl.load(x_ref, (pl.dslice(c * bs, bs),))
+        return acc + blocks_ref[0, k] @ xk
+
+    acc = jax.lax.fori_loop(0, kmax, body, jnp.zeros((bs,), jnp.float32))
+    y_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_bell(blocks, cols, x, *, interpret=True):
+    """y = A @ x with A in block-ELL form (see ref.spmv_bell_ref)."""
+    nr, kmax, bs, _ = blocks.shape
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((1, kmax), lambda r: (r, 0)),
+            pl.BlockSpec((1, kmax, bs, bs), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec(x.shape, lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, bs), jnp.float32),
+        interpret=interpret,
+    )(cols, blocks, x).reshape(nr * bs)
+
+
+def pack_bell(row_ptr, col_idx, vals, n, bs, kmax):
+    """Host-side packer: CSR -> block-ELL (numpy, build path only).
+
+    Returns (blocks[NR,KMAX,BS,BS], cols[NR,KMAX], overflow) where
+    overflow lists (block_row, block_col) pairs that did not fit in KMAX
+    — the coordinator reroutes those through extra strips.
+    """
+    import numpy as np
+
+    nb = (n + bs - 1) // bs
+    nr = nb
+    blocks = np.zeros((nr, kmax, bs, bs), np.float32)
+    cols = np.zeros((nr, kmax), np.int32)
+    slot_of = {}  # (r, bc) -> slot
+    used = np.zeros(nr, np.int32)
+    overflow = []
+    for r in range(len(row_ptr) - 1):
+        br = r // bs
+        for e in range(row_ptr[r], row_ptr[r + 1]):
+            c, v = col_idx[e], vals[e]
+            bc = c // bs
+            key = (br, bc)
+            slot = slot_of.get(key)
+            if slot is None:
+                if used[br] >= kmax:
+                    overflow.append((br, bc, r % bs, c % bs, v))
+                    continue
+                slot = used[br]
+                used[br] += 1
+                slot_of[key] = slot
+                cols[br, slot] = bc
+            blocks[br, slot, r % bs, c % bs] += v
+    return blocks, cols, overflow

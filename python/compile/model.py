@@ -1,0 +1,61 @@
+"""Layer 2 — the jax compute graphs the coordinator executes via PJRT.
+
+Each function composes the L1 Pallas kernels into the application-level
+step the Rust hot path needs:
+
+* :func:`pagerank_step` — one damped power iteration over the block-ELL
+  shard (the §V-B SpMV application).
+* :func:`knn_query` — candidate scoring + top-k for a batch of queries
+  (the §V-A k-NN application).
+* :func:`morton_batch` — bulk SFC key generation for query presorting.
+
+These are lowered once by ``aot.py`` to HLO text with fixed shapes;
+Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import knn as knn_kernel
+from compile.kernels import morton as morton_kernel
+from compile.kernels import spmv as spmv_kernel
+
+
+def pagerank_step(blocks, cols, x, damping):
+    """x' = damping · (A x) + (1 − damping)/n, renormalized to sum 1.
+
+    The renormalization folds dangling-node mass back in, matching the
+    Rust sequential oracle (graph::pagerank::pagerank_seq).
+    """
+    n = x.shape[0]
+    y = spmv_kernel.spmv_bell(blocks, cols, x)
+    y = damping * y + (1.0 - damping) / n
+    return y / jnp.sum(y)
+
+
+def spmv(blocks, cols, x):
+    """Raw block-ELL SpMV (partial products; coordinator sums strips)."""
+    return spmv_kernel.spmv_bell(blocks, cols, x)
+
+
+def knn_query(queries, candidates, k):
+    """(dist2, idx) of the k nearest candidates per query.
+
+    queries: f32[Q, D]; candidates: f32[C, D]; returns
+    (f32[Q, k], i32[Q, k]) sorted by increasing distance.
+
+    Top-k via sort_key_val rather than lax.top_k: the modern ``topk`` HLO
+    op carries a ``largest`` attribute the xla_extension 0.5.1 text
+    parser rejects, while ``sort`` round-trips fine (see aot.py header).
+    """
+    d2 = knn_kernel.dist2(queries, candidates)
+    c = d2.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2_sorted, idx_sorted = jax.lax.sort_key_val(d2, iota, dimension=1)
+    del c
+    return d2_sorted[:, : int(k)], idx_sorted[:, : int(k)]
+
+
+def morton_batch(coords, bits=10):
+    """uint32 Morton keys for a batch of points."""
+    return morton_kernel.morton_keys(coords, bits=bits)

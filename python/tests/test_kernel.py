@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/dtypes per the repro contract; deadline is
+disabled because interpret-mode pallas tracing is slow on first call.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import knn, morton, ref, spmv
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = settings(deadline=None, max_examples=10)
+
+
+# ---------------------------------------------------------------------
+# spmv_bell
+# ---------------------------------------------------------------------
+
+
+def random_bell(rng, nr, kmax, bs, density=0.6):
+    nb = nr  # square: block cols == block rows
+    blocks = np.zeros((nr, kmax, bs, bs), np.float32)
+    cols = np.zeros((nr, kmax), np.int32)
+    for r in range(nr):
+        used = rng.choice(nb, size=min(kmax, nb), replace=False)
+        k_used = rng.integers(1, kmax + 1)
+        for k in range(k_used):
+            cols[r, k] = used[k % len(used)]
+            if rng.random() < density:
+                blocks[r, k] = rng.standard_normal((bs, bs)).astype(np.float32)
+    x = rng.standard_normal(nb * bs).astype(np.float32)
+    return jnp.array(blocks), jnp.array(cols), jnp.array(x)
+
+
+@SET
+@given(
+    nr=st.sampled_from([1, 2, 4, 8]),
+    kmax=st.sampled_from([1, 2, 4]),
+    bs=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmv_matches_ref(nr, kmax, bs, seed):
+    rng = np.random.default_rng(seed)
+    blocks, cols, x = random_bell(rng, nr, kmax, bs)
+    got = spmv.spmv_bell(blocks, cols, x)
+    want = ref.spmv_bell_ref(blocks, cols, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_zero_blocks_zero_result():
+    blocks = jnp.zeros((4, 2, 8, 8), jnp.float32)
+    cols = jnp.zeros((4, 2), jnp.int32)
+    x = jnp.ones(32, jnp.float32)
+    assert float(jnp.abs(spmv.spmv_bell(blocks, cols, x)).max()) == 0.0
+
+
+def test_pack_bell_roundtrip_dense_product():
+    rng = np.random.default_rng(3)
+    n, bs, kmax = 64, 8, 8
+    dense = np.zeros((n, n), np.float32)
+    # Sprinkle ~5 nnz per row.
+    for r in range(n):
+        for c in rng.choice(n, size=5, replace=False):
+            dense[r, c] = rng.standard_normal()
+    # CSR arrays.
+    row_ptr = [0]
+    col_idx, vals = [], []
+    for r in range(n):
+        nz = np.nonzero(dense[r])[0]
+        col_idx.extend(nz.tolist())
+        vals.extend(dense[r, nz].tolist())
+        row_ptr.append(len(col_idx))
+    blocks, cols, overflow = spmv.pack_bell(row_ptr, col_idx, vals, n, bs, kmax)
+    assert not overflow  # kmax=8 block cols max with 5 nnz/row
+    x = rng.standard_normal(n).astype(np.float32)
+    got = spmv.spmv_bell(jnp.array(blocks), jnp.array(cols), jnp.array(x))
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_pack_bell_overflow_reported():
+    # A row touching more than KMAX block-columns must overflow.
+    n, bs, kmax = 32, 4, 2
+    row_ptr = [0, 4] + [4] * (n - 1)
+    col_idx = [0, 8, 16, 24]  # four distinct block cols, kmax=2
+    vals = [1.0, 1.0, 1.0, 1.0]
+    _, _, overflow = spmv.pack_bell(row_ptr, col_idx, vals, n, bs, kmax)
+    assert len(overflow) == 2
+
+
+# ---------------------------------------------------------------------
+# knn dist2
+# ---------------------------------------------------------------------
+
+
+@SET
+@given(
+    q=st.sampled_from([8, 16, 32]),
+    c=st.sampled_from([128, 256]),
+    d=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist2_matches_ref(q, c, d, seed):
+    rng = np.random.default_rng(seed)
+    qs = jnp.array(rng.random((q, d)), jnp.float32)
+    cs = jnp.array(rng.random((c, d)), jnp.float32)
+    got = knn.dist2(qs, cs, tq=8, tc=128)
+    want = ref.dist2_ref(qs, cs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_dist2_self_distance_zero():
+    pts = jnp.array(np.random.default_rng(1).random((8, 4)), jnp.float32)
+    d2 = knn.dist2(pts, jnp.tile(pts, (16, 1)), tq=8, tc=128)
+    diag = jnp.array([d2[i, i] for i in range(8)])
+    np.testing.assert_allclose(diag, np.zeros(8), atol=1e-5)
+
+
+def test_topk_model_orders():
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    qs = jnp.array(rng.random((8, 4)), jnp.float32)
+    cs = jnp.array(rng.random((128, 4)), jnp.float32)
+    d2, idx = model.knn_query(qs, cs, 4)
+    full = np.asarray(ref.dist2_ref(qs, cs))
+    for i in range(8):
+        want = np.sort(full[i])[:4]
+        np.testing.assert_allclose(np.asarray(d2[i]), want, rtol=1e-4, atol=1e-5)
+        assert np.all(np.diff(np.asarray(d2[i])) >= -1e-6)
+        # idx consistent with distances
+        np.testing.assert_allclose(
+            full[i, np.asarray(idx[i])], np.asarray(d2[i]), rtol=1e-4, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------
+# morton keys
+# ---------------------------------------------------------------------
+
+
+@SET
+@given(
+    d=st.sampled_from([2, 3]),
+    bits=st.sampled_from([4, 8, 10]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_morton_matches_ref(d, bits, seed):
+    rng = np.random.default_rng(seed)
+    coords = jnp.array(rng.random((256, d)), jnp.float32)
+    got = morton.morton_keys(coords, bits=bits, tn=256)
+    want = ref.morton_ref(coords, bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_morton_order_is_z_order_2d():
+    # Quadrant representatives must sort BL < TL < BR < RT with the
+    # cycling x-then-y convention (x in the MSB lane).
+    coords = jnp.array(
+        [[0.2, 0.2], [0.2, 0.8], [0.8, 0.2], [0.8, 0.8]] * 64, jnp.float32
+    )
+    keys = np.asarray(morton.morton_keys(coords, bits=8, tn=256))
+    bl, tl, br, tr = keys[0], keys[1], keys[2], keys[3]
+    assert bl < tl < br < tr
+
+
+def test_morton_monotone_along_axis():
+    xs = np.linspace(0, 0.999, 256, dtype=np.float32)
+    coords = jnp.array(np.stack([xs, np.zeros_like(xs), np.zeros_like(xs)], 1))
+    keys = np.asarray(morton.morton_keys(coords, bits=10, tn=256))
+    assert np.all(np.diff(keys.astype(np.int64)) >= 0)
+
+
+# ---------------------------------------------------------------------
+# model-level: pagerank step
+# ---------------------------------------------------------------------
+
+
+def test_pagerank_step_conserves_mass():
+    from compile import model
+
+    rng = np.random.default_rng(11)
+    blocks, cols, x = random_bell(rng, 8, 4, 8)
+    # Make it stochastic-ish and positive.
+    blocks = jnp.abs(blocks)
+    x = jnp.abs(x) + 0.01
+    x = x / jnp.sum(x)
+    y = model.pagerank_step(blocks, cols, x, jnp.float32(0.85))
+    assert abs(float(jnp.sum(y)) - 1.0) < 1e-5
+    assert float(y.min()) > 0.0

@@ -1,0 +1,51 @@
+//! Table I: dynamic kd-tree — build / insert / delete / adjustment /
+//! total times, for {1M, 10M} × {3D, 10D} × thread counts in the paper
+//! (quick scale: {50k, 200k} × {3D, 10D} × {1, 2, 4, 8} threads).
+//!
+//! Protocol per §IV-A: inserts sampled from the domain box every
+//! `step_size` = 100 iterations, adjustments every 500, 1000 iterations
+//! total, BUCKETSIZE 32 (100 for the 10M case).
+
+use sfc_part::bench_util::Table;
+use sfc_part::cli::{Args, Scale};
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::dynamic_driver::run_dynamic;
+
+fn main() {
+    let args = Args::parse();
+    let scale = Scale::detect(&args);
+    let sizes: &[usize] = scale.pick(&[50_000, 200_000], &[1_000_000, 10_000_000]);
+    let sizes = args.usize_list("points", sizes);
+    let dims = args.usize_list("dims", &[3, 10]);
+    let threads_default: &[usize] = scale.pick(&[1, 2, 4, 8][..], &[64, 128, 256][..]);
+    let threads = args.usize_list("threads", threads_default);
+    let iters = args.usize("iters", 1000);
+    let step = args.usize("step", 100);
+
+    let mut t = Table::new(
+        "table1 dynamic kd-tree construction",
+        &["th", "points", "nodes", "build", "ins", "del", "adj", "lb(#)", "total"],
+    );
+    for &n in &sizes {
+        for &dim in &dims {
+            let bucket = if n >= 10_000_000 { 100 } else { 32 };
+            let ps = PointSet::uniform(n, dim, 42);
+            for &th in &threads {
+                let s = run_dynamic(&ps, iters, step, th, bucket, 7);
+                t.row(vec![
+                    th.to_string(),
+                    format!("{}m{}D", n, dim),
+                    s.nodes.to_string(),
+                    format!("{:.4}", s.build_secs),
+                    format!("{:.4}", s.insert_secs),
+                    format!("{:.4}", s.delete_secs),
+                    format!("{:.4}", s.adjust_secs),
+                    format!("{:.3}({})", s.rebalance_secs, s.rebalances),
+                    format!("{:.4}", s.total_secs),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\ncheck: ins/del ≪ build; adj cheap; 10D build ≫ 3D build (paper's shape).");
+}

@@ -1,0 +1,132 @@
+//! Figs 12–13: parallel query processing.
+//!
+//! * Fig 12 — exact point location: data sizes 1M–250M in the paper
+//!   (quick: 100k–1M), including presorting/binning cost as the paper's
+//!   measured time does. Both the buckets-only binary-search fast path
+//!   and the tree-descent general path are reported.
+//! * Fig 13 — approximate k-NN on 100M points (quick: 1M), K=3,
+//!   CUTOFF=1 bucket each side, with recall measured against the exact
+//!   oracle on a sample.
+
+use sfc_part::bench_util::{fmt_secs, Table};
+use sfc_part::cli::{Args, Scale};
+use sfc_part::geom::bbox::BoundingBox;
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::builder::KdTreeBuilder;
+use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use sfc_part::query::knn::{knn_exact, knn_sfc, recall};
+use sfc_part::query::point_location::{BucketIndex, TreeLocator};
+use sfc_part::query::router::{Query, QueryRouter};
+use sfc_part::sfc::traverse::assign_sfc;
+use sfc_part::sfc::Curve;
+use sfc_part::util::rng::{Rng, SplitMix64};
+use sfc_part::util::timer::Stopwatch;
+
+fn build_index(ps: &PointSet, threads: usize) -> (sfc_part::kdtree::node::KdTree, BucketIndex) {
+    let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+    cfg.dim_rule = DimRule::Cycle;
+    let mut tree = KdTreeBuilder::new().bucket_size(32).splitter(cfg).domain(BoundingBox::unit(ps.dim)).threads(threads).build(ps);
+    assign_sfc(&mut tree, Curve::Morton);
+    let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(ps.dim));
+    (tree, idx)
+}
+
+fn main() {
+    let args = Args::parse();
+    let scale = Scale::detect(&args);
+    let sizes_default: &[usize] =
+        scale.pick(&[100_000, 400_000, 1_000_000][..], &[1_000_000, 50_000_000, 250_000_000][..]);
+    let sizes = args.usize_list("points", sizes_default);
+    let threads = args.usize_list("threads", &[1, 2, 4, 8]);
+    let nq = args.usize("queries", scale.pick(20_000, 1_000_000));
+
+    // ---- Fig 12: exact point location ----
+    let mut t = Table::new(
+        "fig12 exact point location",
+        &["points", "threads", "path", "queries", "total", "qps"],
+    );
+    for &n in &sizes {
+        let ps = PointSet::uniform(n, 3, 42);
+        let (tree, idx) = build_index(&ps, *threads.last().unwrap());
+        let mut rng = SplitMix64::new(5);
+        let probes: Vec<u32> = (0..nq).map(|_| rng.below(n as u64) as u32).collect();
+        for &th in &threads {
+            // Fast path through the router (presort + bin + parallel).
+            let sw = Stopwatch::start();
+            let mut router = QueryRouter::new(&ps, &idx, th);
+            for &pi in &probes {
+                router.submit(Query::Locate { coords: ps.point(pi as usize).to_vec(), eps: 1e-12 });
+            }
+            let results = router.flush();
+            let secs = sw.secs();
+            assert!(results.iter().all(|(_, r)| matches!(r, sfc_part::query::router::QueryResult::Located(Some(_)))));
+            t.row(vec![
+                n.to_string(),
+                th.to_string(),
+                "bucket-binsearch".into(),
+                nq.to_string(),
+                fmt_secs(secs),
+                format!("{:.0}", nq as f64 / secs),
+            ]);
+        }
+        // General path (tree descent), single thread reference.
+        let loc = TreeLocator::new(&tree);
+        let sw = Stopwatch::start();
+        for &pi in &probes {
+            std::hint::black_box(loc.locate_point(&ps, ps.point(pi as usize), 1e-12));
+        }
+        let secs = sw.secs();
+        t.row(vec![
+            n.to_string(),
+            "1".into(),
+            "tree-descent".into(),
+            nq.to_string(),
+            fmt_secs(secs),
+            format!("{:.0}", nq as f64 / secs),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig 13: approximate k-NN ----
+    let mut t = Table::new(
+        "fig13 approximate k-NN",
+        &["points", "threads", "k", "cutoff", "queries", "total", "qps", "recall"],
+    );
+    let n = args.usize("knn-points", scale.pick(1_000_000, 100_000_000));
+    let k = args.usize("k", 3);
+    let cutoff = args.usize("cutoff", 1);
+    let ps = PointSet::uniform(n, 3, 43);
+    let (_, idx) = build_index(&ps, *threads.last().unwrap());
+    let mut rng = SplitMix64::new(11);
+    let queries: Vec<Vec<f64>> = (0..nq.min(50_000))
+        .map(|_| (0..3).map(|_| rng.next_f64()).collect())
+        .collect();
+    // Recall on a sample (exact scan is O(n) per query).
+    let mut rec = 0.0;
+    let sample = 30.min(queries.len());
+    for q in queries.iter().take(sample) {
+        rec += recall(&knn_sfc(&ps, &idx, q, k, cutoff), &knn_exact(&ps, q, k));
+    }
+    rec /= sample as f64;
+    for &th in &threads {
+        let sw = Stopwatch::start();
+        let mut router = QueryRouter::new(&ps, &idx, th);
+        for q in &queries {
+            router.submit(Query::Knn { coords: q.clone(), k, cutoff });
+        }
+        let results = router.flush();
+        let secs = sw.secs();
+        t.row(vec![
+            n.to_string(),
+            th.to_string(),
+            k.to_string(),
+            cutoff.to_string(),
+            results.len().to_string(),
+            fmt_secs(secs),
+            format!("{:.0}", results.len() as f64 / secs),
+            format!("{rec:.3}"),
+        ]);
+    }
+    t.print();
+    println!("\ncheck: location is O(log buckets)/query; k-NN cost ∝ window size; recall per CUTOFF.");
+}

@@ -1,0 +1,234 @@
+//! Config-file support: a TOML-subset parser (serde is not available
+//! offline) plus the typed run configuration the launcher consumes.
+//!
+//! Supported syntax — exactly what our configs need, strictly parsed:
+//! `[section]` headers, `key = value` with string/int/float/bool/list
+//! values, `#` comments. Unknown keys are errors (catch typos early,
+//! like any production launcher should).
+
+use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use crate::partition::partitioner::PartitionConfig;
+use crate::sfc::Curve;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    fn parse(tok: &str) -> Result<Value> {
+        let tok = tok.trim();
+        if tok.starts_with('[') && tok.ends_with(']') {
+            let inner = &tok[1..tok.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in inner.split(',') {
+                    items.push(Value::parse(part)?);
+                }
+            }
+            return Ok(Value::List(items));
+        }
+        if (tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2)
+            || (tok.starts_with('\'') && tok.ends_with('\'') && tok.len() >= 2)
+        {
+            return Ok(Value::Str(tok[1..tok.len() - 1].to_string()));
+        }
+        if tok == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if tok == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = tok.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("unparseable value: {tok:?}")
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut out = ConfigFile::default();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {raw:?}", no + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = Value::parse(v).with_context(|| format!("line {}", no + 1))?;
+            out.values.insert(key, val);
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        ConfigFile::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+}
+
+/// Parse a splitter name (the CLI/config vocabulary).
+pub fn splitter_from_name(name: &str, sample: usize) -> Result<SplitterKind> {
+    Ok(match name {
+        "midpoint" => SplitterKind::Midpoint,
+        "median" | "median-sort" => SplitterKind::MedianSort,
+        "median-sample" => SplitterKind::MedianSample { sample },
+        "median-select" | "selection" => SplitterKind::MedianSelect { sample },
+        _ => bail!("unknown splitter {name:?} (midpoint|median-sort|median-sample|median-select)"),
+    })
+}
+
+/// Parse a curve name.
+pub fn curve_from_name(name: &str) -> Result<Curve> {
+    Ok(match name {
+        "morton" | "z" => Curve::Morton,
+        "hilbert" | "hilbert-like" => Curve::HilbertLike,
+        _ => bail!("unknown curve {name:?} (morton|hilbert-like)"),
+    })
+}
+
+/// Build a [`PartitionConfig`] from a config file (section `partition`),
+/// falling back to defaults for missing keys and rejecting unknown ones.
+pub fn partition_config(cfg: &ConfigFile) -> Result<PartitionConfig> {
+    let mut out = PartitionConfig::default();
+    for (key, val) in &cfg.values {
+        let Some(name) = key.strip_prefix("partition.") else { continue };
+        match name {
+            "parts" => out.parts = val.as_usize()?,
+            "bucket_size" => out.bucket_size = val.as_usize()?,
+            "threads" => out.threads = val.as_usize()?,
+            "seed" => out.seed = val.as_usize()? as u64,
+            "curve" => out.curve = curve_from_name(val.as_str()?)?,
+            "splitter" => {
+                out.splitter = SplitterConfig::uniform(splitter_from_name(val.as_str()?, 1024)?)
+            }
+            "splitter_sample" => {
+                // Re-apply with the sample size if the splitter is sampled.
+                if let SplitterKind::MedianSample { .. } = out.splitter.top {
+                    out.splitter =
+                        SplitterConfig::uniform(SplitterKind::MedianSample { sample: val.as_usize()? });
+                } else if let SplitterKind::MedianSelect { .. } = out.splitter.top {
+                    out.splitter =
+                        SplitterConfig::uniform(SplitterKind::MedianSelect { sample: val.as_usize()? });
+                }
+            }
+            "switch_depth" => out.splitter.switch_depth = val.as_usize()? as u16,
+            "dim_rule" => {
+                out.splitter.dim_rule = match val.as_str()? {
+                    "max-spread" => DimRule::MaxSpread,
+                    "cycle" => DimRule::Cycle,
+                    other => bail!("unknown dim_rule {other:?}"),
+                }
+            }
+            other => bail!("unknown key partition.{other}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let cfg = ConfigFile::parse(
+            "# comment\n[partition]\nparts = 8\ncurve = \"hilbert\"\n\n[net]\nalpha = 1.5e-6\nrounds = [1, 2, 3]\nfast = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("partition.parts"), Some(&Value::Int(8)));
+        assert_eq!(cfg.get("net.fast"), Some(&Value::Bool(true)));
+        assert_eq!(cfg.get("net.alpha").unwrap().as_f64().unwrap(), 1.5e-6);
+        match cfg.get("net.rounds").unwrap() {
+            Value::List(items) => assert_eq!(items.len(), 3),
+            v => panic!("not a list: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn partition_config_from_file() {
+        let cfg = ConfigFile::parse(
+            "[partition]\nparts = 16\nbucket_size = 64\ncurve = \"morton\"\nsplitter = \"median-select\"\nthreads = 4\n",
+        )
+        .unwrap();
+        let pc = partition_config(&cfg).unwrap();
+        assert_eq!(pc.parts, 16);
+        assert_eq!(pc.bucket_size, 64);
+        assert_eq!(pc.threads, 4);
+        assert!(matches!(pc.splitter.top, SplitterKind::MedianSelect { .. }));
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let cfg = ConfigFile::parse("[partition]\npartz = 8\n").unwrap();
+        assert!(partition_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(ConfigFile::parse("just some text").is_err());
+        assert!(ConfigFile::parse("key = @nope").is_err());
+    }
+
+    #[test]
+    fn name_parsers() {
+        assert!(matches!(splitter_from_name("midpoint", 0), Ok(SplitterKind::Midpoint)));
+        assert!(splitter_from_name("bogus", 0).is_err());
+        assert!(matches!(curve_from_name("hilbert-like"), Ok(Curve::HilbertLike)));
+        assert!(curve_from_name("peano").is_err());
+    }
+}

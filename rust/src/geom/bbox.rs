@@ -1,0 +1,232 @@
+//! Axis-aligned bounding boxes ("tight bounding boxes" around subsets in
+//! the paper's recursive decomposition, §III-A).
+
+/// An axis-aligned box `[lo, hi]` in d dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundingBox {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl BoundingBox {
+    /// Degenerate empty box (lo = +inf, hi = -inf) ready for `grow`.
+    pub fn empty(dim: usize) -> Self {
+        BoundingBox { lo: vec![f64::INFINITY; dim], hi: vec![f64::NEG_INFINITY; dim] }
+    }
+
+    /// Unit hypercube `[0,1]^d`.
+    pub fn unit(dim: usize) -> Self {
+        BoundingBox { lo: vec![0.0; dim], hi: vec![1.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Tight box over flat `coords` (stride `dim`), optionally restricted
+    /// to a subset of point indices.
+    pub fn of_points(dim: usize, coords: &[f64], subset: Option<&[u32]>) -> Self {
+        let mut b = BoundingBox::empty(dim);
+        match subset {
+            None => {
+                for p in coords.chunks_exact(dim) {
+                    b.grow(p);
+                }
+            }
+            Some(idx) => {
+                for &i in idx {
+                    b.grow(&coords[i as usize * dim..(i as usize + 1) * dim]);
+                }
+            }
+        }
+        b
+    }
+
+    /// Expand to contain `p`.
+    #[inline]
+    pub fn grow(&mut self, p: &[f64]) {
+        for k in 0..self.lo.len() {
+            if p[k] < self.lo[k] {
+                self.lo[k] = p[k];
+            }
+            if p[k] > self.hi[k] {
+                self.hi[k] = p[k];
+            }
+        }
+    }
+
+    /// Expand to contain another box.
+    pub fn merge(&mut self, other: &BoundingBox) {
+        for k in 0..self.lo.len() {
+            self.lo[k] = self.lo[k].min(other.lo[k]);
+            self.hi[k] = self.hi[k].max(other.hi[k]);
+        }
+    }
+
+    /// Width along dimension `k`.
+    #[inline]
+    pub fn width(&self, k: usize) -> f64 {
+        self.hi[k] - self.lo[k]
+    }
+
+    /// Dimension of maximum spread (the paper's splitting-dimension rule).
+    pub fn widest_dim(&self) -> usize {
+        let mut best = 0;
+        let mut bw = f64::NEG_INFINITY;
+        for k in 0..self.lo.len() {
+            let w = self.width(k);
+            if w > bw {
+                bw = w;
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Geometric midpoint along dimension `k`.
+    #[inline]
+    pub fn midpoint(&self, k: usize) -> f64 {
+        0.5 * (self.lo[k] + self.hi[k])
+    }
+
+    /// Does the box contain point `p` (closed on both ends)?
+    pub fn contains(&self, p: &[f64]) -> bool {
+        p.iter()
+            .zip(self.lo.iter().zip(&self.hi))
+            .all(|(&v, (&l, &h))| v >= l && v <= h)
+    }
+
+    /// Do two boxes intersect (closed)?
+    pub fn intersects(&self, other: &BoundingBox) -> bool {
+        (0..self.dim()).all(|k| self.lo[k] <= other.hi[k] && other.lo[k] <= self.hi[k])
+    }
+
+    /// Volume (product of widths); 0 for degenerate boxes.
+    pub fn volume(&self) -> f64 {
+        (0..self.dim()).map(|k| self.width(k).max(0.0)).product()
+    }
+
+    /// Surface "area" — sum over facet pairs of facet volume × 2. In d
+    /// dimensions the facet orthogonal to k has volume ∏_{j≠k} width(j).
+    /// Used for the paper's surface-to-volume partition-quality metric.
+    pub fn surface(&self) -> f64 {
+        let d = self.dim();
+        let mut s = 0.0;
+        for k in 0..d {
+            let mut facet = 1.0;
+            for j in 0..d {
+                if j != k {
+                    facet *= self.width(j).max(0.0);
+                }
+            }
+            s += 2.0 * facet;
+        }
+        s
+    }
+
+    /// Surface to volume ratio, `inf` for zero-volume boxes with surface.
+    pub fn surface_to_volume(&self) -> f64 {
+        let v = self.volume();
+        if v == 0.0 {
+            f64::INFINITY
+        } else {
+            self.surface() / v
+        }
+    }
+
+    /// Split into (lower, upper) halves at `value` along `dim`.
+    pub fn split_at(&self, dim: usize, value: f64) -> (BoundingBox, BoundingBox) {
+        let mut lo_box = self.clone();
+        let mut hi_box = self.clone();
+        lo_box.hi[dim] = value;
+        hi_box.lo[dim] = value;
+        (lo_box, hi_box)
+    }
+
+    /// Minimum squared distance from `p` to the box (0 if inside).
+    pub fn min_dist2(&self, p: &[f64]) -> f64 {
+        let mut d2 = 0.0;
+        for k in 0..self.dim() {
+            let v = p[k];
+            let d = if v < self.lo[k] {
+                self.lo[k] - v
+            } else if v > self.hi[k] {
+                v - self.hi[k]
+            } else {
+                0.0
+            };
+            d2 += d * d;
+        }
+        d2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_merge() {
+        let mut b = BoundingBox::empty(2);
+        b.grow(&[1.0, 2.0]);
+        b.grow(&[-1.0, 5.0]);
+        assert_eq!(b.lo, vec![-1.0, 2.0]);
+        assert_eq!(b.hi, vec![1.0, 5.0]);
+        let mut c = BoundingBox::unit(2);
+        c.merge(&b);
+        assert_eq!(c.lo, vec![-1.0, 0.0]);
+        assert_eq!(c.hi, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn widest_and_midpoint() {
+        let b = BoundingBox { lo: vec![0.0, 0.0, 0.0], hi: vec![1.0, 3.0, 2.0] };
+        assert_eq!(b.widest_dim(), 1);
+        assert_eq!(b.midpoint(1), 1.5);
+    }
+
+    #[test]
+    fn containment_and_intersection() {
+        let b = BoundingBox::unit(3);
+        assert!(b.contains(&[0.5, 0.0, 1.0]));
+        assert!(!b.contains(&[1.1, 0.5, 0.5]));
+        let c = BoundingBox { lo: vec![0.9, 0.9, 0.9], hi: vec![2.0, 2.0, 2.0] };
+        assert!(b.intersects(&c));
+        let d = BoundingBox { lo: vec![1.5, 1.5, 1.5], hi: vec![2.0, 2.0, 2.0] };
+        assert!(!b.intersects(&d));
+    }
+
+    #[test]
+    fn volume_surface() {
+        let b = BoundingBox { lo: vec![0.0, 0.0, 0.0], hi: vec![2.0, 3.0, 4.0] };
+        assert_eq!(b.volume(), 24.0);
+        // 2*(3*4 + 2*4 + 2*3) = 52
+        assert_eq!(b.surface(), 52.0);
+        let cube = BoundingBox::unit(3);
+        assert_eq!(cube.surface_to_volume(), 6.0);
+    }
+
+    #[test]
+    fn split() {
+        let b = BoundingBox::unit(2);
+        let (lo, hi) = b.split_at(0, 0.25);
+        assert_eq!(lo.hi[0], 0.25);
+        assert_eq!(hi.lo[0], 0.25);
+        assert_eq!(lo.hi[1], 1.0);
+    }
+
+    #[test]
+    fn min_dist2() {
+        let b = BoundingBox::unit(2);
+        assert_eq!(b.min_dist2(&[0.5, 0.5]), 0.0);
+        assert_eq!(b.min_dist2(&[2.0, 0.5]), 1.0);
+        assert_eq!(b.min_dist2(&[2.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn of_points_subset() {
+        let coords = [0.0, 0.0, 10.0, 10.0, 5.0, 5.0];
+        let b = BoundingBox::of_points(2, &coords, Some(&[0, 2]));
+        assert_eq!(b.hi, vec![5.0, 5.0]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Workload distributions beyond the basic `PointSet` constructors:
+//! regular meshes (Fig 8's 256³ grid), multi-cluster mixtures, and the
+//! dynamic insert/delete streams driving Algorithm 3.
+
+use crate::geom::point::PointSet;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Regular grid of `side^dim` cell-center points (the paper's
+/// `256×256×256` mesh test case in Fig 8, at configurable side).
+pub fn regular_mesh(side: usize, dim: usize) -> PointSet {
+    let n = side.pow(dim as u32);
+    let mut ps = PointSet::new(dim);
+    ps.coords.reserve(n * dim);
+    let inv = 1.0 / side as f64;
+    for i in 0..n {
+        let mut rem = i;
+        for _ in 0..dim {
+            let c = rem % side;
+            rem /= side;
+            ps.coords.push((c as f64 + 0.5) * inv);
+        }
+    }
+    ps.ids = (0..n as u64).collect();
+    ps.weights = vec![1.0; n];
+    ps
+}
+
+/// Mixture of `k` Gaussian clusters plus a uniform background — a harsher
+/// clustered workload than the paper's single corner cluster, used by the
+/// ablation benches.
+pub fn gaussian_clusters(
+    n: usize,
+    dim: usize,
+    k: usize,
+    sd: f64,
+    background_frac: f64,
+    seed: u64,
+) -> PointSet {
+    let mut rng = SplitMix64::new(seed);
+    let centers: Vec<f64> = (0..k * dim).map(|_| rng.uniform(0.1, 0.9)).collect();
+    let mut ps = PointSet::new(dim);
+    ps.coords.reserve(n * dim);
+    let n_bg = (n as f64 * background_frac) as usize;
+    for _ in 0..n - n_bg {
+        let c = rng.below(k as u64) as usize;
+        for kk in 0..dim {
+            let v = rng.normal(centers[c * dim + kk], sd).clamp(0.0, 1.0);
+            ps.coords.push(v);
+        }
+    }
+    for _ in 0..n_bg {
+        for _ in 0..dim {
+            ps.coords.push(rng.next_f64());
+        }
+    }
+    ps.ids = (0..n as u64).collect();
+    ps.weights = vec![1.0; n];
+    ps
+}
+
+/// A stream of insertions/deletions for the dynamic experiments (§IV-A:
+/// "New points were created by sampling from the domain bounding box").
+pub struct DynamicStream {
+    rng: SplitMix64,
+    dim: usize,
+    next_id: u64,
+    /// Fraction of operations that are deletions.
+    pub delete_frac: f64,
+    /// If set, insertions concentrate in a moving hot region (models the
+    /// refinement front of a Delaunay/AMR run).
+    pub hot_region: Option<HotRegion>,
+}
+
+/// A moving Gaussian hot spot.
+#[derive(Clone, Debug)]
+pub struct HotRegion {
+    pub center: Vec<f64>,
+    pub sd: f64,
+    pub drift: f64,
+}
+
+impl DynamicStream {
+    pub fn new(dim: usize, first_id: u64, seed: u64) -> Self {
+        DynamicStream {
+            rng: SplitMix64::new(seed),
+            dim,
+            next_id: first_id,
+            delete_frac: 0.3,
+            hot_region: None,
+        }
+    }
+
+    /// Sample `n_ins` new points; also choose `n_del` victim indices out
+    /// of `existing` (ids to delete). Returns (insertions, delete-ids).
+    pub fn step(&mut self, n_ins: usize, existing_ids: &[u64]) -> (PointSet, Vec<u64>) {
+        let mut ins = PointSet::new(self.dim);
+        for _ in 0..n_ins {
+            let mut c = Vec::with_capacity(self.dim);
+            match &self.hot_region {
+                Some(h) => {
+                    for k in 0..self.dim {
+                        c.push(self.rng.normal(h.center[k], h.sd).clamp(0.0, 1.0));
+                    }
+                }
+                None => {
+                    for _ in 0..self.dim {
+                        c.push(self.rng.next_f64());
+                    }
+                }
+            }
+            ins.push(&c, self.next_id, 1.0);
+            self.next_id += 1;
+        }
+        // Drift the hot region.
+        if let Some(h) = &mut self.hot_region {
+            for k in 0..self.dim {
+                h.center[k] = (h.center[k] + h.drift).rem_euclid(1.0);
+            }
+        }
+        let n_del = ((n_ins as f64) * self.delete_frac) as usize;
+        let mut dels = Vec::with_capacity(n_del);
+        if !existing_ids.is_empty() {
+            for _ in 0..n_del {
+                let j = self.rng.below(existing_ids.len() as u64) as usize;
+                dels.push(existing_ids[j]);
+            }
+            dels.sort_unstable();
+            dels.dedup();
+        }
+        (ins, dels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_counts_and_spacing() {
+        let m = regular_mesh(4, 3);
+        assert_eq!(m.len(), 64);
+        // All coordinates are odd multiples of 1/8.
+        for &c in &m.coords {
+            let q = c * 8.0;
+            assert!((q - q.round()).abs() < 1e-12);
+            assert_eq!(q.round() as i64 % 2, 1);
+        }
+    }
+
+    #[test]
+    fn mesh_2d() {
+        let m = regular_mesh(16, 2);
+        assert_eq!(m.len(), 256);
+        let b = m.bounding_box();
+        assert!(b.lo.iter().all(|&c| c > 0.0));
+        assert!(b.hi.iter().all(|&c| c < 1.0));
+    }
+
+    #[test]
+    fn gaussian_clusters_in_bounds() {
+        let ps = gaussian_clusters(2000, 3, 4, 0.02, 0.1, 77);
+        assert_eq!(ps.len(), 2000);
+        assert!(ps.coords.iter().all(|&c| (0.0..=1.0).contains(&c)));
+    }
+
+    #[test]
+    fn dynamic_stream_ids_unique_and_monotone() {
+        let mut st = DynamicStream::new(3, 1000, 5);
+        let (a, _) = st.step(50, &[]);
+        let (b, _) = st.step(50, &a.ids);
+        assert_eq!(a.ids[0], 1000);
+        assert_eq!(b.ids[0], 1050);
+        assert!(a.ids.iter().chain(&b.ids).collect::<std::collections::HashSet<_>>().len() == 100);
+    }
+
+    #[test]
+    fn dynamic_stream_deletes_from_existing() {
+        let mut st = DynamicStream::new(2, 0, 6);
+        st.delete_frac = 0.5;
+        let existing: Vec<u64> = (0..100).collect();
+        let (_, dels) = st.step(40, &existing);
+        assert!(!dels.is_empty());
+        assert!(dels.iter().all(|d| existing.contains(d)));
+    }
+
+    #[test]
+    fn hot_region_concentrates() {
+        let mut st = DynamicStream::new(2, 0, 7);
+        st.hot_region = Some(HotRegion { center: vec![0.5, 0.5], sd: 0.01, drift: 0.0 });
+        let (ins, _) = st.step(200, &[]);
+        let near = (0..ins.len())
+            .filter(|&i| ins.point(i).iter().all(|&c| (c - 0.5).abs() < 0.05))
+            .count();
+        assert!(near > 180, "near={near}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Minimal unstructured-mesh substrate.
+//!
+//! The paper partitions 2-D/3-D meshes by their elements' representative
+//! points (centers of gravity) — elements are indivisible (§III-A). This
+//! module provides a simplicial mesh container, centroid extraction, a
+//! synthetic Delaunay-style refinement driver (the paper's "Delaunay mesh
+//! refinement" dynamic application), and dual-graph edge extraction used
+//! by the partition-quality metrics.
+
+use crate::geom::point::PointSet;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// A d-simplex mesh: vertices + element connectivity (d+1 vertex ids per
+/// element) + per-element weights.
+#[derive(Clone, Debug)]
+pub struct SimplexMesh {
+    pub dim: usize,
+    /// Flat vertex coordinates, stride `dim`.
+    pub vertices: Vec<f64>,
+    /// Element connectivity, stride `dim + 1`.
+    pub elems: Vec<u32>,
+    /// Per-element computational weight.
+    pub weights: Vec<f32>,
+}
+
+impl SimplexMesh {
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len() / self.dim
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Vertex ids of element `e`.
+    pub fn elem(&self, e: usize) -> &[u32] {
+        let s = self.dim + 1;
+        &self.elems[e * s..(e + 1) * s]
+    }
+
+    /// Representative points (centers of gravity) of all elements, as the
+    /// partitioner's input point set. Ids are element indices.
+    pub fn centroids(&self) -> PointSet {
+        let mut ps = PointSet::new(self.dim);
+        let s = self.dim + 1;
+        ps.coords.reserve(self.n_elems() * self.dim);
+        for e in 0..self.n_elems() {
+            for k in 0..self.dim {
+                let mut c = 0.0;
+                for v in 0..s {
+                    let vid = self.elems[e * s + v] as usize;
+                    c += self.vertices[vid * self.dim + k];
+                }
+                ps.coords.push(c / s as f64);
+            }
+            ps.ids.push(e as u64);
+            ps.weights.push(self.weights[e]);
+        }
+        ps
+    }
+
+    /// Dual-graph edges: element pairs sharing a facet (d shared
+    /// vertices). Returned as sorted (a, b) pairs with a < b.
+    pub fn dual_edges(&self) -> Vec<(u32, u32)> {
+        use std::collections::HashMap;
+        let s = self.dim + 1;
+        // facet key (sorted vertex ids minus one) -> first element seen
+        let mut facets: HashMap<Vec<u32>, u32> = HashMap::new();
+        let mut edges = Vec::new();
+        for e in 0..self.n_elems() {
+            let verts = self.elem(e);
+            for drop in 0..s {
+                let mut f: Vec<u32> = (0..s).filter(|&i| i != drop).map(|i| verts[i]).collect();
+                f.sort_unstable();
+                match facets.insert(f, e as u32) {
+                    Some(prev) if prev != e as u32 => {
+                        edges.push((prev.min(e as u32), prev.max(e as u32)));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    /// A structured triangulation of the unit square: `side × side` cells,
+    /// two triangles each. Used as the initial mesh for refinement runs.
+    pub fn unit_square_tri(side: usize) -> SimplexMesh {
+        let nv = side + 1;
+        let mut vertices = Vec::with_capacity(nv * nv * 2);
+        for j in 0..nv {
+            for i in 0..nv {
+                vertices.push(i as f64 / side as f64);
+                vertices.push(j as f64 / side as f64);
+            }
+        }
+        let vid = |i: usize, j: usize| (j * nv + i) as u32;
+        let mut elems = Vec::with_capacity(side * side * 6);
+        for j in 0..side {
+            for i in 0..side {
+                elems.extend_from_slice(&[vid(i, j), vid(i + 1, j), vid(i, j + 1)]);
+                elems.extend_from_slice(&[vid(i + 1, j), vid(i + 1, j + 1), vid(i, j + 1)]);
+            }
+        }
+        let n_elems = elems.len() / 3;
+        SimplexMesh { dim: 2, vertices, elems, weights: vec![1.0; n_elems] }
+    }
+}
+
+/// Synthetic Delaunay-style refinement: repeatedly split the elements
+/// whose centroid falls inside a moving hot disc (insert the centroid,
+/// connect to the simplex corners). Weight of children = parent/…, so the
+/// load profile shifts like a refinement front — exactly what the
+/// amortized load balancer (Algorithm 3) has to chase.
+pub struct RefinementDriver {
+    pub mesh: SimplexMesh,
+    rng: SplitMix64,
+    pub hot_center: Vec<f64>,
+    pub hot_radius: f64,
+    pub drift: f64,
+}
+
+impl RefinementDriver {
+    pub fn new(mesh: SimplexMesh, seed: u64) -> Self {
+        let dim = mesh.dim;
+        RefinementDriver {
+            mesh,
+            rng: SplitMix64::new(seed),
+            hot_center: vec![0.25; dim],
+            hot_radius: 0.12,
+            drift: 0.03,
+        }
+    }
+
+    /// Weight drift without topology change: elements whose centroid is
+    /// inside the hot disc get costlier (models a compute front moving
+    /// over a fixed mesh — the workload incremental LB is built for).
+    pub fn drift_weights(&mut self, factor: f32) -> usize {
+        let s = self.mesh.dim + 1;
+        let dim = self.mesh.dim;
+        let mut touched = 0;
+        for e in 0..self.mesh.n_elems() {
+            let mut d2 = 0.0;
+            for k in 0..dim {
+                let mut c = 0.0;
+                for v in 0..s {
+                    let vid = self.mesh.elems[e * s + v] as usize;
+                    c += self.mesh.vertices[vid * dim + k];
+                }
+                c /= s as f64;
+                let d = c - self.hot_center[k];
+                d2 += d * d;
+            }
+            if d2 < self.hot_radius * self.hot_radius {
+                self.mesh.weights[e] = (self.mesh.weights[e] * factor).min(64.0);
+                touched += 1;
+            }
+        }
+        // Drift the hot front.
+        for k in 0..dim {
+            self.hot_center[k] =
+                (self.hot_center[k] + self.drift * (0.5 + self.rng.next_f64())).rem_euclid(1.0);
+        }
+        touched
+    }
+
+    /// One refinement sweep; returns the number of elements split.
+    pub fn step(&mut self) -> usize {
+        let s = self.mesh.dim + 1;
+        let dim = self.mesh.dim;
+        let n = self.mesh.n_elems();
+        let mut split_ids = Vec::new();
+        for e in 0..n {
+            let mut c = vec![0.0; dim];
+            for v in 0..s {
+                let vid = self.mesh.elems[e * s + v] as usize;
+                for k in 0..dim {
+                    c[k] += self.mesh.vertices[vid * dim + k];
+                }
+            }
+            let mut d2 = 0.0;
+            for k in 0..dim {
+                c[k] /= s as f64;
+                let d = c[k] - self.hot_center[k];
+                d2 += d * d;
+            }
+            if d2 < self.hot_radius * self.hot_radius && self.mesh.weights[e] < 8.0 {
+                split_ids.push((e, c));
+            }
+        }
+        // Split: insert centroid vertex, replace element with s children.
+        for (e, c) in &split_ids {
+            let new_vid = self.mesh.n_vertices() as u32;
+            self.mesh.vertices.extend_from_slice(c);
+            let parent: Vec<u32> = self.mesh.elem(*e).to_vec();
+            let w_child = self.mesh.weights[*e] * 1.2; // refinement deepens load
+            // Child 0 replaces the parent in place (drop vertex 0).
+            for child in 0..s {
+                let mut verts = parent.clone();
+                verts[child] = new_vid;
+                if child == 0 {
+                    let base = *e * s;
+                    self.mesh.elems[base..base + s].copy_from_slice(&verts);
+                    self.mesh.weights[*e] = w_child;
+                } else {
+                    self.mesh.elems.extend_from_slice(&verts);
+                    self.mesh.weights.push(w_child);
+                }
+            }
+        }
+        // Drift the hot front.
+        for k in 0..dim {
+            self.hot_center[k] =
+                (self.hot_center[k] + self.drift * (0.5 + self.rng.next_f64())).rem_euclid(1.0);
+        }
+        split_ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_square_counts() {
+        let m = SimplexMesh::unit_square_tri(4);
+        assert_eq!(m.n_vertices(), 25);
+        assert_eq!(m.n_elems(), 32);
+    }
+
+    #[test]
+    fn centroids_inside_unit_square() {
+        let m = SimplexMesh::unit_square_tri(3);
+        let c = m.centroids();
+        assert_eq!(c.len(), 18);
+        assert!(c.coords.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(c.ids.len(), 18);
+    }
+
+    #[test]
+    fn dual_edges_interior_count() {
+        // side=2: 8 triangles. Interior shared edges: each cell has its
+        // diagonal (4), plus vertical/horizontal interior facets.
+        let m = SimplexMesh::unit_square_tri(2);
+        let edges = m.dual_edges();
+        // Every edge references valid elements, no self loops.
+        assert!(!edges.is_empty());
+        for &(a, b) in &edges {
+            assert!(a < b);
+            assert!((b as usize) < m.n_elems());
+        }
+        // Each triangle has ≤ 3 neighbors.
+        let mut deg = vec![0usize; m.n_elems()];
+        for &(a, b) in &edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        assert!(deg.iter().all(|&d| d <= 3));
+    }
+
+    #[test]
+    fn refinement_grows_mesh() {
+        let m = SimplexMesh::unit_square_tri(8);
+        let n0 = m.n_elems();
+        let mut drv = RefinementDriver::new(m, 3);
+        let mut total_split = 0;
+        for _ in 0..5 {
+            total_split += drv.step();
+        }
+        assert!(total_split > 0);
+        assert!(drv.mesh.n_elems() > n0);
+        // Connectivity stays valid.
+        let max_vid = *drv.mesh.elems.iter().max().unwrap() as usize;
+        assert!(max_vid < drv.mesh.n_vertices());
+    }
+}

@@ -1,0 +1,7 @@
+//! Geometry substrate: point sets (SoA), bounding boxes, workload
+//! distributions and a small mesh generator.
+
+pub mod bbox;
+pub mod dist;
+pub mod mesh;
+pub mod point;

@@ -1,0 +1,225 @@
+//! The structure-of-arrays point set, the partitioner's input contract.
+//!
+//! The paper (§III-A): *"The input to the program is N points each with d
+//! co-ordinates, one unique id, and one weight value"*. We store
+//! coordinates flat (`coords[i*dim + k]`), which is both the paper's
+//! "linearized" snapshot layout (Fig 1) and the cache-friendly layout the
+//! tree build iterates over.
+
+use crate::geom::bbox::BoundingBox;
+use crate::util::rng::{Mt19937, Rng, SplitMix64};
+
+/// A weighted d-dimensional point set in structure-of-arrays layout.
+#[derive(Clone, Debug, Default)]
+pub struct PointSet {
+    /// Dimensionality (2, 3, 10, ... — no upper limit below 12 for SFC keys).
+    pub dim: usize,
+    /// Flat coordinates, `coords[i*dim + k]` = coordinate k of point i.
+    pub coords: Vec<f64>,
+    /// Unique global ids (the partitioner's output is a permutation of these).
+    pub ids: Vec<u64>,
+    /// Per-point weights (load).
+    pub weights: Vec<f32>,
+}
+
+impl PointSet {
+    /// Empty set of the given dimensionality.
+    pub fn new(dim: usize) -> Self {
+        PointSet { dim, coords: Vec::new(), ids: Vec::new(), weights: Vec::new() }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Coordinates of point `i`.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.coords[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Coordinate `k` of point `i`.
+    #[inline]
+    pub fn coord(&self, i: usize, k: usize) -> f64 {
+        self.coords[i * self.dim + k]
+    }
+
+    /// Append a point; id defaults to the running index if `u64::MAX`.
+    pub fn push(&mut self, coords: &[f64], id: u64, weight: f32) {
+        debug_assert_eq!(coords.len(), self.dim);
+        let id = if id == u64::MAX { self.ids.len() as u64 } else { id };
+        self.coords.extend_from_slice(coords);
+        self.ids.push(id);
+        self.weights.push(weight);
+    }
+
+    /// Total weight.
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum()
+    }
+
+    /// Tight bounding box of the whole set.
+    pub fn bounding_box(&self) -> BoundingBox {
+        BoundingBox::of_points(self.dim, &self.coords, None)
+    }
+
+    /// Squared Euclidean distance between points `i` and `j`.
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.point(i), self.point(j));
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    /// Squared Euclidean distance between point `i` and raw coords `q`.
+    pub fn dist2_to(&self, i: usize, q: &[f64]) -> f64 {
+        self.point(i).iter().zip(q).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    /// Gather a subset (by index) into a new set.
+    pub fn gather(&self, idx: &[u32]) -> PointSet {
+        let mut out = PointSet::new(self.dim);
+        out.coords.reserve(idx.len() * self.dim);
+        out.ids.reserve(idx.len());
+        out.weights.reserve(idx.len());
+        for &i in idx {
+            let i = i as usize;
+            out.coords.extend_from_slice(self.point(i));
+            out.ids.push(self.ids[i]);
+            out.weights.push(self.weights[i]);
+        }
+        out
+    }
+
+    /// Reorder in place according to `perm` (point `i` of the result is
+    /// old point `perm[i]`). This is the "application re-orders the
+    /// dataset according to the partitioner's output" step from §I.
+    pub fn permute(&self, perm: &[u32]) -> PointSet {
+        self.gather(perm)
+    }
+
+    /// Append all points of `other` (same dim).
+    pub fn extend(&mut self, other: &PointSet) {
+        assert_eq!(self.dim, other.dim);
+        self.coords.extend_from_slice(&other.coords);
+        self.ids.extend_from_slice(&other.ids);
+        self.weights.extend_from_slice(&other.weights);
+    }
+
+    // ------------------------------------------------------------------
+    // Workload constructors (paper §III-A test cases)
+    // ------------------------------------------------------------------
+
+    /// Uniform distribution over the unit hypercube, generated with the
+    /// Mersenne Twister exactly like the paper's test case ([19]).
+    pub fn uniform(n: usize, dim: usize, seed: u32) -> PointSet {
+        let mut mt = Mt19937::new(seed);
+        let mut ps = PointSet::new(dim);
+        ps.coords = (0..n * dim).map(|_| mt.next_f64()).collect();
+        ps.ids = (0..n as u64).collect();
+        ps.weights = vec![1.0; n];
+        ps
+    }
+
+    /// The paper's clustered test case: *"a Poisson distribution with mean
+    /// value in the bottom left corner of a hypercube domain"* mixed with
+    /// a uniform background. `cluster_frac` of the points are clustered.
+    pub fn clustered(n: usize, dim: usize, cluster_frac: f64, seed: u32) -> PointSet {
+        let mut mt = Mt19937::new(seed);
+        let mut ps = PointSet::new(dim);
+        let n_cluster = (n as f64 * cluster_frac) as usize;
+        ps.coords.reserve(n * dim);
+        // Clustered mass near the bottom-left corner: per-coordinate
+        // Poisson(lambda)/scale, concentrating around lambda/scale ≈ 0.05.
+        let lambda = 5.0;
+        let scale = 100.0;
+        for _ in 0..n_cluster {
+            for _ in 0..dim {
+                let v = (mt.poisson(lambda) as f64 + mt.next_f64()) / scale;
+                ps.coords.push(v.min(1.0));
+            }
+        }
+        for _ in 0..n - n_cluster {
+            for _ in 0..dim {
+                ps.coords.push(mt.next_f64());
+            }
+        }
+        ps.ids = (0..n as u64).collect();
+        ps.weights = vec![1.0; n];
+        ps
+    }
+
+    /// Uniform points with nonuniform weights (for load-balancing tests).
+    pub fn uniform_weighted(n: usize, dim: usize, wmax: f32, seed: u32) -> PointSet {
+        let mut ps = PointSet::uniform(n, dim, seed);
+        let mut sm = SplitMix64::new(seed as u64 ^ 0xabcd);
+        for w in ps.weights.iter_mut() {
+            *w = 1.0 + (sm.next_f64() as f32) * (wmax - 1.0);
+        }
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_access() {
+        let mut ps = PointSet::new(3);
+        ps.push(&[1.0, 2.0, 3.0], u64::MAX, 2.0);
+        ps.push(&[4.0, 5.0, 6.0], 42, 1.0);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.point(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ps.coord(0, 2), 3.0);
+        assert_eq!(ps.ids, vec![0, 42]);
+        assert_eq!(ps.total_weight(), 3.0);
+    }
+
+    #[test]
+    fn uniform_is_in_unit_cube_and_deterministic() {
+        let a = PointSet::uniform(1000, 3, 7);
+        let b = PointSet::uniform(1000, 3, 7);
+        assert_eq!(a.coords, b.coords);
+        assert!(a.coords.iter().all(|&c| (0.0..1.0).contains(&c)));
+        let bbox = a.bounding_box();
+        assert!(bbox.lo.iter().all(|&c| c >= 0.0));
+        assert!(bbox.hi.iter().all(|&c| c < 1.0));
+    }
+
+    #[test]
+    fn clustered_mass_is_bottom_left() {
+        let ps = PointSet::clustered(4000, 2, 0.5, 3);
+        // At least 40% of points within [0, 0.15)^2 (the cluster).
+        let near = (0..ps.len())
+            .filter(|&i| ps.point(i).iter().all(|&c| c < 0.15))
+            .count();
+        assert!(near > ps.len() * 2 / 5, "near={near}");
+    }
+
+    #[test]
+    fn gather_and_permute() {
+        let ps = PointSet::uniform(10, 2, 1);
+        let sub = ps.gather(&[3, 7]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.ids, vec![3, 7]);
+        assert_eq!(sub.point(0), ps.point(3));
+
+        let perm: Vec<u32> = (0..10).rev().collect();
+        let rev = ps.permute(&perm);
+        assert_eq!(rev.ids[0], 9);
+        assert_eq!(rev.point(9), ps.point(0));
+    }
+
+    #[test]
+    fn dist2_matches_manual() {
+        let mut ps = PointSet::new(2);
+        ps.push(&[0.0, 0.0], u64::MAX, 1.0);
+        ps.push(&[3.0, 4.0], u64::MAX, 1.0);
+        assert_eq!(ps.dist2(0, 1), 25.0);
+        assert_eq!(ps.dist2_to(0, &[1.0, 1.0]), 2.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Sparse matrices in COO/CSR form — the substrate for §V-B's general
+//! graph partitioning and distributed SpMV.
+
+/// Coordinate-format sparse matrix (equivalently, the weighted edge list
+/// of the graph whose adjacency matrix it is).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn push(&mut self, r: u32, c: u32, v: f32) {
+        self.rows.push(r);
+        self.cols.push(c);
+        self.vals.push(v);
+    }
+
+    /// Sort by (row, col) and sum duplicates.
+    pub fn dedup(&mut self) {
+        let mut idx: Vec<u32> = (0..self.nnz() as u32).collect();
+        idx.sort_unstable_by_key(|&i| (self.rows[i as usize], self.cols[i as usize]));
+        let (mut rows, mut cols, mut vals) =
+            (Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()));
+        for &i in &idx {
+            let i = i as usize;
+            if !rows.is_empty()
+                && *rows.last().unwrap() == self.rows[i]
+                && *cols.last().unwrap() == self.cols[i]
+            {
+                *vals.last_mut().unwrap() += self.vals[i];
+            } else {
+                rows.push(self.rows[i]);
+                cols.push(self.cols[i]);
+                vals.push(self.vals[i]);
+            }
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0u32; self.n_rows + 1];
+        for &r in &self.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for r in 0..self.n_rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        let mut cols = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut cursor = row_ptr.clone();
+        for i in 0..self.nnz() {
+            let r = self.rows[i] as usize;
+            let at = cursor[r] as usize;
+            cols[at] = self.cols[i];
+            vals[at] = self.vals[i];
+            cursor[r] += 1;
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, row_ptr, cols, vals }
+    }
+}
+
+/// Compressed sparse rows.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column indices and values of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    pub fn degree(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// y = A·x, sequential reference implementation (the oracle for the
+    /// distributed and PJRT paths).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0f64; self.n_rows];
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                acc += *v as f64 * x[*c as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// (max degree, mean degree).
+    pub fn degree_stats(&self) -> (usize, f64) {
+        let max = (0..self.n_rows).map(|r| self.degree(r)).max().unwrap_or(0);
+        (max, self.nnz() as f64 / self.n_rows.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Coo {
+        let mut m = Coo { n_rows: 3, n_cols: 3, ..Default::default() };
+        m.push(0, 0, 1.0);
+        m.push(0, 2, 2.0);
+        m.push(2, 1, 3.0);
+        m.push(1, 1, 4.0);
+        m
+    }
+
+    #[test]
+    fn coo_to_csr() {
+        let csr = small().to_csr();
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.degree(0), 2);
+        let (cols, vals) = csr.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        assert_eq!(csr.row(2).0, &[1]);
+    }
+
+    #[test]
+    fn dedup_sums_duplicates() {
+        let mut m = small();
+        m.push(0, 0, 5.0);
+        m.dedup();
+        assert_eq!(m.nnz(), 4);
+        let csr = m.to_csr();
+        assert_eq!(csr.row(0).1[0], 6.0);
+    }
+
+    #[test]
+    fn spmv_reference() {
+        let csr = small().to_csr();
+        let y = csr.spmv(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, 8.0, 6.0]);
+    }
+
+    #[test]
+    fn degree_stats() {
+        let csr = small().to_csr();
+        let (max, mean) = csr.degree_stats();
+        assert_eq!(max, 2);
+        assert!((mean - 4.0 / 3.0).abs() < 1e-12);
+    }
+}

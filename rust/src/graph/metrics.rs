@@ -1,0 +1,129 @@
+//! Partition-quality metrics for distributed SpMV — the columns of
+//! Tables II–VII.
+//!
+//! Definitions (per §II and §V-B, made precise for reproducibility):
+//!
+//! * **AvgLoad / MaxLoad** — nonzeros per process (mean / max).
+//! * **MaxDegree** — max over processes of the number of distinct peer
+//!   processes it exchanges with during the SpMV (x-gather sources plus
+//!   partial-y reduction destinations). Row-wise partitions of power-law
+//!   graphs touch columns everywhere, so MaxDegree ≈ P−1; SFC partitions
+//!   have compact column ranges, so MaxDegree stays O(√P)-ish.
+//! * **MaxEdgeCut** — max over processes of its communication volume in
+//!   vector elements: distinct non-owned columns it must receive plus
+//!   distinct non-owned rows whose partials it must send (eq. 1's
+//!   `max_i e_i` on the bipartite communication graph).
+
+use crate::graph::csr::Coo;
+use crate::graph::partition2d::vector_owner;
+
+/// One row of a Table II–VII-style report.
+#[derive(Clone, Debug, Default)]
+pub struct SpmvMetrics {
+    pub parts: usize,
+    pub avg_load: f64,
+    pub max_load: u64,
+    pub max_degree: usize,
+    pub max_edgecut: u64,
+}
+
+/// Compute the metrics for a given per-nonzero partition; the dense
+/// vector is owned in contiguous equal chunks ([`vector_owner`]).
+pub fn spmv_metrics(coo: &Coo, nnz_part: &[u32], parts: usize) -> SpmvMetrics {
+    assert_eq!(nnz_part.len(), coo.nnz());
+    let n = coo.n_rows;
+    let mut loads = vec![0u64; parts];
+    // Distinct (part, col) and (part, row) pairs via sorted dedup.
+    let mut col_pairs: Vec<u64> = Vec::with_capacity(coo.nnz());
+    let mut row_pairs: Vec<u64> = Vec::with_capacity(coo.nnz());
+    for i in 0..coo.nnz() {
+        let p = nnz_part[i] as u64;
+        loads[p as usize] += 1;
+        col_pairs.push((p << 32) | coo.cols[i] as u64);
+        row_pairs.push((p << 32) | coo.rows[i] as u64);
+    }
+    col_pairs.sort_unstable();
+    col_pairs.dedup();
+    row_pairs.sort_unstable();
+    row_pairs.dedup();
+
+    let mut recv_vol = vec![0u64; parts]; // non-owned x columns needed
+    let mut send_vol = vec![0u64; parts]; // non-owned y rows contributed
+    let mut peers: Vec<std::collections::HashSet<u32>> =
+        vec![std::collections::HashSet::new(); parts];
+    // Degree counts a process's *dependencies* (x owners it reads from +
+    // y owners it reduces into), matching the paper's row-wise shape of
+    // exactly P−1 (a row block's columns touch every owner) while SFC
+    // partitions with compact column ranges stay low.
+    for &pc in &col_pairs {
+        let (p, c) = ((pc >> 32) as usize, (pc & 0xffff_ffff) as u32);
+        let owner = vector_owner(c, n, parts);
+        if owner as usize != p {
+            recv_vol[p] += 1;
+            peers[p].insert(owner);
+        }
+    }
+    for &pr in &row_pairs {
+        let (p, r) = ((pr >> 32) as usize, (pr & 0xffff_ffff) as u32);
+        let owner = vector_owner(r, n, parts);
+        if owner as usize != p {
+            send_vol[p] += 1;
+            peers[p].insert(owner);
+        }
+    }
+    let max_edgecut = (0..parts).map(|p| recv_vol[p] + send_vol[p]).max().unwrap_or(0);
+    SpmvMetrics {
+        parts,
+        avg_load: coo.nnz() as f64 / parts as f64,
+        max_load: loads.iter().copied().max().unwrap_or(0),
+        max_degree: peers.iter().map(|s| s.len()).max().unwrap_or(0),
+        max_edgecut,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition2d::{rowwise_partition, sfc_partition};
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::sfc::Curve;
+
+    #[test]
+    fn rowwise_has_no_row_sends() {
+        // Row-wise: every nonzero's row is owned by its process by
+        // construction (same split), so edgecut is recv-only and degree
+        // is driven by column spread.
+        let g = rmat(RmatParams::graph500(9, 8.0), 4);
+        let part = rowwise_partition(&g, 8);
+        let m = spmv_metrics(&g, &part, 8);
+        assert!(m.max_degree <= 7);
+        assert!(m.max_load as f64 >= m.avg_load);
+    }
+
+    #[test]
+    fn sfc_beats_rowwise_on_power_law() {
+        let g = rmat(RmatParams::graph500(12, 16.0), 9);
+        let p = 64;
+        let row = spmv_metrics(&g, &rowwise_partition(&g, p), p);
+        let (sp, _) = sfc_partition(&g, p, Curve::Morton, 1);
+        let sfc = spmv_metrics(&g, &sp, p);
+        // The tables' headline shape: near-perfect SFC load balance...
+        assert!(sfc.max_load <= (sfc.avg_load.ceil() as u64) + 1);
+        assert!(row.max_load > sfc.max_load);
+        // ...row-wise degree ≈ p-1, SFC much smaller...
+        assert_eq!(row.max_degree, p - 1);
+        assert!(sfc.max_degree < row.max_degree, "sfc {} row {}", sfc.max_degree, row.max_degree);
+        // ...and lower communication volume.
+        assert!(sfc.max_edgecut < row.max_edgecut, "sfc {} row {}", sfc.max_edgecut, row.max_edgecut);
+    }
+
+    #[test]
+    fn single_part_has_zero_comm() {
+        let g = rmat(RmatParams::graph500(8, 4.0), 2);
+        let part = vec![0u32; g.nnz()];
+        let m = spmv_metrics(&g, &part, 1);
+        assert_eq!(m.max_degree, 0);
+        assert_eq!(m.max_edgecut, 0);
+        assert_eq!(m.max_load, g.nnz() as u64);
+    }
+}

@@ -1,0 +1,10 @@
+//! General graph partitioning and distributed SpMV (paper §V-B).
+pub mod csr;
+pub mod dense_dist;
+pub mod embedding;
+pub mod metrics;
+pub mod pagerank;
+pub mod partition2d;
+pub mod rmat;
+pub mod snap_io;
+pub mod spmv_dist;

@@ -1,0 +1,128 @@
+//! Partitioning general graphs by partitioning their adjacency matrices
+//! as 2-D point sets (paper §V-B).
+//!
+//! *"The row and column indices of the adjacency matrix are used as
+//! co-ordinates in 2 dimensional space"* — each nonzero `(i, j)` becomes
+//! a 2-D point with unit weight (or |value|), partitioned by the standard
+//! pipeline (kd-tree → SFC → greedy knapsack). The baseline is the
+//! row-wise decomposition the tables compare against: each process gets a
+//! contiguous block of rows with *all* their nonzeros, which on power-law
+//! graphs concentrates hub rows onto single processes.
+
+use crate::geom::point::PointSet;
+use crate::graph::csr::Coo;
+use crate::partition::partitioner::{PartitionConfig, Partitioner};
+use crate::sfc::Curve;
+
+/// Row-wise baseline: nonzero `(r, c)` goes to the process owning row
+/// `r` under an equal split of rows. Returns per-nonzero part ids.
+pub fn rowwise_partition(coo: &Coo, parts: usize) -> Vec<u32> {
+    let n = coo.n_rows.max(1);
+    coo.rows
+        .iter()
+        .map(|&r| ((r as usize * parts) / n).min(parts - 1) as u32)
+        .collect()
+}
+
+/// SFC partition of the nonzero set. Returns per-nonzero part ids and the
+/// partitioning time in seconds (the tables' last column).
+pub fn sfc_partition(coo: &Coo, parts: usize, curve: Curve, threads: usize) -> (Vec<u32>, f64) {
+    let mut ps = PointSet::new(2);
+    ps.coords.reserve(coo.nnz() * 2);
+    for i in 0..coo.nnz() {
+        ps.coords.push(coo.rows[i] as f64);
+        ps.coords.push(coo.cols[i] as f64);
+    }
+    ps.ids = (0..coo.nnz() as u64).collect();
+    ps.weights = vec![1.0; coo.nnz()];
+    let cfg = PartitionConfig {
+        parts,
+        bucket_size: 64,
+        curve,
+        threads,
+        ..Default::default()
+    };
+    let plan = Partitioner::new(cfg).partition(&ps);
+    (plan.part_of, plan.total_secs)
+}
+
+/// Contiguous equal split of vector indices: owner of index `i`, the
+/// exact inverse of [`crate::graph::spmv_dist::owned_range`]
+/// (`rank r owns [n·r/p, n·(r+1)/p)`, all floor divisions).
+#[inline]
+pub fn vector_owner(i: u32, n: usize, parts: usize) -> u32 {
+    debug_assert!((i as usize) < n);
+    (((i as usize + 1) * parts - 1) / n.max(1)).min(parts - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    #[test]
+    fn rowwise_assigns_by_row_block() {
+        let g = rmat(RmatParams::graph500(8, 8.0), 2);
+        let part = rowwise_partition(&g, 4);
+        for (i, &p) in part.iter().enumerate() {
+            assert_eq!(p, vector_owner(g.rows[i], g.n_rows, 4));
+        }
+    }
+
+    #[test]
+    fn sfc_partition_is_balanced_to_one_nonzero() {
+        let g = rmat(RmatParams::graph500(9, 8.0), 3);
+        let (part, secs) = sfc_partition(&g, 8, Curve::Morton, 1);
+        assert!(secs >= 0.0);
+        let mut loads = vec![0u64; 8];
+        for &p in &part {
+            loads[p as usize] += 1;
+        }
+        let mx = *loads.iter().max().unwrap();
+        let mn = *loads.iter().min().unwrap();
+        assert!(mx - mn <= 1, "loads={loads:?}");
+    }
+
+    #[test]
+    fn rowwise_is_unbalanced_on_power_law() {
+        let g = rmat(RmatParams::graph500(11, 16.0), 5);
+        let part = rowwise_partition(&g, 16);
+        let mut loads = vec![0u64; 16];
+        for &p in &part {
+            loads[p as usize] += 1;
+        }
+        let avg = g.nnz() as f64 / 16.0;
+        let mx = *loads.iter().max().unwrap() as f64;
+        // Hub rows make some block much heavier than average.
+        assert!(mx > 1.3 * avg, "max {mx} vs avg {avg}");
+    }
+
+    #[test]
+    fn vector_owner_covers_ranges() {
+        assert_eq!(vector_owner(0, 100, 4), 0);
+        assert_eq!(vector_owner(99, 100, 4), 3);
+        // Every index owned by exactly one part; contiguous.
+        let owners: Vec<u32> = (0..100).map(|i| vector_owner(i, 100, 4)).collect();
+        assert!(owners.windows(2).all(|w| w[0] <= w[1]));
+        for p in 0..4u32 {
+            assert_eq!(owners.iter().filter(|&&o| o == p).count(), 25);
+        }
+    }
+
+    #[test]
+    fn vector_owner_matches_owned_range_non_divisible() {
+        use crate::graph::spmv_dist::owned_range;
+        for (n, p) in [(256usize, 3usize), (5, 3), (1000, 7), (17, 16)] {
+            for r in 0..p {
+                let (lo, hi) = owned_range(n, p, r);
+                for c in lo..hi {
+                    assert_eq!(
+                        vector_owner(c, n, p) as usize,
+                        r,
+                        "n={n} p={p} c={c} should be owned by {r}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! SNAP edge-list loader.
+//!
+//! Reads the whitespace-separated `src dst` text format of the SNAP
+//! collection (with `#` comment lines), the format of the paper's
+//! Google / Orkut / Twitter inputs. Vertices are remapped to a dense
+//! `0..n` range (SNAP ids are sparse).
+
+use crate::graph::csr::Coo;
+use std::io::BufRead;
+
+/// Parse SNAP edge-list text into a COO adjacency matrix.
+pub fn parse_snap<R: BufRead>(reader: R) -> std::io::Result<Coo> {
+    let mut remap: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    let mut coo = Coo::default();
+    let mut next_id = 0u32;
+    let mut intern = |v: u64, remap: &mut std::collections::HashMap<u64, u32>| -> u32 {
+        *remap.entry(v).or_insert_with(|| {
+            let id = next_id;
+            next_id += 1;
+            id
+        })
+    };
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else { continue };
+        let (Ok(a), Ok(b)) = (a.parse::<u64>(), b.parse::<u64>()) else { continue };
+        let (ra, rb) = (intern(a, &mut remap), intern(b, &mut remap));
+        coo.push(ra, rb, 1.0);
+    }
+    coo.n_rows = next_id as usize;
+    coo.n_cols = next_id as usize;
+    coo.dedup();
+    Ok(coo)
+}
+
+/// Load a SNAP file from disk.
+pub fn load_snap(path: &std::path::Path) -> std::io::Result<Coo> {
+    let f = std::fs::File::open(path)?;
+    parse_snap(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_edges() {
+        let text = "# Directed graph\n# Nodes: 4 Edges: 4\n10 20\n20 30\n10 30\n30 10\n";
+        let coo = parse_snap(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(coo.n_rows, 3); // 10, 20, 30 remapped to 0..3
+        assert_eq!(coo.nnz(), 4);
+        // Remap is first-seen order: 10->0, 20->1, 30->2.
+        let csr = coo.to_csr();
+        assert_eq!(csr.row(0).0, &[1, 2]);
+        assert_eq!(csr.row(2).0, &[0]);
+    }
+
+    #[test]
+    fn duplicate_edges_collapse() {
+        let text = "1 2\n1 2\n2 1\n";
+        let coo = parse_snap(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(coo.nnz(), 2);
+    }
+
+    #[test]
+    fn garbage_lines_skipped() {
+        let text = "a b\n1 2\n\n3\n4 5\n";
+        let coo = parse_snap(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(coo.nnz(), 2);
+    }
+}

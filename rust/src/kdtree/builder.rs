@@ -1,0 +1,656 @@
+//! Kd-tree construction (paper §III-A, listing 1).
+//!
+//! The paper's shared-memory build is two-stage: the top `K2 ≥ T` nodes
+//! are built breadth-first, assigned to threads (with SFC keys + greedy
+//! knapsack — done by the partitioner driver), and each thread then builds
+//! its subtrees depth-first with no further synchronization. This module
+//! implements exactly that: [`KdTreeBuilder::build`] runs the breadth-
+//! first expansion sequentially (it touches only the top of the tree) and
+//! fans the frontier subtrees out to scoped threads, each writing a
+//! private node arena that is spliced into the global arena afterwards.
+//!
+//! **Linearized working set (paper Fig 1, §Perf):** the builder operates
+//! on a private copy of the coordinates kept physically in permutation
+//! order (`splitter::WorkSet`), so every partition pass streams memory
+//! sequentially. This is the paper's "current state of the partitioner
+//! was stored in two vectors … improved tree-building time by … improving
+//! cache reuse", and measured ~1.9× on 400k-point builds here.
+//!
+//! The distributed (multi-rank) build lives in
+//! [`crate::partition::partitioner`]; it computes the top `K1 ≥ P` nodes
+//! with collective splitter computation, then calls this local builder.
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::node::{KdTree, Node, NONE};
+use crate::kdtree::splitter::{
+    partition_with_meta, split_valid, split_value_work, SplitterConfig, SplitterKind, WorkSet,
+};
+use crate::util::rng::SplitMix64;
+use crate::util::timer::Stopwatch;
+
+/// Depth cap: SFC path keys are left-aligned in a `u128`, and duplicate-
+/// heavy inputs must not recurse forever.
+pub const MAX_DEPTH: u16 = 120;
+
+/// Builder configuration. `BUCKETSIZE` is the paper's leaf capacity.
+#[derive(Clone, Debug)]
+pub struct KdTreeBuilder {
+    pub bucket_size: usize,
+    pub splitter: SplitterConfig,
+    /// Worker threads for the subtree phase (the paper's `T`).
+    pub threads: usize,
+    /// Breadth-first frontier size before fan-out (the paper's `K2`);
+    /// effective value is `max(k2, threads)`.
+    pub k2: usize,
+    pub seed: u64,
+    /// Geometric mode (§V-A fast-path contract): node boxes are exact
+    /// split halves of a fixed `domain` instead of tight point boxes, and
+    /// midpoint splits are taken even when one side is empty (the empty
+    /// child becomes an empty leaf). This makes tree path keys equal the
+    /// coordinate Morton interleave, enabling binary-search point
+    /// location. `None` = tight boxes (the default build).
+    pub domain: Option<BoundingBox>,
+}
+
+impl Default for KdTreeBuilder {
+    fn default() -> Self {
+        KdTreeBuilder {
+            bucket_size: 32,
+            splitter: SplitterConfig::default(),
+            threads: 1,
+            k2: 1,
+            seed: 0xdecaf,
+            domain: None,
+        }
+    }
+}
+
+/// Timing/shape statistics of one build (the quantities Figs 2–5 plot).
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    /// Seconds in the breadth-first top phase (`point_order_dist_kd`
+    /// analogue for the shared-memory tree).
+    pub top_secs: f64,
+    /// Seconds in the parallel subtree phase (`point_order_local_subtree`).
+    pub subtree_secs: f64,
+    /// Max busy CPU seconds across subtree workers (simulated span).
+    pub subtree_span_secs: f64,
+    pub n_nodes: usize,
+    pub max_depth: u16,
+}
+
+impl KdTreeBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bucket_size(mut self, b: usize) -> Self {
+        self.bucket_size = b.max(1);
+        self
+    }
+
+    pub fn splitter(mut self, s: SplitterConfig) -> Self {
+        self.splitter = s;
+        self
+    }
+
+    pub fn splitter_kind(mut self, k: SplitterKind) -> Self {
+        self.splitter = SplitterConfig::uniform(k);
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn k2(mut self, k: usize) -> Self {
+        self.k2 = k.max(1);
+        self
+    }
+
+    /// Enable geometric mode over `domain` (see the field docs).
+    pub fn domain(mut self, domain: BoundingBox) -> Self {
+        self.domain = Some(domain);
+        self
+    }
+
+    /// Build a tree over the whole point set.
+    pub fn build(&self, ps: &PointSet) -> KdTree {
+        self.build_with_stats(ps).0
+    }
+
+    /// Build and return phase statistics.
+    pub fn build_with_stats(&self, ps: &PointSet) -> (KdTree, BuildStats) {
+        let n = ps.len();
+        let mut stats = BuildStats::default();
+        if n == 0 {
+            let tree = KdTree {
+                nodes: Vec::new(),
+                root: NONE,
+                perm: Vec::new(),
+                dim: ps.dim,
+                bucket_size: self.bucket_size,
+            };
+            return (tree, stats);
+        }
+
+        let sw = Stopwatch::start();
+        // The linearized working set: private coord/weight copies kept in
+        // permutation order.
+        let mut wcoords = ps.coords.clone();
+        let mut wweights = ps.weights.clone();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        let mut work = WorkSet {
+            dim: ps.dim,
+            coords: &mut wcoords,
+            weights: &mut wweights,
+            perm: &mut perm,
+        };
+
+        let root_bbox = self.domain.clone().unwrap_or_else(|| ps.bounding_box());
+        let geometric = self.domain.is_some();
+        let total_w = ps.total_weight();
+        let mut nodes = vec![Node::leaf(root_bbox, 0, n as u32, total_w, 0)];
+
+        // ---- Phase 1: breadth-first expansion of the top K2 nodes ----
+        let k2 = self.k2.max(self.threads);
+        let mut frontier: Vec<i32> = vec![0];
+        let mut rng = SplitMix64::new(self.seed);
+        while frontier.len() < k2 {
+            let Some(pos) = frontier
+                .iter()
+                .enumerate()
+                .filter(|(_, &i)| nodes[i as usize].count() > self.bucket_size)
+                .max_by(|a, b| {
+                    let wa = nodes[*a.1 as usize].weight;
+                    let wb = nodes[*b.1 as usize].weight;
+                    wa.partial_cmp(&wb).unwrap()
+                })
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let idx = frontier[pos];
+            if let Some((l, r)) =
+                split_node(&mut nodes, idx, &mut work, &self.splitter, geometric, &mut rng)
+            {
+                frontier.swap_remove(pos);
+                frontier.push(l);
+                frontier.push(r);
+            } else {
+                frontier.swap_remove(pos);
+                if frontier.is_empty() {
+                    break;
+                }
+            }
+        }
+        stats.top_secs = sw.secs();
+
+        // ---- Phase 2: per-thread depth-first subtrees ----
+        let sw = Stopwatch::start();
+        let mut tasks: Vec<i32> = (0..nodes.len() as i32)
+            .filter(|&i| {
+                nodes[i as usize].is_leaf() && nodes[i as usize].count() > self.bucket_size
+            })
+            .collect();
+        tasks.sort_by_key(|&i| nodes[i as usize].start);
+
+        let mut results: Vec<(i32, Vec<Node>, f64)> = Vec::new();
+        {
+            // Carve the working set into disjoint regions, one per task.
+            let mut regions: Vec<(i32, WorkSet<'_>)> = Vec::new();
+            let mut rest = work;
+            let mut consumed = 0u32;
+            for &t in &tasks {
+                let node = &nodes[t as usize];
+                let skip = (node.start - consumed) as usize;
+                let (_, after) = rest.split_at(skip);
+                let (mine, after) = after.split_at(node.count());
+                regions.push((t, mine));
+                rest = after;
+                consumed = node.end;
+            }
+
+            let threads = self.threads.max(1);
+            let mut buckets: Vec<Vec<(i32, WorkSet<'_>)>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (i, reg) in regions.into_iter().enumerate() {
+                buckets[i % threads].push(reg);
+            }
+            let nodes_ref = &nodes;
+            let splitter = self.splitter;
+            let bucket_size = self.bucket_size;
+            let seed = self.seed;
+            let all: Vec<Vec<(i32, Vec<Node>, f64)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|regs| {
+                        s.spawn(move || {
+                            let t0 = crate::util::timer::thread_cpu_time();
+                            let mut out = Vec::new();
+                            for (task, mut region) in regs {
+                                let node = &nodes_ref[task as usize];
+                                let mut rng =
+                                    SplitMix64::new(seed ^ (task as u64).wrapping_mul(0x9e37));
+                                let local = build_subtree(
+                                    &mut region,
+                                    node.start,
+                                    node.bbox.clone(),
+                                    node.depth,
+                                    &splitter,
+                                    bucket_size,
+                                    geometric,
+                                    &mut rng,
+                                );
+                                let busy = crate::util::timer::thread_cpu_time() - t0;
+                                out.push((task, local, busy));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("subtree worker panicked")).collect()
+            });
+            for group in all {
+                for item in group {
+                    results.push(item);
+                }
+            }
+        }
+
+        // Splice local arenas into the global arena.
+        for (task, local, busy) in results {
+            stats.subtree_span_secs = stats.subtree_span_secs.max(busy);
+            let offset = nodes.len() as i32;
+            for (li, mut ln) in local.into_iter().enumerate() {
+                if ln.left != NONE {
+                    ln.left += offset - 1; // local index 0 maps to `task`
+                }
+                if ln.right != NONE {
+                    ln.right += offset - 1;
+                }
+                if li == 0 {
+                    nodes[task as usize] = ln;
+                } else {
+                    nodes.push(ln);
+                }
+            }
+        }
+        stats.subtree_secs = sw.secs();
+
+        let tree = KdTree {
+            nodes,
+            root: 0,
+            perm,
+            dim: ps.dim,
+            bucket_size: self.bucket_size,
+        };
+        stats.n_nodes = tree.n_nodes();
+        stats.max_depth = tree.max_depth();
+        (tree, stats)
+    }
+}
+
+/// A chosen split with its fused one-pass metadata.
+struct SplitHit {
+    d: usize,
+    value: f64,
+    boundary: usize,
+    lw: f64,
+    lbox: BoundingBox,
+    rbox: BoundingBox,
+}
+
+impl SplitHit {
+    /// Child boxes: tight from the fused pass, or geometric halves.
+    fn into_boxes(self, parent: &BoundingBox, geometric: bool) -> (f64, BoundingBox, BoundingBox) {
+        if geometric {
+            let (l, r) = parent.split_at(self.d, self.value);
+            (self.lw, l, r)
+        } else {
+            (self.lw, self.lbox, self.rbox)
+        }
+    }
+}
+
+/// Split leaf `idx` of the global arena in place (positions are global
+/// working-set positions during phase 1). Returns the child indices, or
+/// `None` if the node cannot be split.
+fn split_node(
+    nodes: &mut Vec<Node>,
+    idx: i32,
+    work: &mut WorkSet<'_>,
+    cfg: &SplitterConfig,
+    geometric: bool,
+    rng: &mut SplitMix64,
+) -> Option<(i32, i32)> {
+    let (start, end, depth, bbox) = {
+        let n = &nodes[idx as usize];
+        (n.start, n.end, n.depth, n.bbox.clone())
+    };
+    if depth >= MAX_DEPTH {
+        return None;
+    }
+    let hit = choose_split(work, start as usize, end as usize, &bbox, cfg, depth, geometric, rng)?;
+    let (d, value, boundary) = (hit.d, hit.value, hit.boundary);
+    let n_total_w = nodes[idx as usize].weight;
+    let (lw, lbox, rbox) = hit.into_boxes(&bbox, geometric);
+    let left = Node {
+        bbox: lbox,
+        start,
+        end: start + boundary as u32,
+        weight: lw,
+        depth: depth + 1,
+        ..Node::leaf(BoundingBox::empty(work.dim), 0, 0, 0.0, 0)
+    };
+    let right = Node {
+        bbox: rbox,
+        start: start + boundary as u32,
+        end,
+        weight: n_total_w - lw,
+        depth: depth + 1,
+        ..Node::leaf(BoundingBox::empty(work.dim), 0, 0, 0.0, 0)
+    };
+    let li = nodes.len() as i32;
+    nodes.push(left);
+    let ri = nodes.len() as i32;
+    nodes.push(right);
+    let n = &mut nodes[idx as usize];
+    n.split_dim = d as u16;
+    n.split_val = value;
+    n.left = li;
+    n.right = ri;
+    Some((li, ri))
+}
+
+/// Choose (dim, value, boundary) over working-set positions `lo..hi`,
+/// with fallbacks: configured splitter → exact median on the same dim →
+/// any dim with spread. `None` if every dimension is degenerate.
+///
+/// In geometric mode the configured split is taken verbatim (no
+/// fallbacks, empty sides allowed) so path keys stay equal to the
+/// coordinate interleave.
+#[allow(clippy::too_many_arguments)]
+fn choose_split(
+    work: &mut WorkSet<'_>,
+    lo: usize,
+    hi: usize,
+    bbox: &BoundingBox,
+    cfg: &SplitterConfig,
+    depth: u16,
+    geometric: bool,
+    rng: &mut SplitMix64,
+) -> Option<SplitHit> {
+    let kind = cfg.kind_at(depth);
+    let d0 = cfg.dim_at(bbox, depth);
+    if geometric {
+        if bbox.width(d0) <= 0.0 {
+            return None;
+        }
+        let value = split_value_work(kind, work, lo, hi, d0, bbox, rng);
+        let mut lbox = BoundingBox::empty(work.dim);
+        let mut rbox = BoundingBox::empty(work.dim);
+        let (boundary, lw) =
+            partition_with_meta(work, lo, hi, d0, value, true, &mut lbox, &mut rbox);
+        return Some(SplitHit { d: d0, value, boundary, lw, lbox, rbox });
+    }
+    // Fast path: the configured dimension almost always splits; fallbacks
+    // engage only on degenerate data (no allocation either way).
+    if let Some(hit) = try_split(work, lo, hi, bbox, kind, d0, rng) {
+        return Some(hit);
+    }
+    let mut tried = 1u32 << d0;
+    for _ in 1..work.dim {
+        let mut d = usize::MAX;
+        let mut best = f64::NEG_INFINITY;
+        for k in 0..work.dim {
+            if tried & (1 << k) == 0 && bbox.width(k) > best {
+                best = bbox.width(k);
+                d = k;
+            }
+        }
+        if d == usize::MAX || best <= 0.0 {
+            break;
+        }
+        tried |= 1 << d;
+        if let Some(hit) = try_split(work, lo, hi, bbox, kind, d, rng) {
+            return Some(hit);
+        }
+    }
+    None
+}
+
+/// Attempt a split on dim `d`: configured kind, then exact median.
+fn try_split(
+    work: &mut WorkSet<'_>,
+    lo: usize,
+    hi: usize,
+    bbox: &BoundingBox,
+    kind: SplitterKind,
+    d: usize,
+    rng: &mut SplitMix64,
+) -> Option<SplitHit> {
+    if bbox.width(d) <= 0.0 {
+        return None;
+    }
+    let attempt = |k: SplitterKind, rng: &mut SplitMix64, work: &mut WorkSet<'_>| {
+        let value = split_value_work(k, work, lo, hi, d, bbox, rng);
+        let mut lbox = BoundingBox::empty(work.dim);
+        let mut rbox = BoundingBox::empty(work.dim);
+        let (boundary, lw) =
+            partition_with_meta(work, lo, hi, d, value, false, &mut lbox, &mut rbox);
+        SplitHit { d, value, boundary, lw, lbox, rbox }
+    };
+    let hit = attempt(kind, rng, work);
+    if split_valid(hit.boundary, hi - lo) {
+        return Some(hit);
+    }
+    if kind != SplitterKind::MedianSort {
+        let hit = attempt(SplitterKind::MedianSort, rng, work);
+        if split_valid(hit.boundary, hi - lo) {
+            return Some(hit);
+        }
+    }
+    None
+}
+
+/// Depth-first subtree build into a fresh local arena (root at index 0).
+/// `region` is the subtree's slice of the working set (positions are
+/// region-local); `perm_base` is its offset in the global vector.
+#[allow(clippy::too_many_arguments)]
+fn build_subtree(
+    region: &mut WorkSet<'_>,
+    perm_base: u32,
+    bbox: BoundingBox,
+    depth: u16,
+    cfg: &SplitterConfig,
+    bucket_size: usize,
+    geometric: bool,
+    rng: &mut SplitMix64,
+) -> Vec<Node> {
+    let w: f64 = region.weights.iter().map(|&w| w as f64).sum();
+    let mut nodes =
+        vec![Node::leaf(bbox, perm_base, perm_base + region.len() as u32, w, depth)];
+    let mut stack: Vec<(usize, usize, usize)> = vec![(0, 0, region.len())];
+    while let Some((ni, lo, hi)) = stack.pop() {
+        if hi - lo <= bucket_size || nodes[ni].depth >= MAX_DEPTH {
+            continue;
+        }
+        let bbox = nodes[ni].bbox.clone();
+        let depth = nodes[ni].depth;
+        let Some(hit) = choose_split(region, lo, hi, &bbox, cfg, depth, geometric, rng) else {
+            continue;
+        };
+        let (d, value, boundary) = (hit.d, hit.value, hit.boundary);
+        let w = nodes[ni].weight;
+        let (lw, lbox, rbox) = hit.into_boxes(&bbox, geometric);
+        let li = nodes.len();
+        nodes.push(Node {
+            bbox: lbox,
+            start: perm_base + lo as u32,
+            end: perm_base + (lo + boundary) as u32,
+            weight: lw,
+            depth: depth + 1,
+            ..Node::leaf(BoundingBox::empty(region.dim), 0, 0, 0.0, 0)
+        });
+        let ri = nodes.len();
+        nodes.push(Node {
+            bbox: rbox,
+            start: perm_base + (lo + boundary) as u32,
+            end: perm_base + hi as u32,
+            weight: w - lw,
+            depth: depth + 1,
+            ..Node::leaf(BoundingBox::empty(region.dim), 0, 0, 0.0, 0)
+        });
+        let n = &mut nodes[ni];
+        n.split_dim = d as u16;
+        n.split_val = value;
+        n.left = li as i32;
+        n.right = ri as i32;
+        stack.push((li, lo, lo + boundary));
+        stack.push((ri, lo + boundary, hi));
+    }
+    nodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(ps: &PointSet, tree: &KdTree) {
+        tree.check_invariants(&ps.coords, &ps.weights).expect("invariants");
+    }
+
+    #[test]
+    fn build_uniform_midpoint() {
+        let ps = PointSet::uniform(2000, 3, 42);
+        let tree = KdTreeBuilder::new().bucket_size(16).build(&ps);
+        check(&ps, &tree);
+        assert!(tree.n_nodes() > 100);
+        for &l in &tree.leaves() {
+            assert!(tree.nodes[l as usize].count() <= 16);
+        }
+    }
+
+    #[test]
+    fn build_median_sort_is_shallow() {
+        let ps = PointSet::clustered(4000, 2, 0.7, 9);
+        let mid = KdTreeBuilder::new()
+            .bucket_size(8)
+            .splitter_kind(SplitterKind::Midpoint)
+            .build(&ps);
+        let med = KdTreeBuilder::new()
+            .bucket_size(8)
+            .splitter_kind(SplitterKind::MedianSort)
+            .build(&ps);
+        check(&ps, &mid);
+        check(&ps, &med);
+        assert!(
+            med.max_depth() < mid.max_depth(),
+            "median depth {} vs midpoint {}",
+            med.max_depth(),
+            mid.max_depth()
+        );
+        assert!(med.max_depth() as u32 <= crate::util::bits::ilog2(4000 / 8) + 2);
+    }
+
+    #[test]
+    fn build_parallel_matches_sequential_shape() {
+        let ps = PointSet::uniform(3000, 3, 5);
+        let t1 = KdTreeBuilder::new().bucket_size(20).threads(1).build(&ps);
+        let t4 = KdTreeBuilder::new().bucket_size(20).threads(4).k2(8).build(&ps);
+        check(&ps, &t1);
+        check(&ps, &t4);
+        assert_eq!(t1.leaves().len(), t4.leaves().len());
+        assert_eq!(t1.max_depth(), t4.max_depth());
+    }
+
+    #[test]
+    fn duplicates_do_not_hang() {
+        let mut ps = PointSet::new(2);
+        for _ in 0..200 {
+            ps.push(&[0.5, 0.5], u64::MAX, 1.0);
+        }
+        let tree = KdTreeBuilder::new().bucket_size(8).build(&ps);
+        check(&ps, &tree);
+        assert_eq!(tree.leaves().len(), 1);
+    }
+
+    #[test]
+    fn weighted_points_propagate() {
+        let ps = PointSet::uniform_weighted(500, 3, 10.0, 3);
+        let tree = KdTreeBuilder::new().bucket_size(10).build(&ps);
+        check(&ps, &tree);
+        let total: f64 = ps.total_weight();
+        assert!((tree.nodes[0].weight - total).abs() < 1e-6 * total);
+    }
+
+    #[test]
+    fn locate_leaf_finds_home() {
+        let ps = PointSet::uniform(1000, 3, 8);
+        let tree = KdTreeBuilder::new().bucket_size(16).build(&ps);
+        for i in (0..1000).step_by(37) {
+            let leaf = tree.locate_leaf(ps.point(i));
+            let n = &tree.nodes[leaf as usize];
+            let found = tree.perm[n.start as usize..n.end as usize]
+                .iter()
+                .any(|&pi| pi as usize == i);
+            assert!(found, "point {i} not in located leaf");
+        }
+    }
+
+    #[test]
+    fn cycle_dim_rule_cycles() {
+        let ps = PointSet::uniform(500, 3, 2);
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = crate::kdtree::splitter::DimRule::Cycle;
+        let tree = KdTreeBuilder::new().bucket_size(8).splitter(cfg).build(&ps);
+        assert_eq!(tree.nodes[0].split_dim, 0);
+        let l = tree.nodes[0].left as usize;
+        if !tree.nodes[l].is_leaf() {
+            assert_eq!(tree.nodes[l].split_dim, 1);
+        }
+    }
+
+    #[test]
+    fn stats_reported() {
+        let ps = PointSet::uniform(2000, 3, 1);
+        let (tree, stats) = KdTreeBuilder::new().bucket_size(16).threads(2).build_with_stats(&ps);
+        assert_eq!(stats.n_nodes, tree.n_nodes());
+        assert_eq!(stats.max_depth, tree.max_depth());
+        assert!(stats.subtree_secs >= 0.0);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let ps = PointSet::new(3);
+        let tree = KdTreeBuilder::new().build(&ps);
+        assert_eq!(tree.root, NONE);
+        let mut one = PointSet::new(2);
+        one.push(&[0.1, 0.2], u64::MAX, 1.0);
+        let tree = KdTreeBuilder::new().build(&one);
+        assert_eq!(tree.leaves().len(), 1);
+        check(&one, &tree);
+    }
+
+    #[test]
+    fn geometric_mode_keeps_domain_halving() {
+        let ps = PointSet::uniform(800, 2, 21);
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = crate::kdtree::splitter::DimRule::Cycle;
+        let tree = KdTreeBuilder::new()
+            .bucket_size(8)
+            .splitter(cfg)
+            .domain(BoundingBox::unit(2))
+            .build(&ps);
+        check(&ps, &tree);
+        // Root splits x at 0.5 exactly; children boxes are the halves.
+        assert_eq!(tree.nodes[0].split_val, 0.5);
+        let l = &tree.nodes[tree.nodes[0].left as usize];
+        assert_eq!(l.bbox.hi[0], 0.5);
+        assert_eq!(l.bbox.lo[0], 0.0);
+        assert_eq!(l.bbox.hi[1], 1.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! The nondeterministic concurrent linked list of node blocks (§III).
+//!
+//! The paper stores tree nodes in a lock-free linked list whose elements
+//! are *vectors of tree nodes*; threads publish blocks with atomic link
+//! pointers, so the block order is nondeterministic across executions
+//! while remaining linearizable (every published block is visible to all
+//! subsequent iterations). Partition output is invariant to the order —
+//! which tests assert — exactly the "allowed non-determinism in the
+//! primary data structures" the paper credits for scalability.
+
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+struct Block<T> {
+    items: Vec<T>,
+    next: *mut Block<T>,
+}
+
+/// A lock-free prepend-only list of blocks.
+pub struct ConcList<T> {
+    head: AtomicPtr<Block<T>>,
+    len: AtomicUsize,
+}
+
+impl<T> Default for ConcList<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ConcList<T> {
+    pub fn new() -> Self {
+        ConcList { head: AtomicPtr::new(ptr::null_mut()), len: AtomicUsize::new(0) }
+    }
+
+    /// Publish a block of items (wait-free except for the CAS retry loop,
+    /// which only retries under contention — each retry means another
+    /// thread *made progress*, the paper's definition of lock-freedom).
+    pub fn push_block(&self, items: Vec<T>) {
+        let n = items.len();
+        let block = Box::into_raw(Box::new(Block { items, next: ptr::null_mut() }));
+        let mut head = self.head.load(Ordering::Acquire);
+        loop {
+            // SAFETY: block is uniquely owned until the CAS succeeds.
+            unsafe { (*block).next = head };
+            match self.head.compare_exchange_weak(
+                head,
+                block,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(h) => head = h,
+            }
+        }
+        self.len.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Total number of items published.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate over all items published at the time of the call (newest
+    /// block first — the nondeterministic order the paper accepts).
+    pub fn iter(&self) -> ConcListIter<'_, T> {
+        ConcListIter { block: self.head.load(Ordering::Acquire), idx: 0, _list: self }
+    }
+
+    /// Drain into a Vec (requires exclusive access).
+    pub fn into_vec(mut self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut cur = *self.head.get_mut();
+        while !cur.is_null() {
+            // SAFETY: exclusive access via `self`; each block visited once.
+            let block = unsafe { Box::from_raw(cur) };
+            out.extend(block.items);
+            cur = block.next;
+        }
+        self.head = AtomicPtr::new(ptr::null_mut());
+        self.len = AtomicUsize::new(0);
+        out
+    }
+}
+
+impl<T> Drop for ConcList<T> {
+    fn drop(&mut self) {
+        let mut cur = *self.head.get_mut();
+        while !cur.is_null() {
+            // SAFETY: drop has exclusive access.
+            let block = unsafe { Box::from_raw(cur) };
+            cur = block.next;
+        }
+    }
+}
+
+pub struct ConcListIter<'a, T> {
+    block: *mut Block<T>,
+    idx: usize,
+    _list: &'a ConcList<T>,
+}
+
+impl<'a, T> Iterator for ConcListIter<'a, T> {
+    type Item = &'a T;
+
+    fn next(&mut self) -> Option<&'a T> {
+        loop {
+            if self.block.is_null() {
+                return None;
+            }
+            // SAFETY: blocks are never freed while the list is alive and
+            // borrowed; `items` is immutable after publication.
+            let block = unsafe { &*self.block };
+            if self.idx < block.items.len() {
+                let item = &block.items[self.idx];
+                self.idx += 1;
+                return Some(item);
+            }
+            self.block = block.next;
+            self.idx = 0;
+        }
+    }
+}
+
+// SAFETY: the list only hands out shared references to published items.
+unsafe impl<T: Send> Send for ConcList<T> {}
+unsafe impl<T: Send + Sync> Sync for ConcList<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_iter_roundtrip() {
+        let l = ConcList::new();
+        l.push_block(vec![1, 2, 3]);
+        l.push_block(vec![4]);
+        assert_eq!(l.len(), 4);
+        let mut got: Vec<i32> = l.iter().copied().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn into_vec_collects_everything() {
+        let l = ConcList::new();
+        for i in 0..10 {
+            l.push_block(vec![i; 3]);
+        }
+        let mut v = l.into_vec();
+        v.sort_unstable();
+        assert_eq!(v.len(), 30);
+        assert_eq!(v[0], 0);
+        assert_eq!(v[29], 9);
+    }
+
+    #[test]
+    fn concurrent_publishers_lose_nothing() {
+        let l = std::sync::Arc::new(ConcList::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let l = l.clone();
+                s.spawn(move || {
+                    for i in 0..250 {
+                        l.push_block(vec![t * 1000 + i]);
+                    }
+                });
+            }
+        });
+        assert_eq!(l.len(), 1000);
+        let mut seen: Vec<i32> = l.iter().copied().collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 1000, "duplicate or lost items");
+    }
+
+    #[test]
+    fn readers_see_published_prefix_while_writers_run() {
+        let l = std::sync::Arc::new(ConcList::new());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            {
+                let l = l.clone();
+                let stop = stop.clone();
+                s.spawn(move || {
+                    for i in 0..500 {
+                        l.push_block(vec![i]);
+                    }
+                    stop.store(1, Ordering::Release);
+                });
+            }
+            // Reader: every snapshot length must be ≤ the true count and
+            // monotonically consistent with linearizability.
+            let mut last = 0;
+            loop {
+                let cnt = l.iter().count();
+                assert!(cnt >= last, "snapshot shrank: {cnt} < {last}");
+                last = cnt;
+                if stop.load(Ordering::Acquire) == 1 {
+                    break;
+                }
+            }
+        });
+        assert_eq!(l.iter().count(), 500);
+    }
+
+    #[test]
+    fn empty_list() {
+        let l: ConcList<u8> = ConcList::new();
+        assert!(l.is_empty());
+        assert_eq!(l.iter().count(), 0);
+    }
+}

@@ -1,0 +1,894 @@
+//! Dynamic weighted kd-trees (paper §IV).
+//!
+//! Leaves are *buckets* holding at most `BUCKETSIZE` points. Under
+//! insertion/deletion, buckets drift: *heavy* buckets exceed
+//! `2·BUCKETSIZE` and are split recursively; *light* subtrees whose total
+//! weight falls to `BUCKETSIZE` are merged back into a single bucket.
+//! These two operations are the paper's **Adjustments** (Algorithm 1),
+//! implemented faithfully in [`DynKdTree::adjustments`].
+//!
+//! [`DynForest`] is the deployment shape: the top `K1·K2·P` nodes form a
+//! static routing tree whose leaves each own an independent [`DynKdTree`]
+//! subtree, so threads can run insert/delete/adjust on disjoint subtrees
+//! in parallel — the paper's "entire sub trees reside on the same
+//! process" assumption.
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::builder::{KdTreeBuilder, MAX_DEPTH};
+use crate::kdtree::splitter::{
+    partition_by_plane, split_valid, split_value, SplitterConfig, SplitterKind,
+};
+use crate::util::rng::SplitMix64;
+
+/// Child sentinel.
+const NONE: i32 = -1;
+
+/// A leaf bucket: parallel arrays of point data (SoA like `PointSet`).
+#[derive(Clone, Debug, Default)]
+pub struct Bucket {
+    pub ids: Vec<u64>,
+    pub coords: Vec<f64>,
+    pub weights: Vec<f32>,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn weight(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum()
+    }
+
+    pub fn push(&mut self, coords: &[f64], id: u64, w: f32) {
+        self.coords.extend_from_slice(coords);
+        self.ids.push(id);
+        self.weights.push(w);
+    }
+
+    /// Remove point `id` if present (swap-remove). Returns its weight.
+    pub fn remove(&mut self, id: u64, dim: usize) -> Option<f32> {
+        let pos = self.ids.iter().position(|&x| x == id)?;
+        let last = self.ids.len() - 1;
+        self.ids.swap(pos, last);
+        self.weights.swap(pos, last);
+        for k in 0..dim {
+            self.coords.swap(pos * dim + k, last * dim + k);
+        }
+        self.ids.pop();
+        self.coords.truncate(last * dim);
+        Some(self.weights.pop().unwrap())
+    }
+
+    /// Append all points of `other`.
+    pub fn absorb(&mut self, other: &mut Bucket) {
+        self.ids.append(&mut other.ids);
+        self.coords.append(&mut other.coords);
+        self.weights.append(&mut other.weights);
+    }
+}
+
+/// A dynamic tree node.
+#[derive(Clone, Debug)]
+pub struct DynNode {
+    pub split_dim: u16,
+    pub split_val: f64,
+    pub left: i32,
+    pub right: i32,
+    /// Bucket index for leaves, `NONE` for internal nodes.
+    pub bucket: i32,
+    /// Point count below this node (the paper's `n.wt` with unit weights).
+    pub count: u32,
+    /// Sum of point weights below this node.
+    pub weight: f64,
+    pub depth: u16,
+    /// SFC key (left-aligned path bits), maintained under split/merge.
+    pub sfc_key: u128,
+}
+
+impl DynNode {
+    pub fn is_leaf(&self) -> bool {
+        self.bucket != NONE
+    }
+}
+
+/// A dynamic weighted kd-tree over one subtree's domain.
+#[derive(Clone, Debug)]
+pub struct DynKdTree {
+    pub dim: usize,
+    pub bucket_size: usize,
+    pub nodes: Vec<DynNode>,
+    pub buckets: Vec<Bucket>,
+    free_nodes: Vec<i32>,
+    free_buckets: Vec<i32>,
+    pub root: i32,
+    pub splitter: SplitterConfig,
+    rng: SplitMix64,
+    /// Domain box (used to compute split values for fresh splits).
+    pub domain: BoundingBox,
+}
+
+impl DynKdTree {
+    /// Empty tree over `domain` with root SFC key `root_key` at `depth`.
+    pub fn new(
+        dim: usize,
+        bucket_size: usize,
+        domain: BoundingBox,
+        root_key: u128,
+        root_depth: u16,
+        seed: u64,
+    ) -> Self {
+        let mut t = DynKdTree {
+            dim,
+            bucket_size: bucket_size.max(1),
+            nodes: Vec::new(),
+            buckets: Vec::new(),
+            free_nodes: Vec::new(),
+            free_buckets: Vec::new(),
+            root: NONE,
+            splitter: SplitterConfig::uniform(SplitterKind::Midpoint),
+            rng: SplitMix64::new(seed),
+            domain,
+        };
+        let b = t.alloc_bucket();
+        let root = t.alloc_node(DynNode {
+            split_dim: 0,
+            split_val: 0.0,
+            left: NONE,
+            right: NONE,
+            bucket: b,
+            count: 0,
+            weight: 0.0,
+            depth: root_depth,
+            sfc_key: root_key,
+        });
+        t.root = root;
+        t
+    }
+
+    /// Build from an initial point set (archived data, §IV).
+    pub fn from_points(ps: &PointSet, bucket_size: usize, seed: u64) -> Self {
+        let mut t = DynKdTree::new(
+            ps.dim,
+            bucket_size,
+            if ps.is_empty() { BoundingBox::unit(ps.dim) } else { ps.bounding_box() },
+            0,
+            0,
+            seed,
+        );
+        // Bulk load then adjust — simple and uses the same split machinery
+        // the steady state uses.
+        let b = t.nodes[t.root as usize].bucket as usize;
+        t.buckets[b].ids = ps.ids.clone();
+        t.buckets[b].coords = ps.coords.clone();
+        t.buckets[b].weights = ps.weights.clone();
+        let n = t.nodes[t.root as usize].count;
+        debug_assert_eq!(n, 0);
+        t.nodes[t.root as usize].count = ps.len() as u32;
+        t.nodes[t.root as usize].weight = ps.total_weight();
+        t.adjustments();
+        t
+    }
+
+    fn alloc_node(&mut self, n: DynNode) -> i32 {
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = n;
+                i
+            }
+            None => {
+                self.nodes.push(n);
+                self.nodes.len() as i32 - 1
+            }
+        }
+    }
+
+    fn alloc_bucket(&mut self) -> i32 {
+        match self.free_buckets.pop() {
+            Some(i) => {
+                self.buckets[i as usize] = Bucket::default();
+                i
+            }
+            None => {
+                self.buckets.push(Bucket::default());
+                self.buckets.len() as i32 - 1
+            }
+        }
+    }
+
+    fn free_node(&mut self, i: i32) {
+        self.free_nodes.push(i);
+    }
+
+    fn free_bucket(&mut self, i: i32) {
+        self.buckets[i as usize] = Bucket::default();
+        self.free_buckets.push(i);
+    }
+
+    /// Total points in the tree.
+    pub fn n_points(&self) -> usize {
+        if self.root == NONE {
+            0
+        } else {
+            self.nodes[self.root as usize].count as usize
+        }
+    }
+
+    /// Live buckets (leaves).
+    pub fn n_buckets(&self) -> usize {
+        self.count_leaves(self.root)
+    }
+
+    fn count_leaves(&self, idx: i32) -> usize {
+        if idx == NONE {
+            return 0;
+        }
+        let n = &self.nodes[idx as usize];
+        if n.is_leaf() {
+            1
+        } else {
+            self.count_leaves(n.left) + self.count_leaves(n.right)
+        }
+    }
+
+    /// Live node count (allocated minus freed).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len() - self.free_nodes.len()
+    }
+
+    /// Insert a point: depth-first descent to the bucket, path weights
+    /// updated on the way down (the paper's `InsertDelete` locate+update).
+    pub fn insert(&mut self, coords: &[f64], id: u64, w: f32) {
+        debug_assert_eq!(coords.len(), self.dim);
+        let mut idx = self.root;
+        loop {
+            let n = &mut self.nodes[idx as usize];
+            n.count += 1;
+            n.weight += w as f64;
+            if n.is_leaf() {
+                let b = n.bucket as usize;
+                self.buckets[b].push(coords, id, w);
+                return;
+            }
+            idx = if coords[n.split_dim as usize] <= n.split_val { n.left } else { n.right };
+        }
+    }
+
+    /// Delete point `id` located at `coords`. Returns false if absent.
+    pub fn delete(&mut self, coords: &[f64], id: u64) -> bool {
+        // First locate (read-only), then update weights on a second pass —
+        // mirrors the paper's locate + update structure and keeps counts
+        // correct when the id is missing.
+        let mut idx = self.root;
+        let mut path = Vec::with_capacity(24);
+        loop {
+            let n = &self.nodes[idx as usize];
+            path.push(idx);
+            if n.is_leaf() {
+                break;
+            }
+            idx = if coords[n.split_dim as usize] <= n.split_val { n.left } else { n.right };
+        }
+        let leaf = *path.last().unwrap();
+        let b = self.nodes[leaf as usize].bucket;
+        let Some(w) = self.buckets[b as usize].remove(id, self.dim) else {
+            return false;
+        };
+        for i in path {
+            let n = &mut self.nodes[i as usize];
+            n.count -= 1;
+            n.weight -= w as f64;
+        }
+        true
+    }
+
+    /// The paper's Algorithm 1: recompute subtree weights, split heavy
+    /// buckets (`count > 2·BUCKETSIZE`), merge light subtrees
+    /// (`count ≤ BUCKETSIZE` with leaf children), prune empty children.
+    /// Returns the root weight.
+    pub fn adjustments(&mut self) -> f64 {
+        let root = self.root;
+        self.adjust_rec(root);
+        if self.root != NONE {
+            self.nodes[self.root as usize].weight
+        } else {
+            0.0
+        }
+    }
+
+    fn adjust_rec(&mut self, idx: i32) -> u32 {
+        if idx == NONE {
+            return 0;
+        }
+        if self.nodes[idx as usize].is_leaf() {
+            if self.nodes[idx as usize].count as usize > 2 * self.bucket_size {
+                self.split_leaf(idx);
+                // After SplitLeaf the node is internal; recount below.
+                return self.nodes[idx as usize].count;
+            }
+            return self.nodes[idx as usize].count;
+        }
+        // Internal node: recurse, prune empty children.
+        let (l, r) = (self.nodes[idx as usize].left, self.nodes[idx as usize].right);
+        let w1 = self.adjust_rec(l);
+        if l != NONE && w1 == 0 {
+            self.free_subtree(l);
+            self.nodes[idx as usize].left = NONE;
+        }
+        let w2 = self.adjust_rec(r);
+        if r != NONE && w2 == 0 {
+            self.free_subtree(r);
+            self.nodes[idx as usize].right = NONE;
+        }
+        let count = w1 + w2;
+        // Recompute weight from children.
+        let weight = {
+            let n = &self.nodes[idx as usize];
+            let lw = if n.left != NONE { self.nodes[n.left as usize].weight } else { 0.0 };
+            let rw = if n.right != NONE { self.nodes[n.right as usize].weight } else { 0.0 };
+            lw + rw
+        };
+        {
+            let n = &mut self.nodes[idx as usize];
+            n.count = count;
+            n.weight = weight;
+        }
+        // Merge light subtrees: count ≤ BUCKETSIZE with both children
+        // leaves (or a single leaf child) collapses into this node.
+        if count as usize <= self.bucket_size {
+            let n = &self.nodes[idx as usize];
+            let (l, r) = (n.left, n.right);
+            let l_leaf = l != NONE && self.nodes[l as usize].is_leaf();
+            let r_leaf = r != NONE && self.nodes[r as usize].is_leaf();
+            if l != NONE && r != NONE {
+                if l_leaf && r_leaf {
+                    let b = self.alloc_bucket();
+                    let (lb, rb) =
+                        (self.nodes[l as usize].bucket, self.nodes[r as usize].bucket);
+                    let mut merged = Bucket::default();
+                    merged.absorb(&mut self.buckets[lb as usize].clone());
+                    merged.absorb(&mut self.buckets[rb as usize].clone());
+                    self.buckets[b as usize] = merged;
+                    self.free_bucket(lb);
+                    self.free_bucket(rb);
+                    self.free_node(l);
+                    self.free_node(r);
+                    let n = &mut self.nodes[idx as usize];
+                    n.left = NONE;
+                    n.right = NONE;
+                    n.bucket = b;
+                }
+            } else if l != NONE && l_leaf {
+                let lb = self.nodes[l as usize].bucket;
+                self.free_node(l);
+                let n = &mut self.nodes[idx as usize];
+                n.left = NONE;
+                n.bucket = lb;
+            } else if r != NONE && r_leaf {
+                let rb = self.nodes[r as usize].bucket;
+                self.free_node(r);
+                let n = &mut self.nodes[idx as usize];
+                n.right = NONE;
+                n.bucket = rb;
+            }
+        }
+        count
+    }
+
+    fn free_subtree(&mut self, idx: i32) {
+        if idx == NONE {
+            return;
+        }
+        let n = self.nodes[idx as usize].clone();
+        if n.is_leaf() {
+            self.free_bucket(n.bucket);
+        } else {
+            self.free_subtree(n.left);
+            self.free_subtree(n.right);
+        }
+        self.free_node(idx);
+    }
+
+    /// The paper's `SplitLeaf`: split a heavy bucket recursively until all
+    /// resulting buckets hold ≤ BUCKETSIZE points. SFC keys of children
+    /// extend the parent's key by one path bit per level.
+    fn split_leaf(&mut self, idx: i32) {
+        let (bucket_idx, depth, key) = {
+            let n = &self.nodes[idx as usize];
+            (n.bucket, n.depth, n.sfc_key)
+        };
+        if depth >= MAX_DEPTH {
+            return;
+        }
+        let bucket = std::mem::take(&mut self.buckets[bucket_idx as usize]);
+        self.free_bucket(bucket_idx);
+
+        // Compute split over the bucket's points.
+        let n_pts = bucket.len();
+        let mut order: Vec<u32> = (0..n_pts as u32).collect();
+        let bbox = BoundingBox::of_points(self.dim, &bucket.coords, None);
+        let kind = self.splitter.kind_at(depth);
+        let d = self.splitter.dim_at(&bbox, depth);
+        let mut split = None;
+        // Try configured dim, then all dims by spread (duplicate guard).
+        let mut dims: Vec<usize> = (0..self.dim).collect();
+        dims.sort_by(|&a, &b| bbox.width(b).partial_cmp(&bbox.width(a)).unwrap());
+        dims.retain(|&dd| dd != d);
+        dims.insert(0, d);
+        for &dd in &dims {
+            if bbox.width(dd) <= 0.0 {
+                continue;
+            }
+            let v = split_value(kind, &bucket.coords, self.dim, &order, dd, &bbox, &mut self.rng);
+            let b = partition_by_plane(&bucket.coords, self.dim, &mut order, dd, v);
+            if split_valid(b, n_pts) {
+                split = Some((dd, v, b));
+                break;
+            }
+            let v = split_value(
+                SplitterKind::MedianSort,
+                &bucket.coords,
+                self.dim,
+                &order,
+                dd,
+                &bbox,
+                &mut self.rng,
+            );
+            let b = partition_by_plane(&bucket.coords, self.dim, &mut order, dd, v);
+            if split_valid(b, n_pts) {
+                split = Some((dd, v, b));
+                break;
+            }
+        }
+        let Some((d, value, boundary)) = split else {
+            // All duplicates: restore as an (oversized) leaf.
+            let b = self.alloc_bucket();
+            self.buckets[b as usize] = bucket;
+            self.nodes[idx as usize].bucket = b;
+            return;
+        };
+
+        // Materialize children buckets.
+        let gather = |range: &[u32]| {
+            let mut nb = Bucket::default();
+            for &i in range {
+                let i = i as usize;
+                nb.push(
+                    &bucket.coords[i * self.dim..(i + 1) * self.dim],
+                    bucket.ids[i],
+                    bucket.weights[i],
+                );
+            }
+            nb
+        };
+        let lb_data = gather(&order[..boundary]);
+        let rb_data = gather(&order[boundary..]);
+        let (lc, lw) = (lb_data.len() as u32, lb_data.weight());
+        let (rc, rw) = (rb_data.len() as u32, rb_data.weight());
+        let lb = self.alloc_bucket();
+        self.buckets[lb as usize] = lb_data;
+        let rb = self.alloc_bucket();
+        self.buckets[rb as usize] = rb_data;
+        // SFC: child keys extend the parent path; bit position is
+        // 127 - depth (left-aligned paths).
+        let bit = 1u128 << (127 - depth as u32);
+        let l = self.alloc_node(DynNode {
+            split_dim: 0,
+            split_val: 0.0,
+            left: NONE,
+            right: NONE,
+            bucket: lb,
+            count: lc,
+            weight: lw,
+            depth: depth + 1,
+            sfc_key: key,
+        });
+        let r = self.alloc_node(DynNode {
+            split_dim: 0,
+            split_val: 0.0,
+            left: NONE,
+            right: NONE,
+            bucket: rb,
+            count: rc,
+            weight: rw,
+            depth: depth + 1,
+            sfc_key: key | bit,
+        });
+        {
+            let n = &mut self.nodes[idx as usize];
+            n.split_dim = d as u16;
+            n.split_val = value;
+            n.left = l;
+            n.right = r;
+            n.bucket = NONE;
+        }
+        // Recurse on still-heavy children (SplitLeaf's recursion, with the
+        // *target* bucket size, not the 2× trigger).
+        if lc as usize > self.bucket_size {
+            self.split_leaf(l);
+        }
+        if rc as usize > self.bucket_size {
+            self.split_leaf(r);
+        }
+    }
+
+    /// Leaf (bucket) metadata in SFC-key order: `(key, node_idx)`.
+    pub fn buckets_in_order(&self) -> Vec<(u128, i32)> {
+        let mut out = Vec::new();
+        self.collect_leaves(self.root, &mut out);
+        out.sort_by_key(|&(k, _)| k);
+        out
+    }
+
+    fn collect_leaves(&self, idx: i32, out: &mut Vec<(u128, i32)>) {
+        if idx == NONE {
+            return;
+        }
+        let n = &self.nodes[idx as usize];
+        if n.is_leaf() {
+            out.push((n.sfc_key, idx));
+        } else {
+            self.collect_leaves(n.left, out);
+            self.collect_leaves(n.right, out);
+        }
+    }
+
+    /// Flatten to a `PointSet` (bucket order).
+    pub fn to_pointset(&self) -> PointSet {
+        let mut ps = PointSet::new(self.dim);
+        for (_, leaf) in self.buckets_in_order() {
+            let b = &self.buckets[self.nodes[leaf as usize].bucket as usize];
+            ps.coords.extend_from_slice(&b.coords);
+            ps.ids.extend_from_slice(&b.ids);
+            ps.weights.extend_from_slice(&b.weights);
+        }
+        ps
+    }
+
+    /// Structural invariants for tests: counts/weights consistent,
+    /// no heavy bucket (after adjustments), every live bucket reachable.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        fn rec(t: &DynKdTree, idx: i32) -> Result<(u32, f64), String> {
+            let n = &t.nodes[idx as usize];
+            if n.is_leaf() {
+                let b = &t.buckets[n.bucket as usize];
+                if b.len() != n.count as usize {
+                    return Err(format!("leaf count {} != bucket {}", n.count, b.len()));
+                }
+                let w = b.weight();
+                if (w - n.weight).abs() > 1e-6 * w.abs().max(1.0) {
+                    return Err("leaf weight mismatch".into());
+                }
+                return Ok((n.count, n.weight));
+            }
+            let mut c = 0;
+            let mut w = 0.0;
+            for ch in [n.left, n.right] {
+                if ch == NONE {
+                    continue;
+                }
+                if t.nodes[ch as usize].depth != n.depth + 1 {
+                    return Err("depth mismatch".into());
+                }
+                let (cc, cw) = rec(t, ch)?;
+                c += cc;
+                w += cw;
+            }
+            if c != n.count {
+                return Err(format!("node count {} != children {}", n.count, c));
+            }
+            if (w - n.weight).abs() > 1e-6 * w.abs().max(1.0) {
+                return Err("node weight mismatch".into());
+            }
+            Ok((c, w))
+        }
+        if self.root != NONE {
+            rec(self, self.root)?;
+        }
+        Ok(())
+    }
+}
+
+/// The deployment shape of §IV: a static top (routing) tree whose leaves
+/// each own an independent dynamic subtree.
+pub struct DynForest {
+    pub dim: usize,
+    pub bucket_size: usize,
+    /// Routing structure: split hyperplanes of the top tree.
+    pub top: crate::kdtree::node::KdTree,
+    /// Map from top-tree leaf arena index to subtree slot.
+    pub leaf_slot: std::collections::HashMap<u32, usize>,
+    /// Independent subtrees, one per top leaf, in top-leaf DFS order.
+    pub subtrees: Vec<DynKdTree>,
+}
+
+impl DynForest {
+    /// Build from archived data with `k_top` top leaves (the paper's
+    /// `K1·K2·P` — pass the product).
+    pub fn from_points(ps: &PointSet, bucket_size: usize, k_top: usize, seed: u64) -> Self {
+        // Top tree: leaves sized so ~k_top of them cover the data.
+        let top_bucket = (ps.len() / k_top.max(1)).max(bucket_size);
+        let top = KdTreeBuilder::new()
+            .bucket_size(top_bucket)
+            .splitter(SplitterConfig::uniform(SplitterKind::MedianSort))
+            .build(ps);
+        let leaves = top.leaves_dfs();
+        let mut leaf_slot = std::collections::HashMap::new();
+        let mut subtrees = Vec::with_capacity(leaves.len());
+        for (slot, &l) in leaves.iter().enumerate() {
+            leaf_slot.insert(l, slot);
+            let n = &top.nodes[l as usize];
+            let idx: Vec<u32> = top.perm[n.start as usize..n.end as usize].to_vec();
+            let sub_ps = ps.gather(&idx);
+            // Root key: the slot index left-aligned in the key space keeps
+            // subtree curves disjoint and ordered.
+            let bits = crate::util::bits::ilog2(leaves.len().next_power_of_two().max(2)) as u32;
+            let key = (slot as u128) << (128 - bits);
+            let mut t = DynKdTree::new(
+                ps.dim,
+                bucket_size,
+                n.bbox.clone(),
+                key,
+                bits as u16,
+                seed ^ (slot as u64) << 8,
+            );
+            let b = t.nodes[t.root as usize].bucket as usize;
+            t.buckets[b].ids = sub_ps.ids.clone();
+            t.buckets[b].coords = sub_ps.coords.clone();
+            t.buckets[b].weights = sub_ps.weights.clone();
+            t.nodes[t.root as usize].count = sub_ps.len() as u32;
+            t.nodes[t.root as usize].weight = sub_ps.total_weight();
+            t.adjustments();
+            subtrees.push(t);
+        }
+        DynForest { dim: ps.dim, bucket_size, top, leaf_slot, subtrees }
+    }
+
+    /// Which subtree owns coordinates `q` (the `LoadDistThread` routing).
+    pub fn route(&self, q: &[f64]) -> usize {
+        let leaf = self.top.locate_leaf(q);
+        self.leaf_slot[&leaf]
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.subtrees.iter().map(|t| t.n_points()).sum()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.subtrees.iter().map(|t| t.n_buckets()).sum()
+    }
+
+    /// Max buckets over subtrees (the paper's per-process bucket count in
+    /// the amortized-cost formula).
+    pub fn max_buckets(&self) -> usize {
+        self.subtrees.iter().map(|t| t.n_buckets()).max().unwrap_or(0)
+    }
+
+    /// Parallel insert/delete: operations are binned by owning subtree,
+    /// then `threads` workers process disjoint subtrees (Algorithm 3's
+    /// Spawn/Join around `InsertDelete`).
+    pub fn insert_delete_parallel(
+        &mut self,
+        inserts: &PointSet,
+        deletes: &[(Vec<f64>, u64)],
+        threads: usize,
+    ) {
+        let n_sub = self.subtrees.len();
+        let mut ins_bins: Vec<Vec<u32>> = vec![Vec::new(); n_sub];
+        for i in 0..inserts.len() {
+            ins_bins[self.route(inserts.point(i))].push(i as u32);
+        }
+        let mut del_bins: Vec<Vec<u32>> = vec![Vec::new(); n_sub];
+        for (i, (c, _)) in deletes.iter().enumerate() {
+            del_bins[self.route(c)].push(i as u32);
+        }
+        let dim = self.dim;
+        // Workers own disjoint subtree slices.
+        let subtrees = &mut self.subtrees;
+        let chunks: Vec<&mut DynKdTree> = subtrees.iter_mut().collect();
+        let mut groups: Vec<Vec<(usize, &mut DynKdTree)>> =
+            (0..threads.max(1)).map(|_| Vec::new()).collect();
+        for (slot, t) in chunks.into_iter().enumerate() {
+            groups[slot % threads.max(1)].push((slot, t));
+        }
+        std::thread::scope(|s| {
+            for group in groups {
+                let ins_bins = &ins_bins;
+                let del_bins = &del_bins;
+                s.spawn(move || {
+                    for (slot, tree) in group {
+                        for &i in &ins_bins[slot] {
+                            let i = i as usize;
+                            tree.insert(inserts.point(i), inserts.ids[i], inserts.weights[i]);
+                        }
+                        for &i in &del_bins[slot] {
+                            let (c, id) = &deletes[i as usize];
+                            debug_assert_eq!(c.len(), dim);
+                            tree.delete(c, *id);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Parallel adjustments over subtrees (Algorithm 3's periodic
+    /// `Adjustments(i)` loop).
+    pub fn adjustments_parallel(&mut self, threads: usize) {
+        let subtrees = &mut self.subtrees;
+        let chunks: Vec<&mut DynKdTree> = subtrees.iter_mut().collect();
+        let mut groups: Vec<Vec<&mut DynKdTree>> =
+            (0..threads.max(1)).map(|_| Vec::new()).collect();
+        for (slot, t) in chunks.into_iter().enumerate() {
+            groups[slot % threads.max(1)].push(t);
+        }
+        std::thread::scope(|s| {
+            for group in groups {
+                s.spawn(move || {
+                    for tree in group {
+                        tree.adjustments();
+                    }
+                });
+            }
+        });
+    }
+
+    /// All ids (for delete-victim sampling in drivers).
+    pub fn all_ids(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for t in &self.subtrees {
+            for b in &t.buckets {
+                out.extend_from_slice(&b.ids);
+            }
+        }
+        out
+    }
+
+    /// Locate the id owning `q` exactly: route + subtree descent + bucket
+    /// scan. Returns (subtree, bucket node, position) if present.
+    pub fn locate(&self, q: &[f64], id: u64) -> Option<(usize, i32)> {
+        let slot = self.route(q);
+        let t = &self.subtrees[slot];
+        let mut idx = t.root;
+        loop {
+            let n = &t.nodes[idx as usize];
+            if n.is_leaf() {
+                let b = &t.buckets[n.bucket as usize];
+                return if b.ids.contains(&id) { Some((slot, idx)) } else { None };
+            }
+            idx = if q[n.split_dim as usize] <= n.split_val { n.left } else { n.right };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_points_splits_heavy_root() {
+        let ps = PointSet::uniform(1000, 3, 21);
+        let t = DynKdTree::from_points(&ps, 16, 1);
+        t.check_invariants().unwrap();
+        assert_eq!(t.n_points(), 1000);
+        assert!(t.n_buckets() > 1000 / 32);
+        // After adjustments no bucket is heavy.
+        for (_, leaf) in t.buckets_in_order() {
+            assert!(t.nodes[leaf as usize].count as usize <= 2 * 16);
+        }
+    }
+
+    #[test]
+    fn insert_updates_path_weights() {
+        let ps = PointSet::uniform(100, 2, 3);
+        let mut t = DynKdTree::from_points(&ps, 8, 2);
+        t.insert(&[0.5, 0.5], 1000, 2.5);
+        t.check_invariants().unwrap();
+        assert_eq!(t.n_points(), 101);
+        assert!((t.nodes[t.root as usize].weight - 102.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delete_removes_and_missing_is_noop() {
+        let ps = PointSet::uniform(50, 2, 4);
+        let mut t = DynKdTree::from_points(&ps, 8, 5);
+        let victim = 7u64;
+        let coords: Vec<f64> = ps.point(7).to_vec();
+        assert!(t.delete(&coords, victim));
+        assert_eq!(t.n_points(), 49);
+        assert!(!t.delete(&coords, victim));
+        assert_eq!(t.n_points(), 49);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn adjustments_split_heavy_buckets() {
+        let mut t =
+            DynKdTree::new(2, 4, BoundingBox::unit(2), 0, 0, 9);
+        let mut sm = crate::util::rng::SplitMix64::new(3);
+        use crate::util::rng::Rng;
+        for i in 0..100u64 {
+            t.insert(&[sm.next_f64(), sm.next_f64()], i, 1.0);
+        }
+        // Root bucket now massively heavy.
+        t.adjustments();
+        t.check_invariants().unwrap();
+        for (_, leaf) in t.buckets_in_order() {
+            assert!(t.nodes[leaf as usize].count as usize <= 8);
+        }
+    }
+
+    #[test]
+    fn adjustments_merge_light_subtrees() {
+        let ps = PointSet::uniform(200, 2, 6);
+        let mut t = DynKdTree::from_points(&ps, 8, 7);
+        let before_buckets = t.n_buckets();
+        // Delete most points.
+        for i in 0..190u64 {
+            let coords: Vec<f64> = ps.point(i as usize).to_vec();
+            assert!(t.delete(&coords, i));
+        }
+        t.adjustments();
+        t.check_invariants().unwrap();
+        assert!(t.n_buckets() < before_buckets / 2, "light buckets not merged");
+        assert_eq!(t.n_points(), 10);
+    }
+
+    #[test]
+    fn sfc_keys_strictly_ordered_after_splits() {
+        let ps = PointSet::uniform(500, 3, 8);
+        let t = DynKdTree::from_points(&ps, 8, 11);
+        let buckets = t.buckets_in_order();
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0, "bucket SFC keys not strictly increasing");
+        }
+    }
+
+    #[test]
+    fn to_pointset_preserves_population() {
+        let ps = PointSet::uniform(300, 2, 10);
+        let t = DynKdTree::from_points(&ps, 16, 13);
+        let flat = t.to_pointset();
+        assert_eq!(flat.len(), 300);
+        let mut ids = flat.ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..300).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn forest_routes_and_inserts_in_parallel() {
+        let ps = PointSet::uniform(2000, 3, 12);
+        let mut f = DynForest::from_points(&ps, 16, 8, 99);
+        assert_eq!(f.n_points(), 2000);
+        assert!(f.subtrees.len() >= 2);
+        let mut ins = PointSet::new(3);
+        let mut sm = crate::util::rng::SplitMix64::new(5);
+        use crate::util::rng::Rng;
+        for i in 0..500u64 {
+            ins.push(&[sm.next_f64(), sm.next_f64(), sm.next_f64()], 10_000 + i, 1.0);
+        }
+        let dels: Vec<(Vec<f64>, u64)> =
+            (0..100).map(|i| (ps.point(i).to_vec(), i as u64)).collect();
+        f.insert_delete_parallel(&ins, &dels, 4);
+        assert_eq!(f.n_points(), 2000 + 500 - 100);
+        f.adjustments_parallel(4);
+        for t in &f.subtrees {
+            t.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn forest_locate_finds_points() {
+        let ps = PointSet::uniform(500, 2, 14);
+        let f = DynForest::from_points(&ps, 8, 4, 3);
+        for i in (0..500).step_by(41) {
+            assert!(f.locate(ps.point(i), i as u64).is_some(), "id {i} not found");
+        }
+        assert!(f.locate(&[0.1, 0.1], 999_999).is_none());
+    }
+}

@@ -1,0 +1,170 @@
+//! The dynamic-application driver — Algorithm 3 (`Dynamic_Pointset`)
+//! end-to-end: periodic insert/delete batches routed to subtrees,
+//! periodic Adjustments, and amortized (credit-based) load balancing.
+//!
+//! Produces the Table I columns: tree build time, accumulated insert,
+//! delete and adjustment times, and total time, plus the rebalance count
+//! the credit controller chose.
+
+use crate::geom::dist::DynamicStream;
+use crate::geom::point::PointSet;
+use crate::kdtree::dynamic::DynForest;
+use crate::partition::amortized::AmortizedController;
+use crate::util::timer::Stopwatch;
+
+/// Accumulated timings of one dynamic run (Table I row).
+#[derive(Clone, Debug, Default)]
+pub struct DynamicSummary {
+    pub threads: usize,
+    pub points: usize,
+    pub dim: usize,
+    pub nodes: usize,
+    pub build_secs: f64,
+    pub insert_secs: f64,
+    pub delete_secs: f64,
+    pub adjust_secs: f64,
+    pub rebalance_secs: f64,
+    pub total_secs: f64,
+    pub rebalances: u64,
+    pub final_points: usize,
+}
+
+impl std::fmt::Display for DynamicSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "th={} pts={} dim={} nodes={} build={:.4}s ins={:.4}s del={:.4}s adj={:.4}s lb={:.4}s ({} rebalances) total={:.4}s final_pts={}",
+            self.threads,
+            self.points,
+            self.dim,
+            self.nodes,
+            self.build_secs,
+            self.insert_secs,
+            self.delete_secs,
+            self.adjust_secs,
+            self.rebalance_secs,
+            self.rebalances,
+            self.total_secs,
+            self.final_points
+        )
+    }
+}
+
+/// Run Algorithm 3 for `max_iter` iterations with insert/delete batches
+/// every `step_size` iterations and Adjustments every `2·step_size`
+/// (§IV-A: new points every 100 iterations, adjustments every 500,
+/// 1000 iterations total — pass those values to reproduce Table I).
+pub fn run_dynamic(
+    initial: &PointSet,
+    max_iter: usize,
+    step_size: usize,
+    threads: usize,
+    bucket_size: usize,
+    seed: u64,
+) -> DynamicSummary {
+    let mut sum = DynamicSummary {
+        threads,
+        points: initial.len(),
+        dim: initial.dim,
+        ..Default::default()
+    };
+    let total_sw = Stopwatch::start();
+
+    // ---- LoadBalance(): initial build ----
+    let sw = Stopwatch::start();
+    let k_top = (threads * 4).max(8);
+    let mut forest = DynForest::from_points(initial, bucket_size, k_top, seed);
+    sum.build_secs = sw.secs();
+
+    let mut ctl = AmortizedController::new();
+    ctl.after_load_balance(sum.build_secs, forest.max_buckets());
+
+    let mut stream = DynamicStream::new(initial.dim, initial.len() as u64, seed ^ 0xd15ea5e);
+    let batch = (initial.len() / 20).clamp(16, 50_000);
+
+    for iter in 1..=max_iter {
+        if iter % step_size == 0 {
+            // NewPoints / RemPoints
+            let ids = forest.all_ids();
+            let (ins, del_ids) = stream.step(batch, &ids);
+            // Deletions need coordinates for routing: look them up.
+            let mut dels: Vec<(Vec<f64>, u64)> = Vec::with_capacity(del_ids.len());
+            let del_set: std::collections::HashSet<u64> = del_ids.iter().copied().collect();
+            for t in &forest.subtrees {
+                for b in &t.buckets {
+                    for (i, &id) in b.ids.iter().enumerate() {
+                        if del_set.contains(&id) {
+                            dels.push((b.coords[i * forest.dim..(i + 1) * forest.dim].to_vec(), id));
+                        }
+                    }
+                }
+            }
+            // Inserts (timed separately from deletes by splitting calls).
+            let sw = Stopwatch::start();
+            forest.insert_delete_parallel(&ins, &[], threads);
+            let ins_secs = sw.secs();
+            sum.insert_secs += ins_secs;
+            let sw = Stopwatch::start();
+            forest.insert_delete_parallel(&PointSet::new(forest.dim), &dels, threads);
+            let del_secs = sw.secs();
+            sum.delete_secs += del_secs;
+
+            let numops = (ins.len() + dels.len()) as u64;
+            if ctl.observe_step(ins_secs + del_secs, numops) {
+                // Credits exhausted: full LoadBalance() = rebuild forest.
+                let sw = Stopwatch::start();
+                let flat = flatten(&forest);
+                forest = DynForest::from_points(&flat, bucket_size, k_top, seed ^ iter as u64);
+                let lb = sw.secs();
+                sum.rebalance_secs += lb;
+                ctl.after_load_balance(lb, forest.max_buckets());
+            }
+        }
+        if iter % (2 * step_size) == 0 {
+            let sw = Stopwatch::start();
+            forest.adjustments_parallel(threads);
+            sum.adjust_secs += sw.secs();
+            ctl.set_totalb(forest.max_buckets());
+        }
+    }
+
+    sum.rebalances = ctl.n_rebalances - 1; // exclude the initial build
+    sum.nodes = forest.subtrees.iter().map(|t| t.n_nodes()).sum();
+    sum.final_points = forest.n_points();
+    sum.total_secs = total_sw.secs();
+    sum
+}
+
+fn flatten(forest: &DynForest) -> PointSet {
+    let mut ps = PointSet::new(forest.dim);
+    for t in &forest.subtrees {
+        let sub = t.to_pointset();
+        ps.extend(&sub);
+    }
+    ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_run_completes_and_accounts() {
+        let ps = PointSet::uniform(2000, 3, 31);
+        let s = run_dynamic(&ps, 200, 20, 2, 16, 11);
+        assert!(s.build_secs > 0.0);
+        assert!(s.insert_secs > 0.0);
+        assert!(s.final_points > 0);
+        assert!(s.total_secs >= s.build_secs);
+        // Inserts (batch/iter=100) exceed deletes (30%), so growth.
+        assert!(s.final_points > 2000, "final {}", s.final_points);
+    }
+
+    #[test]
+    fn ten_d_points_work() {
+        let ps = PointSet::uniform(500, 10, 33);
+        let s = run_dynamic(&ps, 60, 20, 2, 16, 13);
+        assert_eq!(s.dim, 10);
+        assert!(s.final_points > 0);
+    }
+}

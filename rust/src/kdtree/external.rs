@@ -1,0 +1,468 @@
+//! External (out-of-core) weighted kd-trees — paper §IV, last paragraph:
+//!
+//! *"If datasets are too large to fit in memory, the weighted kd-trees
+//! should be external. Pages (4MB) should be used instead of in-memory
+//! buckets. Demand-paging may be used to read pages from disks and
+//! memory and pages have to be managed to reduce the total number of
+//! disk accesses."*
+//!
+//! [`PageStore`] keeps bucket pages on disk with an LRU-resident set and
+//! dirty write-back; [`ExternalTree`] is a dynamic tree whose leaves are
+//! page ids. Page faults are counted so the tests (and the BUCKETSIZE
+//! ablation) can verify that SFC-ordered access keeps the fault rate at
+//! the sequential-scan minimum — the locality the paper's ordering buys.
+
+use crate::geom::point::PointSet;
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+/// Fixed page payload size in bytes (the paper's 4 MB, shrunk for tests;
+/// must hold at least one point record).
+pub const DEFAULT_PAGE_BYTES: usize = 1 << 16;
+
+/// One in-memory page of point records (SoA like `Bucket`).
+#[derive(Clone, Debug, Default)]
+pub struct Page {
+    pub ids: Vec<u64>,
+    pub coords: Vec<f64>,
+    pub weights: Vec<f32>,
+    dirty: bool,
+}
+
+impl Page {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    fn byte_len(&self, dim: usize) -> usize {
+        8 + self.len() * (8 + 4 + 8 * dim)
+    }
+
+    fn encode(&self, dim: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len(dim));
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        for id in &self.ids {
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        for w in &self.weights {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        for c in &self.coords {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(buf: &[u8], dim: usize) -> Page {
+        let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+        let mut p = Page::default();
+        let mut off = 8;
+        for _ in 0..n {
+            p.ids.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()));
+            off += 8;
+        }
+        for _ in 0..n {
+            p.weights.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        for _ in 0..n * dim {
+            p.coords.push(f64::from_le_bytes(buf[off..off + 8].try_into().unwrap()));
+            off += 8;
+        }
+        p
+    }
+}
+
+/// Demand-paged page store: fixed-size slots in a backing file, an LRU
+/// resident set, and fault/write-back counters.
+pub struct PageStore {
+    file: std::fs::File,
+    path: PathBuf,
+    dim: usize,
+    page_bytes: usize,
+    capacity: usize,
+    resident: HashMap<u32, Page>,
+    /// LRU order: front = coldest.
+    lru: Vec<u32>,
+    n_pages: u32,
+    /// Counters for the locality experiments.
+    pub faults: u64,
+    pub write_backs: u64,
+    pub hits: u64,
+}
+
+impl PageStore {
+    /// Create a store backed by a temp file holding at most `capacity`
+    /// resident pages of `page_bytes` each.
+    pub fn new(dim: usize, page_bytes: usize, capacity: usize) -> std::io::Result<PageStore> {
+        let unique = STORE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "sfc_pages_{}_{unique}.bin",
+            std::process::id()
+        ));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(PageStore {
+            file,
+            path,
+            dim,
+            page_bytes: page_bytes.max(64),
+            capacity: capacity.max(1),
+            resident: HashMap::new(),
+            lru: Vec::new(),
+            n_pages: 0,
+            faults: 0,
+            write_backs: 0,
+            hits: 0,
+        })
+    }
+
+    /// Max points one page can hold.
+    pub fn page_capacity(&self) -> usize {
+        (self.page_bytes - 8) / (8 + 4 + 8 * self.dim)
+    }
+
+    /// Allocate a fresh (empty, resident) page.
+    pub fn alloc(&mut self) -> std::io::Result<u32> {
+        let id = self.n_pages;
+        self.n_pages += 1;
+        // Reserve the slot on disk.
+        self.file.seek(SeekFrom::Start((id as u64 + 1) * self.page_bytes as u64 - 1))?;
+        self.file.write_all(&[0])?;
+        self.make_room()?;
+        self.resident.insert(id, Page { dirty: true, ..Page::default() });
+        self.lru.push(id);
+        Ok(id)
+    }
+
+    fn make_room(&mut self) -> std::io::Result<()> {
+        while self.resident.len() >= self.capacity {
+            let victim = self.lru.remove(0);
+            if let Some(page) = self.resident.remove(&victim) {
+                if page.dirty {
+                    self.write_page(victim, &page)?;
+                    self.write_backs += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn write_page(&mut self, id: u32, page: &Page) -> std::io::Result<()> {
+        let buf = page.encode(self.dim);
+        assert!(
+            buf.len() <= self.page_bytes,
+            "page {id} overflow: {} > {}",
+            buf.len(),
+            self.page_bytes
+        );
+        self.file.seek(SeekFrom::Start(id as u64 * self.page_bytes as u64))?;
+        self.file.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn load_page(&mut self, id: u32) -> std::io::Result<Page> {
+        let mut buf = vec![0u8; self.page_bytes];
+        self.file.seek(SeekFrom::Start(id as u64 * self.page_bytes as u64))?;
+        self.file.read_exact(&mut buf)?;
+        Ok(Page::decode(&buf, self.dim))
+    }
+
+    fn touch(&mut self, id: u32) {
+        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+            self.lru.remove(pos);
+        }
+        self.lru.push(id);
+    }
+
+    /// Access a page mutably, faulting it in if non-resident.
+    pub fn with_page<R>(
+        &mut self,
+        id: u32,
+        f: impl FnOnce(&mut Page) -> R,
+    ) -> std::io::Result<R> {
+        if !self.resident.contains_key(&id) {
+            self.faults += 1;
+            let page = self.load_page(id)?;
+            self.make_room()?;
+            self.resident.insert(id, page);
+            self.lru.push(id);
+        } else {
+            self.hits += 1;
+            self.touch(id);
+        }
+        let page = self.resident.get_mut(&id).unwrap();
+        let r = f(page);
+        page.dirty = true;
+        Ok(r)
+    }
+
+    /// Read-only access (still faults; does not mark dirty).
+    pub fn read_page<R>(&mut self, id: u32, f: impl FnOnce(&Page) -> R) -> std::io::Result<R> {
+        if !self.resident.contains_key(&id) {
+            self.faults += 1;
+            let page = self.load_page(id)?;
+            self.make_room()?;
+            self.resident.insert(id, page);
+            self.lru.push(id);
+        } else {
+            self.hits += 1;
+            self.touch(id);
+        }
+        Ok(f(&self.resident[&id]))
+    }
+}
+
+static STORE_COUNTER: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+impl Drop for PageStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// A minimal external dynamic tree: same split logic as `DynKdTree`, but
+/// leaves hold page ids in a [`PageStore`].
+pub struct ExternalTree {
+    pub dim: usize,
+    store: PageStore,
+    /// (split_dim, split_val, left, right, page, count): page >= 0 marks
+    /// a leaf.
+    nodes: Vec<(u16, f64, i32, i32, i32, u32)>,
+    root: i32,
+}
+
+impl ExternalTree {
+    pub fn new(dim: usize, page_bytes: usize, resident_pages: usize) -> std::io::Result<Self> {
+        let mut store = PageStore::new(dim, page_bytes, resident_pages)?;
+        let page = store.alloc()? as i32;
+        Ok(ExternalTree { dim, store, nodes: vec![(0, 0.0, -1, -1, page, 0)], root: 0 })
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.nodes[self.root as usize].5 as usize
+    }
+
+    pub fn store(&self) -> (&u64, &u64, &u64) {
+        (&self.store.faults, &self.store.write_backs, &self.store.hits)
+    }
+
+    /// Insert one point, splitting a full page along the median of its
+    /// widest dimension when needed.
+    pub fn insert(&mut self, coords: &[f64], id: u64, w: f32) -> std::io::Result<()> {
+        let cap = self.store.page_capacity();
+        let mut idx = self.root;
+        loop {
+            let (d, v, l, r, page, _) = self.nodes[idx as usize];
+            self.nodes[idx as usize].5 += 1;
+            if page >= 0 {
+                let full = self
+                    .store
+                    .with_page(page as u32, |p| {
+                        if p.len() < cap {
+                            p.ids.push(id);
+                            p.coords.extend_from_slice(coords);
+                            p.weights.push(w);
+                            false
+                        } else {
+                            true
+                        }
+                    })?;
+                if !full {
+                    return Ok(());
+                }
+                self.split_leaf(idx)?;
+                // Retry this node (now internal); undo the count bump the
+                // retry loop will re-apply.
+                self.nodes[idx as usize].5 -= 1;
+                continue;
+            }
+            idx = if coords[d as usize] <= v { l } else { r };
+        }
+    }
+
+    fn split_leaf(&mut self, idx: i32) -> std::io::Result<()> {
+        let page = self.nodes[idx as usize].4 as u32;
+        let dim = self.dim;
+        let (mut ids, mut coords, mut weights) = self
+            .store
+            .with_page(page, |p| {
+                (std::mem::take(&mut p.ids), std::mem::take(&mut p.coords), std::mem::take(&mut p.weights))
+            })?;
+        // Median split along the widest dim.
+        let mut lo = vec![f64::INFINITY; dim];
+        let mut hi = vec![f64::NEG_INFINITY; dim];
+        for c in coords.chunks_exact(dim) {
+            for k in 0..dim {
+                lo[k] = lo[k].min(c[k]);
+                hi[k] = hi[k].max(c[k]);
+            }
+        }
+        let d = (0..dim).max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap()).unwrap();
+        let mut vals: Vec<f64> = coords.chunks_exact(dim).map(|c| c[d]).collect();
+        let mid = vals.len() / 2;
+        crate::util::sort::quickselect(&mut vals, mid, |v| *v);
+        let value = vals[mid];
+
+        let rpage = self.store.alloc()?;
+        let mut r_ids = Vec::new();
+        let mut r_coords = Vec::new();
+        let mut r_weights = Vec::new();
+        let mut i = 0;
+        while i < ids.len() {
+            if coords[i * dim + d] > value {
+                r_ids.push(ids.swap_remove(i));
+                for k in 0..dim {
+                    r_coords.push(coords[i * dim + k]);
+                }
+                // swap-remove the coord chunk to mirror ids/weights.
+                let tail = coords.len() - dim;
+                for k in 0..dim {
+                    coords[i * dim + k] = coords[tail + k];
+                }
+                coords.truncate(tail);
+                r_weights.push(weights.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        let lcount = ids.len() as u32;
+        let rcount = r_ids.len() as u32;
+        self.store.with_page(page, |p| {
+            p.ids = ids;
+            p.coords = coords;
+            p.weights = weights;
+        })?;
+        self.store.with_page(rpage, |p| {
+            p.ids = r_ids;
+            p.coords = r_coords;
+            p.weights = r_weights;
+        })?;
+        let total = self.nodes[idx as usize].5;
+        let l_node =
+            (0u16, 0.0f64, -1i32, -1i32, self.nodes[idx as usize].4, lcount);
+        let r_node = (0u16, 0.0f64, -1i32, -1i32, rpage as i32, rcount);
+        let li = self.nodes.len() as i32;
+        self.nodes.push(l_node);
+        let ri = self.nodes.len() as i32;
+        self.nodes.push(r_node);
+        let n = &mut self.nodes[idx as usize];
+        n.0 = d as u16;
+        n.1 = value;
+        n.2 = li;
+        n.3 = ri;
+        n.4 = -1;
+        n.5 = total;
+        Ok(())
+    }
+
+    /// Does the tree contain `id` at `coords`?
+    pub fn contains(&mut self, coords: &[f64], id: u64) -> std::io::Result<bool> {
+        let mut idx = self.root;
+        loop {
+            let (d, v, l, r, page, _) = self.nodes[idx as usize];
+            if page >= 0 {
+                return self.store.read_page(page as u32, |p| p.ids.contains(&id));
+            }
+            idx = if coords[d as usize] <= v { l } else { r };
+        }
+    }
+
+    /// Bulk-load a point set (insertion order = caller's order, so an
+    /// SFC-ordered load exhibits the minimal fault pattern).
+    pub fn bulk_load(&mut self, ps: &PointSet) -> std::io::Result<()> {
+        for i in 0..ps.len() {
+            self.insert(ps.point(i), ps.ids[i], ps.weights[i])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_roundtrip() {
+        let mut p = Page::default();
+        p.ids = vec![1, 2];
+        p.coords = vec![0.1, 0.2, 0.3, 0.4];
+        p.weights = vec![1.0, 2.0];
+        let buf = p.encode(2);
+        let q = Page::decode(&buf, 2);
+        assert_eq!(q.ids, p.ids);
+        assert_eq!(q.coords, p.coords);
+        assert_eq!(q.weights, p.weights);
+    }
+
+    #[test]
+    fn store_faults_and_evicts() {
+        let mut s = PageStore::new(2, 512, 2).unwrap();
+        let a = s.alloc().unwrap();
+        let b = s.alloc().unwrap();
+        let c = s.alloc().unwrap(); // evicts a
+        s.with_page(a, |p| p.ids.push(42)).unwrap(); // fault back in
+        assert!(s.faults >= 1, "faults={}", s.faults);
+        assert!(s.write_backs >= 1);
+        // Data survives eviction.
+        s.with_page(b, |p| p.ids.push(7)).unwrap();
+        s.with_page(c, |p| p.ids.push(9)).unwrap();
+        let got = s.read_page(a, |p| p.ids.clone()).unwrap();
+        assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn external_tree_inserts_and_splits() {
+        let mut t = ExternalTree::new(3, 1024, 4).unwrap();
+        let ps = PointSet::uniform(500, 3, 77);
+        t.bulk_load(&ps).unwrap();
+        assert_eq!(t.n_points(), 500);
+        for i in (0..500).step_by(53) {
+            assert!(t.contains(ps.point(i), ps.ids[i]).unwrap(), "missing {i}");
+        }
+        assert!(!t.contains(&[0.5, 0.5, 0.5], 99_999).unwrap());
+        assert!(t.nodes.len() > 1, "no splits happened");
+    }
+
+    #[test]
+    fn sfc_ordered_load_faults_less_than_shuffled() {
+        // The §IV claim: ordering data along the curve minimizes paging.
+        let n = 2000;
+        let ps = PointSet::uniform(n, 2, 13);
+        // Curve-ordered insertion.
+        let plan = crate::partition::partitioner::Partitioner::new(
+            crate::partition::partitioner::PartitionConfig {
+                parts: 1,
+                ..Default::default()
+            },
+        )
+        .partition(&ps);
+        let ordered = ps.permute(&plan.perm);
+        let mut t1 = ExternalTree::new(2, 2048, 3).unwrap();
+        t1.bulk_load(&ordered).unwrap();
+        let faults_ordered = *t1.store().0;
+
+        // Shuffled insertion.
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        use crate::util::rng::Rng;
+        crate::util::rng::SplitMix64::new(5).shuffle(&mut idx);
+        let shuffled = ps.gather(&idx);
+        let mut t2 = ExternalTree::new(2, 2048, 3).unwrap();
+        t2.bulk_load(&shuffled).unwrap();
+        let faults_shuffled = *t2.store().0;
+
+        assert!(
+            faults_ordered * 2 < faults_shuffled,
+            "ordered {faults_ordered} vs shuffled {faults_shuffled}"
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Hierarchical domain decomposition: kd-trees (paper §III-A).
+//!
+//! * [`node`] — the node arena and leaf/bucket layout.
+//! * [`splitter`] — the four splitting-hyperplane rules (midpoint, exact
+//!   median by sorting, approximate median by sampling, approximate
+//!   median by selection) and the split-dimension rules (max spread /
+//!   cycling).
+//! * [`builder`] — recursive construction with the paper's two-stage
+//!   parallel scheme (top `K2 ≥ T` nodes breadth-first, then per-thread
+//!   depth-first subtrees).
+//! * [`linearized`] — the Fig 1 snapshot (index vector + coordinate
+//!   vector) that keeps the working set small during partitioning.
+//! * [`conc_list`] — the nondeterministic concurrent linked list of node
+//!   blocks with atomic link pointers (§III).
+//! * [`dynamic`] — the distributed dynamic weighted tree: buckets,
+//!   insert/delete, heavy/light bucket split/merge (Algorithm 1).
+
+pub mod builder;
+pub mod dynamic_driver;
+pub mod conc_list;
+pub mod dynamic;
+pub mod external;
+pub mod node;
+pub mod splitter;

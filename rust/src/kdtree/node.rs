@@ -1,0 +1,215 @@
+//! Kd-tree nodes and the arena they live in.
+//!
+//! Nodes are stored in a flat arena and reference children by index
+//! (`NONE` = absent). A node is a leaf iff `split_dim == LEAF_DIM`; a
+//! leaf's points are the contiguous range `start..end` of the tree's
+//! permutation vector. Each node stores its splitting hyperplane
+//! (dimension + value), weight, and — after an SFC traversal — its SFC
+//! key (§III-A: "Nodes are assigned unique ids and store their splitting
+//! hyperplanes").
+
+use crate::geom::bbox::BoundingBox;
+
+/// Child index sentinel.
+pub const NONE: i32 = -1;
+/// `split_dim` sentinel marking a leaf.
+pub const LEAF_DIM: u16 = u16::MAX;
+
+/// One kd-tree node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Tight bounding box of the points under this node.
+    pub bbox: BoundingBox,
+    /// Splitting dimension, or `LEAF_DIM` for leaves.
+    pub split_dim: u16,
+    /// Splitting value along `split_dim`.
+    pub split_val: f64,
+    /// Arena indices of children (`NONE` if absent).
+    pub left: i32,
+    pub right: i32,
+    /// Sum of point weights below this node.
+    pub weight: f64,
+    /// Range of the tree's permutation vector owned by this subtree.
+    pub start: u32,
+    pub end: u32,
+    /// Depth (root = 0).
+    pub depth: u16,
+    /// SFC key assigned by traversal (left-aligned path bits).
+    pub sfc_key: u128,
+    /// Curve visit order: `true` = the upper child (`right`) is visited
+    /// first (Hilbert-like reflection). `left`/`right` always keep their
+    /// lower/upper geometric meaning so point descent stays valid.
+    pub flipped: bool,
+}
+
+impl Node {
+    /// Fresh leaf over `start..end`.
+    pub fn leaf(bbox: BoundingBox, start: u32, end: u32, weight: f64, depth: u16) -> Node {
+        Node {
+            bbox,
+            split_dim: LEAF_DIM,
+            split_val: 0.0,
+            left: NONE,
+            right: NONE,
+            weight,
+            start,
+            end,
+            depth,
+            sfc_key: 0,
+            flipped: false,
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.split_dim == LEAF_DIM
+    }
+
+    pub fn count(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+}
+
+/// A static kd-tree: node arena + point permutation.
+///
+/// `perm` lists point indices grouped by leaf: leaf `l` owns
+/// `perm[l.start..l.end]`. After an SFC traversal the leaves (and hence
+/// `perm`) are in curve order.
+#[derive(Clone, Debug)]
+pub struct KdTree {
+    pub nodes: Vec<Node>,
+    pub root: i32,
+    pub perm: Vec<u32>,
+    pub dim: usize,
+    pub bucket_size: usize,
+}
+
+impl KdTree {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Maximum leaf depth.
+    pub fn max_depth(&self) -> u16 {
+        self.nodes.iter().filter(|n| n.is_leaf()).map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Leaf arena indices in arena order.
+    pub fn leaves(&self) -> Vec<u32> {
+        (0..self.nodes.len() as u32).filter(|&i| self.nodes[i as usize].is_leaf()).collect()
+    }
+
+    /// Leaf arena indices in curve (SFC traversal) order: depth-first,
+    /// honoring each node's `flipped` visit order.
+    pub fn leaves_dfs(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.root == NONE {
+            return out;
+        }
+        let mut stack = vec![self.root];
+        while let Some(idx) = stack.pop() {
+            let n = &self.nodes[idx as usize];
+            if n.is_leaf() {
+                out.push(idx as u32);
+            } else {
+                let (first, second) =
+                    if n.flipped { (n.right, n.left) } else { (n.left, n.right) };
+                // push second first so `first` is visited first
+                if second != NONE {
+                    stack.push(second);
+                }
+                if first != NONE {
+                    stack.push(first);
+                }
+            }
+        }
+        out
+    }
+
+    /// Locate the leaf containing coordinates `q` by descending the
+    /// splitting hyperplanes. Points exactly on a hyperplane go left
+    /// (the "≤ goes to the lower sub cell" rule, §III-A).
+    pub fn locate_leaf(&self, q: &[f64]) -> u32 {
+        let mut idx = self.root;
+        loop {
+            let n = &self.nodes[idx as usize];
+            if n.is_leaf() {
+                return idx as u32;
+            }
+            idx = if q[n.split_dim as usize] <= n.split_val { n.left } else { n.right };
+        }
+    }
+
+    /// Validate structural invariants (used by tests and the property
+    /// suites): every point in exactly one leaf, ranges partition `perm`,
+    /// child boxes inside parent box, weights consistent.
+    pub fn check_invariants(&self, coords: &[f64], weights: &[f32]) -> Result<(), String> {
+        let mut seen = vec![false; self.perm.len()];
+        for &l in &self.leaves() {
+            let n = &self.nodes[l as usize];
+            for &pi in &self.perm[n.start as usize..n.end as usize] {
+                if seen[pi as usize] {
+                    return Err(format!("point {pi} in two leaves"));
+                }
+                seen[pi as usize] = true;
+                let p = &coords[pi as usize * self.dim..(pi as usize + 1) * self.dim];
+                if !n.bbox.contains(p) {
+                    return Err(format!("point {pi} outside its leaf bbox"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some points not covered by leaves".into());
+        }
+        // Recursive checks.
+        fn rec(t: &KdTree, idx: i32, weights: &[f32]) -> Result<f64, String> {
+            let n = &t.nodes[idx as usize];
+            if n.is_leaf() {
+                let w: f64 = t.perm[n.start as usize..n.end as usize]
+                    .iter()
+                    .map(|&pi| weights[pi as usize] as f64)
+                    .sum();
+                if (w - n.weight).abs() > 1e-6 * w.abs().max(1.0) {
+                    return Err(format!("leaf weight {} != sum {}", n.weight, w));
+                }
+                return Ok(w);
+            }
+            let mut w = 0.0;
+            for c in [n.left, n.right] {
+                if c == NONE {
+                    continue;
+                }
+                let ch = &t.nodes[c as usize];
+                if ch.depth != n.depth + 1 {
+                    return Err("child depth mismatch".into());
+                }
+                if ch.start < n.start || ch.end > n.end {
+                    return Err("child range outside parent".into());
+                }
+                w += rec(t, c, weights)?;
+            }
+            if (w - n.weight).abs() > 1e-6 * w.abs().max(1.0) {
+                return Err(format!("node weight {} != children sum {}", n.weight, w));
+            }
+            Ok(w)
+        }
+        rec(self, self.root, weights)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_basics() {
+        let n = Node::leaf(BoundingBox::unit(2), 3, 7, 4.0, 2);
+        assert!(n.is_leaf());
+        assert_eq!(n.count(), 4);
+        assert_eq!(n.left, NONE);
+    }
+}

@@ -1,0 +1,434 @@
+//! Splitting hyperplanes (paper §III-A).
+//!
+//! A hyperplane is `(dimension, value)`. The dimension rule is either the
+//! paper's default (dimension of maximum spread) or cycling (x, y, z, x,
+//! …) — the latter is what makes Morton point-location by bit-interleave
+//! valid (§V-A). The value comes from one of the paper's four rules:
+//!
+//! 1. **Midpoint** of the dimension of maximum spread,
+//! 2. **Exact median** (sort the coordinates, take the middle),
+//! 3. **Approximate median** (sort a random sample, take its middle),
+//! 4. **Approximate median by selection** (rank a random sample with
+//!    quickselect — Fig 5's faster variant).
+//!
+//! A combination may be used: *"median splitters at the top nodes and
+//! midpoint splitters at the lower nodes"* — expressed by
+//! [`SplitterConfig::switch_depth`].
+
+use crate::geom::bbox::BoundingBox;
+use crate::util::rng::{Rng, SplitMix64};
+use crate::util::sort::{quickselect, quicksort_by};
+
+/// How the split *value* is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitterKind {
+    /// Geometric midpoint of the bbox along the split dimension.
+    Midpoint,
+    /// Exact median by sorting all coordinates along the dimension.
+    MedianSort,
+    /// Approximate median: sort a random sample of `sample` coordinates.
+    MedianSample { sample: usize },
+    /// Approximate median: quickselect the middle rank of a random sample.
+    MedianSelect { sample: usize },
+}
+
+/// How the split *dimension* is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DimRule {
+    /// Dimension of maximum bbox width (the paper's default).
+    MaxSpread,
+    /// Cycle dimensions by depth (depth % d) — required by the
+    /// bit-interleave fast path of exact point location.
+    Cycle,
+}
+
+/// Full splitter policy for a build.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitterConfig {
+    /// Splitter used above `switch_depth`.
+    pub top: SplitterKind,
+    /// Splitter used at and below `switch_depth`.
+    pub bottom: SplitterKind,
+    /// Depth at which `top` hands over to `bottom` (u16::MAX = never).
+    pub switch_depth: u16,
+    pub dim_rule: DimRule,
+}
+
+impl SplitterConfig {
+    pub fn uniform(kind: SplitterKind) -> Self {
+        SplitterConfig {
+            top: kind,
+            bottom: kind,
+            switch_depth: u16::MAX,
+            dim_rule: DimRule::MaxSpread,
+        }
+    }
+
+    /// The paper's combination: median at the top, midpoint below.
+    pub fn median_top_midpoint_below(switch_depth: u16) -> Self {
+        SplitterConfig {
+            top: SplitterKind::MedianSort,
+            bottom: SplitterKind::Midpoint,
+            switch_depth,
+            dim_rule: DimRule::MaxSpread,
+        }
+    }
+
+    pub fn kind_at(&self, depth: u16) -> SplitterKind {
+        if depth < self.switch_depth {
+            self.top
+        } else {
+            self.bottom
+        }
+    }
+
+    pub fn dim_at(&self, bbox: &BoundingBox, depth: u16) -> usize {
+        match self.dim_rule {
+            DimRule::MaxSpread => bbox.widest_dim(),
+            DimRule::Cycle => depth as usize % bbox.dim(),
+        }
+    }
+}
+
+impl Default for SplitterConfig {
+    fn default() -> Self {
+        SplitterConfig::uniform(SplitterKind::Midpoint)
+    }
+}
+
+/// Compute the split value for the subset `idx` of points (flat `coords`,
+/// stride `dim`) along dimension `d`.
+///
+/// Guard rails shared by all kinds: if the computed value would send all
+/// points to one side (e.g. midpoint of a degenerate spread, or a median
+/// equal to the max), the caller falls back via [`split_valid`].
+pub fn split_value(
+    kind: SplitterKind,
+    coords: &[f64],
+    dim: usize,
+    idx: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    rng: &mut SplitMix64,
+) -> f64 {
+    match kind {
+        SplitterKind::Midpoint => bbox.midpoint(d),
+        SplitterKind::MedianSort => {
+            let mut vals: Vec<f64> =
+                idx.iter().map(|&i| coords[i as usize * dim + d]).collect();
+            quicksort_by(&mut vals, |v| *v);
+            vals[vals.len() / 2]
+        }
+        SplitterKind::MedianSample { sample } => {
+            let mut vals = sample_coords(coords, dim, idx, d, sample, rng);
+            quicksort_by(&mut vals, |v| *v);
+            vals[vals.len() / 2]
+        }
+        SplitterKind::MedianSelect { sample } => {
+            let mut vals = sample_coords(coords, dim, idx, d, sample, rng);
+            let mid = vals.len() / 2;
+            quickselect(&mut vals, mid, |v| *v);
+            vals[mid]
+        }
+    }
+}
+
+fn sample_coords(
+    coords: &[f64],
+    dim: usize,
+    idx: &[u32],
+    d: usize,
+    sample: usize,
+    rng: &mut SplitMix64,
+) -> Vec<f64> {
+    let n = idx.len();
+    if n <= sample {
+        return idx.iter().map(|&i| coords[i as usize * dim + d]).collect();
+    }
+    (0..sample)
+        .map(|_| {
+            let j = rng.below(n as u64) as usize;
+            coords[idx[j] as usize * dim + d]
+        })
+        .collect()
+}
+
+/// Partition `idx` in place: `≤ value` first (lower sub-cell), `> value`
+/// after. Returns the boundary. (The paper: "all points with co-ordinate
+/// values less than or equal to m along i are assigned to the lower sub
+/// cell".)
+pub fn partition_by_plane(coords: &[f64], dim: usize, idx: &mut [u32], d: usize, value: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    while lo < hi {
+        if coords[idx[lo] as usize * dim + d] <= value {
+            lo += 1;
+        } else {
+            hi -= 1;
+            idx.swap(lo, hi);
+        }
+    }
+    lo
+}
+
+/// The linearized working set (paper Fig 1): the builder's private copy
+/// of coordinates/weights kept physically in permutation order, so every
+/// partition pass streams memory sequentially instead of chasing the
+/// index vector. `coords[i*dim..]` always belongs to point `perm[i]`.
+pub struct WorkSet<'a> {
+    pub dim: usize,
+    pub coords: &'a mut [f64],
+    pub weights: &'a mut [f32],
+    pub perm: &'a mut [u32],
+}
+
+impl WorkSet<'_> {
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    #[inline]
+    fn swap(&mut self, a: usize, b: usize) {
+        self.perm.swap(a, b);
+        self.weights.swap(a, b);
+        for k in 0..self.dim {
+            self.coords.swap(a * self.dim + k, b * self.dim + k);
+        }
+    }
+
+    /// Split off the first `n` positions (for handing disjoint regions
+    /// to subtree workers).
+    pub fn split_at(self, n: usize) -> (Self, Self)
+    where
+        Self: Sized,
+    {
+        let dim = self.dim;
+        let (ca, cb) = self.coords.split_at_mut(n * dim);
+        let (wa, wb) = self.weights.split_at_mut(n);
+        let (pa, pb) = self.perm.split_at_mut(n);
+        (
+            WorkSet { dim, coords: ca, weights: wa, perm: pa },
+            WorkSet { dim, coords: cb, weights: wb, perm: pb },
+        )
+    }
+}
+
+/// Fused partition + child metadata over the linearized working set:
+/// one sequential pass computes the boundary, the left-side weight, and
+/// (unless `geometric`) the tight child boxes. Perf pass: the previous
+/// index-indirect layout made every comparison a random DRAM access.
+#[allow(clippy::too_many_arguments)]
+pub fn partition_with_meta(
+    work: &mut WorkSet<'_>,
+    lo0: usize,
+    hi0: usize,
+    d: usize,
+    value: f64,
+    geometric: bool,
+    lbox: &mut crate::geom::bbox::BoundingBox,
+    rbox: &mut crate::geom::bbox::BoundingBox,
+) -> (usize, f64) {
+    let dim = work.dim;
+    let mut lo = lo0;
+    let mut hi = hi0;
+    let mut lw = 0.0f64;
+    while lo < hi {
+        let p = &work.coords[lo * dim..(lo + 1) * dim];
+        if p[d] <= value {
+            lw += work.weights[lo] as f64;
+            if !geometric {
+                lbox.grow(p);
+            }
+            lo += 1;
+        } else {
+            if !geometric {
+                rbox.grow(&work.coords[lo * dim..(lo + 1) * dim]);
+            }
+            hi -= 1;
+            work.swap(lo, hi);
+        }
+    }
+    (lo - lo0, lw)
+}
+
+/// Split value over a contiguous region of the working set (sequential
+/// reads; the sampled/median variants copy the lane once).
+pub fn split_value_work(
+    kind: SplitterKind,
+    work: &WorkSet<'_>,
+    lo: usize,
+    hi: usize,
+    d: usize,
+    bbox: &BoundingBox,
+    rng: &mut SplitMix64,
+) -> f64 {
+    let dim = work.dim;
+    let lane = || -> Vec<f64> {
+        work.coords[lo * dim..hi * dim].iter().skip(d).step_by(dim).copied().collect()
+    };
+    match kind {
+        SplitterKind::Midpoint => bbox.midpoint(d),
+        SplitterKind::MedianSort => {
+            let mut vals = lane();
+            quicksort_by(&mut vals, |v| *v);
+            vals[vals.len() / 2]
+        }
+        SplitterKind::MedianSample { sample } => {
+            let mut vals = sample_lane(work, lo, hi, d, sample, rng);
+            quicksort_by(&mut vals, |v| *v);
+            vals[vals.len() / 2]
+        }
+        SplitterKind::MedianSelect { sample } => {
+            let mut vals = sample_lane(work, lo, hi, d, sample, rng);
+            let mid = vals.len() / 2;
+            quickselect(&mut vals, mid, |v| *v);
+            vals[mid]
+        }
+    }
+}
+
+fn sample_lane(
+    work: &WorkSet<'_>,
+    lo: usize,
+    hi: usize,
+    d: usize,
+    sample: usize,
+    rng: &mut SplitMix64,
+) -> Vec<f64> {
+    let n = hi - lo;
+    let dim = work.dim;
+    if n <= sample {
+        return work.coords[lo * dim..hi * dim].iter().skip(d).step_by(dim).copied().collect();
+    }
+    (0..sample)
+        .map(|_| {
+            let j = lo + rng.below(n as u64) as usize;
+            work.coords[j * dim + d]
+        })
+        .collect()
+}
+
+/// Is a split at `boundary` usable (both sides non-empty)?
+pub fn split_valid(boundary: usize, n: usize) -> bool {
+    boundary > 0 && boundary < n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::point::PointSet;
+
+    fn setup(n: usize) -> (PointSet, Vec<u32>, SplitMix64) {
+        let ps = PointSet::uniform(n, 3, 11);
+        let idx: Vec<u32> = (0..n as u32).collect();
+        (ps, idx, SplitMix64::new(1))
+    }
+
+    #[test]
+    fn midpoint_is_bbox_center() {
+        let (ps, idx, mut rng) = setup(100);
+        let bbox = ps.bounding_box();
+        let v = split_value(SplitterKind::Midpoint, &ps.coords, 3, &idx, 1, &bbox, &mut rng);
+        assert!((v - bbox.midpoint(1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_sort_balances_exactly() {
+        let (ps, mut idx, mut rng) = setup(1001);
+        let bbox = ps.bounding_box();
+        let v = split_value(SplitterKind::MedianSort, &ps.coords, 3, &idx, 0, &bbox, &mut rng);
+        let b = partition_by_plane(&ps.coords, 3, &mut idx, 0, v);
+        // Exact median of distinct uniform values: lower side gets
+        // ~(n+1)/2 (median value itself goes left).
+        assert!(b >= 500 && b <= 502, "boundary={b}");
+    }
+
+    #[test]
+    fn median_select_close_to_exact() {
+        let (ps, idx, mut rng) = setup(20_000);
+        let bbox = ps.bounding_box();
+        let exact =
+            split_value(SplitterKind::MedianSort, &ps.coords, 3, &idx, 2, &bbox, &mut rng);
+        let approx = split_value(
+            SplitterKind::MedianSelect { sample: 2000 },
+            &ps.coords,
+            3,
+            &idx,
+            2,
+            &bbox,
+            &mut rng,
+        );
+        assert!((exact - approx).abs() < 0.05, "exact={exact} approx={approx}");
+    }
+
+    #[test]
+    fn median_sample_close_to_exact() {
+        let (ps, idx, mut rng) = setup(20_000);
+        let bbox = ps.bounding_box();
+        let exact =
+            split_value(SplitterKind::MedianSort, &ps.coords, 3, &idx, 0, &bbox, &mut rng);
+        let approx = split_value(
+            SplitterKind::MedianSample { sample: 2000 },
+            &ps.coords,
+            3,
+            &idx,
+            0,
+            &bbox,
+            &mut rng,
+        );
+        assert!((exact - approx).abs() < 0.05);
+    }
+
+    #[test]
+    fn partition_respects_plane() {
+        let (ps, mut idx, _) = setup(500);
+        let b = partition_by_plane(&ps.coords, 3, &mut idx, 1, 0.3);
+        for (i, &pi) in idx.iter().enumerate() {
+            let c = ps.coord(pi as usize, 1);
+            if i < b {
+                assert!(c <= 0.3);
+            } else {
+                assert!(c > 0.3);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_preserves_multiset() {
+        let (ps, mut idx, _) = setup(300);
+        let before: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        partition_by_plane(&ps.coords, 3, &mut idx, 0, 0.5);
+        let after: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn config_switching() {
+        let cfg = SplitterConfig::median_top_midpoint_below(3);
+        assert_eq!(cfg.kind_at(0), SplitterKind::MedianSort);
+        assert_eq!(cfg.kind_at(2), SplitterKind::MedianSort);
+        assert_eq!(cfg.kind_at(3), SplitterKind::Midpoint);
+    }
+
+    #[test]
+    fn dim_rules() {
+        let bbox = BoundingBox { lo: vec![0.0, 0.0, 0.0], hi: vec![1.0, 5.0, 2.0] };
+        let max = SplitterConfig::uniform(SplitterKind::Midpoint);
+        assert_eq!(max.dim_at(&bbox, 0), 1);
+        let mut cyc = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cyc.dim_rule = DimRule::Cycle;
+        assert_eq!(cyc.dim_at(&bbox, 0), 0);
+        assert_eq!(cyc.dim_at(&bbox, 4), 1);
+    }
+
+    #[test]
+    fn split_validity() {
+        assert!(!split_valid(0, 10));
+        assert!(!split_valid(10, 10));
+        assert!(split_valid(5, 10));
+    }
+}

@@ -1,0 +1,67 @@
+//! # sfc-part — a distributed geometric partitioner with space-filling-curve orders
+//!
+//! Reproduction of *"A Distributed Partitioning Software and its
+//! Applications"* (Sasidharan, CS.DC 2025): a hybrid (distributed +
+//! multi-threaded) geometric partitioner built from
+//!
+//! 1. **hierarchical domain decomposition** — kd-trees with midpoint /
+//!    exact-median / sampled-median / selection-median splitting
+//!    hyperplanes ([`kdtree`]),
+//! 2. **space-filling-curve traversals** — Morton and Hilbert-like key
+//!    assignment ([`sfc`]),
+//! 3. **load balancing** — greedy knapsack over the weighted SFC line,
+//!    plus incremental and amortized (credit-based) rebalancing
+//!    ([`partition`]),
+//!
+//! together with the applications the paper evaluates: dynamic point
+//! workloads ([`kdtree::dynamic`]), exact point location and k-nearest
+//! neighbours ([`query`]), and general graph / sparse-matrix partitioning
+//! with a distributed SpMV ([`graph`]).
+//!
+//! The paper's MPI + pthreads substrate is reproduced by [`runtime_sim`]:
+//! simulated ranks with real message passing, collectives that exchange in
+//! `MAX_MSG_SIZE`-bounded rounds, and an α–β network-cost model. The
+//! numeric hot spots (block-ELL SpMV, k-NN distances, Morton encode) are
+//! AOT-compiled JAX/Pallas artifacts executed through the PJRT runtime in
+//! [`runtime`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sfc_part::prelude::*;
+//!
+//! // 100k clustered points in 3-D.
+//! let pts = PointSet::clustered(100_000, 3, 0.5, 42);
+//! // Partition into 16 parts: kd-tree + Hilbert-like SFC + greedy knapsack.
+//! let cfg = PartitionConfig { parts: 16, curve: Curve::HilbertLike, ..Default::default() };
+//! let plan = Partitioner::new(cfg).partition(&pts);
+//! assert_eq!(plan.part_of.len(), pts.len());
+//! println!("imbalance = {:.4}", plan.imbalance());
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod geom;
+pub mod graph;
+pub mod kdtree;
+pub mod migrate;
+pub mod partition;
+pub mod query;
+pub mod runtime;
+pub mod runtime_sim;
+pub mod sfc;
+pub mod util;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::geom::bbox::BoundingBox;
+    pub use crate::geom::point::PointSet;
+    pub use crate::kdtree::builder::KdTreeBuilder;
+    pub use crate::kdtree::node::KdTree;
+    pub use crate::kdtree::splitter::SplitterKind;
+    pub use crate::partition::knapsack::greedy_knapsack;
+    pub use crate::partition::partitioner::{PartitionConfig, PartitionPlan, Partitioner};
+    pub use crate::sfc::key::SfcKey;
+    pub use crate::sfc::Curve;
+}

@@ -1,0 +1,285 @@
+//! `sfc-part` — launcher for the distributed partitioner and its
+//! applications.
+//!
+//! ```text
+//! sfc-part partition --points 100000 --dim 3 --parts 8 --curve hilbert
+//! sfc-part distributed --points 100000 --ranks 8
+//! sfc-part dynamic --points 50000 --iters 1000 --step 100
+//! sfc-part queries --points 100000 --queries 10000 --knn 3
+//! sfc-part graph --dataset google-like --scale 16 --procs 16,32
+//! sfc-part spmv --scale 12            (PJRT block-ELL hot path)
+//! sfc-part info                        (artifact + runtime info)
+//! ```
+//!
+//! `--config file.toml` merges a config file (section `[partition]`)
+//! under any command; explicit flags win.
+
+use anyhow::{bail, Result};
+use sfc_part::cli::Args;
+use sfc_part::config::{curve_from_name, splitter_from_name, ConfigFile};
+use sfc_part::geom::point::PointSet;
+use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "partition" => cmd_partition(&args),
+        "distributed" => cmd_distributed(&args),
+        "dynamic" => cmd_dynamic(&args),
+        "queries" => cmd_queries(&args),
+        "graph" => cmd_graph(&args),
+        "spmv" => cmd_spmv(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sfc-part — distributed geometric partitioner (SFC orders)\n\
+         commands: partition | distributed | dynamic | queries | graph | spmv | info\n\
+         common flags: --points N --dim D --parts P --threads T --curve morton|hilbert\n\
+         --splitter midpoint|median-sort|median-sample|median-select --bucket B\n\
+         --dist uniform|clustered --seed S --config FILE"
+    );
+}
+
+/// Shared workload + config assembly.
+fn partition_cfg(args: &Args) -> Result<PartitionConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => sfc_part::config::partition_config(&ConfigFile::load(std::path::Path::new(path))?)?,
+        None => PartitionConfig::default(),
+    };
+    cfg.parts = args.usize("parts", cfg.parts);
+    cfg.bucket_size = args.usize("bucket", cfg.bucket_size);
+    cfg.threads = args.usize("threads", cfg.threads);
+    cfg.seed = args.u64("seed", cfg.seed);
+    if let Some(c) = args.get("curve") {
+        cfg.curve = curve_from_name(c)?;
+    }
+    if let Some(s) = args.get("splitter") {
+        cfg.splitter = sfc_part::kdtree::splitter::SplitterConfig::uniform(splitter_from_name(
+            s,
+            args.usize("sample", 1024),
+        )?);
+    }
+    Ok(cfg)
+}
+
+fn workload(args: &Args) -> PointSet {
+    let n = args.usize("points", 100_000);
+    let dim = args.usize("dim", 3);
+    let seed = args.u64("seed", 42) as u32;
+    match args.get_or("dist", "uniform") {
+        "clustered" => PointSet::clustered(n, dim, args.f64("cluster-frac", 0.5), seed),
+        _ => PointSet::uniform(n, dim, seed),
+    }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let cfg = partition_cfg(args)?;
+    let ps = workload(args);
+    let plan = Partitioner::new(cfg.clone()).partition(&ps);
+    println!(
+        "partitioned {} points into {} parts in {:.3}s (build {:.3}s, sfc {:.3}s, knapsack {:.3}s)",
+        ps.len(),
+        cfg.parts,
+        plan.total_secs,
+        plan.build_stats.top_secs + plan.build_stats.subtree_secs,
+        plan.traverse_stats.secs,
+        plan.knapsack_secs
+    );
+    println!(
+        "nodes={} max_depth={} imbalance={:.5} max_load_diff={:.2}",
+        plan.build_stats.n_nodes,
+        plan.build_stats.max_depth,
+        plan.imbalance(),
+        plan.max_load_diff()
+    );
+    let sv = sfc_part::partition::quality::surface_to_volume(&ps, &plan.part_of, cfg.parts);
+    let (mean, max) = sfc_part::partition::quality::surface_volume_summary(&sv);
+    println!("surface/volume mean={mean:.2} max={max:.2}");
+    Ok(())
+}
+
+fn cmd_distributed(args: &Args) -> Result<()> {
+    let cfg = partition_cfg(args)?;
+    let ps = workload(args);
+    let ranks = args.usize("ranks", 4);
+    let k1 = args.usize("k1", 4 * ranks);
+    let (outs, rep) = sfc_part::runtime_sim::run_ranks(
+        ranks,
+        sfc_part::runtime_sim::CostModel::default(),
+        |ctx| {
+            let idx: Vec<u32> = (0..ps.len() as u32)
+                .filter(|i| (*i as usize) % ctx.n_ranks == ctx.rank)
+                .collect();
+            let local = ps.gather(&idx);
+            let dp = sfc_part::partition::distributed::distributed_partition(ctx, &local, &cfg, k1);
+            (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs)
+        },
+    );
+    let max_n = outs.iter().map(|o| o.0).max().unwrap_or(0);
+    let mean_n = ps.len() as f64 / ranks as f64;
+    println!(
+        "{} ranks: shard imbalance {:.3}, sim_time {:.4}s (compute {:.4}s + net {:.4}s), msgs {}, bytes {}",
+        ranks,
+        max_n as f64 / mean_n - 1.0,
+        rep.sim_time(),
+        rep.max_busy(),
+        rep.net_secs,
+        rep.total_msgs,
+        rep.total_bytes
+    );
+    Ok(())
+}
+
+fn cmd_dynamic(args: &Args) -> Result<()> {
+    let ps = workload(args);
+    let iters = args.usize("iters", 1000);
+    let step = args.usize("step", 100);
+    let threads = args.usize("threads", 4);
+    let bucket = args.usize("bucket", 32);
+    let summary = sfc_part::kdtree::dynamic_driver::run_dynamic(
+        &ps,
+        iters,
+        step,
+        threads,
+        bucket,
+        args.u64("seed", 7),
+    );
+    println!("{summary}");
+    Ok(())
+}
+
+fn cmd_queries(args: &Args) -> Result<()> {
+    use sfc_part::geom::bbox::BoundingBox;
+    use sfc_part::kdtree::builder::KdTreeBuilder;
+    use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+    use sfc_part::query::point_location::BucketIndex;
+    use sfc_part::query::router::{Query, QueryRouter};
+    use sfc_part::sfc::traverse::assign_sfc;
+    use sfc_part::sfc::Curve;
+
+    let ps = workload(args);
+    let nq = args.usize("queries", 10_000);
+    let k = args.usize("knn", 3);
+    let workers = args.usize("threads", 4);
+    let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+    cfg.dim_rule = DimRule::Cycle;
+    let sw = sfc_part::util::timer::Stopwatch::start();
+    let mut tree = KdTreeBuilder::new()
+        .bucket_size(args.usize("bucket", 32))
+        .splitter(cfg)
+        .domain(BoundingBox::unit(ps.dim))
+        .threads(workers)
+        .build(&ps);
+    assign_sfc(&mut tree, Curve::Morton);
+    let index = BucketIndex::from_tree(&tree, BoundingBox::unit(ps.dim));
+    println!("index built in {:.3}s ({} buckets)", sw.secs(), index.n_buckets());
+
+    let mut router = QueryRouter::new(&ps, &index, workers);
+    let mut rng = sfc_part::util::rng::SplitMix64::new(args.u64("seed", 9));
+    use sfc_part::util::rng::Rng;
+    let sw = sfc_part::util::timer::Stopwatch::start();
+    for i in 0..nq {
+        if i % 2 == 0 {
+            let j = rng.below(ps.len() as u64) as usize;
+            router.submit(Query::Locate { coords: ps.point(j).to_vec(), eps: 1e-12 });
+        } else {
+            let coords: Vec<f64> = (0..ps.dim).map(|_| rng.next_f64()).collect();
+            router.submit(Query::Knn { coords, k, cutoff: 1 });
+        }
+    }
+    let results = router.flush();
+    let secs = sw.secs();
+    println!(
+        "{} queries in {:.3}s ({:.0} q/s), batches {}, bin imbalance {:.3}",
+        results.len(),
+        secs,
+        results.len() as f64 / secs,
+        router.stats.batches,
+        router.stats.bin_imbalance
+    );
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    use sfc_part::graph::metrics::spmv_metrics;
+    use sfc_part::graph::partition2d::{rowwise_partition, sfc_partition};
+
+    let dataset = args.get_or("dataset", "google-like").to_string();
+    let scale = args.usize("graph-scale", 14) as u32;
+    let coo = match args.get("snap-file") {
+        Some(path) => sfc_part::graph::snap_io::load_snap(std::path::Path::new(path))?,
+        None => match sfc_part::graph::rmat::preset(&dataset, scale, args.u64("seed", 5)) {
+            Some(g) => g,
+            None => bail!("unknown dataset {dataset:?} (google-like|orkut-like|twitter-like)"),
+        },
+    };
+    println!("graph: {} vertices, {} nonzeros", coo.n_rows, coo.nnz());
+    let procs = args.usize_list("procs", &[16, 32, 64]);
+    let curve = curve_from_name(args.get_or("curve", "hilbert"))?;
+    println!(
+        "{:>6} {:>12} {:>12} {:>10} {:>12} | {:>12} {:>12} {:>10} {:>12} {:>10}",
+        "procs", "row AvgLoad", "row MaxLoad", "row MaxDeg", "row MaxCut", "sfc AvgLoad",
+        "sfc MaxLoad", "sfc MaxDeg", "sfc MaxCut", "part time"
+    );
+    for &p in &procs {
+        let row = spmv_metrics(&coo, &rowwise_partition(&coo, p), p);
+        let (part, secs) = sfc_partition(&coo, p, curve, args.usize("threads", 1));
+        let sfc = spmv_metrics(&coo, &part, p);
+        println!(
+            "{:>6} {:>12.0} {:>12} {:>10} {:>12} | {:>12.0} {:>12} {:>10} {:>12} {:>9.3}s",
+            p, row.avg_load, row.max_load, row.max_degree, row.max_edgecut, sfc.avg_load,
+            sfc.max_load, sfc.max_degree, sfc.max_edgecut, secs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spmv(args: &Args) -> Result<()> {
+    use sfc_part::runtime::exec::Engine;
+    let engine = Engine::new(&sfc_part::runtime::artifact::ArtifactDir::default_dir())?;
+    let scale = args.usize("graph-scale", 10) as u32;
+    let g = sfc_part::graph::rmat::rmat(
+        sfc_part::graph::rmat::RmatParams::graph500(scale, 8.0),
+        args.u64("seed", 3),
+    );
+    let iters = args.usize("iters", 10);
+    let report = sfc_part::runtime::spmv_driver::run_pjrt_spmv(&engine, &g, iters)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("sfc-part {} ({} cpus)", env!("CARGO_PKG_VERSION"), std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    match sfc_part::runtime::artifact::ArtifactDir::discover(
+        &sfc_part::runtime::artifact::ArtifactDir::default_dir(),
+    ) {
+        Ok(ad) => {
+            println!("artifacts ({}):", ad.dir.display());
+            for e in &ad.entries {
+                println!("  {:14} {} -> {}", e.name, e.inputs, e.outputs);
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: platform={} devices={}", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Amortized load balancing — the credit controller of Algorithm 3.
+//!
+//! The paper treats a balanced computation as zero-cost and *pays for
+//! imbalance out of credits earned by the last load-balancing phase*:
+//!
+//! * after a load balance, record `lbtime` (its cost) and the baseline
+//!   per-op cost × bucket count (`basebkt = basetimeop · totalb`);
+//! * each query step measures `timebkt = timeperop · totalb`; any excess
+//!   over the baseline accumulates into `δ`;
+//! * when `δ > lbtime`, the credits are spent — trigger the next load
+//!   balance.
+//!
+//! The controller is pure bookkeeping (no timing of its own), so it is
+//! unit-testable and reusable by both the AMR-style and query drivers.
+
+/// Credit-based rebalance controller (Algorithm 3's state machine).
+#[derive(Clone, Debug, Default)]
+pub struct AmortizedController {
+    /// Cost of the most recent load-balancing phase (`lbtime`).
+    pub lbtime: f64,
+    /// Baseline per-op time established right after that phase.
+    pub basetimeop: f64,
+    /// Baseline cost proxy `basetimeop * totalb`.
+    pub basebkt: f64,
+    /// Accumulated excess (`δ`).
+    pub delta: f64,
+    /// Max bucket count across processes at the last baseline.
+    pub totalb: f64,
+    /// Counters for reporting.
+    pub n_rebalances: u64,
+    pub n_steps: u64,
+}
+
+impl AmortizedController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed load-balancing phase: its wall cost and the
+    /// post-balance bucket count (max across processes).
+    pub fn after_load_balance(&mut self, lbtime: f64, totalb: usize) {
+        self.lbtime = lbtime;
+        self.totalb = totalb as f64;
+        self.basetimeop = 0.0;
+        self.basebkt = 0.0;
+        self.delta = 0.0;
+        self.n_rebalances += 1;
+    }
+
+    /// Observe one query/computation step: `ctime` is the max step time
+    /// across processes, `numops` the global op count. Returns `true`
+    /// when credits are exhausted and a load balance should run.
+    pub fn observe_step(&mut self, ctime: f64, numops: u64) -> bool {
+        self.n_steps += 1;
+        if numops == 0 {
+            return false;
+        }
+        let timeperop = ctime / numops as f64;
+        if self.basetimeop == 0.0 {
+            // First step after a rebalance establishes the baseline.
+            self.basetimeop = timeperop;
+            self.basebkt = self.basetimeop * self.totalb;
+            return false;
+        }
+        let timebkt = timeperop * self.totalb;
+        if timebkt > self.basebkt {
+            self.delta += timebkt - self.basebkt;
+        }
+        self.delta > self.lbtime
+    }
+
+    /// Update the bucket count between steps (buckets change under
+    /// adjustments without a full rebalance).
+    pub fn set_totalb(&mut self, totalb: usize) {
+        self.totalb = totalb as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_established_then_credits_accumulate() {
+        let mut c = AmortizedController::new();
+        c.after_load_balance(1.0, 100);
+        // First step sets baseline, never triggers.
+        assert!(!c.observe_step(0.10, 1000)); // 1e-4 per op
+        assert_eq!(c.basetimeop, 1e-4);
+        // Same cost: no excess.
+        assert!(!c.observe_step(0.10, 1000));
+        assert_eq!(c.delta, 0.0);
+        // 2x cost per op: excess = basebkt per step = 1e-4*100 = 0.01…
+        let mut fired = false;
+        for _ in 0..200 {
+            if c.observe_step(0.20, 1000) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "controller never fired under sustained imbalance");
+    }
+
+    #[test]
+    fn cheap_lb_fires_sooner_than_expensive_lb() {
+        let steps_to_fire = |lbtime: f64| {
+            let mut c = AmortizedController::new();
+            c.after_load_balance(lbtime, 50);
+            c.observe_step(0.05, 500); // baseline
+            let mut n = 0;
+            loop {
+                n += 1;
+                if c.observe_step(0.10, 500) || n > 10_000 {
+                    return n;
+                }
+            }
+        };
+        let cheap = steps_to_fire(0.01);
+        let pricey = steps_to_fire(1.0);
+        assert!(
+            cheap < pricey,
+            "cheap LB should rebalance more often: {cheap} vs {pricey}"
+        );
+    }
+
+    #[test]
+    fn faster_steps_earn_no_negative_credit() {
+        let mut c = AmortizedController::new();
+        c.after_load_balance(0.5, 10);
+        c.observe_step(0.1, 100);
+        // Faster than baseline: delta must not go negative.
+        assert!(!c.observe_step(0.01, 100));
+        assert_eq!(c.delta, 0.0);
+    }
+
+    #[test]
+    fn rebalance_resets_state() {
+        let mut c = AmortizedController::new();
+        c.after_load_balance(0.2, 10);
+        c.observe_step(0.1, 10);
+        c.observe_step(0.9, 10);
+        assert!(c.delta > 0.0);
+        c.after_load_balance(0.3, 12);
+        assert_eq!(c.delta, 0.0);
+        assert_eq!(c.basetimeop, 0.0);
+        assert_eq!(c.n_rebalances, 2);
+    }
+
+    #[test]
+    fn zero_ops_step_is_ignored() {
+        let mut c = AmortizedController::new();
+        c.after_load_balance(0.1, 10);
+        assert!(!c.observe_step(1.0, 0));
+        assert_eq!(c.basetimeop, 0.0);
+    }
+}

@@ -1,0 +1,367 @@
+//! The distributed partitioner — `point_order_dist_kd` +
+//! `load_balance` + `transfer_t_l_t` over simulated ranks (paper §III-A,
+//! §III-C, Fig 11).
+//!
+//! Every rank holds a shard of the points. The top `K1 ≥ P` tree nodes
+//! are computed collectively: bounding boxes by min/max allreduce, median
+//! splitters by distributed bisection on counts (the inter-process
+//! communication the paper attributes to `partitioner_init` /
+//! `point_order_dist_kd`). Top leaves are ordered by their SFC keys,
+//! greedy-knapsacked to ranks, and the data is migrated with
+//! `transfer_t_l_t`. Each rank then builds its local subtree with the
+//! shared-memory builder and traverses it — after which, for any two
+//! ranks `i < j`, all SFC keys on `i` are strictly less than those on `j`
+//! (§III-C's global order invariant, asserted in tests).
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::splitter::SplitterKind;
+use crate::migrate::transfer_t_l_t;
+use crate::partition::knapsack::greedy_knapsack_buckets;
+use crate::partition::partitioner::{PartitionConfig, Partitioner};
+use crate::runtime_sim::collectives::ReduceOp;
+use crate::runtime_sim::rank::RankCtx;
+use crate::sfc::key::child_key;
+use crate::util::timer::Stopwatch;
+
+/// Per-rank result of a distributed partition.
+#[derive(Clone, Debug)]
+pub struct DistPartition {
+    /// This rank's points after migration, in local SFC order.
+    pub local: PointSet,
+    /// Local SFC keys (same order as `local`), offset by the owning top
+    /// leaf so the global order across ranks is total.
+    pub keys: Vec<u128>,
+    /// Phase timings (seconds).
+    pub top_secs: f64,
+    pub migrate_secs: f64,
+    pub local_secs: f64,
+    /// Number of top leaves this rank owns.
+    pub owned_leaves: usize,
+}
+
+/// A top node during the collective build.
+#[derive(Clone, Debug)]
+struct TopNode {
+    bbox: BoundingBox,
+    weight: f64,
+    count: u64,
+    key: u128,
+    depth: u16,
+    split_dim: usize,
+    split_val: f64,
+    left: i32,
+    right: i32,
+}
+
+/// Distributed partition: returns this rank's migrated shard plus stats.
+/// `cfg.parts` is ignored (parts = ranks); `k1` is the top-node budget
+/// (`K1 ≥ P`; pass 0 for `4·P`).
+pub fn distributed_partition(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    cfg: &PartitionConfig,
+    k1: usize,
+) -> DistPartition {
+    let p = ctx.n_ranks;
+    let dim = local.dim;
+    let k1 = if k1 == 0 { 4 * p } else { k1.max(p) };
+    let sw = Stopwatch::start();
+
+    // ---- Global bounding box ----
+    let local_bbox = if local.is_empty() {
+        BoundingBox::empty(dim)
+    } else {
+        local.bounding_box()
+    };
+    let lo = ctx.allreduce_f64(ReduceOp::Min, &local_bbox.lo);
+    let hi = ctx.allreduce_f64(ReduceOp::Max, &local_bbox.hi);
+    let root_bbox = BoundingBox { lo, hi };
+
+    // ---- Collective top-K1 build ----
+    // Per-point membership in the active node set.
+    let mut member: Vec<u32> = vec![0; local.len()];
+    let total_w = ctx.allreduce1(ReduceOp::Sum, local.total_weight());
+    let total_c = ctx.allreduce1(ReduceOp::Sum, local.len() as f64) as u64;
+    let mut nodes = vec![TopNode {
+        bbox: root_bbox,
+        weight: total_w,
+        count: total_c,
+        key: 0,
+        depth: 0,
+        split_dim: usize::MAX,
+        split_val: 0.0,
+        left: -1,
+        right: -1,
+    }];
+    let mut leaves: Vec<u32> = vec![0];
+    let use_median = !matches!(cfg.splitter.top, SplitterKind::Midpoint);
+
+    while leaves.len() < k1 {
+        // All ranks deterministically pick the heaviest splittable leaf.
+        let Some(pos) = leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| {
+                nodes[l as usize].count > 1 && nodes[l as usize].bbox.volume() >= 0.0
+            })
+            .max_by(|a, b| {
+                nodes[*a.1 as usize].weight.partial_cmp(&nodes[*b.1 as usize].weight).unwrap()
+            })
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let leaf = leaves[pos];
+        let node = nodes[leaf as usize].clone();
+        let d = node.bbox.widest_dim();
+        if node.bbox.width(d) <= 0.0 {
+            // Degenerate (duplicates): stop splitting this leaf.
+            leaves.swap_remove(pos);
+            if leaves.is_empty() {
+                break;
+            }
+            continue;
+        }
+        // Split value: midpoint locally, median by distributed bisection.
+        let value = if use_median {
+            distributed_median(ctx, local, &member, leaf, d, &node.bbox, node.count)
+        } else {
+            node.bbox.midpoint(d)
+        };
+        // Count the lower side to validate the split.
+        let local_lower = (0..local.len())
+            .filter(|&i| member[i] == leaf && local.coord(i, d) <= value)
+            .count() as f64;
+        let lower = ctx.allreduce1(ReduceOp::Sum, local_lower) as u64;
+        if lower == 0 || lower == node.count {
+            leaves.swap_remove(pos);
+            if leaves.is_empty() {
+                break;
+            }
+            continue;
+        }
+        // Weights/boxes of children.
+        let mut lw = 0.0f64;
+        let mut lbox = BoundingBox::empty(dim);
+        let mut rbox = BoundingBox::empty(dim);
+        for i in 0..local.len() {
+            if member[i] != leaf {
+                continue;
+            }
+            if local.coord(i, d) <= value {
+                lw += local.weights[i] as f64;
+                lbox.grow(local.point(i));
+            } else {
+                rbox.grow(local.point(i));
+            }
+        }
+        let lw = ctx.allreduce1(ReduceOp::Sum, lw);
+        let llo = ctx.allreduce_f64(ReduceOp::Min, &lbox.lo);
+        let lhi = ctx.allreduce_f64(ReduceOp::Max, &lbox.hi);
+        let rlo = ctx.allreduce_f64(ReduceOp::Min, &rbox.lo);
+        let rhi = ctx.allreduce_f64(ReduceOp::Max, &rbox.hi);
+
+        let li = nodes.len() as u32;
+        nodes.push(TopNode {
+            bbox: BoundingBox { lo: llo, hi: lhi },
+            weight: lw,
+            count: lower,
+            key: child_key(node.key, node.depth, false),
+            depth: node.depth + 1,
+            split_dim: usize::MAX,
+            split_val: 0.0,
+            left: -1,
+            right: -1,
+        });
+        let ri = nodes.len() as u32;
+        nodes.push(TopNode {
+            bbox: BoundingBox { lo: rlo, hi: rhi },
+            weight: node.weight - lw,
+            count: node.count - lower,
+            key: child_key(node.key, node.depth, true),
+            depth: node.depth + 1,
+            split_dim: usize::MAX,
+            split_val: 0.0,
+            left: -1,
+            right: -1,
+        });
+        {
+            let n = &mut nodes[leaf as usize];
+            n.split_dim = d;
+            n.split_val = value;
+            n.left = li as i32;
+            n.right = ri as i32;
+        }
+        // Update local membership.
+        for i in 0..local.len() {
+            if member[i] == leaf {
+                member[i] = if local.coord(i, d) <= value { li } else { ri };
+            }
+        }
+        leaves.swap_remove(pos);
+        leaves.push(li);
+        leaves.push(ri);
+    }
+
+    // ---- Order leaves by SFC key, knapsack to ranks ----
+    leaves.sort_by_key(|&l| nodes[l as usize].key);
+    let leaf_weights: Vec<f64> = leaves.iter().map(|&l| nodes[l as usize].weight).collect();
+    let leaf_rank = greedy_knapsack_buckets(&leaf_weights, p);
+    // leaf id -> owning rank
+    let mut owner = std::collections::HashMap::new();
+    for (i, &l) in leaves.iter().enumerate() {
+        owner.insert(l, leaf_rank[i]);
+    }
+    let owned_leaves = leaf_rank.iter().filter(|&&r| r as usize == ctx.rank).count();
+    let top_secs = sw.secs();
+
+    // ---- Migrate (transfer_t_l_t) ----
+    let sw = Stopwatch::start();
+    let dest: Vec<u32> = member.iter().map(|m| owner[m]).collect();
+    let mut migrated = transfer_t_l_t(ctx, local, &dest, crate::runtime_sim::collectives::MAX_MSG_SIZE);
+    let migrate_secs = sw.secs();
+
+    // ---- Local ordering (point_order_local_subtree) ----
+    let sw = Stopwatch::start();
+    let mut keys = Vec::new();
+    if !migrated.is_empty() {
+        let local_cfg = PartitionConfig { parts: 1, ..cfg.clone() };
+        let (plan, tree) = Partitioner::new(local_cfg).partition_with_tree(&migrated);
+        // Reorder the shard into local curve order.
+        migrated = migrated.permute(&plan.perm);
+        // Global keys: owning-top-leaf rank order is already global;
+        // prefix each local key with its leaf's top key to make the
+        // cross-rank order total.
+        let leaves_dfs = tree.leaves_dfs();
+        keys = vec![0u128; migrated.len()];
+        for &l in &leaves_dfs {
+            let n = &tree.nodes[l as usize];
+            for pos in n.start..n.end {
+                // Local tree was built over the migrated shard only; its
+                // root covers exactly this rank's top leaves. Rank-order
+                // dominance is guaranteed by the knapsack contiguity, so
+                // a (rank, local key) pair is totally ordered; encode the
+                // rank in the top bits.
+                keys[pos as usize] = ((ctx.rank as u128) << 112) | (n.sfc_key >> 16);
+            }
+        }
+    }
+    let local_secs = sw.secs();
+
+    DistPartition { local: migrated, keys, top_secs, migrate_secs, local_secs, owned_leaves }
+}
+
+/// Distributed median along `d` for points with `member == leaf`:
+/// bisection on the value range, counting with allreduce (≈40 rounds).
+fn distributed_median(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    member: &[u32],
+    leaf: u32,
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+) -> f64 {
+    let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
+    let target = count / 2;
+    let mut mid = 0.5 * (lo + hi);
+    for _ in 0..40 {
+        mid = 0.5 * (lo + hi);
+        let local_cnt = (0..local.len())
+            .filter(|&i| member[i] == leaf && local.coord(i, d) <= mid)
+            .count() as f64;
+        let cnt = ctx.allreduce1(ReduceOp::Sum, local_cnt) as u64;
+        if cnt == target {
+            break;
+        }
+        if cnt < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-12 * bbox.width(d).max(1.0) {
+            break;
+        }
+    }
+    mid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, CostModel};
+
+    fn shard(ps: &PointSet, rank: usize, p: usize) -> PointSet {
+        let idx: Vec<u32> =
+            (0..ps.len() as u32).filter(|i| (*i as usize) % p == rank).collect();
+        ps.gather(&idx)
+    }
+
+    #[test]
+    fn distributed_partition_balances_and_conserves() {
+        let global = PointSet::uniform(2000, 3, 77);
+        let p = 4;
+        let (outs, rep) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 16);
+            (dp.local.ids.clone(), dp.owned_leaves)
+        });
+        // Conservation: all ids present exactly once.
+        let mut all: Vec<u64> = outs.iter().flat_map(|(ids, _)| ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..2000).collect::<Vec<u64>>());
+        // Balance: each rank within ±30% of mean (leaf-granular knapsack).
+        for (ids, _) in &outs {
+            let frac = ids.len() as f64 / (2000.0 / p as f64);
+            assert!((0.5..1.5).contains(&frac), "rank holds {}", ids.len());
+        }
+        // Every rank owns at least one top leaf.
+        assert!(outs.iter().all(|(_, owned)| *owned > 0));
+        assert!(rep.total_bytes > 0);
+    }
+
+    #[test]
+    fn median_splitters_tighten_balance() {
+        let global = PointSet::clustered(3000, 3, 0.7, 13);
+        let p = 4;
+        let imbalance = |use_median: bool| {
+            let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let mut cfg = PartitionConfig::default();
+                if use_median {
+                    cfg.splitter =
+                        crate::kdtree::splitter::SplitterConfig::uniform(SplitterKind::MedianSort);
+                }
+                let dp = distributed_partition(ctx, &local, &cfg, 32);
+                dp.local.len() as f64
+            });
+            let mean: f64 = outs.iter().sum::<f64>() / p as f64;
+            outs.iter().fold(0.0f64, |m, &x| m.max(x)) / mean - 1.0
+        };
+        let med = imbalance(true);
+        // Median top-splitters on clustered data keep shards balanced.
+        assert!(med < 0.35, "median imbalance {med}");
+    }
+
+    #[test]
+    fn cross_rank_key_order_is_total() {
+        let global = PointSet::uniform(800, 2, 21);
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 12);
+            dp.keys
+        });
+        // §III-C invariant: keys on rank i all less than keys on rank j>i.
+        for i in 0..p - 1 {
+            let max_i = outs[i].iter().max();
+            let min_j = outs[i + 1].iter().min();
+            if let (Some(a), Some(b)) = (max_i, min_j) {
+                assert!(a < b, "rank {i} max {a} !< rank {} min {b}", i + 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Incremental load balancing (paper §IV).
+//!
+//! *"Our incremental load balancing algorithm … skips tree building and
+//! SFC traversals and recomputes ranks for all points on a new weighted
+//! space-filling curve. The greedy knapsack algorithm is used to slice
+//! the curve into P almost equal weights. For small changes in load …
+//! data migration is restricted between `P_i` and its two neighbors
+//! `P_{i−1}` and `P_{i+1}` in the best case."*
+//!
+//! Points stay in the existing SFC order; only the slice boundaries move.
+//! [`rebalance`] computes the new boundaries and the migration moves;
+//! [`migration_is_neighbor_limited`] checks the paper's neighbor
+//! property; and the surface-to-volume trigger for falling back to a
+//! full rebalance is [`needs_full_rebalance`].
+
+use crate::partition::knapsack::greedy_knapsack;
+
+/// One block of contiguous curve positions moving between parts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Move {
+    pub from: u32,
+    pub to: u32,
+    /// Curve-position range that moves.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Result of an incremental rebalance.
+#[derive(Clone, Debug)]
+pub struct Rebalance {
+    /// New part of each curve position.
+    pub part_in_order: Vec<u32>,
+    pub moves: Vec<Move>,
+    /// Total weight crossing part boundaries (migration volume).
+    pub moved_weight: f64,
+}
+
+/// Recompute the knapsack slicing for updated `weights` (curve order
+/// preserved) given the previous assignment, and derive the migrations.
+pub fn rebalance(old_part_in_order: &[u32], weights: &[f32], parts: usize) -> Rebalance {
+    assert_eq!(old_part_in_order.len(), weights.len());
+    let new = greedy_knapsack(weights, parts);
+    let mut moves = Vec::new();
+    let mut moved_weight = 0.0;
+    let mut i = 0usize;
+    while i < new.len() {
+        if new[i] == old_part_in_order[i] {
+            i += 1;
+            continue;
+        }
+        let (from, to) = (old_part_in_order[i], new[i]);
+        let start = i;
+        while i < new.len() && new[i] == to && old_part_in_order[i] == from {
+            moved_weight += weights[i] as f64;
+            i += 1;
+        }
+        moves.push(Move { from, to, start, end: i });
+    }
+    Rebalance { part_in_order: new, moves, moved_weight }
+}
+
+/// The paper's best case: every move is between adjacent parts.
+pub fn migration_is_neighbor_limited(moves: &[Move]) -> bool {
+    moves.iter().all(|m| m.from.abs_diff(m.to) <= 1)
+}
+
+/// Detect misshapen partitions (§IV): if the max surface-to-volume ratio
+/// exceeds `factor ×` the ratio of an ideal cube holding the same average
+/// volume, the user should switch to a full load balance.
+pub fn needs_full_rebalance(sv_ratios: &[f64], dim: usize, domain_volume: f64, factor: f64) -> bool {
+    let vals: Vec<f64> = sv_ratios.iter().copied().filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return false;
+    }
+    let parts = vals.len() as f64;
+    // Ideal: each part a cube of volume V/P -> side s, S/V = 2d/s.
+    let side = (domain_volume / parts).powf(1.0 / dim as f64);
+    if side <= 0.0 {
+        return false;
+    }
+    let ideal = 2.0 * dim as f64 / side;
+    let max = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    max > factor * ideal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_perturbation_moves_little_and_neighbors_only() {
+        // 1000 unit weights over 4 parts, then bump weights in part 1.
+        let w0 = vec![1.0f32; 1000];
+        let p0 = greedy_knapsack(&w0, 4);
+        let mut w1 = w0.clone();
+        for item in w1.iter_mut().take(400).skip(250) {
+            *item = 1.2; // +20% load inside part 1
+        }
+        let rb = rebalance(&p0, &w1, 4);
+        assert!(!rb.moves.is_empty());
+        assert!(migration_is_neighbor_limited(&rb.moves), "moves={:?}", rb.moves);
+        // Migration volume is a small fraction of the total.
+        let total: f64 = w1.iter().map(|&w| w as f64).sum();
+        assert!(rb.moved_weight < 0.1 * total, "moved {}", rb.moved_weight);
+    }
+
+    #[test]
+    fn no_change_no_moves() {
+        let w = vec![1.0f32; 100];
+        let p = greedy_knapsack(&w, 5);
+        let rb = rebalance(&p, &w, 5);
+        assert!(rb.moves.is_empty());
+        assert_eq!(rb.moved_weight, 0.0);
+        assert_eq!(rb.part_in_order, p);
+    }
+
+    #[test]
+    fn rebalance_restores_balance() {
+        use crate::partition::knapsack::{max_load_diff, part_loads};
+        let mut w = vec![1.0f32; 800];
+        let p0 = greedy_knapsack(&w, 8);
+        // Part 7's region gains heavy points.
+        for item in w.iter_mut().skip(700) {
+            *item = 3.0;
+        }
+        let unbalanced = part_loads(&p0, &w, 8);
+        let rb = rebalance(&p0, &w, 8);
+        let balanced = part_loads(&rb.part_in_order, &w, 8);
+        assert!(max_load_diff(&balanced) < max_load_diff(&unbalanced));
+        assert!(max_load_diff(&balanced) <= 3.0 + 1e-9); // ≤ max point weight
+    }
+
+    #[test]
+    fn skew_detector_triggers() {
+        // Healthy cube-ish parts in 2D over the unit square.
+        let good = vec![8.0, 8.5, 8.2, 8.1]; // ideal 2d cube: s=0.5 -> 8
+        assert!(!needs_full_rebalance(&good, 2, 1.0, 3.0));
+        let bad = vec![8.0, 8.0, 8.0, 100.0]; // one sliver
+        assert!(needs_full_rebalance(&bad, 2, 1.0, 3.0));
+    }
+}

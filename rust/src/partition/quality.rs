@@ -1,0 +1,151 @@
+//! Partition-quality metrics (paper §III-B, §IV, §V-B).
+//!
+//! * load balance: average/max part loads;
+//! * geometric quality: per-part bounding-box **surface-to-volume
+//!   ratios** — the paper's proxy for communication volume ("for a given
+//!   number of points in a partition, its communication volume is equal
+//!   to the weighted sum of its surface area") and its trigger for
+//!   switching from incremental back to full load balancing;
+//! * graph/mesh quality: edge cut and per-part degree over an explicit
+//!   edge list (dual-graph edges for meshes, adjacency for graphs).
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+
+/// Per-part load summary.
+#[derive(Clone, Debug, Default)]
+pub struct LoadSummary {
+    pub avg: f64,
+    pub max: f64,
+    pub min: f64,
+    /// max/avg − 1.
+    pub imbalance: f64,
+}
+
+pub fn load_summary(loads: &[f64]) -> LoadSummary {
+    if loads.is_empty() {
+        return LoadSummary::default();
+    }
+    let avg = loads.iter().sum::<f64>() / loads.len() as f64;
+    let max = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let min = loads.iter().copied().fold(f64::INFINITY, f64::min);
+    LoadSummary { avg, max, min, imbalance: if avg > 0.0 { max / avg - 1.0 } else { 0.0 } }
+}
+
+/// Tight bounding box of each part.
+pub fn part_bboxes(ps: &PointSet, part_of: &[u32], parts: usize) -> Vec<BoundingBox> {
+    let mut boxes = vec![BoundingBox::empty(ps.dim); parts];
+    for i in 0..ps.len() {
+        boxes[part_of[i] as usize].grow(ps.point(i));
+    }
+    boxes
+}
+
+/// Surface-to-volume ratios per part; empty parts yield `NaN` and are
+/// skipped by [`surface_volume_summary`].
+pub fn surface_to_volume(ps: &PointSet, part_of: &[u32], parts: usize) -> Vec<f64> {
+    part_bboxes(ps, part_of, parts)
+        .iter()
+        .map(|b| {
+            if b.lo[0] > b.hi[0] {
+                f64::NAN
+            } else {
+                b.surface_to_volume()
+            }
+        })
+        .collect()
+}
+
+/// (mean, max) surface-to-volume across non-empty parts.
+pub fn surface_volume_summary(ratios: &[f64]) -> (f64, f64) {
+    let vals: Vec<f64> = ratios.iter().copied().filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    let max = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    (mean, max)
+}
+
+/// Edge-cut metrics over an explicit edge list: returns
+/// `(total_cut, max_part_cut, max_degree)` where `max_part_cut` is the
+/// paper's MaxEdgeCut (max over parts of outgoing cut edges) and
+/// `max_degree` the max number of distinct neighbor parts of any part.
+pub fn edge_cut_metrics(
+    edges: &[(u32, u32)],
+    part_of: &[u32],
+    parts: usize,
+) -> (u64, u64, usize) {
+    let mut cut_per_part = vec![0u64; parts];
+    let mut neighbor_sets: Vec<std::collections::HashSet<u32>> =
+        vec![std::collections::HashSet::new(); parts];
+    let mut total = 0u64;
+    for &(a, b) in edges {
+        let (pa, pb) = (part_of[a as usize], part_of[b as usize]);
+        if pa != pb {
+            total += 1;
+            cut_per_part[pa as usize] += 1;
+            cut_per_part[pb as usize] += 1;
+            neighbor_sets[pa as usize].insert(pb);
+            neighbor_sets[pb as usize].insert(pa);
+        }
+    }
+    let max_cut = cut_per_part.iter().copied().max().unwrap_or(0);
+    let max_deg = neighbor_sets.iter().map(|s| s.len()).max().unwrap_or(0);
+    (total, max_cut, max_deg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_summary_basics() {
+        let s = load_summary(&[10.0, 12.0, 8.0, 10.0]);
+        assert_eq!(s.avg, 10.0);
+        assert_eq!(s.max, 12.0);
+        assert_eq!(s.min, 8.0);
+        assert!((s.imbalance - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bboxes_and_sv() {
+        let mut ps = PointSet::new(2);
+        ps.push(&[0.0, 0.0], u64::MAX, 1.0);
+        ps.push(&[1.0, 1.0], u64::MAX, 1.0);
+        ps.push(&[4.0, 4.0], u64::MAX, 1.0);
+        let part_of = vec![0, 0, 1];
+        let boxes = part_bboxes(&ps, &part_of, 3);
+        assert_eq!(boxes[0].hi, vec![1.0, 1.0]);
+        let ratios = surface_to_volume(&ps, &part_of, 3);
+        assert!(ratios[0].is_finite());
+        assert!(ratios[1].is_infinite() || ratios[1].is_nan()); // degenerate single point
+        let (_mean, _max) = surface_volume_summary(&ratios);
+    }
+
+    #[test]
+    fn compact_parts_have_lower_sv_than_slabs() {
+        // 16x16 grid split into 4 squares vs 4 slabs.
+        let ps = crate::geom::dist::regular_mesh(16, 2);
+        let squares: Vec<u32> = (0..256)
+            .map(|i| {
+                let (x, y) = (ps.coord(i, 0), ps.coord(i, 1));
+                ((x >= 0.5) as u32) * 2 + ((y >= 0.5) as u32)
+            })
+            .collect();
+        let slabs: Vec<u32> = (0..256).map(|i| (ps.coord(i, 0) * 4.0) as u32).collect();
+        let (sq_mean, _) = surface_volume_summary(&surface_to_volume(&ps, &squares, 4));
+        let (sl_mean, _) = surface_volume_summary(&surface_to_volume(&ps, &slabs, 4));
+        assert!(sq_mean < sl_mean, "squares {sq_mean} !< slabs {sl_mean}");
+    }
+
+    #[test]
+    fn edge_cut_counts() {
+        // Path graph 0-1-2-3 with parts [0,0,1,1].
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 3)];
+        let (total, max_cut, max_deg) = edge_cut_metrics(&edges, &[0, 0, 1, 1], 2);
+        assert_eq!(total, 1);
+        assert_eq!(max_cut, 1);
+        assert_eq!(max_deg, 1);
+    }
+}

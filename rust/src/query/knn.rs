@@ -1,0 +1,171 @@
+//! k-nearest-neighbour search (paper §V-A).
+//!
+//! The paper's approximate K-NN: locate the query's bucket on the SFC,
+//! then search the buckets within a `CUTOFF` window around it on the
+//! curve ("we restricted CUTOFF to one bucket before and after a bucket
+//! in the SFC") and take the k closest candidates. The SFC's locality
+//! makes the window a good candidate set; the approximation error is
+//! measured against [`knn_exact`] in the tests and benches (Fig 13).
+//!
+//! The candidate scoring loop (pairwise distances + top-k) is the L1
+//! kernel of this application: the PJRT-compiled Pallas path is wired in
+//! `crate::runtime::exec`, with this scalar implementation as its oracle.
+
+use crate::geom::point::PointSet;
+use crate::query::point_location::BucketIndex;
+
+/// One neighbour hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub index: u32,
+    pub dist2: f64,
+}
+
+/// Exact k-NN by linear scan (the oracle; O(n) per query).
+pub fn knn_exact(ps: &PointSet, q: &[f64], k: usize) -> Vec<Neighbor> {
+    let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
+    for i in 0..ps.len() {
+        let d2 = ps.dist2_to(i, q);
+        if best.len() < k || d2 < best.last().unwrap().dist2 {
+            let pos = best.partition_point(|n| n.dist2 < d2);
+            best.insert(pos, Neighbor { index: i as u32, dist2: d2 });
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+/// Approximate k-NN over the bucket window (`cutoff` buckets on each
+/// side of the query's bucket on the curve).
+pub fn knn_sfc(ps: &PointSet, idx: &BucketIndex, q: &[f64], k: usize, cutoff: usize) -> Vec<Neighbor> {
+    let b = idx.locate_bucket(q);
+    let lo = b.saturating_sub(cutoff);
+    let hi = (b + cutoff + 1).min(idx.n_buckets());
+    let (plo, phi) = (idx.offsets[lo] as usize, idx.offsets[hi] as usize);
+    let mut best: Vec<Neighbor> = Vec::with_capacity(k + 1);
+    for &pi in &idx.perm[plo..phi] {
+        let d2 = ps.dist2_to(pi as usize, q);
+        if best.len() < k || d2 < best.last().unwrap().dist2 {
+            let pos = best.partition_point(|n| n.dist2 < d2);
+            best.insert(pos, Neighbor { index: pi, dist2: d2 });
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+/// Candidate window of a query (the point indices the kernel scores) —
+/// exposed so the PJRT path can batch windows.
+pub fn candidate_window<'i>(idx: &'i BucketIndex, q: &[f64], cutoff: usize) -> &'i [u32] {
+    let b = idx.locate_bucket(q);
+    let lo = b.saturating_sub(cutoff);
+    let hi = (b + cutoff + 1).min(idx.n_buckets());
+    &idx.perm[idx.offsets[lo] as usize..idx.offsets[hi] as usize]
+}
+
+/// Recall@k of the approximate result against the exact one.
+pub fn recall(approx: &[Neighbor], exact: &[Neighbor]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let exact_set: std::collections::HashSet<u32> = exact.iter().map(|n| n.index).collect();
+    let hits = approx.iter().filter(|n| exact_set.contains(&n.index)).count();
+    hits as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::bbox::BoundingBox;
+    use crate::kdtree::builder::KdTreeBuilder;
+    use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+    use crate::sfc::traverse::assign_sfc;
+    use crate::sfc::Curve;
+
+    fn index(ps: &PointSet, bucket: usize) -> BucketIndex {
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = DimRule::Cycle;
+        let mut tree = KdTreeBuilder::new().bucket_size(bucket).splitter(cfg).domain(BoundingBox::unit(ps.dim)).build(ps);
+        assign_sfc(&mut tree, Curve::Morton);
+        BucketIndex::from_tree(&tree, BoundingBox::unit(ps.dim))
+    }
+
+    #[test]
+    fn exact_knn_orders_by_distance() {
+        let mut ps = PointSet::new(2);
+        for (i, c) in [[0.0, 0.0], [1.0, 0.0], [0.1, 0.0], [0.5, 0.5]].iter().enumerate() {
+            ps.push(c, i as u64, 1.0);
+        }
+        let nn = knn_exact(&ps, &[0.0, 0.0], 3);
+        assert_eq!(nn[0].index, 0);
+        assert_eq!(nn[1].index, 2);
+        assert_eq!(nn[2].index, 3);
+        assert!(nn[0].dist2 <= nn[1].dist2 && nn[1].dist2 <= nn[2].dist2);
+    }
+
+    #[test]
+    fn sfc_knn_high_recall_on_uniform() {
+        let ps = PointSet::uniform(5000, 3, 83);
+        let idx = index(&ps, 32);
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut s = SplitMix64::new(7);
+        let mut total_recall = 0.0;
+        let trials = 50;
+        for _ in 0..trials {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            let approx = knn_sfc(&ps, &idx, &q, 3, 1);
+            let exact = knn_exact(&ps, &q, 3);
+            total_recall += recall(&approx, &exact);
+        }
+        let avg = total_recall / trials as f64;
+        assert!(avg > 0.6, "avg recall {avg}");
+    }
+
+    #[test]
+    fn larger_cutoff_improves_recall() {
+        let ps = PointSet::uniform(3000, 3, 89);
+        let idx = index(&ps, 16);
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut s = SplitMix64::new(11);
+        let mut r1 = 0.0;
+        let mut r8 = 0.0;
+        for _ in 0..30 {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            let exact = knn_exact(&ps, &q, 5);
+            r1 += recall(&knn_sfc(&ps, &idx, &q, 5, 1), &exact);
+            r8 += recall(&knn_sfc(&ps, &idx, &q, 5, 8), &exact);
+        }
+        assert!(r8 >= r1, "cutoff 8 recall {r8} < cutoff 1 {r1}");
+    }
+
+    #[test]
+    fn full_cutoff_equals_exact() {
+        let ps = PointSet::uniform(800, 2, 97);
+        let idx = index(&ps, 8);
+        let q = [0.42, 0.77];
+        let approx = knn_sfc(&ps, &idx, &q, 4, idx.n_buckets());
+        let exact = knn_exact(&ps, &q, 4);
+        assert_eq!(recall(&approx, &exact), 1.0);
+    }
+
+    #[test]
+    fn candidate_window_contains_bucket() {
+        let ps = PointSet::uniform(500, 2, 101);
+        let idx = index(&ps, 8);
+        let q = [0.5, 0.5];
+        let w = candidate_window(&idx, &q, 1);
+        assert!(!w.is_empty());
+        assert!(w.len() <= 3 * 2 * 8); // ≤ 3 buckets × 2·BUCKETSIZE slack
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let ps = PointSet::uniform(3, 2, 3);
+        let nn = knn_exact(&ps, &[0.5, 0.5], 10);
+        assert_eq!(nn.len(), 3);
+    }
+}

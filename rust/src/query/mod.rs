@@ -1,0 +1,4 @@
+//! Parallel query processing (paper §V-A).
+pub mod knn;
+pub mod point_location;
+pub mod router;

@@ -1,0 +1,205 @@
+//! Exact point location (paper §V-A).
+//!
+//! Two implementations, exactly as the paper describes:
+//!
+//! * [`BucketIndex`] — the fast path: store **only buckets** (sorted by
+//!   SFC key); a query's Morton key is computed by bit interleaving and
+//!   binary-searched among bucket keys. *"It works only with Morton SFC
+//!   on uniform distributions in which the splitting hyperplanes cycle
+//!   between the d−1 dimension planes in a fixed order and the splitting
+//!   value is the midpoint."*
+//! * [`TreeLocator`] — the general path for non-uniform distributions and
+//!   Hilbert-like SFCs: descend from subtree roots to buckets using the
+//!   stored hyperplanes.
+//!
+//! Both are `O(log N_buckets)` per query; both presort/bin queries to
+//! enable the parallel execution the router drives.
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::node::KdTree;
+use crate::sfc::morton::morton_key_cycling;
+
+/// The buckets-only index (Fig 1's linearized leaf table): per bucket its
+/// SFC key, its point range in curve order, and the point data.
+#[derive(Clone, Debug)]
+pub struct BucketIndex {
+    /// Sorted bucket keys (left-aligned path prefixes).
+    pub keys: Vec<u128>,
+    /// Bucket `b` owns `perm[offsets[b]..offsets[b+1]]`.
+    pub offsets: Vec<u32>,
+    /// Point indices (into the backing `PointSet`) in curve order.
+    pub perm: Vec<u32>,
+    /// Domain box for key generation.
+    pub domain: BoundingBox,
+    /// Interleave depth used for query keys.
+    pub depth: u16,
+}
+
+impl BucketIndex {
+    /// Extract from an SFC-ordered tree (leaves in DFS order carry
+    /// strictly increasing keys after `assign_sfc`).
+    pub fn from_tree(tree: &KdTree, domain: BoundingBox) -> BucketIndex {
+        let leaves = tree.leaves_dfs();
+        let mut keys = Vec::with_capacity(leaves.len());
+        let mut offsets = Vec::with_capacity(leaves.len() + 1);
+        for &l in &leaves {
+            let n = &tree.nodes[l as usize];
+            keys.push(n.sfc_key);
+            offsets.push(n.start);
+        }
+        offsets.push(tree.perm.len() as u32);
+        debug_assert!(keys.windows(2).all(|w| w[0] < w[1]));
+        let depth = 2 + tree.max_depth().min(100);
+        BucketIndex { keys, offsets, perm: tree.perm.clone(), domain, depth }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Bucket containing `q`: generate the query's Morton key and binary
+    /// search for the last bucket key ≤ it (bucket keys are zero-padded
+    /// path prefixes, so the containing bucket's key is the greatest one
+    /// not exceeding the point key).
+    pub fn locate_bucket(&self, q: &[f64]) -> usize {
+        let key = morton_key_cycling(q, &self.domain, self.depth);
+        match self.keys.binary_search(&key) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Exact point location: find the stored point with coordinates `q`
+    /// (within `eps`) and return its index into the backing set.
+    pub fn locate_point(&self, ps: &PointSet, q: &[f64], eps: f64) -> Option<u32> {
+        let b = self.locate_bucket(q);
+        let (lo, hi) = (self.offsets[b] as usize, self.offsets[b + 1] as usize);
+        let e2 = eps * eps;
+        self.perm[lo..hi]
+            .iter()
+            .copied()
+            .find(|&pi| ps.dist2_to(pi as usize, q) <= e2)
+    }
+
+    /// Batched location with query presorting (the paper presorts queries
+    /// into bins before the parallel walk). Returns per-query results.
+    pub fn locate_batch(&self, ps: &PointSet, queries: &PointSet, eps: f64) -> Vec<Option<u32>> {
+        // Presort query indices by their Morton keys (bin = bucket).
+        let mut order: Vec<u32> = (0..queries.len() as u32).collect();
+        let keys: Vec<u128> = (0..queries.len())
+            .map(|i| morton_key_cycling(queries.point(i), &self.domain, self.depth))
+            .collect();
+        order.sort_unstable_by_key(|&i| keys[i as usize]);
+        let mut out = vec![None; queries.len()];
+        for &qi in &order {
+            out[qi as usize] = self.locate_point(ps, queries.point(qi as usize), eps);
+        }
+        out
+    }
+}
+
+/// General point location by tree descent (non-uniform distributions,
+/// Hilbert-like orders).
+pub struct TreeLocator<'t> {
+    pub tree: &'t KdTree,
+}
+
+impl<'t> TreeLocator<'t> {
+    pub fn new(tree: &'t KdTree) -> Self {
+        TreeLocator { tree }
+    }
+
+    /// Exact location by descending hyperplanes then scanning the bucket.
+    pub fn locate_point(&self, ps: &PointSet, q: &[f64], eps: f64) -> Option<u32> {
+        let leaf = self.tree.locate_leaf(q);
+        let n = &self.tree.nodes[leaf as usize];
+        let e2 = eps * eps;
+        self.tree.perm[n.start as usize..n.end as usize]
+            .iter()
+            .copied()
+            .find(|&pi| ps.dist2_to(pi as usize, q) <= e2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::builder::KdTreeBuilder;
+    use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+    use crate::sfc::traverse::assign_sfc;
+    use crate::sfc::Curve;
+
+    fn morton_index(ps: &PointSet, bucket: usize) -> (KdTree, BucketIndex) {
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = DimRule::Cycle;
+        let mut tree = KdTreeBuilder::new().bucket_size(bucket).splitter(cfg).domain(BoundingBox::unit(ps.dim)).build(ps);
+        assign_sfc(&mut tree, Curve::Morton);
+        let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(ps.dim));
+        (tree, idx)
+    }
+
+    #[test]
+    fn locates_every_stored_point() {
+        let ps = PointSet::uniform(2000, 3, 61);
+        let (_, idx) = morton_index(&ps, 16);
+        for i in (0..2000).step_by(13) {
+            let got = idx.locate_point(&ps, ps.point(i), 1e-12);
+            assert_eq!(got, Some(i as u32), "point {i}");
+        }
+    }
+
+    #[test]
+    fn absent_points_return_none() {
+        let ps = PointSet::uniform(500, 2, 67);
+        let (_, idx) = morton_index(&ps, 8);
+        // A point that almost surely isn't stored exactly.
+        assert_eq!(idx.locate_point(&ps, &[0.123456789, 0.987654321], 1e-15), None);
+    }
+
+    #[test]
+    fn bucket_search_agrees_with_tree_descent() {
+        let ps = PointSet::uniform(3000, 3, 71);
+        let (tree, idx) = morton_index(&ps, 32);
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut s = SplitMix64::new(5);
+        for _ in 0..200 {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            let b = idx.locate_bucket(&q);
+            let leaf = tree.locate_leaf(&q);
+            let n = &tree.nodes[leaf as usize];
+            assert_eq!(
+                (idx.offsets[b], idx.offsets[b + 1]),
+                (n.start, n.end),
+                "bucket mismatch for {q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let ps = PointSet::uniform(1000, 3, 73);
+        let (_, idx) = morton_index(&ps, 16);
+        let queries = ps.gather(&[5, 17, 999, 3]);
+        let got = idx.locate_batch(&ps, &queries, 1e-12);
+        assert_eq!(got, vec![Some(5), Some(17), Some(999), Some(3)]);
+    }
+
+    #[test]
+    fn tree_locator_handles_clustered_hilbert() {
+        let ps = PointSet::clustered(1500, 3, 0.7, 79);
+        let mut tree = KdTreeBuilder::new()
+            .bucket_size(16)
+            .splitter_kind(SplitterKind::MedianSort)
+            .build(&ps);
+        assign_sfc(&mut tree, Curve::HilbertLike);
+        let loc = TreeLocator::new(&tree);
+        for i in (0..1500).step_by(37) {
+            // Clustered (quantized Poisson) coords can collide exactly, so
+            // accept any stored point at distance ~0.
+            let got = loc.locate_point(&ps, ps.point(i), 1e-12).expect("found");
+            assert!(ps.dist2(i, got as usize) <= 1e-20, "point {i} -> far {got}");
+        }
+    }
+}

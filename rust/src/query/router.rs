@@ -1,0 +1,221 @@
+//! Query router / batcher — the coordinator that drives parallel query
+//! processing (paper §V-A: "Input queries are presorted using their
+//! co-ordinates into bins … point location queries can be executed in
+//! parallel").
+//!
+//! The router owns the top-node partition (bins → threads/ranks),
+//! presorts incoming queries to their owning bin, batches per bin, and
+//! dispatches batches to workers. This is the L3 shape of a serving
+//! system: admission → routing → batching → execution, with batch-size /
+//! flush-interval knobs; the execution hot spot (candidate scoring for
+//! k-NN) is what the PJRT artifact accelerates.
+
+use crate::geom::point::PointSet;
+use crate::query::knn::{knn_sfc, Neighbor};
+use crate::query::point_location::BucketIndex;
+use crate::runtime_sim::threadpool::parallel_map_ranges;
+
+/// A query: locate or k-NN.
+#[derive(Clone, Debug)]
+pub enum Query {
+    Locate { coords: Vec<f64>, eps: f64 },
+    Knn { coords: Vec<f64>, k: usize, cutoff: usize },
+}
+
+/// A query's result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryResult {
+    Located(Option<u32>),
+    Neighbors(Vec<Neighbor>),
+}
+
+/// Routing + batching statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    pub queries: u64,
+    pub batches: u64,
+    pub max_batch: usize,
+    /// Bin occupancy imbalance (max/mean − 1) of the last flush.
+    pub bin_imbalance: f64,
+}
+
+/// The router: bins are contiguous bucket ranges of the SFC order, one
+/// per worker.
+pub struct QueryRouter<'d> {
+    pub data: &'d PointSet,
+    pub index: &'d BucketIndex,
+    pub workers: usize,
+    /// Bucket range per worker (equal bucket split of the curve).
+    bin_bounds: Vec<usize>,
+    pending: Vec<Vec<(u32, Query)>>,
+    next_id: u32,
+    pub stats: RouterStats,
+}
+
+impl<'d> QueryRouter<'d> {
+    pub fn new(data: &'d PointSet, index: &'d BucketIndex, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let nb = index.n_buckets();
+        let bin_bounds = (0..=workers).map(|w| nb * w / workers).collect();
+        QueryRouter {
+            data,
+            index,
+            workers,
+            bin_bounds,
+            pending: vec![Vec::new(); workers],
+            next_id: 0,
+            stats: RouterStats::default(),
+        }
+    }
+
+    /// Which worker owns a query (by its bucket on the curve).
+    pub fn route(&self, coords: &[f64]) -> usize {
+        let b = self.index.locate_bucket(coords);
+        // Binary search the bin bounds.
+        match self.bin_bounds.binary_search(&b) {
+            Ok(i) => i.min(self.workers - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Enqueue a query; returns its ticket id (results are keyed by it).
+    pub fn submit(&mut self, q: Query) -> u32 {
+        let coords = match &q {
+            Query::Locate { coords, .. } => coords,
+            Query::Knn { coords, .. } => coords,
+        };
+        let w = self.route(coords);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending[w].push((id, q));
+        self.stats.queries += 1;
+        id
+    }
+
+    /// Number of queued queries.
+    pub fn queued(&self) -> usize {
+        self.pending.iter().map(|b| b.len()).sum()
+    }
+
+    /// Flush: execute all pending batches in parallel (one worker per
+    /// bin, the paper's thread-per-bin model). Returns (ticket, result)
+    /// pairs in ticket order.
+    pub fn flush(&mut self) -> Vec<(u32, QueryResult)> {
+        let batches = std::mem::replace(&mut self.pending, vec![Vec::new(); self.workers]);
+        let sizes: Vec<usize> = batches.iter().map(|b| b.len()).collect();
+        let total: usize = sizes.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        self.stats.batches += batches.iter().filter(|b| !b.is_empty()).count() as u64;
+        self.stats.max_batch = self.stats.max_batch.max(sizes.iter().copied().max().unwrap_or(0));
+        let mean = total as f64 / self.workers as f64;
+        self.stats.bin_imbalance = if mean > 0.0 {
+            sizes.iter().copied().max().unwrap_or(0) as f64 / mean - 1.0
+        } else {
+            0.0
+        };
+
+        let data = self.data;
+        let index = self.index;
+        let results: Vec<Vec<(u32, QueryResult)>> =
+            parallel_map_ranges(self.workers, self.workers, |_t, lo, hi| {
+                let mut out = Vec::new();
+                for batch in batches.iter().take(hi).skip(lo) {
+                    for (id, q) in batch {
+                        let res = match q {
+                            Query::Locate { coords, eps } => {
+                                QueryResult::Located(index.locate_point(data, coords, *eps))
+                            }
+                            Query::Knn { coords, k, cutoff } => {
+                                QueryResult::Neighbors(knn_sfc(data, index, coords, *k, *cutoff))
+                            }
+                        };
+                        out.push((*id, res));
+                    }
+                }
+                out
+            });
+        let mut flat: Vec<(u32, QueryResult)> = results.into_iter().flatten().collect();
+        flat.sort_by_key(|(id, _)| *id);
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::bbox::BoundingBox;
+    use crate::kdtree::builder::KdTreeBuilder;
+    use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+    use crate::sfc::traverse::assign_sfc;
+    use crate::sfc::Curve;
+
+    fn setup(n: usize) -> (PointSet, BucketIndex) {
+        let ps = PointSet::uniform(n, 3, 103);
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = DimRule::Cycle;
+        let mut tree = KdTreeBuilder::new().bucket_size(16).splitter(cfg).domain(BoundingBox::unit(3)).build(&ps);
+        assign_sfc(&mut tree, Curve::Morton);
+        let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(3));
+        (ps, idx)
+    }
+
+    #[test]
+    fn routed_locate_matches_direct() {
+        let (ps, idx) = setup(2000);
+        let mut router = QueryRouter::new(&ps, &idx, 4);
+        let mut tickets = Vec::new();
+        for i in (0..2000).step_by(97) {
+            let t = router.submit(Query::Locate { coords: ps.point(i).to_vec(), eps: 1e-12 });
+            tickets.push((t, i as u32));
+        }
+        let results = router.flush();
+        assert_eq!(results.len(), tickets.len());
+        for ((id, res), (t, expect)) in results.iter().zip(&tickets) {
+            assert_eq!(id, t);
+            assert_eq!(*res, QueryResult::Located(Some(*expect)));
+        }
+    }
+
+    #[test]
+    fn routed_knn_matches_direct() {
+        let (ps, idx) = setup(1500);
+        let mut router = QueryRouter::new(&ps, &idx, 3);
+        let q = vec![0.3, 0.6, 0.2];
+        let t = router.submit(Query::Knn { coords: q.clone(), k: 3, cutoff: 1 });
+        let results = router.flush();
+        let direct = knn_sfc(&ps, &idx, &q, 3, 1);
+        assert_eq!(results[0].0, t);
+        assert_eq!(results[0].1, QueryResult::Neighbors(direct));
+    }
+
+    #[test]
+    fn stats_track_batches() {
+        let (ps, idx) = setup(1000);
+        let mut router = QueryRouter::new(&ps, &idx, 4);
+        for i in 0..100 {
+            router.submit(Query::Locate { coords: ps.point(i).to_vec(), eps: 1e-12 });
+        }
+        assert_eq!(router.queued(), 100);
+        let _ = router.flush();
+        assert_eq!(router.queued(), 0);
+        assert_eq!(router.stats.queries, 100);
+        assert!(router.stats.batches >= 1);
+        assert!(router.stats.max_batch > 0);
+        // Empty flush is a no-op.
+        assert!(router.flush().is_empty());
+    }
+
+    #[test]
+    fn routing_is_consistent_with_bins() {
+        let (ps, idx) = setup(1200);
+        let router = QueryRouter::new(&ps, &idx, 5);
+        for i in (0..1200).step_by(41) {
+            let w = router.route(ps.point(i));
+            assert!(w < 5);
+            let b = idx.locate_bucket(ps.point(i));
+            assert!(router.bin_bounds[w] <= b && b < router.bin_bounds[w + 1].max(1));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Artifact discovery: `artifacts/manifest.txt` + `<name>.hlo.txt` files
+//! produced by `python -m compile.aot` (`make artifacts`).
+//!
+//! The manifest is tab-separated `name<TAB>inputs<TAB>outputs`, with
+//! shape strings like `x:f32[1024]` — enough for the runtime to sanity-
+//! check the fixed tile shapes it was compiled against.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub inputs: String,
+    pub outputs: String,
+}
+
+/// A discovered artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactDir {
+    /// Parse `dir/manifest.txt`. Errors if missing (run `make artifacts`).
+    pub fn discover(dir: &Path) -> Result<ArtifactDir> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("missing {manifest:?}; run `make artifacts`"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split('\t');
+            let (Some(name), Some(inputs), Some(outputs)) = (it.next(), it.next(), it.next())
+            else {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            };
+            entries.push(ArtifactEntry {
+                name: name.to_string(),
+                inputs: inputs.to_string(),
+                outputs: outputs.to_string(),
+            });
+        }
+        Ok(ArtifactDir { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default location: `$SFC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SFC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Path of the HLO text for `name`.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Extract the bracketed dims of the `idx`-th field in a shape
+    /// string like `blocks:f32[32,8,32,32] cols:i32[32,8]`.
+    pub fn dims_of(shapes: &str, idx: usize) -> Option<Vec<usize>> {
+        let field = shapes.split_whitespace().nth(idx)?;
+        let open = field.find('[')?;
+        let close = field.find(']')?;
+        field[open + 1..close]
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().ok())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_text() {
+        let dir = std::env::temp_dir().join(format!("sfc_art_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "spmv\tblocks:f32[4,2,8,8] x:f32[32]\ty:f32[32]\n",
+        )
+        .unwrap();
+        let ad = ArtifactDir::discover(&dir).unwrap();
+        assert_eq!(ad.entries.len(), 1);
+        let e = ad.entry("spmv").unwrap();
+        assert_eq!(ArtifactDir::dims_of(&e.inputs, 0), Some(vec![4, 2, 8, 8]));
+        assert_eq!(ArtifactDir::dims_of(&e.inputs, 1), Some(vec![32]));
+        assert_eq!(ArtifactDir::dims_of(&e.outputs, 0), Some(vec![32]));
+        assert!(ad.entry("nope").is_none());
+        assert!(ad.hlo_path("spmv").to_string_lossy().ends_with("spmv.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("sfc_art_none");
+        let err = ArtifactDir::discover(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

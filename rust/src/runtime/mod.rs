@@ -1,0 +1,4 @@
+//! PJRT runtime: load AOT artifacts, execute from the hot path.
+pub mod artifact;
+pub mod exec;
+pub mod spmv_driver;

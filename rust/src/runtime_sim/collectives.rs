@@ -1,0 +1,438 @@
+//! Collective operations over the simulated fabric.
+//!
+//! Algorithms are the standard logarithmic ones (binomial trees for
+//! broadcast/reduce, recursive doubling for allreduce/scan), and the
+//! all-to-all-v exchanges **in rounds bounded by `MAX_MSG_SIZE`** exactly
+//! as the paper's `transfer_t_l_t` does (§III-C). Every rank must call
+//! each collective in the same order (SPMD), like MPI.
+
+use crate::runtime_sim::fabric::{dec_f64, dec_u64, enc_f64, enc_u64};
+use crate::runtime_sim::rank::RankCtx;
+
+/// Default cap on a single message, in bytes (the paper's
+/// `MAX_MSG_SIZE`). Benches sweep this.
+pub const MAX_MSG_SIZE: usize = 1 << 20;
+
+/// Reduction operator for scalar collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    fn f64(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    fn u64(self, a: u64, b: u64) -> u64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+}
+
+impl<'f> RankCtx<'f> {
+    /// Barrier: a 1-element allreduce (binomial reduce + broadcast).
+    pub fn barrier(&mut self) {
+        self.allreduce_u64(ReduceOp::Sum, &[1]);
+    }
+
+    fn broadcast_bytes_with_tag(&self, root: usize, data: Vec<u8>, tag: u32) -> Vec<u8> {
+        let p = self.n_ranks;
+        if p == 1 {
+            return data;
+        }
+        // Rotate so root maps to virtual rank 0.
+        let vr = (self.rank + p - root) % p;
+        let mut data = data;
+        if vr != 0 {
+            data = self.fabric.recv(self.rank, usize::MAX, tag).payload;
+        }
+        // Send to virtual children vr + 2^k for 2^k > vr.
+        let mut mask = 1usize;
+        while mask < p {
+            if vr & mask != 0 {
+                break;
+            }
+            let child = vr | mask;
+            if child < p {
+                self.fabric.send(self.rank, (child + root) % p, tag, data.clone());
+            }
+            mask <<= 1;
+        }
+        data
+    }
+
+    /// Broadcast raw bytes from `root` to every rank.
+    pub fn broadcast_bytes(&mut self, root: usize, data: Vec<u8>) -> Vec<u8> {
+        let tag = self.next_epoch();
+        self.broadcast_bytes_with_tag(root, data, tag)
+    }
+
+    /// Broadcast an `f64` slice from root.
+    pub fn broadcast_f64(&mut self, root: usize, data: &[f64]) -> Vec<f64> {
+        dec_f64(&self.broadcast_bytes(root, enc_f64(data)))
+    }
+
+    /// Element-wise reduce of an `f64` vector to rank 0 (binomial tree).
+    pub fn reduce_f64(&mut self, op: ReduceOp, vals: &[f64]) -> Option<Vec<f64>> {
+        let tag = self.next_epoch();
+        let (r, p) = (self.rank, self.n_ranks);
+        let mut acc = vals.to_vec();
+        let mut mask = 1usize;
+        while mask < p {
+            if r & mask != 0 {
+                self.fabric.send(r, r & !mask, tag, enc_f64(&acc));
+                return None;
+            }
+            if r | mask < p {
+                let other = dec_f64(&self.fabric.recv(r, r | mask, tag).payload);
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = op.f64(*a, b);
+                }
+            }
+            mask <<= 1;
+        }
+        Some(acc)
+    }
+
+    /// Reduce + broadcast (the paper's `ReduceBcast`).
+    pub fn allreduce_f64(&mut self, op: ReduceOp, vals: &[f64]) -> Vec<f64> {
+        let root_val = self.reduce_f64(op, vals);
+        let tag = self.next_epoch();
+        let data = root_val.map(|v| enc_f64(&v)).unwrap_or_default();
+        dec_f64(&self.broadcast_bytes_with_tag(0, data, tag))
+    }
+
+    /// Scalar convenience for `ReduceBcast(x, op)`.
+    pub fn allreduce1(&mut self, op: ReduceOp, x: f64) -> f64 {
+        self.allreduce_f64(op, &[x])[0]
+    }
+
+    /// Element-wise allreduce of `u64` values.
+    pub fn allreduce_u64(&mut self, op: ReduceOp, vals: &[u64]) -> Vec<u64> {
+        let tag = self.next_epoch();
+        let (r, p) = (self.rank, self.n_ranks);
+        let mut acc = vals.to_vec();
+        let mut mask = 1usize;
+        let mut sent = false;
+        while mask < p {
+            if r & mask != 0 {
+                self.fabric.send(r, r & !mask, tag, enc_u64(&acc));
+                sent = true;
+                break;
+            }
+            if r | mask < p {
+                let other = dec_u64(&self.fabric.recv(r, r | mask, tag).payload);
+                for (a, b) in acc.iter_mut().zip(other) {
+                    *a = op.u64(*a, b);
+                }
+            }
+            mask <<= 1;
+        }
+        let data = if sent || r != 0 { Vec::new() } else { enc_u64(&acc) };
+        let btag = self.next_epoch();
+        dec_u64(&self.broadcast_bytes_with_tag(0, data, btag))
+    }
+
+    /// Exclusive prefix sum of one `f64` per rank: rank r receives
+    /// `sum_{i<r} x_i` (0 on rank 0). This is the parallel prefix the
+    /// greedy knapsack uses to place local weights on the global SFC line.
+    pub fn exscan_f64(&mut self, x: f64) -> f64 {
+        // Simple gather-scan-scatter through rank 0: O(p) messages but
+        // bytes are tiny; the tree version adds nothing at our rank counts.
+        let tag = self.alloc_tags(2);
+        let (r, p) = (self.rank, self.n_ranks);
+        if p == 1 {
+            return 0.0;
+        }
+        if r == 0 {
+            let mut vals = vec![0.0f64; p];
+            vals[0] = x;
+            for _ in 1..p {
+                let m = self.fabric.recv(0, usize::MAX, tag);
+                vals[m.src] = dec_f64(&m.payload)[0];
+            }
+            let mut acc = 0.0;
+            let mut pre = vec![0.0f64; p];
+            for i in 0..p {
+                pre[i] = acc;
+                acc += vals[i];
+            }
+            for (dst, &v) in pre.iter().enumerate().skip(1) {
+                self.fabric.send(0, dst, tag + 1, enc_f64(&[v]));
+            }
+            pre[0]
+        } else {
+            self.fabric.send(r, 0, tag, enc_f64(&[x]));
+            dec_f64(&self.fabric.recv(r, 0, tag + 1).payload)[0]
+        }
+    }
+
+    /// Gather variable-size byte buffers to root; returns per-rank buffers
+    /// on root, `None` elsewhere.
+    pub fn gather_bytes(&mut self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        let tag = self.next_epoch();
+        let (r, p) = (self.rank, self.n_ranks);
+        if r == root {
+            let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+            out[root] = data;
+            for _ in 0..p - 1 {
+                let m = self.fabric.recv(r, usize::MAX, tag);
+                out[m.src] = m.payload;
+            }
+            Some(out)
+        } else {
+            self.fabric.send(r, root, tag, data);
+            None
+        }
+    }
+
+    /// All-gather of variable-size buffers (gather + broadcast of the
+    /// concatenation with a length header).
+    pub fn allgather_bytes(&mut self, data: Vec<u8>) -> Vec<Vec<u8>> {
+        let p = self.n_ranks;
+        let gathered = self.gather_bytes(0, data);
+        // Serialize: p lengths then payloads.
+        let blob = match gathered {
+            Some(bufs) => {
+                let mut blob = Vec::new();
+                for b in &bufs {
+                    blob.extend_from_slice(&(b.len() as u64).to_le_bytes());
+                }
+                for b in &bufs {
+                    blob.extend_from_slice(b);
+                }
+                blob
+            }
+            None => Vec::new(),
+        };
+        let blob = self.broadcast_bytes(0, blob);
+        let mut lens = Vec::with_capacity(p);
+        for i in 0..p {
+            lens.push(u64::from_le_bytes(blob[i * 8..(i + 1) * 8].try_into().unwrap()) as usize);
+        }
+        let mut out = Vec::with_capacity(p);
+        let mut off = p * 8;
+        for l in lens {
+            out.push(blob[off..off + l].to_vec());
+            off += l;
+        }
+        out
+    }
+
+    /// All-to-all-v with per-message cap: buffer `bufs[d]` goes to rank
+    /// `d`, delivered in `ceil(len / max_msg)` rounds, every rank
+    /// participating in every round (the paper's bounded-message data
+    /// exchange). Returns the received buffer per source rank.
+    pub fn alltoallv_rounds(&mut self, bufs: Vec<Vec<u8>>, max_msg: usize) -> Vec<Vec<u8>> {
+        assert_eq!(bufs.len(), self.n_ranks);
+        let (r, p) = (self.rank, self.n_ranks);
+        let max_msg = max_msg.max(1);
+        // Agree on the number of rounds.
+        let local_rounds =
+            bufs.iter().map(|b| b.len().div_ceil(max_msg)).max().unwrap_or(0) as u64;
+        let rounds = self.allreduce_u64(ReduceOp::Max, &[local_rounds])[0] as usize;
+        let tag = self.alloc_tags(rounds as u32 + 1);
+        let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+        out[r] = bufs[r].clone();
+        for round in 0..rounds {
+            let rtag = tag + 1 + round as u32;
+            for dst in 0..p {
+                if dst == r {
+                    continue;
+                }
+                let b = &bufs[dst];
+                let lo = (round * max_msg).min(b.len());
+                let hi = ((round + 1) * max_msg).min(b.len());
+                self.fabric.send(r, dst, rtag, b[lo..hi].to_vec());
+            }
+            for src in 0..p {
+                if src == r {
+                    continue;
+                }
+                let m = self.fabric.recv(r, src, rtag);
+                out[src].extend_from_slice(&m.payload);
+            }
+        }
+        out
+    }
+
+    /// All-to-all-v with the default `MAX_MSG_SIZE`.
+    pub fn alltoallv(&mut self, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        self.alltoallv_rounds(bufs, MAX_MSG_SIZE)
+    }
+
+    /// Reduce-scatter of an `f64` vector partitioned by `counts`: every
+    /// rank contributes a full-length vector; rank i ends with the
+    /// element-wise sum of its `counts[i]` segment. Implemented as p-1
+    /// shifted segment exchanges (ring), the same communication pattern
+    /// MPI_Reduce_scatter uses.
+    pub fn reduce_scatter_f64(&mut self, data: &[f64], counts: &[usize]) -> Vec<f64> {
+        let (r, p) = (self.rank, self.n_ranks);
+        let tag = self.alloc_tags(p as u32 + 1);
+        assert_eq!(counts.len(), p);
+        let total: usize = counts.iter().sum();
+        assert_eq!(data.len(), total);
+        let mut offsets = vec![0usize; p + 1];
+        for i in 0..p {
+            offsets[i + 1] = offsets[i] + counts[i];
+        }
+        let mut acc = data[offsets[r]..offsets[r + 1]].to_vec();
+        // Each round, receive the partial for my segment from rank r-s,
+        // and send rank (r+s)'s segment of my data to r+s.
+        for s in 1..p {
+            let dst = (r + s) % p;
+            let src = (r + p - s) % p;
+            let seg = &data[offsets[dst]..offsets[dst + 1]];
+            self.fabric.send(r, dst, tag + s as u32, enc_f64(seg));
+            let part = dec_f64(&self.fabric.recv(r, src, tag + s as u32).payload);
+            for (a, b) in acc.iter_mut().zip(part) {
+                *a += b;
+            }
+        }
+        self.epoch += p as u32;
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime_sim::{run_ranks, CostModel};
+    use super::*;
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..5 {
+            let (vals, _) = run_ranks(5, CostModel::default(), |ctx| {
+                let data = if ctx.rank == root { vec![root as f64, 2.5] } else { vec![] };
+                ctx.broadcast_f64(root, &data)
+            });
+            for v in vals {
+                assert_eq!(v, vec![root as f64, 2.5]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_max_min() {
+        let (vals, _) = run_ranks(7, CostModel::default(), |ctx| {
+            let x = ctx.rank as f64 + 1.0;
+            (
+                ctx.allreduce1(ReduceOp::Sum, x),
+                ctx.allreduce1(ReduceOp::Max, x),
+                ctx.allreduce1(ReduceOp::Min, x),
+            )
+        });
+        for (s, mx, mn) in vals {
+            assert_eq!(s, 28.0);
+            assert_eq!(mx, 7.0);
+            assert_eq!(mn, 1.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_u64_vector() {
+        let (vals, _) = run_ranks(4, CostModel::default(), |ctx| {
+            ctx.allreduce_u64(ReduceOp::Sum, &[ctx.rank as u64, 1])
+        });
+        for v in vals {
+            assert_eq!(v, vec![6, 4]);
+        }
+    }
+
+    #[test]
+    fn exscan_prefix() {
+        let (vals, _) = run_ranks(6, CostModel::default(), |ctx| {
+            ctx.exscan_f64((ctx.rank + 1) as f64)
+        });
+        // exscan of [1,2,3,4,5,6] = [0,1,3,6,10,15]
+        assert_eq!(vals, vec![0.0, 1.0, 3.0, 6.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn gather_and_allgather() {
+        let (vals, _) = run_ranks(4, CostModel::default(), |ctx| {
+            let mine = vec![ctx.rank as u8; ctx.rank + 1];
+            let all = ctx.allgather_bytes(mine);
+            all.iter().map(|b| b.len()).collect::<Vec<_>>()
+        });
+        for v in vals {
+            assert_eq!(v, vec![1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn alltoallv_exchanges_in_rounds() {
+        // Rank r sends (r*10 + d) repeated (d+1) times to rank d, with a
+        // tiny max_msg to force multiple rounds.
+        let (vals, _) = run_ranks(3, CostModel::default(), |ctx| {
+            let bufs: Vec<Vec<u8>> = (0..3)
+                .map(|d| vec![(ctx.rank * 10 + d) as u8; d + 1])
+                .collect();
+            ctx.alltoallv_rounds(bufs, 2)
+        });
+        for (r, got) in vals.iter().enumerate() {
+            for (s, buf) in got.iter().enumerate() {
+                assert_eq!(buf, &vec![(s * 10 + r) as u8; r + 1], "r={r} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn alltoallv_respects_max_msg() {
+        let (_, rep) = run_ranks(2, CostModel::default(), |ctx| {
+            let bufs: Vec<Vec<u8>> = (0..2).map(|_| vec![7u8; 1000]).collect();
+            ctx.alltoallv_rounds(bufs, 64)
+        });
+        assert!(rep.max_msg_bytes <= 64, "max msg {}", rep.max_msg_bytes);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_segments() {
+        let counts = vec![2usize, 1, 3];
+        let (vals, _) = run_ranks(3, CostModel::default(), |ctx| {
+            // Every rank contributes vec of 6 values = rank+1.
+            let data = vec![(ctx.rank + 1) as f64; 6];
+            ctx.reduce_scatter_f64(&data, &[2, 1, 3])
+        });
+        // Sum over ranks = 1+2+3 = 6 at every position.
+        for (r, v) in vals.iter().enumerate() {
+            assert_eq!(v.len(), counts[r]);
+            assert!(v.iter().all(|&x| x == 6.0));
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let (_, _) = run_ranks(8, CostModel::default(), |ctx| {
+            for _ in 0..3 {
+                ctx.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_collective_sequences_do_not_alias() {
+        let (vals, _) = run_ranks(4, CostModel::default(), |ctx| {
+            let a = ctx.allreduce1(ReduceOp::Sum, 1.0);
+            ctx.barrier();
+            let b = ctx.allreduce1(ReduceOp::Max, ctx.rank as f64);
+            let c = ctx.exscan_f64(1.0);
+            (a, b, c)
+        });
+        for (r, (a, b, c)) in vals.iter().enumerate() {
+            assert_eq!(*a, 4.0);
+            assert_eq!(*b, 3.0);
+            assert_eq!(*c, r as f64);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! The in-process interconnect: per-rank mailboxes with blocking,
+//! tag-matched receive, plus byte/message accounting for the cost model.
+//!
+//! Every send is recorded (count, bytes, max message size, destination)
+//! so [`super::cost`] can turn a run into simulated network time and the
+//! graph metrics can report MaxDegree per rank.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A tagged message between ranks.
+#[derive(Debug)]
+pub struct Message {
+    pub src: usize,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<VecDeque<Message>>,
+    signal: Condvar,
+}
+
+/// Per-rank traffic counters (all atomics; updated by senders).
+#[derive(Default)]
+pub struct RankTraffic {
+    pub msgs_sent: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub max_msg_bytes: AtomicU64,
+    /// Busy CPU seconds, recorded once at rank exit (micro-seconds).
+    pub busy_us: AtomicU64,
+}
+
+/// The interconnect shared by all ranks of one `run_ranks` invocation.
+pub struct Fabric {
+    boxes: Vec<Mailbox>,
+    pub traffic: Vec<RankTraffic>,
+    /// Distinct (src,dst) pairs that exchanged at least one message —
+    /// bit-matrix p×p, used for degree accounting.
+    links: Vec<AtomicU64>,
+    /// Set when a rank panics: blocked receivers abort instead of
+    /// deadlocking the whole simulation.
+    poisoned: std::sync::atomic::AtomicBool,
+    p: usize,
+}
+
+impl Fabric {
+    pub fn new(p: usize) -> Self {
+        let words = (p * p + 63) / 64;
+        Fabric {
+            boxes: (0..p).map(|_| Mailbox::default()).collect(),
+            traffic: (0..p).map(|_| RankTraffic::default()).collect(),
+            links: (0..words).map(|_| AtomicU64::new(0)).collect(),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+            p,
+        }
+    }
+
+    /// Mark the fabric dead (a rank panicked) and wake all receivers.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        for mb in &self.boxes {
+            let _g = mb.queue.lock().unwrap();
+            mb.signal.notify_all();
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.p
+    }
+
+    /// Send `payload` from `src` to `dst` with `tag`. Self-sends are
+    /// permitted (delivered through the mailbox, not counted as network
+    /// traffic).
+    pub fn send(&self, src: usize, dst: usize, tag: u32, payload: Vec<u8>) {
+        debug_assert!(src < self.p && dst < self.p);
+        if src != dst {
+            let t = &self.traffic[src];
+            t.msgs_sent.fetch_add(1, Ordering::Relaxed);
+            t.bytes_sent.fetch_add(payload.len() as u64, Ordering::Relaxed);
+            t.max_msg_bytes.fetch_max(payload.len() as u64, Ordering::Relaxed);
+            let bit = src * self.p + dst;
+            self.links[bit / 64].fetch_or(1 << (bit % 64), Ordering::Relaxed);
+        }
+        let mb = &self.boxes[dst];
+        let mut q = mb.queue.lock().unwrap();
+        q.push_back(Message { src, tag, payload });
+        mb.signal.notify_all();
+    }
+
+    /// Blocking receive at `rank` of the first message matching
+    /// `(src, tag)`; `src == usize::MAX` matches any source. Panics if
+    /// the fabric is poisoned (another rank died) — MPI-style abort.
+    pub fn recv(&self, rank: usize, src: usize, tag: u32) -> Message {
+        let mb = &self.boxes[rank];
+        let mut q = mb.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q
+                .iter()
+                .position(|m| m.tag == tag && (src == usize::MAX || m.src == src))
+            {
+                return q.remove(pos).unwrap();
+            }
+            if self.poisoned.load(Ordering::Acquire) {
+                panic!("fabric poisoned: a peer rank panicked (rank {rank} waiting on tag {tag})");
+            }
+            q = mb.signal.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking probe: is a matching message waiting?
+    pub fn probe(&self, rank: usize, src: usize, tag: u32) -> bool {
+        let q = self.boxes[rank].queue.lock().unwrap();
+        q.iter().any(|m| m.tag == tag && (src == usize::MAX || m.src == src))
+    }
+
+    pub(crate) fn record_busy(&self, rank: usize, secs: f64) {
+        self.traffic[rank].busy_us.store((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Out-degree of `rank`: number of distinct destinations it sent to.
+    pub fn out_degree(&self, rank: usize) -> usize {
+        (0..self.p)
+            .filter(|&d| {
+                let bit = rank * self.p + d;
+                self.links[bit / 64].load(Ordering::Relaxed) & (1 << (bit % 64)) != 0
+            })
+            .count()
+    }
+
+    /// Build the run report under a network cost model.
+    pub fn report(&self, cost: &super::cost::CostModel) -> super::cost::SimReport {
+        super::cost::SimReport::from_fabric(self, cost)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload codecs — flat little-endian encodings for the common slices.
+// ---------------------------------------------------------------------
+
+/// Encode a `u64` slice.
+pub fn enc_u64(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a `u64` slice.
+pub fn dec_u64(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Encode an `f64` slice.
+pub fn enc_f64(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an `f64` slice.
+pub fn dec_f64(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Encode a `u128` slice (SFC keys).
+pub fn enc_u128(xs: &[u128]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 16);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a `u128` slice.
+pub fn dec_u128(b: &[u8]) -> Vec<u128> {
+    b.chunks_exact(16).map(|c| u128::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 7, vec![1, 2, 3]);
+        let m = f.recv(1, 0, 7);
+        assert_eq!(m.src, 0);
+        assert_eq!(m.payload, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recv_matches_tag_out_of_order() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 1, vec![1]);
+        f.send(0, 1, 2, vec![2]);
+        // Receive tag 2 first even though tag 1 arrived first.
+        assert_eq!(f.recv(1, 0, 2).payload, vec![2]);
+        assert_eq!(f.recv(1, 0, 1).payload, vec![1]);
+    }
+
+    #[test]
+    fn recv_any_source() {
+        let f = Fabric::new(3);
+        f.send(2, 0, 5, vec![9]);
+        let m = f.recv(0, usize::MAX, 5);
+        assert_eq!(m.src, 2);
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_send() {
+        let f = std::sync::Arc::new(Fabric::new(2));
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.recv(1, 0, 3).payload);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.send(0, 1, 3, vec![42]);
+        assert_eq!(h.join().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let f = Fabric::new(3);
+        f.send(0, 1, 0, vec![0; 100]);
+        f.send(0, 2, 0, vec![0; 300]);
+        f.send(0, 0, 0, vec![0; 999]); // self-send not counted
+        let t = &f.traffic[0];
+        assert_eq!(t.msgs_sent.load(Ordering::Relaxed), 2);
+        assert_eq!(t.bytes_sent.load(Ordering::Relaxed), 400);
+        assert_eq!(t.max_msg_bytes.load(Ordering::Relaxed), 300);
+        assert_eq!(f.out_degree(0), 2);
+        assert_eq!(f.out_degree(1), 0);
+    }
+
+    #[test]
+    fn codecs_roundtrip() {
+        let u = vec![1u64, u64::MAX, 42];
+        assert_eq!(dec_u64(&enc_u64(&u)), u);
+        let d = vec![1.5f64, -0.0, f64::MAX];
+        assert_eq!(dec_f64(&enc_f64(&d)), d);
+        let k = vec![1u128 << 100, 7];
+        assert_eq!(dec_u128(&enc_u128(&k)), k);
+    }
+}

@@ -1,0 +1,89 @@
+//! Simulated hybrid (distributed + multi-threaded) runtime.
+//!
+//! The paper runs on MPI processes × pthreads on Intel KNL nodes. This
+//! box has one core and no MPI, so the substrate is reproduced in-process:
+//!
+//! * [`threadpool`] — SIMD-style parallel-for over worker threads
+//!   coordinated by atomic fetch-add counters (the paper's §III "low
+//!   overhead synchronization" style).
+//! * [`fabric`] — per-rank mailboxes with real message passing; every
+//!   byte that would have crossed the Omni-Path network is counted.
+//! * [`collectives`] — barrier / broadcast / reduce / allreduce /
+//!   exclusive scan / gather / all-to-all-v (exchanged **in rounds bounded
+//!   by `MAX_MSG_SIZE`**, §III-C) / reduce-scatter.
+//! * [`cost`] — α–β(+congestion) network model turning the measured
+//!   message counts/bytes into simulated network seconds, and the
+//!   simulated-parallel-time accounting (max over per-rank busy CPU time).
+//! * [`rank`] — the per-rank context handed to rank bodies.
+//!
+//! The partitioning algorithms are written against [`rank::RankCtx`] the
+//! way MPI code is written against a communicator, so the *logic* is the
+//! paper's; only the transport differs.
+
+pub mod collectives;
+pub mod cost;
+pub mod fabric;
+pub mod rank;
+pub mod sample_sort;
+pub mod threadpool;
+
+pub use cost::{CostModel, SimReport};
+pub use fabric::Fabric;
+pub use rank::RankCtx;
+
+/// Run `body` on `p` simulated ranks (as OS threads) and collect each
+/// rank's return value plus the run's communication/timing report.
+pub fn run_ranks<T, F>(p: usize, cost: CostModel, body: F) -> (Vec<T>, SimReport)
+where
+    T: Send,
+    F: Fn(&mut RankCtx) -> T + Sync,
+{
+    assert!(p >= 1);
+    let fabric = Fabric::new(p);
+    let mut results: Vec<Option<T>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let fabric = &fabric;
+        let body = &body;
+        for (r, slot) in results.iter_mut().enumerate() {
+            s.spawn(move || {
+                // Panic in one rank poisons the fabric so peers blocked in
+                // recv abort instead of deadlocking (MPI-style abort).
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut ctx = RankCtx::new(r, p, fabric);
+                    let t0 = crate::util::timer::thread_cpu_time();
+                    let out = body(&mut ctx);
+                    let busy = crate::util::timer::thread_cpu_time() - t0;
+                    fabric.record_busy(r, busy);
+                    out
+                }));
+                match out {
+                    Ok(v) => *slot = Some(v),
+                    Err(e) => {
+                        fabric.poison();
+                        std::panic::resume_unwind(e);
+                    }
+                }
+            });
+        }
+    });
+    let report = fabric.report(&cost);
+    (results.into_iter().map(|r| r.expect("rank panicked")).collect(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ranks_returns_in_rank_order() {
+        let (vals, rep) = run_ranks(4, CostModel::default(), |ctx| ctx.rank * 10);
+        assert_eq!(vals, vec![0, 10, 20, 30]);
+        assert_eq!(rep.ranks, 4);
+    }
+
+    #[test]
+    fn single_rank_works() {
+        let (vals, _) = run_ranks(1, CostModel::default(), |ctx| ctx.n_ranks);
+        assert_eq!(vals, vec![1]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Distributed sample sort — the "distributed concurrent quick sort
+//! implementation" the paper uses for exact-median splitters (§III-A:
+//! *"Sorting was performed using a distributed concurrent quick sort"*).
+//!
+//! Standard single-round sample sort: every rank sorts locally
+//! (three-way quicksort), contributes `s` regular samples, rank 0 picks
+//! `p−1` splitters from the gathered sample, buckets are exchanged with
+//! the bounded-message all-to-all, and each rank merges its received
+//! runs. The output satisfies the §III-C global-order invariant: all
+//! keys on rank `i` ≤ all keys on rank `i+1`.
+
+use crate::runtime_sim::fabric::{dec_f64, enc_f64};
+use crate::runtime_sim::rank::RankCtx;
+use crate::util::sort::quicksort_by;
+
+/// Sort `local` across all ranks; returns this rank's globally-ordered
+/// shard (shard sizes are approximately balanced by the regular sample).
+pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize) -> Vec<f64> {
+    let p = ctx.n_ranks;
+    if p == 1 {
+        quicksort_by(&mut local, |v| *v);
+        return local;
+    }
+    quicksort_by(&mut local, |v| *v);
+
+    // Regular samples (s per rank).
+    let s = oversample.max(1);
+    let mut samples = Vec::with_capacity(s);
+    for i in 0..s {
+        if local.is_empty() {
+            break;
+        }
+        let pos = (i * local.len()) / s + local.len() / (2 * s).max(1);
+        samples.push(local[pos.min(local.len() - 1)]);
+    }
+    let gathered = ctx.gather_bytes(0, enc_f64(&samples));
+    let splitters = match gathered {
+        Some(bufs) => {
+            let mut all: Vec<f64> = bufs.iter().flat_map(|b| dec_f64(b)).collect();
+            quicksort_by(&mut all, |v| *v);
+            let mut sp = Vec::with_capacity(p - 1);
+            for i in 1..p {
+                if all.is_empty() {
+                    sp.push(0.0);
+                } else {
+                    sp.push(all[(i * all.len() / p).min(all.len() - 1)]);
+                }
+            }
+            enc_f64(&sp)
+        }
+        None => Vec::new(),
+    };
+    let splitters = dec_f64(&ctx.broadcast_bytes(0, splitters));
+
+    // Bucket by splitter (local is sorted: walk once).
+    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+    let mut start = 0usize;
+    for sp in &splitters {
+        let end = start + local[start..].partition_point(|v| v <= sp);
+        bufs.push(enc_f64(&local[start..end]));
+        start = end;
+    }
+    bufs.push(enc_f64(&local[start..]));
+
+    let got = ctx.alltoallv(bufs);
+    // Merge p sorted runs.
+    let mut runs: Vec<Vec<f64>> = got.iter().map(|b| dec_f64(b)).collect();
+    let mut out = Vec::with_capacity(runs.iter().map(|r| r.len()).sum());
+    let mut cursors = vec![0usize; runs.len()];
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if cursors[r] < run.len() {
+                let v = run[cursors[r]];
+                if best.map(|(_, bv)| v < bv).unwrap_or(true) {
+                    best = Some((r, v));
+                }
+            }
+        }
+        match best {
+            Some((r, v)) => {
+                out.push(v);
+                cursors[r] += 1;
+            }
+            None => break,
+        }
+    }
+    let _ = &mut runs;
+    out
+}
+
+/// Exact global median via sample sort (used by the median splitter in a
+/// fully-sorted configuration; the bisection variant in
+/// `partition::distributed` trades exactness for fewer bytes).
+pub fn distributed_median_exact(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    use crate::runtime_sim::collectives::ReduceOp;
+    let total = ctx.allreduce1(ReduceOp::Sum, local.len() as f64) as u64;
+    let sorted = sample_sort_f64(ctx, local.to_vec(), 32);
+    // Global rank of my first element = exscan of shard sizes.
+    let before = ctx.exscan_f64(sorted.len() as f64) as u64;
+    let target = total / 2;
+    let have = if target >= before && target < before + sorted.len() as u64 {
+        sorted[(target - before) as usize]
+    } else {
+        f64::NEG_INFINITY
+    };
+    // Exactly one rank holds the target rank; max-reduce broadcasts it.
+    ctx.allreduce1(ReduceOp::Max, have)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, CostModel};
+    use crate::util::rng::{Rng, SplitMix64};
+
+    #[test]
+    fn global_order_invariant_and_content() {
+        let p = 4;
+        let n_per = 500;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let mut rng = SplitMix64::new(100 + ctx.rank as u64);
+            let local: Vec<f64> = (0..n_per).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            sample_sort_f64(ctx, local, 16)
+        });
+        // Each shard sorted.
+        for o in &outs {
+            assert!(o.windows(2).all(|w| w[0] <= w[1]));
+        }
+        // Cross-rank order.
+        for i in 0..p - 1 {
+            if let (Some(a), Some(b)) = (outs[i].last(), outs[i + 1].first()) {
+                assert!(a <= b, "rank {i} max {a} > rank {} min {b}", i + 1);
+            }
+        }
+        // Content preserved.
+        let total: usize = outs.iter().map(|o| o.len()).sum();
+        assert_eq!(total, p * n_per);
+        // Balance: regular sampling keeps shards within 2x of mean.
+        for o in &outs {
+            assert!(o.len() < 2 * n_per, "shard {} too large", o.len());
+        }
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_sort() {
+        let (outs, _) = run_ranks(1, CostModel::default(), |ctx| {
+            sample_sort_f64(ctx, vec![3.0, 1.0, 2.0], 4)
+        });
+        assert_eq!(outs[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_and_skewed_inputs() {
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            // Rank 0 holds everything, others nothing.
+            let local: Vec<f64> = if ctx.rank == 0 {
+                (0..300).map(|i| (299 - i) as f64).collect()
+            } else {
+                Vec::new()
+            };
+            sample_sort_f64(ctx, local, 16)
+        });
+        let all: Vec<f64> = outs.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 300);
+        assert!(all.windows(2).all(|w| w[0] <= w[1]), "concatenation not sorted");
+    }
+
+    #[test]
+    fn exact_median_matches_serial() {
+        let p = 4;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let mut rng = SplitMix64::new(7 + ctx.rank as u64);
+            let local: Vec<f64> = (0..251).map(|_| rng.uniform(0.0, 100.0)).collect();
+            (local.clone(), distributed_median_exact(ctx, &local))
+        });
+        let mut all: Vec<f64> = outs.iter().flat_map(|(l, _)| l.clone()).collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want = all[all.len() / 2];
+        for (_, med) in &outs {
+            assert_eq!(*med, want);
+        }
+    }
+}

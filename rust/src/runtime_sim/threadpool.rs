@@ -1,0 +1,237 @@
+//! SIMD-style multi-threading primitives.
+//!
+//! The paper's shared-memory layer (§III): threads coordinated with
+//! fetch-add / compare-swap atomics, few synchronization points, critical
+//! sections executed by thread 0 while others wait. These helpers
+//! reproduce that style with scoped threads:
+//!
+//! * [`parallel_for`] — dynamic chunk scheduling over an index range via
+//!   an atomic fetch-add cursor (wait-free work claiming).
+//! * [`parallel_map_ranges`] — static block partition, one range per
+//!   thread, returning per-thread results (used where the algorithm needs
+//!   a deterministic thread↔data mapping, e.g. subtree ownership).
+//! * [`SpinBarrier`] — sense-reversing barrier for SIMD-style phases.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Dynamic-scheduled parallel for: `f(thread_id, start, end)` over chunks
+/// of `chunk` indices claimed with an atomic cursor.
+pub fn parallel_for<F>(threads: usize, n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= chunk {
+        f(0, 0, n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let cursor = &cursor;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                f(t, start, end);
+            });
+        }
+    });
+}
+
+/// Static block partition: thread `t` gets range `[bounds[t], bounds[t+1])`
+/// and produces one `R`. Results are returned in thread order.
+pub fn parallel_map_ranges<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize, usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut results: Vec<Option<R>> = (0..threads).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        for (t, slot) in results.iter_mut().enumerate() {
+            let lo = n * t / threads;
+            let hi = n * (t + 1) / threads;
+            s.spawn(move || {
+                *slot = Some(f(t, lo, hi));
+            });
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Sense-reversing spin barrier (the paper's synchronization points
+/// between SIMD phases). For thread counts far above core counts this
+/// yields while spinning.
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        SpinBarrier { n, count: AtomicUsize::new(0), sense: AtomicUsize::new(0) }
+    }
+
+    /// Block until all `n` participants arrive. Returns true on the
+    /// *serial* thread (the last to arrive), mirroring the paper's
+    /// "critical sections executed by thread 0 while others wait" idiom —
+    /// the serial thread can run the critical section right after.
+    pub fn wait(&self) -> bool {
+        let sense = self.sense.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.n - 1 {
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(sense + 1, Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) == sense {
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                }
+            }
+            false
+        }
+    }
+}
+
+/// Atomically accumulate f64 values (compare-exchange loop on bits) —
+/// the paper's fetch-add coordination generalized to float reductions.
+pub struct AtomicF64 {
+    bits: std::sync::atomic::AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64 { bits: std::sync::atomic::AtomicU64::new(v.to_bits()) }
+    }
+
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    pub fn fetch_add(&self, v: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn fetch_max(&self, v: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            if f64::from_bits(cur) >= v {
+                return;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(4, n, 128, |_t, lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_single_thread_path() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 100, 16, |_t, lo, hi| {
+            sum.fetch_add((lo..hi).sum::<usize>() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn map_ranges_partitions_exactly() {
+        let parts = parallel_map_ranges(3, 10, |t, lo, hi| (t, lo, hi));
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].1, 0);
+        assert_eq!(parts[2].2, 10);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].2, w[1].1);
+        }
+    }
+
+    #[test]
+    fn map_ranges_more_threads_than_items() {
+        let parts = parallel_map_ranges(8, 3, |_t, lo, hi| hi - lo);
+        assert_eq!(parts.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        let n = 4;
+        let b = SpinBarrier::new(n);
+        let phase = AtomicUsize::new(0);
+        let errors = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    for expected in 0..5usize {
+                        if phase.load(Ordering::Acquire) != expected {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if b.wait() {
+                            // serial section: exactly one thread advances
+                            phase.fetch_add(1, Ordering::Release);
+                        }
+                        b.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(errors.load(Ordering::Relaxed), 0);
+        assert_eq!(phase.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn atomic_f64_accumulates() {
+        let a = AtomicF64::new(0.0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        a.fetch_add(0.5);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(), 2000.0);
+        a.fetch_max(5000.0);
+        assert_eq!(a.load(), 5000.0);
+        a.fetch_max(1.0);
+        assert_eq!(a.load(), 5000.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! SFC key representation.
+//!
+//! A key is the traversal path of a node, stored **left-aligned** in a
+//! `u128`: the bit chosen at depth `t` sits at position `127 − t`. Two
+//! different leaves always diverge at the depth of their lowest common
+//! ancestor, so left-aligned zero padding preserves order; and a parent's
+//! key is numerically ≤ all keys in its subtree, which is what the
+//! point-location binary search relies on.
+
+/// A left-aligned SFC path key.
+pub type SfcKey = u128;
+
+/// Append one path bit at `depth` (root chooses the bit at depth 0).
+#[inline]
+pub fn child_key(parent: SfcKey, depth: u16, second: bool) -> SfcKey {
+    if second {
+        parent | (1u128 << (127 - depth as u32))
+    } else {
+        parent
+    }
+}
+
+/// Does `key` lie in the subtree rooted at a node with `prefix` of
+/// `depth` bits?
+#[inline]
+pub fn in_subtree(key: SfcKey, prefix: SfcKey, depth: u16) -> bool {
+    if depth == 0 {
+        return true;
+    }
+    let mask = !((1u128 << (128 - depth as u32)) - 1);
+    (key & mask) == (prefix & mask)
+}
+
+/// Format a key's top `n` bits as a binary string (debugging, tests).
+pub fn fmt_bits(key: SfcKey, n: u32) -> String {
+    (0..n).map(|i| if key & (1u128 << (127 - i)) != 0 { '1' } else { '0' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn child_keys_ordered() {
+        let k = 0u128;
+        let l = child_key(k, 0, false);
+        let r = child_key(k, 0, true);
+        assert!(l < r);
+        // Deeper second-child bits are less significant.
+        let lr = child_key(l, 1, true);
+        assert!(lr < r);
+        assert!(l <= lr);
+    }
+
+    #[test]
+    fn subtree_membership() {
+        let root = 0u128;
+        let r = child_key(root, 0, true);
+        let rl = child_key(r, 1, false);
+        let rr = child_key(r, 1, true);
+        assert!(in_subtree(rl, r, 1));
+        assert!(in_subtree(rr, r, 1));
+        assert!(!in_subtree(rl, rr, 2));
+        assert!(in_subtree(rl, root, 0));
+    }
+
+    #[test]
+    fn fmt() {
+        let r = child_key(child_key(0, 0, true), 1, false);
+        assert_eq!(fmt_bits(r, 3), "100");
+    }
+}

@@ -1,0 +1,40 @@
+//! Space-filling-curve traversals (paper §III-B).
+//!
+//! Trees are traversed top-down; every node receives a key whose bits
+//! record the traversal path (left-aligned in a `u128`), so lexicographic
+//! key order equals curve order at any depth. Two curves are supported:
+//!
+//! * **Morton** ([`morton`]) — children visited lower-then-upper; for
+//!   midpoint splitters with cycling dimensions the key equals the
+//!   bit-interleave of quantized coordinates, which enables the
+//!   binary-search point-location fast path (§V-A).
+//! * **Hilbert-like** ([`hilbert`]) — child visit order driven by a
+//!   per-subtree reflection state (the d-dimensional extension of the 2-D
+//!   base rules by "repetition and concatenation"), giving the curve the
+//!   spatial locality the paper exploits for low surface-to-volume
+//!   partitions. Slightly slower to traverse (the look-ahead), which
+//!   Fig 8–10 quantify.
+
+pub mod hilbert;
+pub mod key;
+pub mod morton;
+pub mod traverse;
+
+/// Which space-filling curve orders the tree traversal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Curve {
+    /// Z-order; the partitioner's default (§III-B).
+    #[default]
+    Morton,
+    /// The paper's Hilbert-like reflected curve.
+    HilbertLike,
+}
+
+impl std::fmt::Display for Curve {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Curve::Morton => write!(f, "morton"),
+            Curve::HilbertLike => write!(f, "hilbert-like"),
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Morton (Z-order) keys.
+//!
+//! Tree-path Morton keys fall out of the traversal (lower child = bit 0).
+//! This module adds the *coordinate* path: for a tree built with midpoint
+//! splitters and cycling dimensions over a fixed domain box, the path key
+//! of the leaf containing a point equals a prefix of
+//! [`morton_key_cycling`] — the bit-interleave the paper uses for its
+//! binary-search point location (§V-A: "works only with Morton SFC on
+//! uniform distributions in which the splitting hyperplanes cycle between
+//! the d−1 dimension planes in a fixed order and the splitting value is
+//! the midpoint").
+
+use crate::geom::bbox::BoundingBox;
+use crate::sfc::key::SfcKey;
+
+/// Max interleave bits per dimension such that `d * bits ≤ 120`.
+pub fn bits_per_dim(dim: usize) -> u32 {
+    (120 / dim.max(1)) as u32
+}
+
+/// The full-depth Morton key of point `q` under cycling midpoint splits
+/// of `domain`: depth-`t` split halves dimension `t % d`, and the path
+/// bit is 1 iff the point lies in the upper half. Left-aligned.
+pub fn morton_key_cycling(q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey {
+    let d = q.len();
+    let mut lo: Vec<f64> = domain.lo.clone();
+    let mut hi: Vec<f64> = domain.hi.clone();
+    let mut key: SfcKey = 0;
+    for t in 0..depth {
+        let k = t as usize % d;
+        let mid = 0.5 * (lo[k] + hi[k]);
+        if q[k] > mid {
+            key |= 1u128 << (127 - t as u32);
+            lo[k] = mid;
+        } else {
+            hi[k] = mid;
+        }
+    }
+    key
+}
+
+/// Fast bit-interleave variant for the unit-cube domain: quantize each
+/// coordinate to `b` bits and interleave MSB-first cycling dimensions.
+/// Equals [`morton_key_cycling`] with `depth = d*b` on `[0,1]^d` up to
+/// floating-point quantization at cell boundaries.
+pub fn morton_key_unit(q: &[f64], b: u32) -> SfcKey {
+    let d = q.len();
+    let mut key: SfcKey = 0;
+    for (k, &v) in q.iter().enumerate() {
+        let qv = crate::util::bits::quantize(v, 0.0, 1.0, b);
+        for bit in 0..b {
+            if qv & (1 << (b - 1 - bit)) != 0 {
+                let t = bit as usize * d + k;
+                key |= 1u128 << (127 - t as u32);
+            }
+        }
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycling_and_unit_agree_on_unit_cube() {
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut s = SplitMix64::new(31);
+        let domain = BoundingBox::unit(3);
+        for _ in 0..200 {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            let b = 8u32;
+            let a = morton_key_cycling(&q, &domain, (3 * b) as u16);
+            let c = morton_key_unit(&q, b);
+            assert_eq!(a, c, "q={q:?}");
+        }
+    }
+
+    #[test]
+    fn key_order_matches_z_order_2d() {
+        let domain = BoundingBox::unit(2);
+        // Quadrant representative points.
+        let bl = morton_key_cycling(&[0.2, 0.2], &domain, 2);
+        let br = morton_key_cycling(&[0.8, 0.2], &domain, 2);
+        let tl = morton_key_cycling(&[0.2, 0.8], &domain, 2);
+        let tr = morton_key_cycling(&[0.8, 0.8], &domain, 2);
+        // Cycling dims x then y: bit0 = x-half, bit1 = y-half →
+        // order: BL(00) < TL(01) < BR(10) < TR(11).
+        assert!(bl < tl && tl < br && br < tr);
+    }
+
+    #[test]
+    fn deeper_keys_refine_prefixes() {
+        let domain = BoundingBox::unit(3);
+        let q = [0.3, 0.6, 0.9];
+        let shallow = morton_key_cycling(&q, &domain, 9);
+        let deep = morton_key_cycling(&q, &domain, 30);
+        assert!(crate::sfc::key::in_subtree(deep, shallow, 9));
+    }
+
+    #[test]
+    fn bits_budget() {
+        assert_eq!(bits_per_dim(3), 40);
+        assert_eq!(bits_per_dim(10), 12);
+        assert!(bits_per_dim(10) as usize * 10 <= 120);
+    }
+}

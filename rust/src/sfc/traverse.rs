@@ -1,0 +1,462 @@
+//! SFC traversal of a built kd-tree (paper §III-B).
+//!
+//! [`assign_sfc`] walks the tree top-down, orders children per the chosen
+//! curve, assigns every node its path key, reorders the permutation
+//! vector so points lie in curve order, and rewrites node ranges to match.
+//! After it returns:
+//!
+//! * `tree.perm` lists point indices in SFC order;
+//! * every node's `sfc_key` is its left-aligned path key;
+//! * leaf ranges tile `perm` in strictly increasing key order;
+//! * for every internal node, `left` is the first-visited child (so a
+//!   plain DFS yields curve order — Morton's lower/upper distinction is
+//!   preserved in `split_val`/`split_dim` comparisons, not child slots).
+//!
+//! The parallel variant fans subtree traversals out to threads after a
+//! sequential top phase, mirroring the build.
+
+use crate::kdtree::node::{KdTree, NONE};
+use crate::sfc::hilbert::HilbertState;
+use crate::sfc::key::child_key;
+use crate::sfc::Curve;
+
+/// Statistics of one traversal (Figs 8–10 plot traversal time).
+#[derive(Clone, Debug, Default)]
+pub struct TraverseStats {
+    pub secs: f64,
+    pub span_secs: f64,
+    pub leaves: usize,
+}
+
+/// Assign SFC keys and reorder `tree.perm` into curve order.
+/// Single-threaded entry; see [`assign_sfc_parallel`].
+pub fn assign_sfc(tree: &mut KdTree, curve: Curve) -> TraverseStats {
+    assign_sfc_parallel(tree, curve, 1)
+}
+
+/// Parallel traversal: sequential down to `threads`-sized frontier, then
+/// per-thread subtree traversals into disjoint output regions.
+pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> TraverseStats {
+    let sw = crate::util::timer::Stopwatch::start();
+    let mut stats = TraverseStats::default();
+    if tree.root == NONE {
+        return stats;
+    }
+    let n = tree.perm.len();
+    let mut new_perm = vec![0u32; n];
+
+    // ---- Top phase: expand visit-ordered frontier to ≥ threads items ----
+    // Each frontier item: (node, state, key, out_start).
+    struct Item {
+        node: i32,
+        state: HilbertState,
+        key: u128,
+    }
+    let mut frontier: Vec<Item> =
+        vec![Item { node: tree.root, state: HilbertState::default(), key: 0 }];
+    while frontier.len() < threads.max(1) * 4 {
+        // Find the first expandable (internal) item, preserving order.
+        let Some(pos) = frontier.iter().position(|it| !tree.nodes[it.node as usize].is_leaf())
+        else {
+            break;
+        };
+        let it = frontier.remove(pos);
+        let node = &tree.nodes[it.node as usize];
+        let d = node.split_dim as usize;
+        let (first, second) = order_children(node.left, node.right, d, it.state, curve);
+        let depth = node.depth;
+        let (s1, s2) = child_states(it.state, d, tree.dim, curve);
+        let k1 = child_key(it.key, depth, false);
+        let k2 = child_key(it.key, depth, true);
+        // Record visit order + key on the expanded node so DFS over the
+        // final tree follows the curve (left/right keep their geometric
+        // lower/upper meaning; `flipped` carries the curve order).
+        {
+            let n = &mut tree.nodes[it.node as usize];
+            n.flipped = first == n.right && second == n.left && n.left != n.right;
+            n.sfc_key = it.key;
+        }
+        frontier.insert(pos, Item { node: second, state: s2, key: k2 });
+        frontier.insert(pos, Item { node: first, state: s1, key: k1 });
+    }
+
+    // Assign output ranges in frontier (curve) order.
+    let mut offsets = Vec::with_capacity(frontier.len() + 1);
+    let mut off = 0u32;
+    for it in &frontier {
+        offsets.push(off);
+        off += tree.nodes[it.node as usize].count() as u32;
+    }
+    offsets.push(off);
+    debug_assert_eq!(off as usize, n);
+
+    // ---- Subtree phase ----
+    // Each worker performs DFS over its items, producing (node, new_key,
+    // new_start, new_end, first_child, second_child) rewrites plus the
+    // reordered perm region.
+    let dim = tree.dim;
+    let nodes_ref = &tree.nodes;
+    let perm_ref = &tree.perm;
+    // Distribute frontier items round-robin by weight order (largest
+    // first) for balance.
+    let t_eff = threads.max(1);
+    let mut order: Vec<usize> = (0..frontier.len()).collect();
+    order.sort_by(|&a, &b| {
+        nodes_ref[frontier[b].node as usize]
+            .count()
+            .cmp(&nodes_ref[frontier[a].node as usize].count())
+    });
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); t_eff];
+    for (i, &item) in order.iter().enumerate() {
+        assignment[i % t_eff].push(item);
+    }
+
+    // Disjoint output regions per item.
+    let mut regions: Vec<Option<&mut [u32]>> = Vec::with_capacity(frontier.len());
+    {
+        let mut rest: &mut [u32] = &mut new_perm;
+        for i in 0..frontier.len() {
+            let len = (offsets[i + 1] - offsets[i]) as usize;
+            let (mine, after) = rest.split_at_mut(len);
+            regions.push(Some(mine));
+            rest = after;
+        }
+    }
+    // Move regions into per-thread lists.
+    let mut thread_work: Vec<Vec<(usize, &mut [u32])>> = (0..t_eff).map(|_| Vec::new()).collect();
+    {
+        let mut taken: Vec<Option<&mut [u32]>> = regions;
+        for (t, items) in assignment.iter().enumerate() {
+            for &i in items {
+                thread_work[t].push((i, taken[i].take().unwrap()));
+            }
+        }
+    }
+
+    let frontier_ref = &frontier;
+    let offsets_ref = &offsets;
+    let all_rewrites: Vec<Vec<Rewrite>> = std::thread::scope(|s| {
+        let handles: Vec<_> = thread_work
+            .into_iter()
+            .map(|items| {
+                s.spawn(move || {
+                    let t0 = crate::util::timer::thread_cpu_time();
+                    let mut rewrites = Vec::new();
+                    for (i, out) in items {
+                        let it = &frontier_ref[i];
+                        let base = offsets_ref[i];
+                        dfs_subtree(
+                            nodes_ref, perm_ref, dim, curve, it.node, it.state, it.key, base,
+                            out, &mut rewrites,
+                        );
+                    }
+                    let busy = crate::util::timer::thread_cpu_time() - t0;
+                    rewrites.push(Rewrite {
+                        node: NONE,
+                        key: busy.to_bits() as u128,
+                        start: 0,
+                        end: 0,
+                        flipped: false,
+                    });
+                    rewrites
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("traverse worker")).collect()
+    });
+
+    // Apply rewrites.
+    for group in all_rewrites {
+        for rw in group {
+            if rw.node == NONE {
+                stats.span_secs = stats.span_secs.max(f64::from_bits(rw.key as u64));
+                continue;
+            }
+            let n = &mut tree.nodes[rw.node as usize];
+            n.sfc_key = rw.key;
+            if rw.start != u32::MAX {
+                n.start = rw.start;
+                n.end = rw.end;
+            }
+            n.flipped = rw.flipped;
+        }
+    }
+    // Frontier ancestors: recompute ranges/keys for nodes above the
+    // frontier (they were expanded top-down; fix start/end bottom-up).
+    fix_ancestors(tree, tree.root);
+
+    tree.perm = new_perm;
+    stats.secs = sw.secs();
+    stats.leaves = tree.leaves().len();
+    stats
+}
+
+/// Child visit order under `curve`.
+fn order_children(
+    left: i32,
+    right: i32,
+    d: usize,
+    state: HilbertState,
+    curve: Curve,
+) -> (i32, i32) {
+    match curve {
+        Curve::Morton => (left, right),
+        Curve::HilbertLike => {
+            if state.upper_first(d) {
+                (right, left)
+            } else {
+                (left, right)
+            }
+        }
+    }
+}
+
+/// Child states under `curve`.
+fn child_states(state: HilbertState, d: usize, dim: usize, curve: Curve) -> (HilbertState, HilbertState) {
+    match curve {
+        Curve::Morton => (state, state),
+        Curve::HilbertLike => (state.first_child(d), state.second_child(d, dim)),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs_subtree(
+    nodes: &[crate::kdtree::node::Node],
+    old_perm: &[u32],
+    dim: usize,
+    curve: Curve,
+    root: i32,
+    state: HilbertState,
+    key: u128,
+    out_base: u32,
+    out: &mut [u32],
+    rewrites: &mut Vec<Rewrite2>,
+) {
+    // Iterative DFS with explicit stack: (node, state, key, out_lo).
+    // Children are emitted in curve order; out_lo advances by leaf sizes.
+    let mut cursor = 0u32;
+    let mut stack: Vec<(i32, HilbertState, u128)> = vec![(root, state, key)];
+    while let Some((idx, st, k)) = stack.pop() {
+        let n = &nodes[idx as usize];
+        if n.is_leaf() {
+            let lo = cursor;
+            let cnt = n.count() as u32;
+            out[lo as usize..(lo + cnt) as usize]
+                .copy_from_slice(&old_perm[n.start as usize..n.end as usize]);
+            cursor += cnt;
+            rewrites.push(Rewrite2 {
+                node: idx,
+                key: k,
+                start: out_base + lo,
+                end: out_base + cursor,
+                flipped: false,
+            });
+        } else {
+            let d = n.split_dim as usize;
+            let (first, second) = order_children(n.left, n.right, d, st, curve);
+            let (s1, s2) = child_states(st, d, dim, curve);
+            let k1 = child_key(k, n.depth, false);
+            let k2 = child_key(k, n.depth, true);
+            // Record the visit order so DFS = curve order.
+            rewrites.push(Rewrite2 {
+                node: idx,
+                key: k,
+                start: u32::MAX, // filled by the ancestor fix pass
+                end: u32::MAX,
+                flipped: first == n.right && second == n.left && n.left != n.right,
+            });
+            stack.push((second, s2, k2));
+            stack.push((first, s1, k1));
+        }
+    }
+}
+
+// The Rewrite struct used across the scope boundary; duplicated type to
+// keep the closure-local code readable.
+struct Rewrite2 {
+    node: i32,
+    key: u128,
+    start: u32,
+    end: u32,
+    flipped: bool,
+}
+use Rewrite2 as Rewrite;
+
+/// Recompute internal-node ranges bottom-up (after leaf ranges moved) and
+/// propagate keys for ancestors that kept `u32::MAX` markers.
+fn fix_ancestors(tree: &mut KdTree, idx: i32) -> (u32, u32) {
+    let (l, r, flipped, is_leaf) = {
+        let n = &tree.nodes[idx as usize];
+        (n.left, n.right, n.flipped, n.is_leaf())
+    };
+    if is_leaf {
+        let n = &tree.nodes[idx as usize];
+        return (n.start, n.end);
+    }
+    let (first, second) = if flipped { (r, l) } else { (l, r) };
+    let (fs, fe) = fix_ancestors(tree, first);
+    let (ss, se) = fix_ancestors(tree, second);
+    // Children in curve order occupy adjacent ranges.
+    debug_assert!(fe == ss, "child ranges not adjacent: {fe} vs {ss}");
+    let n = &mut tree.nodes[idx as usize];
+    n.start = fs;
+    n.end = se;
+    (n.start, n.end)
+}
+
+/// Strict increasing key check over leaves in DFS order (tests + debug).
+pub fn keys_strictly_increasing(tree: &KdTree) -> bool {
+    let leaves = tree.leaves_dfs();
+    leaves
+        .windows(2)
+        .all(|w| tree.nodes[w[0] as usize].sfc_key < tree.nodes[w[1] as usize].sfc_key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::dist::regular_mesh;
+    use crate::geom::point::PointSet;
+    use crate::kdtree::builder::KdTreeBuilder;
+    use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+
+    fn grid_tree(side: usize, curve: Curve) -> (PointSet, KdTree) {
+        let ps = regular_mesh(side, 2);
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = DimRule::Cycle;
+        let mut tree = KdTreeBuilder::new()
+            .bucket_size(1)
+            .splitter(cfg)
+            .domain(crate::geom::bbox::BoundingBox::unit(2))
+            .build(&ps);
+        assign_sfc(&mut tree, curve);
+        (ps, tree)
+    }
+
+    #[test]
+    fn morton_keys_increase_and_perm_reordered() {
+        let ps = PointSet::uniform(800, 3, 17);
+        let mut tree = KdTreeBuilder::new().bucket_size(8).build(&ps);
+        assign_sfc(&mut tree, Curve::Morton);
+        assert!(keys_strictly_increasing(&tree));
+        tree.check_invariants(&ps.coords, &ps.weights).unwrap();
+        // Leaf ranges tile perm in DFS order.
+        let leaves = tree.leaves_dfs();
+        let mut expect = 0u32;
+        for &l in &leaves {
+            let n = &tree.nodes[l as usize];
+            assert_eq!(n.start, expect);
+            expect = n.end;
+        }
+        assert_eq!(expect as usize, ps.len());
+    }
+
+    #[test]
+    fn hilbert_keys_increase() {
+        let ps = PointSet::clustered(600, 3, 0.5, 23);
+        let mut tree = KdTreeBuilder::new().bucket_size(8).build(&ps);
+        assign_sfc(&mut tree, Curve::HilbertLike);
+        assert!(keys_strictly_increasing(&tree));
+        tree.check_invariants(&ps.coords, &ps.weights).unwrap();
+    }
+
+    #[test]
+    fn hilbert_has_fewer_jumps_than_morton_on_grid() {
+        // The reflection rule cannot be perfectly continuous under
+        // data-independent cycling splits (true Hilbert also permutes
+        // dimension order per subcell), but the paper's claim is
+        // *locality*: far fewer and shorter jumps than Morton.
+        let side = 16;
+        let step = 1.0 / side as f64;
+        let jumps = |curve| {
+            let (ps, tree) = grid_tree(side, curve);
+            tree.perm
+                .windows(2)
+                .filter(|w| ps.dist2(w[0] as usize, w[1] as usize) > step * step * 1.5)
+                .count()
+        };
+        let h = jumps(Curve::HilbertLike);
+        let m = jumps(Curve::Morton);
+        assert!(h * 2 < m, "hilbert jumps {h} not ≪ morton {m}");
+    }
+
+    #[test]
+    fn hilbert_first_level_is_u_shaped() {
+        // Exact continuity at the first two levels of a 2×2 grid: the
+        // 2-D base rule (LB, LT, RT, RB).
+        let (ps, tree) = grid_tree(2, Curve::HilbertLike);
+        let cells: Vec<(u32, u32)> = tree
+            .perm
+            .iter()
+            .map(|&pi| {
+                let p = ps.point(pi as usize);
+                ((p[0] * 2.0) as u32, (p[1] * 2.0) as u32)
+            })
+            .collect();
+        assert_eq!(cells, vec![(0, 0), (0, 1), (1, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn morton_is_not_continuous_on_grid() {
+        let side = 8;
+        let (ps, tree) = grid_tree(side, Curve::Morton);
+        let step = 1.0 / side as f64;
+        let jumps = tree
+            .perm
+            .windows(2)
+            .filter(|w| ps.dist2(w[0] as usize, w[1] as usize) > step * step * 1.5)
+            .count();
+        assert!(jumps > 0, "Morton unexpectedly continuous");
+    }
+
+    #[test]
+    fn hilbert_locality_beats_morton() {
+        // Average hop distance along the curve.
+        let ps = PointSet::uniform(2048, 2, 29);
+        let avg_hop = |curve| {
+            let mut tree = KdTreeBuilder::new().bucket_size(1).build(&ps);
+            assign_sfc(&mut tree, curve);
+            let total: f64 = tree
+                .perm
+                .windows(2)
+                .map(|w| ps.dist2(w[0] as usize, w[1] as usize).sqrt())
+                .sum();
+            total / (ps.len() - 1) as f64
+        };
+        let m = avg_hop(Curve::Morton);
+        let h = avg_hop(Curve::HilbertLike);
+        assert!(h < m, "hilbert avg hop {h} !< morton {m}");
+    }
+
+    #[test]
+    fn parallel_traversal_matches_sequential() {
+        let ps = PointSet::uniform(3000, 3, 37);
+        let mut t1 = KdTreeBuilder::new().bucket_size(16).build(&ps);
+        let mut t4 = t1.clone();
+        assign_sfc(&mut t1, Curve::HilbertLike);
+        assign_sfc_parallel(&mut t4, Curve::HilbertLike, 4);
+        assert_eq!(t1.perm, t4.perm);
+        let k1: Vec<u128> = t1.leaves_dfs().iter().map(|&l| t1.nodes[l as usize].sfc_key).collect();
+        let k4: Vec<u128> = t4.leaves_dfs().iter().map(|&l| t4.nodes[l as usize].sfc_key).collect();
+        assert_eq!(k1, k4);
+    }
+
+    #[test]
+    fn morton_traversal_key_matches_coordinate_interleave() {
+        // Cycling midpoint tree on the unit square: leaf path keys must be
+        // prefixes of the coordinate Morton keys of their points.
+        let (ps, tree) = grid_tree(8, Curve::Morton);
+        let domain = crate::geom::bbox::BoundingBox::unit(2);
+        for &l in &tree.leaves_dfs() {
+            let n = &tree.nodes[l as usize];
+            for &pi in &tree.perm[n.start as usize..n.end as usize] {
+                let full =
+                    crate::sfc::morton::morton_key_cycling(ps.point(pi as usize), &domain, 60);
+                assert!(
+                    crate::sfc::key::in_subtree(full, n.sfc_key, n.depth),
+                    "leaf key not a prefix of point key"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrate utilities: PRNGs, bit tricks, sorting/selection,
+//! timing, and a small property-based-testing framework.
+//!
+//! Everything here is hand-rolled because the build environment only
+//! vendors the `xla` crate's dependency closure (no `rand`, `rayon`,
+//! `criterion`, `proptest`). The paper itself uses a Mersenne-Twister
+//! generator for its uniform workloads ([19] in the paper), which we
+//! reproduce bit-exactly in [`rng::Mt19937`].
+
+pub mod bits;
+pub mod prop;
+pub mod rng;
+pub mod sort;
+pub mod timer;

@@ -1,0 +1,281 @@
+//! Sorting and selection primitives backing the median splitters.
+//!
+//! The paper computes median splitting hyperplanes four ways (§III-A):
+//! exact median by sorting, approximate median by sorting a sample, and
+//! approximate median by *ranking/selection* over a sample (Fig 5 shows
+//! selection beating sorting). These map to:
+//!
+//! * [`quicksort_by`] — in-place three-way quicksort with insertion-sort
+//!   leaves (the "distributed concurrent quicksort" of the dissertation is
+//!   realised at the rank level by sample-sort in
+//!   [`crate::runtime_sim::collectives`]; this is the node-local sorter).
+//! * [`quickselect`] — expected-O(n) selection (Hoare) with
+//!   median-of-three pivots.
+//! * [`median_of_medians`] — deterministic O(n) selection, used as the
+//!   pivot fallback so adversarial inputs cannot degrade the splitters.
+
+/// In-place quicksort by a key function; three-way partition, insertion
+/// sort below 24 elements, recursion on the smaller side only.
+pub fn quicksort_by<T, K: PartialOrd + Copy>(xs: &mut [T], key: impl Fn(&T) -> K + Copy) {
+    let mut stack: Vec<(usize, usize)> = vec![(0, xs.len())];
+    while let Some((lo, hi)) = stack.pop() {
+        let len = hi - lo;
+        if len <= 24 {
+            insertion_sort_by(&mut xs[lo..hi], key);
+            continue;
+        }
+        let (lt, gt) = three_way_partition(&mut xs[lo..hi], key);
+        let (lt, gt) = (lo + lt, lo + gt);
+        // Push larger side first so the stack depth stays O(log n).
+        if lt - lo > hi - gt {
+            stack.push((lo, lt));
+            stack.push((gt, hi));
+        } else {
+            stack.push((gt, hi));
+            stack.push((lo, lt));
+        }
+    }
+}
+
+fn insertion_sort_by<T, K: PartialOrd + Copy>(xs: &mut [T], key: impl Fn(&T) -> K) {
+    for i in 1..xs.len() {
+        let mut j = i;
+        while j > 0 && key(&xs[j]) < key(&xs[j - 1]) {
+            xs.swap(j, j - 1);
+            j -= 1;
+        }
+    }
+}
+
+/// Dutch-flag partition around a median-of-three pivot. Returns `(lt, gt)`
+/// such that `xs[..lt] < pivot == xs[lt..gt] < xs[gt..]`.
+fn three_way_partition<T, K: PartialOrd + Copy>(
+    xs: &mut [T],
+    key: impl Fn(&T) -> K,
+) -> (usize, usize) {
+    let n = xs.len();
+    // Median-of-three pivot selection.
+    let (a, b, c) = (key(&xs[0]), key(&xs[n / 2]), key(&xs[n - 1]));
+    let pivot_idx = if (a <= b) == (b <= c) {
+        n / 2
+    } else if (b <= a) == (a <= c) {
+        0
+    } else {
+        n - 1
+    };
+    xs.swap(0, pivot_idx);
+    let pivot = key(&xs[0]);
+
+    let (mut lt, mut i, mut gt) = (0usize, 1usize, n);
+    while i < gt {
+        let k = key(&xs[i]);
+        if k < pivot {
+            xs.swap(lt, i);
+            lt += 1;
+            i += 1;
+        } else if k > pivot {
+            gt -= 1;
+            xs.swap(i, gt);
+        } else {
+            i += 1;
+        }
+    }
+    (lt, gt)
+}
+
+/// Expected-O(n) selection: after the call, `xs[k]` holds the k-th
+/// smallest element (by `key`) and the slice is partitioned around it.
+pub fn quickselect<T, K: PartialOrd + Copy>(xs: &mut [T], k: usize, key: impl Fn(&T) -> K + Copy) {
+    assert!(k < xs.len());
+    let (mut lo, mut hi) = (0usize, xs.len());
+    let mut depth_budget = 2 * (usize::BITS - xs.len().leading_zeros()) as i32;
+    while hi - lo > 1 {
+        if depth_budget <= 0 {
+            // Fall back to deterministic selection on pathological inputs.
+            median_of_medians_select(&mut xs[lo..hi], k - lo, key);
+            return;
+        }
+        depth_budget -= 1;
+        let (lt, gt) = three_way_partition(&mut xs[lo..hi], key);
+        let (lt, gt) = (lo + lt, lo + gt);
+        if k < lt {
+            hi = lt;
+        } else if k >= gt {
+            lo = gt;
+        } else {
+            return; // k lands inside the == band
+        }
+    }
+}
+
+/// Deterministic O(n) selection (Blum–Floyd–Pratt–Rivest–Tarjan, the
+/// paper's ref [14]): groups of five, recursive pivot.
+pub fn median_of_medians_select<T, K: PartialOrd + Copy>(
+    xs: &mut [T],
+    k: usize,
+    key: impl Fn(&T) -> K + Copy,
+) {
+    assert!(k < xs.len());
+    let n = xs.len();
+    if n <= 10 {
+        insertion_sort_by(xs, key);
+        return;
+    }
+    // Median of each group of 5, compacted to the front.
+    let mut m = 0;
+    let mut i = 0;
+    while i < n {
+        let end = (i + 5).min(n);
+        insertion_sort_by(&mut xs[i..end], key);
+        let med = i + (end - i) / 2;
+        xs.swap(m, med);
+        m += 1;
+        i += 5;
+    }
+    // Recursively select the median of medians as pivot.
+    median_of_medians_select(&mut xs[..m], m / 2, key);
+    let pivot_key = key(&xs[m / 2]);
+    // Partition the whole slice around pivot_key.
+    let (mut lt, mut idx, mut gt) = (0usize, 0usize, n);
+    while idx < gt {
+        let kk = key(&xs[idx]);
+        if kk < pivot_key {
+            xs.swap(lt, idx);
+            lt += 1;
+            idx += 1;
+        } else if kk > pivot_key {
+            gt -= 1;
+            xs.swap(idx, gt);
+        } else {
+            idx += 1;
+        }
+    }
+    if k < lt {
+        median_of_medians_select(&mut xs[..lt], k, key);
+    } else if k >= gt {
+        median_of_medians_select(&mut xs[gt..], k - gt, key);
+    }
+}
+
+/// The k-th smallest value of `f64` data by selection (convenience used by
+/// the median splitters). Does not allocate beyond the scratch copy.
+pub fn select_kth(values: &[f64], k: usize) -> f64 {
+    let mut scratch = values.to_vec();
+    quickselect(&mut scratch, k, |v| *v);
+    scratch[k]
+}
+
+/// Argsort: indices `0..n` ordered so `keys[idx[i]]` is nondecreasing.
+pub fn argsort_u128(keys: &[u128]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+    // Radix-ish approach is overkill here; keys are compared directly.
+    idx.sort_unstable_by(|&a, &b| keys[a as usize].cmp(&keys[b as usize]));
+    idx
+}
+
+/// Stable counting-sort of `(key, payload)` pairs by small u32 key domain.
+/// Used to bin queries/elements by owning rank (`key < buckets`).
+pub fn counting_sort_by_key(keys: &[u32], buckets: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut counts = vec![0u32; buckets + 1];
+    for &k in keys {
+        counts[k as usize + 1] += 1;
+    }
+    for b in 0..buckets {
+        counts[b + 1] += counts[b];
+    }
+    let offsets = counts.clone();
+    let mut order = vec![0u32; keys.len()];
+    let mut cursor = counts;
+    for (i, &k) in keys.iter().enumerate() {
+        order[cursor[k as usize] as usize] = i as u32;
+        cursor[k as usize] += 1;
+    }
+    (order, offsets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    #[test]
+    fn quicksort_random() {
+        let mut s = SplitMix64::new(4);
+        for n in [0usize, 1, 2, 24, 25, 100, 1000] {
+            let mut xs: Vec<u64> = (0..n).map(|_| s.below(50)).collect();
+            let mut expect = xs.clone();
+            expect.sort_unstable();
+            quicksort_by(&mut xs, |x| *x);
+            assert_eq!(xs, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn quicksort_adversarial() {
+        // Already sorted, reverse sorted, all equal.
+        let mut a: Vec<u32> = (0..500).collect();
+        quicksort_by(&mut a, |x| *x);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let mut b: Vec<u32> = (0..500).rev().collect();
+        quicksort_by(&mut b, |x| *x);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+        let mut c = vec![7u32; 300];
+        quicksort_by(&mut c, |x| *x);
+        assert!(c.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn quickselect_matches_sort() {
+        let mut s = SplitMix64::new(5);
+        for n in [1usize, 2, 10, 101, 999] {
+            let xs: Vec<u64> = (0..n).map(|_| s.below(1000)).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            for k in [0, n / 4, n / 2, n - 1] {
+                let mut scratch = xs.clone();
+                quickselect(&mut scratch, k, |x| *x);
+                assert_eq!(scratch[k], sorted[k], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn median_of_medians_matches_sort() {
+        let mut s = SplitMix64::new(6);
+        for n in [5usize, 11, 50, 500] {
+            let xs: Vec<u64> = (0..n).map(|_| s.below(100)).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            for k in [0, n / 2, n - 1] {
+                let mut scratch = xs.clone();
+                median_of_medians_select(&mut scratch, k, |x| *x);
+                assert_eq!(scratch[k], sorted[k], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_kth_f64() {
+        let vals = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(select_kth(&vals, 0), 1.0);
+        assert_eq!(select_kth(&vals, 2), 3.0);
+        assert_eq!(select_kth(&vals, 4), 5.0);
+    }
+
+    #[test]
+    fn argsort_orders_keys() {
+        let keys = vec![5u128, 1, 9, 3];
+        let idx = argsort_u128(&keys);
+        assert_eq!(idx, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn counting_sort_bins() {
+        let keys = vec![2u32, 0, 1, 2, 0];
+        let (order, offsets) = counting_sort_by_key(&keys, 3);
+        // Bin 0 holds original indices 1 and 4 (stable).
+        assert_eq!(&order[offsets[0] as usize..offsets[1] as usize], &[1, 4]);
+        assert_eq!(&order[offsets[1] as usize..offsets[2] as usize], &[2]);
+        assert_eq!(&order[offsets[2] as usize..offsets[3] as usize], &[0, 3]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Timing utilities: wall clocks, per-thread CPU clocks, and run
+//! statistics.
+//!
+//! The paper reports wall-clock strong scaling on a 68-core KNL node.
+//! This reproduction runs on a single core, so parallel sections report
+//! **simulated parallel time**: each simulated rank/thread accumulates its
+//! own busy time via `CLOCK_THREAD_CPUTIME_ID`, and the harness takes the
+//! max over ranks plus modeled network time (see
+//! [`crate::runtime_sim::cost`]). Wall time is still reported alongside.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Per-thread CPU time in seconds (`CLOCK_THREAD_CPUTIME_ID`), i.e. time
+/// this OS thread actually spent on a core. This is what makes simulated
+/// strong scaling honest on a time-shared single core: busy time excludes
+/// time spent descheduled while other simulated ranks ran.
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; CLOCK_THREAD_CPUTIME_ID is a
+    // supported clock on Linux.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Process CPU time in seconds (all threads).
+pub fn process_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// CPU-time stopwatch for the calling thread.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuStopwatch {
+    start: f64,
+}
+
+impl CpuStopwatch {
+    pub fn start() -> Self {
+        CpuStopwatch { start: thread_cpu_time() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        thread_cpu_time() - self.start
+    }
+}
+
+/// Summary statistics over repeated measurements (the paper averages over
+/// five runs; benches here do the same by default).
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub samples: Vec<f64>,
+}
+
+impl RunStats {
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn thread_cpu_advances_under_work() {
+        let t0 = thread_cpu_time();
+        // Burn a little CPU.
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+        }
+        std::hint::black_box(acc);
+        let t1 = thread_cpu_time();
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn cpu_time_ignores_sleep() {
+        let t0 = thread_cpu_time();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let t1 = thread_cpu_time();
+        // Sleeping burns (almost) no CPU.
+        assert!(t1 - t0 < 0.02, "cpu advanced {} during sleep", t1 - t0);
+    }
+
+    #[test]
+    fn stats() {
+        let mut s = RunStats::default();
+        for v in [1.0, 2.0, 3.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.stddev() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! Failure-injection and stress tests for the simulated runtime: the
+//! fabric must fail fast (poison) instead of deadlocking when a rank
+//! dies, collectives must survive adversarial sizes, and the migration
+//! path must hold under fuzzed destinations.
+
+use sfc_part::geom::point::PointSet;
+use sfc_part::migrate::transfer_t_l_t;
+use sfc_part::runtime_sim::collectives::ReduceOp;
+use sfc_part::runtime_sim::{run_ranks, CostModel};
+use sfc_part::util::prop::forall;
+
+/// A rank that panics mid-collective must abort the whole run (poisoned
+/// fabric), not hang it.
+#[test]
+fn rank_panic_poisons_instead_of_deadlocking() {
+    let result = std::panic::catch_unwind(|| {
+        run_ranks(4, CostModel::default(), |ctx| {
+            if ctx.rank == 2 {
+                panic!("injected rank failure");
+            }
+            // Other ranks block in a collective rank 2 never joins.
+            ctx.allreduce1(ReduceOp::Sum, 1.0)
+        })
+    });
+    assert!(result.is_err(), "run_ranks should propagate the rank panic");
+}
+
+/// Same for a rank dying inside the bounded all-to-all.
+#[test]
+fn rank_panic_in_alltoall_aborts() {
+    let result = std::panic::catch_unwind(|| {
+        run_ranks(3, CostModel::default(), |ctx| {
+            if ctx.rank == 0 {
+                panic!("boom");
+            }
+            let bufs: Vec<Vec<u8>> = (0..3).map(|_| vec![1u8; 100]).collect();
+            ctx.alltoallv_rounds(bufs, 16)
+        })
+    });
+    assert!(result.is_err());
+}
+
+/// Collectives with zero-length and wildly uneven payloads.
+#[test]
+fn collectives_survive_adversarial_sizes() {
+    let (outs, _) = run_ranks(5, CostModel::default(), |ctx| {
+        // Rank r contributes a buffer of r^3 bytes to everyone.
+        let bufs: Vec<Vec<u8>> =
+            (0..5).map(|_| vec![ctx.rank as u8; ctx.rank * ctx.rank * ctx.rank]).collect();
+        let got = ctx.alltoallv_rounds(bufs, 7); // prime cap -> ragged rounds
+        got.iter().map(|b| b.len()).collect::<Vec<_>>()
+    });
+    for got in outs {
+        assert_eq!(got, vec![0, 1, 8, 27, 64]);
+    }
+}
+
+/// Fuzzed migration: arbitrary destination assignments conserve points.
+#[test]
+fn fuzzed_migration_conserves_points() {
+    forall("migration-conservation", 12, |g| {
+        let p = g.usize_in(2, 6);
+        let n_per = g.usize_in(1, 80);
+        let dim = g.usize_in(2, 4);
+        let max_msg = 1 << g.usize_in(6, 14);
+        // Destination table per (rank, local index).
+        let dests: Vec<Vec<u32>> = (0..p)
+            .map(|_| (0..n_per).map(|_| g.u64_below(p as u64) as u32).collect())
+            .collect();
+        let (outs, rep) = run_ranks(p, CostModel::default(), |ctx| {
+            let mut ps = PointSet::new(dim);
+            for i in 0..n_per {
+                let coords: Vec<f64> = (0..dim).map(|k| (i * dim + k) as f64 * 0.001).collect();
+                ps.push(&coords, (ctx.rank * 10_000 + i) as u64, 1.0);
+            }
+            let got = transfer_t_l_t(ctx, &ps, &dests[ctx.rank], max_msg);
+            got.ids
+        });
+        let total: usize = outs.iter().map(|ids| ids.len()).sum();
+        let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        let ok = total == p * n_per && all.len() == total && rep.max_msg_bytes <= max_msg as u64;
+        (
+            ok,
+            format!(
+                "p={p} n_per={n_per} total={total} uniq={} max_msg={} cap={max_msg}",
+                all.len(),
+                rep.max_msg_bytes
+            ),
+        )
+    });
+}
+
+/// Reduce-scatter with ragged counts across many rank counts.
+#[test]
+fn reduce_scatter_ragged_counts() {
+    for p in [2usize, 3, 5, 8] {
+        let counts: Vec<usize> = (0..p).map(|i| i + 1).collect();
+        let total: usize = counts.iter().sum();
+        let counts2 = counts.clone();
+        let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+            let data: Vec<f64> = (0..total).map(|i| (i + ctx.rank) as f64).collect();
+            ctx.reduce_scatter_f64(&data, &counts2)
+        });
+        // Position j accumulates sum over ranks of (j + rank).
+        let rank_sum: f64 = (0..p).map(|r| r as f64).sum();
+        let mut off = 0;
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out.len(), counts[r]);
+            for (k, v) in out.iter().enumerate() {
+                let j = (off + k) as f64;
+                assert_eq!(*v, j * p as f64 + rank_sum, "rank {r} pos {k}");
+            }
+            off += counts[r];
+        }
+    }
+}
+
+/// Dynamic forest under heavy random churn keeps its invariants — the
+/// long-running soak the paper's 1000-iteration runs imply.
+#[test]
+fn dynamic_forest_soak() {
+    use sfc_part::geom::dist::DynamicStream;
+    use sfc_part::kdtree::dynamic::DynForest;
+    let ps = PointSet::uniform(3000, 3, 55);
+    let mut f = DynForest::from_points(&ps, 16, 8, 3);
+    let mut stream = DynamicStream::new(3, 3000, 9);
+    stream.delete_frac = 0.45;
+    for round in 0..20 {
+        let ids = f.all_ids();
+        let (ins, del_ids) = stream.step(150, &ids);
+        let del_set: std::collections::HashSet<u64> = del_ids.iter().copied().collect();
+        let mut dels = Vec::new();
+        for t in &f.subtrees {
+            for b in &t.buckets {
+                for (i, &id) in b.ids.iter().enumerate() {
+                    if del_set.contains(&id) {
+                        dels.push((b.coords[i * 3..(i + 1) * 3].to_vec(), id));
+                    }
+                }
+            }
+        }
+        f.insert_delete_parallel(&ins, &dels, 3);
+        if round % 4 == 0 {
+            f.adjustments_parallel(3);
+            for t in &f.subtrees {
+                t.check_invariants().unwrap_or_else(|e| panic!("round {round}: {e}"));
+            }
+        }
+    }
+    assert!(f.n_points() > 3000);
+}

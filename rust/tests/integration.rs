@@ -1,0 +1,228 @@
+//! Cross-module integration tests: the full pipelines the paper's
+//! applications run, composed end to end (without PJRT — see
+//! `pjrt_runtime.rs` for the artifact-backed paths).
+
+use sfc_part::geom::bbox::BoundingBox;
+use sfc_part::geom::mesh::{RefinementDriver, SimplexMesh};
+use sfc_part::geom::point::PointSet;
+use sfc_part::graph::metrics::spmv_metrics;
+use sfc_part::graph::pagerank::{pagerank_seq, transition_matrix};
+use sfc_part::graph::partition2d::{rowwise_partition, sfc_partition};
+use sfc_part::graph::rmat::{rmat, RmatParams};
+use sfc_part::graph::spmv_dist::{build_plan, owned_range, spmv_step, LocalMatrix};
+use sfc_part::kdtree::builder::KdTreeBuilder;
+use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use sfc_part::migrate::transfer_t_l_t;
+use sfc_part::partition::distributed::distributed_partition;
+use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+use sfc_part::partition::quality::{edge_cut_metrics, surface_to_volume, surface_volume_summary};
+use sfc_part::query::point_location::BucketIndex;
+use sfc_part::query::router::{Query, QueryRouter, QueryResult};
+use sfc_part::runtime_sim::collectives::ReduceOp;
+use sfc_part::runtime_sim::{run_ranks, CostModel};
+use sfc_part::sfc::traverse::assign_sfc;
+use sfc_part::sfc::Curve;
+
+/// Partition → migrate (simulated ranks) → verify each rank holds a
+/// contiguous curve segment and balanced load (Algorithm 2 + §III-C).
+#[test]
+fn partition_then_migrate_contiguous_balanced() {
+    let global = PointSet::uniform_weighted(4000, 3, 4.0, 3);
+    let p = 6;
+    let cfg = PartitionConfig { parts: p, curve: Curve::HilbertLike, ..Default::default() };
+    let plan = Partitioner::new(cfg).partition(&global);
+
+    let (outs, rep) = run_ranks(p, CostModel::default(), |ctx| {
+        // Block-distributed initial shards.
+        let lo = global.len() * ctx.rank / p;
+        let hi = global.len() * (ctx.rank + 1) / p;
+        let idx: Vec<u32> = (lo as u32..hi as u32).collect();
+        let local = global.gather(&idx);
+        let dest: Vec<u32> = idx.iter().map(|&i| plan.part_of[i as usize]).collect();
+        let mine = transfer_t_l_t(ctx, &local, &dest, 1 << 16);
+        let w: f64 = mine.total_weight();
+        (mine.ids.clone(), w)
+    });
+    // Conservation + expected loads.
+    let mut all: Vec<u64> = outs.iter().flat_map(|(ids, _)| ids.clone()).collect();
+    all.sort_unstable();
+    assert_eq!(all.len(), 4000);
+    for (r, (_, w)) in outs.iter().enumerate() {
+        assert!((w - plan.loads[r]).abs() < 1e-6, "rank {r} load {w} != plan {}", plan.loads[r]);
+    }
+    assert!(rep.total_msgs > 0);
+}
+
+/// Mesh pipeline: refine → centroids → partition → dual-graph edge cut
+/// sane, and Hilbert-like cuts ≤ Morton on average.
+#[test]
+fn mesh_refinement_partition_quality() {
+    let mesh = SimplexMesh::unit_square_tri(24);
+    let mut drv = RefinementDriver::new(mesh, 5);
+    for _ in 0..6 {
+        drv.step();
+    }
+    let cents = drv.mesh.centroids();
+    let edges = drv.mesh.dual_edges();
+    let parts = 8;
+    let mut cuts = std::collections::HashMap::new();
+    for curve in [Curve::Morton, Curve::HilbertLike] {
+        let cfg = PartitionConfig { parts, curve, ..Default::default() };
+        let plan = Partitioner::new(cfg).partition(&cents);
+        // Weighted balance: pairwise diff within two element weights
+        // (each boundary can be off by up to wmax/2 on both sides).
+        let wmax = cents.weights.iter().copied().fold(0.0f32, f32::max) as f64;
+        assert!(plan.max_load_diff() <= 2.0 * wmax + 1e-6, "diff {}", plan.max_load_diff());
+        let (total, max_cut, max_deg) = edge_cut_metrics(&edges, &plan.part_of, parts);
+        assert!(total > 0 && max_deg <= parts - 1);
+        cuts.insert(format!("{curve}"), max_cut);
+    }
+    // Locality: hilbert-like should not be dramatically worse.
+    assert!(
+        (cuts["hilbert-like"] as f64) <= 1.5 * cuts["morton"] as f64,
+        "hilbert cut {} vs morton {}",
+        cuts["hilbert-like"],
+        cuts["morton"]
+    );
+}
+
+/// Distributed partition under clustered skew: median splitters keep
+/// per-rank loads within the leaf-granular knapsack bound, and the
+/// cross-rank key order is total (§III-C invariant).
+#[test]
+fn distributed_partition_clustered_median() {
+    let global = PointSet::clustered(3000, 3, 0.7, 17);
+    let p = 5;
+    let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+        let idx: Vec<u32> =
+            (0..global.len() as u32).filter(|i| (*i as usize) % p == ctx.rank).collect();
+        let local = global.gather(&idx);
+        let cfg = PartitionConfig {
+            splitter: SplitterConfig::uniform(SplitterKind::MedianSort),
+            ..Default::default()
+        };
+        let dp = distributed_partition(ctx, &local, &cfg, 4 * p);
+        (dp.local.ids.clone(), dp.keys.clone())
+    });
+    let mut all: Vec<u64> = outs.iter().flat_map(|(ids, _)| ids.clone()).collect();
+    all.sort_unstable();
+    assert_eq!(all, (0..3000).collect::<Vec<u64>>());
+    for i in 0..p - 1 {
+        if let (Some(a), Some(b)) = (outs[i].1.iter().max(), outs[i + 1].1.iter().min()) {
+            assert!(a < b, "rank key order violated between {i} and {}", i + 1);
+        }
+    }
+}
+
+/// The query router on top of a partitioned, migrated dataset: every
+/// stored point findable; k-NN recall positive.
+#[test]
+fn query_router_over_partitioned_data() {
+    let ps = PointSet::uniform(3000, 3, 19);
+    let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+    cfg.dim_rule = DimRule::Cycle;
+    let mut tree = KdTreeBuilder::new()
+        .bucket_size(16)
+        .splitter(cfg)
+        .domain(BoundingBox::unit(3))
+        .threads(2)
+        .build(&ps);
+    assign_sfc(&mut tree, Curve::Morton);
+    let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(3));
+    let mut router = QueryRouter::new(&ps, &idx, 3);
+    let mut expect = Vec::new();
+    for i in (0..3000).step_by(101) {
+        router.submit(Query::Locate { coords: ps.point(i).to_vec(), eps: 1e-12 });
+        expect.push(i as u32);
+    }
+    router.submit(Query::Knn { coords: vec![0.5, 0.5, 0.5], k: 5, cutoff: 2 });
+    let results = router.flush();
+    for (pos, &e) in expect.iter().enumerate() {
+        assert_eq!(results[pos].1, QueryResult::Located(Some(e)));
+    }
+    match &results.last().unwrap().1 {
+        QueryResult::Neighbors(nn) => {
+            assert_eq!(nn.len(), 5);
+            assert!(nn.windows(2).all(|w| w[0].dist2 <= w[1].dist2));
+        }
+        other => panic!("expected neighbors, got {other:?}"),
+    }
+}
+
+/// Full §V-B flow: graph → partitions → metrics shape → distributed
+/// PageRank matches the sequential oracle under both partitions.
+#[test]
+fn graph_pipeline_pagerank_parity() {
+    let adj = rmat(RmatParams::graph500(9, 8.0), 29);
+    let m = transition_matrix(&adj);
+    let p = 4;
+    let iters = 5;
+    let damping = 0.85;
+    let (pr_ref, _) = pagerank_seq(&m.to_csr(), damping, iters, 0.0);
+
+    for part in [rowwise_partition(&m, p), sfc_partition(&m, p, Curve::Morton, 1).0] {
+        let n = m.n_rows;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = LocalMatrix::shard(&m, &part, ctx.rank);
+            let plan = build_plan(ctx, &local);
+            let owned = owned_range(n, p, ctx.rank);
+            let mut x = vec![1.0 / n as f64; (owned.1 - owned.0) as usize];
+            for _ in 0..iters {
+                let mut y = spmv_step(ctx, &plan, &x);
+                for v in y.iter_mut() {
+                    *v = damping * *v + (1.0 - damping) / n as f64;
+                }
+                let total = ctx.allreduce1(ReduceOp::Sum, y.iter().sum());
+                for v in y.iter_mut() {
+                    *v /= total;
+                }
+                x = y;
+            }
+            (owned, x)
+        });
+        let mut got = vec![0.0f64; n];
+        for (owned, x) in outs {
+            got[owned.0 as usize..owned.1 as usize].copy_from_slice(&x);
+        }
+        let err: f64 = got.iter().zip(&pr_ref).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err < 1e-9, "L1 err {err}");
+    }
+
+    // Metrics shape: load balance is the invariant at any p (the edge-cut
+    // advantage needs p ≥ ~32 on power-law graphs and is asserted in the
+    // metrics unit tests at p = 64).
+    let row = spmv_metrics(&m, &rowwise_partition(&m, p), p);
+    let (sp, _) = sfc_partition(&m, p, Curve::Morton, 1);
+    let sfc = spmv_metrics(&m, &sp, p);
+    assert!(sfc.max_load <= row.max_load);
+    assert!(sfc.max_load <= sfc.avg_load.ceil() as u64 + 1);
+}
+
+/// Surface-to-volume quality: partitions of clustered data have finite,
+/// reasonable ratios and Hilbert-like ≤ Morton on average.
+#[test]
+fn surface_volume_hilbert_advantage() {
+    let ps = PointSet::uniform(6000, 2, 23);
+    let parts = 16;
+    let sv = |curve| {
+        let cfg = PartitionConfig { parts, curve, ..Default::default() };
+        let plan = Partitioner::new(cfg).partition(&ps);
+        surface_volume_summary(&surface_to_volume(&ps, &plan.part_of, parts)).0
+    };
+    let m = sv(Curve::Morton);
+    let h = sv(Curve::HilbertLike);
+    // Same tree, different slicing: Hilbert-like wins on average but not
+    // on every seed; bound the regression and rely on the traversal
+    // locality tests (avg hop, jump counts) for the strict claim.
+    assert!(h <= m * 1.2, "hilbert sv {h} vs morton {m}");
+}
+
+/// Dynamic driver conserves points and keeps buckets within bounds
+/// across a full Algorithm-3 run.
+#[test]
+fn dynamic_driver_invariants() {
+    let ps = PointSet::uniform(1500, 3, 31);
+    let s = sfc_part::kdtree::dynamic_driver::run_dynamic(&ps, 120, 20, 3, 16, 41);
+    assert!(s.final_points > 1500); // net growth with delete_frac 0.3
+    assert!(s.insert_secs > 0.0 && s.adjust_secs > 0.0);
+}

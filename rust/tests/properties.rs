@@ -1,0 +1,209 @@
+//! Property-based invariant suites over the whole stack, using the
+//! in-crate `util::prop` framework (proptest is unavailable offline).
+
+use sfc_part::geom::bbox::BoundingBox;
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::builder::KdTreeBuilder;
+use sfc_part::kdtree::dynamic::DynKdTree;
+use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use sfc_part::partition::incremental::rebalance;
+use sfc_part::partition::knapsack::{greedy_knapsack, max_load_diff, part_loads};
+use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+use sfc_part::query::point_location::BucketIndex;
+use sfc_part::sfc::traverse::{assign_sfc, keys_strictly_increasing};
+use sfc_part::sfc::Curve;
+use sfc_part::util::prop::{forall, Gen};
+
+fn random_points(g: &mut Gen, max_n: usize) -> PointSet {
+    let n = g.usize_in(2, max_n);
+    let dim = g.usize_in(2, 5);
+    let mut ps = PointSet::new(dim);
+    ps.coords = g.coords(n, dim);
+    ps.ids = (0..n as u64).collect();
+    ps.weights = g.weights(n, 8.0);
+    ps
+}
+
+#[test]
+fn prop_tree_invariants_any_splitter() {
+    forall("tree-invariants", 40, |g| {
+        let ps = random_points(g, 400);
+        let kind = match g.usize_in(0, 4) {
+            0 => SplitterKind::Midpoint,
+            1 => SplitterKind::MedianSort,
+            2 => SplitterKind::MedianSample { sample: 64 },
+            _ => SplitterKind::MedianSelect { sample: 64 },
+        };
+        let bucket = g.usize_in(1, 40);
+        let tree = KdTreeBuilder::new()
+            .bucket_size(bucket)
+            .splitter(SplitterConfig::uniform(kind))
+            .threads(g.usize_in(1, 4))
+            .build(&ps);
+        match tree.check_invariants(&ps.coords, &ps.weights) {
+            Ok(()) => (true, String::new()),
+            Err(e) => (false, format!("{kind:?} bucket={bucket} n={}: {e}", ps.len())),
+        }
+    });
+}
+
+#[test]
+fn prop_sfc_keys_strict_and_perm_valid() {
+    forall("sfc-keys-strict", 30, |g| {
+        let ps = random_points(g, 300);
+        let curve = if g.bool() { Curve::Morton } else { Curve::HilbertLike };
+        let mut tree = KdTreeBuilder::new().bucket_size(g.usize_in(1, 16)).build(&ps);
+        assign_sfc(&mut tree, curve);
+        let strict = keys_strictly_increasing(&tree);
+        let mut perm = tree.perm.clone();
+        perm.sort_unstable();
+        let valid = perm == (0..ps.len() as u32).collect::<Vec<u32>>();
+        (strict && valid, format!("curve={curve} n={} strict={strict} valid={valid}", ps.len()))
+    });
+}
+
+#[test]
+fn prop_knapsack_bound_holds_everywhere() {
+    forall("knapsack-bound", 150, |g| {
+        let n = g.usize_in(1, 500);
+        let parts = g.usize_in(1, 24);
+        let w = g.weights(n, 30.0);
+        let assign = greedy_knapsack(&w, parts);
+        let loads = part_loads(&assign, &w, parts);
+        let wmax = w.iter().copied().fold(0.0f32, f32::max) as f64;
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        let target = total / parts as f64;
+        let mx = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        (
+            mx <= target + wmax + 1e-9,
+            format!("n={n} p={parts} max={mx} target={target} wmax={wmax}"),
+        )
+    });
+}
+
+#[test]
+fn prop_partition_balanced_and_contiguous() {
+    forall("partition-balance", 25, |g| {
+        let ps = random_points(g, 400);
+        let parts = g.usize_in(2, 9);
+        let cfg = PartitionConfig {
+            parts,
+            bucket_size: g.usize_in(2, 32),
+            curve: if g.bool() { Curve::Morton } else { Curve::HilbertLike },
+            ..Default::default()
+        };
+        let plan = Partitioner::new(cfg).partition(&ps);
+        let wmax = ps.weights.iter().copied().fold(0.0f32, f32::max) as f64;
+        let balanced = plan.max_load_diff() <= wmax + ps.total_weight() / parts as f64 + 1e-9;
+        let on_curve: Vec<u32> = plan.perm.iter().map(|&pi| plan.part_of[pi as usize]).collect();
+        let contiguous = on_curve.windows(2).all(|w| w[0] <= w[1]);
+        (
+            balanced && contiguous,
+            format!("n={} p={parts} diff={} wmax={wmax}", ps.len(), plan.max_load_diff()),
+        )
+    });
+}
+
+#[test]
+fn prop_incremental_never_worse_than_stale() {
+    forall("incremental-improves", 60, |g| {
+        let n = g.usize_in(10, 400);
+        let parts = g.usize_in(2, 8);
+        let w0 = g.weights(n, 5.0);
+        let p0 = greedy_knapsack(&w0, parts);
+        // Perturb weights.
+        let mut w1 = w0.clone();
+        let lo = g.usize_in(0, n - 1);
+        let hi = g.usize_in(lo + 1, n + 1).min(n);
+        for item in w1.iter_mut().take(hi).skip(lo) {
+            *item *= 1.0 + g.f64_in(0.0, 2.0) as f32;
+        }
+        let rb = rebalance(&p0, &w1, parts);
+        let stale = max_load_diff(&part_loads(&p0, &w1, parts));
+        let fresh = max_load_diff(&part_loads(&rb.part_in_order, &w1, parts));
+        (fresh <= stale + 1e-6, format!("n={n} p={parts} stale={stale} fresh={fresh}"))
+    });
+}
+
+#[test]
+fn prop_point_location_total_on_stored_points() {
+    forall("point-location-total", 20, |g| {
+        let n = g.usize_in(10, 300);
+        let dim = g.usize_in(2, 4);
+        let mut ps = PointSet::new(dim);
+        ps.coords = g.coords(n, dim);
+        ps.ids = (0..n as u64).collect();
+        ps.weights = vec![1.0; n];
+        let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+        cfg.dim_rule = DimRule::Cycle;
+        let mut tree = KdTreeBuilder::new()
+            .bucket_size(g.usize_in(1, 16))
+            .splitter(cfg)
+            .domain(BoundingBox::unit(dim))
+            .build(&ps);
+        assign_sfc(&mut tree, Curve::Morton);
+        let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(dim));
+        for i in 0..n {
+            // Duplicate coords may legitimately return a different id at
+            // distance 0; accept any exact-distance hit.
+            match idx.locate_point(&ps, ps.point(i), 1e-12) {
+                Some(j) => {
+                    if ps.dist2(i, j as usize) > 1e-20 {
+                        return (false, format!("i={i} got far j={j}"));
+                    }
+                }
+                None => return (false, format!("i={i} not found (n={n} dim={dim})")),
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_dynamic_tree_conserves_points() {
+    forall("dynamic-conservation", 20, |g| {
+        let ps = random_points(g, 200);
+        let bucket = g.usize_in(2, 24);
+        let mut t = DynKdTree::from_points(&ps, bucket, 5);
+        let mut expected = ps.len();
+        // Random insert/delete churn.
+        for step in 0..g.usize_in(1, 30) {
+            if g.bool() {
+                let mut c = vec![0.0; ps.dim];
+                for v in c.iter_mut() {
+                    *v = g.f64_in(0.0, 1.0);
+                }
+                t.insert(&c, 10_000 + step as u64, 1.0);
+                expected += 1;
+            } else {
+                let victim = g.usize_in(0, ps.len());
+                let coords: Vec<f64> = ps.point(victim).to_vec();
+                if t.delete(&coords, victim as u64) {
+                    expected -= 1;
+                }
+            }
+        }
+        t.adjustments();
+        if let Err(e) = t.check_invariants() {
+            return (false, e);
+        }
+        (t.n_points() == expected, format!("n={} expected={expected}", t.n_points()))
+    });
+}
+
+#[test]
+fn prop_collectives_agree_with_local_reduction() {
+    use sfc_part::runtime_sim::collectives::ReduceOp;
+    use sfc_part::runtime_sim::{run_ranks, CostModel};
+    forall("collectives-sum", 15, |g| {
+        let p = g.usize_in(1, 9);
+        let vals: Vec<f64> = (0..p).map(|_| g.f64_in(-10.0, 10.0)).collect();
+        let expect: f64 = vals.iter().sum();
+        let vals2 = vals.clone();
+        let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+            ctx.allreduce1(ReduceOp::Sum, vals2[ctx.rank])
+        });
+        let ok = outs.iter().all(|&v| (v - expect).abs() < 1e-9);
+        (ok, format!("p={p} outs={outs:?} expect={expect}"))
+    });
+}
