@@ -127,6 +127,47 @@ fn main() {
         println!("baseline: std sort of {n} keys = {}", sfc_part::bench_util::fmt_secs(sw.secs()));
     }
 
+    // Serial-vs-parallel rows for the full Algorithm 2 pipeline (build +
+    // SFC traversal + knapsack), with the thread-count determinism
+    // guarantee checked on every row.
+    {
+        use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+        let mut t = Table::new(
+            "pipeline serial vs parallel (Algorithm 2)",
+            &["points", "threads", "total", "speedup", "bit_identical"],
+        );
+        for &n in &sizes {
+            let ps = PointSet::clustered(n, 3, 0.5, 42);
+            let mut baseline: Option<(f64, Vec<u32>)> = None;
+            for &th in &threads {
+                let cfg = PartitionConfig { parts: 16, threads: th, ..Default::default() };
+                let mut best = f64::INFINITY;
+                let mut part_of = Vec::new();
+                for _ in 0..reps {
+                    let sw = sfc_part::util::timer::Stopwatch::start();
+                    let plan = Partitioner::new(cfg.clone()).partition(&ps);
+                    best = best.min(sw.secs());
+                    part_of = plan.part_of;
+                }
+                let (speedup, identical) = match &baseline {
+                    None => (1.0, true),
+                    Some((t1, p1)) => (t1 / best, *p1 == part_of),
+                };
+                t.row(vec![
+                    n.to_string(),
+                    th.to_string(),
+                    fmt_secs(best),
+                    format!("{speedup:.2}x"),
+                    identical.to_string(),
+                ]);
+                if baseline.is_none() {
+                    baseline = Some((best, part_of));
+                }
+            }
+        }
+        t.print();
+    }
+
     // The paper's comparison claims, asserted on the measured data:
     // midpoint on clustered data builds deeper trees than median.
     let ps = PointSet::clustered(sizes[0], 3, 0.5, 42);

@@ -75,6 +75,15 @@ impl Args {
         self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got {v:?}"))).unwrap_or(default)
     }
 
+    /// Worker-thread count from `--threads` (shared by every subcommand):
+    /// absent or `0` means "all available hardware threads".
+    pub fn threads(&self) -> usize {
+        match self.usize("threads", 0) {
+            0 => crate::runtime_sim::threadpool::default_threads(),
+            t => t,
+        }
+    }
+
     /// Comma-separated integer list.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
         match self.get(name) {
@@ -138,6 +147,16 @@ mod tests {
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
         assert_eq!(a.usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn threads_flag_with_auto_default() {
+        assert_eq!(parse("--threads 6").threads(), 6);
+        // 0 and absent both mean "all cores".
+        let auto = crate::runtime_sim::threadpool::default_threads();
+        assert_eq!(parse("--threads 0").threads(), auto);
+        assert_eq!(parse("").threads(), auto);
+        assert!(auto >= 1);
     }
 
     #[test]

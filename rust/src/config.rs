@@ -150,7 +150,13 @@ pub fn partition_config(cfg: &ConfigFile) -> Result<PartitionConfig> {
         match name {
             "parts" => out.parts = val.as_usize()?,
             "bucket_size" => out.bucket_size = val.as_usize()?,
-            "threads" => out.threads = val.as_usize()?,
+            // 0 = auto (all available hardware threads), like --threads.
+            "threads" => {
+                out.threads = match val.as_usize()? {
+                    0 => crate::runtime_sim::threadpool::default_threads(),
+                    t => t,
+                }
+            }
             "seed" => out.seed = val.as_usize()? as u64,
             "curve" => out.curve = curve_from_name(val.as_str()?)?,
             "splitter" => {

@@ -24,7 +24,8 @@ use crate::geom::bbox::BoundingBox;
 use crate::geom::point::PointSet;
 use crate::kdtree::node::{KdTree, Node, NONE};
 use crate::kdtree::splitter::{
-    partition_with_meta, split_valid, split_value_work, SplitterConfig, SplitterKind, WorkSet,
+    partition_with_meta_parallel, split_valid, split_value_work, SplitterConfig, SplitterKind,
+    WorkSet,
 };
 use crate::util::rng::SplitMix64;
 use crate::util::timer::Stopwatch;
@@ -173,9 +174,15 @@ impl KdTreeBuilder {
                 break;
             };
             let idx = frontier[pos];
-            if let Some((l, r)) =
-                split_node(&mut nodes, idx, &mut work, &self.splitter, geometric, &mut rng)
-            {
+            if let Some((l, r)) = split_node(
+                &mut nodes,
+                idx,
+                &mut work,
+                &self.splitter,
+                geometric,
+                &mut rng,
+                self.threads,
+            ) {
                 frontier.swap_remove(pos);
                 frontier.push(l);
                 frontier.push(r);
@@ -197,8 +204,7 @@ impl KdTreeBuilder {
             .collect();
         tasks.sort_by_key(|&i| nodes[i as usize].start);
 
-        let mut results: Vec<(i32, Vec<Node>, f64)> = Vec::new();
-        {
+        let results: Vec<(i32, Vec<Node>, f64)> = {
             // Carve the working set into disjoint regions, one per task.
             let mut regions: Vec<(i32, WorkSet<'_>)> = Vec::new();
             let mut rest = work;
@@ -212,57 +218,48 @@ impl KdTreeBuilder {
                 rest = after;
                 consumed = node.end;
             }
+            // Largest regions first so pool workers claim the big
+            // subtrees early. The sort (and hence the result order,
+            // which fixes the arena layout below) depends only on the
+            // deterministic region sizes, never on the thread count.
+            regions.sort_by(|a, b| b.1.len().cmp(&a.1.len()));
 
-            let threads = self.threads.max(1);
-            let mut buckets: Vec<Vec<(i32, WorkSet<'_>)>> =
-                (0..threads).map(|_| Vec::new()).collect();
-            for (i, reg) in regions.into_iter().enumerate() {
-                buckets[i % threads].push(reg);
-            }
             let nodes_ref = &nodes;
             let splitter = self.splitter;
             let bucket_size = self.bucket_size;
             let seed = self.seed;
-            let all: Vec<Vec<(i32, Vec<Node>, f64)>> = std::thread::scope(|s| {
-                let handles: Vec<_> = buckets
-                    .into_iter()
-                    .map(|regs| {
-                        s.spawn(move || {
-                            let t0 = crate::util::timer::thread_cpu_time();
-                            let mut out = Vec::new();
-                            for (task, mut region) in regs {
-                                let node = &nodes_ref[task as usize];
-                                let mut rng =
-                                    SplitMix64::new(seed ^ (task as u64).wrapping_mul(0x9e37));
-                                let local = build_subtree(
-                                    &mut region,
-                                    node.start,
-                                    node.bbox.clone(),
-                                    node.depth,
-                                    &splitter,
-                                    bucket_size,
-                                    geometric,
-                                    &mut rng,
-                                );
-                                let busy = crate::util::timer::thread_cpu_time() - t0;
-                                out.push((task, local, busy));
-                            }
-                            out
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("subtree worker panicked")).collect()
-            });
-            for group in all {
-                for item in group {
-                    results.push(item);
-                }
-            }
-        }
+            crate::runtime_sim::threadpool::parallel_map_tasks(
+                self.threads.max(1),
+                regions,
+                |_i, (task, mut region): (i32, WorkSet<'_>)| {
+                    let t0 = crate::util::timer::thread_cpu_time();
+                    let node = &nodes_ref[task as usize];
+                    let mut rng = SplitMix64::new(seed ^ (task as u64).wrapping_mul(0x9e37));
+                    let local = build_subtree(
+                        &mut region,
+                        node.start,
+                        node.bbox.clone(),
+                        node.depth,
+                        &splitter,
+                        bucket_size,
+                        geometric,
+                        &mut rng,
+                    );
+                    let busy = crate::util::timer::thread_cpu_time() - t0;
+                    (task, local, busy)
+                },
+            )
+        };
 
-        // Splice local arenas into the global arena.
+        // Splice local arenas into the global arena. Busy time is
+        // measured per task; the simulated span is the makespan lower
+        // bound max(longest task, total work / threads) — exact for the
+        // serial case and a tight LPT-style estimate in parallel.
+        let mut busy_total = 0.0f64;
+        let mut busy_max = 0.0f64;
         for (task, local, busy) in results {
-            stats.subtree_span_secs = stats.subtree_span_secs.max(busy);
+            busy_total += busy;
+            busy_max = busy_max.max(busy);
             let offset = nodes.len() as i32;
             for (li, mut ln) in local.into_iter().enumerate() {
                 if ln.left != NONE {
@@ -278,6 +275,7 @@ impl KdTreeBuilder {
                 }
             }
         }
+        stats.subtree_span_secs = busy_max.max(busy_total / self.threads.max(1) as f64);
         stats.subtree_secs = sw.secs();
 
         let tree = KdTree {
@@ -317,7 +315,9 @@ impl SplitHit {
 
 /// Split leaf `idx` of the global arena in place (positions are global
 /// working-set positions during phase 1). Returns the child indices, or
-/// `None` if the node cannot be split.
+/// `None` if the node cannot be split. Large nodes run their partition
+/// pass on up to `threads` pool workers.
+#[allow(clippy::too_many_arguments)]
 fn split_node(
     nodes: &mut Vec<Node>,
     idx: i32,
@@ -325,6 +325,7 @@ fn split_node(
     cfg: &SplitterConfig,
     geometric: bool,
     rng: &mut SplitMix64,
+    threads: usize,
 ) -> Option<(i32, i32)> {
     let (start, end, depth, bbox) = {
         let n = &nodes[idx as usize];
@@ -333,7 +334,17 @@ fn split_node(
     if depth >= MAX_DEPTH {
         return None;
     }
-    let hit = choose_split(work, start as usize, end as usize, &bbox, cfg, depth, geometric, rng)?;
+    let hit = choose_split(
+        work,
+        start as usize,
+        end as usize,
+        &bbox,
+        cfg,
+        depth,
+        geometric,
+        rng,
+        threads,
+    )?;
     let (d, value, boundary) = (hit.d, hit.value, hit.boundary);
     let n_total_w = nodes[idx as usize].weight;
     let (lw, lbox, rbox) = hit.into_boxes(&bbox, geometric);
@@ -382,6 +393,7 @@ fn choose_split(
     depth: u16,
     geometric: bool,
     rng: &mut SplitMix64,
+    threads: usize,
 ) -> Option<SplitHit> {
     let kind = cfg.kind_at(depth);
     let d0 = cfg.dim_at(bbox, depth);
@@ -389,16 +401,16 @@ fn choose_split(
         if bbox.width(d0) <= 0.0 {
             return None;
         }
-        let value = split_value_work(kind, work, lo, hi, d0, bbox, rng);
+        let value = split_value_work(kind, work, lo, hi, d0, bbox, rng, threads);
         let mut lbox = BoundingBox::empty(work.dim);
         let mut rbox = BoundingBox::empty(work.dim);
         let (boundary, lw) =
-            partition_with_meta(work, lo, hi, d0, value, true, &mut lbox, &mut rbox);
+            partition_with_meta_parallel(work, lo, hi, d0, value, true, &mut lbox, &mut rbox, threads);
         return Some(SplitHit { d: d0, value, boundary, lw, lbox, rbox });
     }
     // Fast path: the configured dimension almost always splits; fallbacks
     // engage only on degenerate data (no allocation either way).
-    if let Some(hit) = try_split(work, lo, hi, bbox, kind, d0, rng) {
+    if let Some(hit) = try_split(work, lo, hi, bbox, kind, d0, rng, threads) {
         return Some(hit);
     }
     let mut tried = 1u32 << d0;
@@ -415,7 +427,7 @@ fn choose_split(
             break;
         }
         tried |= 1 << d;
-        if let Some(hit) = try_split(work, lo, hi, bbox, kind, d, rng) {
+        if let Some(hit) = try_split(work, lo, hi, bbox, kind, d, rng, threads) {
             return Some(hit);
         }
     }
@@ -423,6 +435,7 @@ fn choose_split(
 }
 
 /// Attempt a split on dim `d`: configured kind, then exact median.
+#[allow(clippy::too_many_arguments)]
 fn try_split(
     work: &mut WorkSet<'_>,
     lo: usize,
@@ -431,16 +444,17 @@ fn try_split(
     kind: SplitterKind,
     d: usize,
     rng: &mut SplitMix64,
+    threads: usize,
 ) -> Option<SplitHit> {
     if bbox.width(d) <= 0.0 {
         return None;
     }
     let attempt = |k: SplitterKind, rng: &mut SplitMix64, work: &mut WorkSet<'_>| {
-        let value = split_value_work(k, work, lo, hi, d, bbox, rng);
+        let value = split_value_work(k, work, lo, hi, d, bbox, rng, threads);
         let mut lbox = BoundingBox::empty(work.dim);
         let mut rbox = BoundingBox::empty(work.dim);
         let (boundary, lw) =
-            partition_with_meta(work, lo, hi, d, value, false, &mut lbox, &mut rbox);
+            partition_with_meta_parallel(work, lo, hi, d, value, false, &mut lbox, &mut rbox, threads);
         SplitHit { d, value, boundary, lw, lbox, rbox }
     };
     let hit = attempt(kind, rng, work);
@@ -480,7 +494,11 @@ fn build_subtree(
         }
         let bbox = nodes[ni].bbox.clone();
         let depth = nodes[ni].depth;
-        let Some(hit) = choose_split(region, lo, hi, &bbox, cfg, depth, geometric, rng) else {
+        // Subtree workers are already running in parallel; their splits
+        // stay single-threaded (threads = 1). Which *algorithm* a node's
+        // partition pass uses is still a pure function of its size, so
+        // the tree is identical to the one a serial build produces.
+        let Some(hit) = choose_split(region, lo, hi, &bbox, cfg, depth, geometric, rng, 1) else {
             continue;
         };
         let (d, value, boundary) = (hit.d, hit.value, hit.boundary);

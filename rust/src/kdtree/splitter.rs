@@ -16,6 +16,7 @@
 //! [`SplitterConfig::switch_depth`].
 
 use crate::geom::bbox::BoundingBox;
+use crate::runtime_sim::threadpool::{parallel_map_ranges, parallel_map_tasks};
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::sort::{quickselect, quicksort_by};
 
@@ -255,8 +256,237 @@ pub fn partition_with_meta(
     (lo - lo0, lw)
 }
 
-/// Split value over a contiguous region of the working set (sequential
-/// reads; the sampled/median variants copy the lane once).
+/// Region size at and above which the partition pass switches to the
+/// blocked *stable* algorithm below. The choice is a function of the
+/// region size only — never of the thread count — so the tree shape is
+/// bit-identical for every `threads`.
+pub const PAR_PARTITION_MIN: usize = 8192;
+
+/// Fixed block size of the stable partition (items per block).
+const PAR_BLOCK: usize = 2048;
+
+/// Per-block metadata of the counting pass.
+struct BlockMeta {
+    lows: usize,
+    lw: f64,
+    lbox: BoundingBox,
+    rbox: BoundingBox,
+}
+
+/// One worker's gather assignment: a block range plus its disjoint
+/// destination slices in the low/high scratch regions.
+struct GatherTask<'s> {
+    blo: usize,
+    bhi: usize,
+    low_perm: &'s mut [u32],
+    low_w: &'s mut [f32],
+    low_c: &'s mut [f64],
+    high_perm: &'s mut [u32],
+    high_w: &'s mut [f32],
+    high_c: &'s mut [f64],
+}
+
+/// Partition `[lo0, hi0)` around `(d, value)` like [`partition_with_meta`],
+/// parallelized for large regions with up to `threads` workers.
+///
+/// Large regions (≥ [`PAR_PARTITION_MIN`]) use a **stable** three-pass
+/// blocked algorithm — per-block low counts / weights / boxes
+/// (reduction), an exclusive prefix scan over the block counts for
+/// destination offsets (mirroring the `exscan` of
+/// [`crate::partition::distributed`]), then a scatter through a scratch
+/// buffer. The fixed [`PAR_BLOCK`] structure pins both the element order
+/// and the f64 weight association, so the result (and the left-side
+/// weight) is bit-identical for every thread count, `threads = 1`
+/// included. Small regions keep the sequential two-pointer pass.
+#[allow(clippy::too_many_arguments)]
+pub fn partition_with_meta_parallel(
+    work: &mut WorkSet<'_>,
+    lo0: usize,
+    hi0: usize,
+    d: usize,
+    value: f64,
+    geometric: bool,
+    lbox: &mut crate::geom::bbox::BoundingBox,
+    rbox: &mut crate::geom::bbox::BoundingBox,
+    threads: usize,
+) -> (usize, f64) {
+    let n = hi0 - lo0;
+    if n < PAR_PARTITION_MIN {
+        return partition_with_meta(work, lo0, hi0, d, value, geometric, lbox, rbox);
+    }
+    let dim = work.dim;
+    let n_blocks = n.div_ceil(PAR_BLOCK);
+    let threads = threads.max(1).min(n_blocks);
+
+    // ---- Pass 1: per-block reduction (counts, left weight, boxes) ----
+    let metas: Vec<BlockMeta> = {
+        let coords: &[f64] = &*work.coords;
+        let weights: &[f32] = &*work.weights;
+        let scan = |blo: usize, bhi: usize| -> Vec<BlockMeta> {
+            let mut out = Vec::with_capacity(bhi - blo);
+            for b in blo..bhi {
+                let lo = lo0 + b * PAR_BLOCK;
+                let hi = (lo + PAR_BLOCK).min(hi0);
+                let mut m = BlockMeta {
+                    lows: 0,
+                    lw: 0.0,
+                    lbox: BoundingBox::empty(dim),
+                    rbox: BoundingBox::empty(dim),
+                };
+                for i in lo..hi {
+                    let p = &coords[i * dim..(i + 1) * dim];
+                    if p[d] <= value {
+                        m.lows += 1;
+                        m.lw += weights[i] as f64;
+                        if !geometric {
+                            m.lbox.grow(p);
+                        }
+                    } else if !geometric {
+                        m.rbox.grow(p);
+                    }
+                }
+                out.push(m);
+            }
+            out
+        };
+        if threads > 1 {
+            parallel_map_ranges(threads, n_blocks, |_t, blo, bhi| scan(blo, bhi))
+                .into_iter()
+                .flatten()
+                .collect()
+        } else {
+            scan(0, n_blocks)
+        }
+    };
+
+    // ---- Pass 2: exclusive prefix scan over block low-counts, and the
+    //      deterministic (block-ordered) weight / box merge ----
+    let mut low_off = vec![0usize; n_blocks + 1];
+    for b in 0..n_blocks {
+        low_off[b + 1] = low_off[b] + metas[b].lows;
+    }
+    let total_low = low_off[n_blocks];
+    let mut lw = 0.0f64;
+    for m in &metas {
+        lw += m.lw;
+        if !geometric {
+            lbox.merge(&m.lbox);
+            rbox.merge(&m.rbox);
+        }
+    }
+
+    // ---- Pass 3: stable scatter into scratch, then copy back ----
+    let mut sperm = vec![0u32; n];
+    let mut sweights = vec![0f32; n];
+    let mut scoords = vec![0f64; n * dim];
+    {
+        let src_perm: &[u32] = &work.perm[lo0..hi0];
+        let src_w: &[f32] = &work.weights[lo0..hi0];
+        let src_c: &[f64] = &work.coords[lo0 * dim..hi0 * dim];
+
+        // Carve per-worker destination slices: worker t owns blocks
+        // [n_blocks·t/T, n_blocks·(t+1)/T), whose low (resp. high)
+        // destinations are contiguous in the low (resp. high) region.
+        let (mut lp_rest, hp_all) = sperm.split_at_mut(total_low);
+        let (mut lw_rest, hw_all) = sweights.split_at_mut(total_low);
+        let (mut lc_rest, hc_all) = scoords.split_at_mut(total_low * dim);
+        let (mut hp_rest, mut hw_rest, mut hc_rest) = (hp_all, hw_all, hc_all);
+        let mut tasks: Vec<GatherTask<'_>> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let blo = n_blocks * t / threads;
+            let bhi = n_blocks * (t + 1) / threads;
+            let elems = (bhi * PAR_BLOCK).min(n) - (blo * PAR_BLOCK).min(n);
+            let low_len = low_off[bhi] - low_off[blo];
+            let high_len = elems - low_len;
+            let (lp, r) = lp_rest.split_at_mut(low_len);
+            lp_rest = r;
+            let (lws, r) = lw_rest.split_at_mut(low_len);
+            lw_rest = r;
+            let (lc, r) = lc_rest.split_at_mut(low_len * dim);
+            lc_rest = r;
+            let (hp, r) = hp_rest.split_at_mut(high_len);
+            hp_rest = r;
+            let (hw, r) = hw_rest.split_at_mut(high_len);
+            hw_rest = r;
+            let (hc, r) = hc_rest.split_at_mut(high_len * dim);
+            hc_rest = r;
+            tasks.push(GatherTask {
+                blo,
+                bhi,
+                low_perm: lp,
+                low_w: lws,
+                low_c: lc,
+                high_perm: hp,
+                high_w: hw,
+                high_c: hc,
+            });
+        }
+        parallel_map_tasks(threads, tasks, |_i, task: GatherTask<'_>| {
+            let mut li = 0usize;
+            let mut hii = 0usize;
+            for b in task.blo..task.bhi {
+                let lo = b * PAR_BLOCK;
+                let hi = (lo + PAR_BLOCK).min(n);
+                for j in lo..hi {
+                    let p = &src_c[j * dim..(j + 1) * dim];
+                    if p[d] <= value {
+                        task.low_perm[li] = src_perm[j];
+                        task.low_w[li] = src_w[j];
+                        task.low_c[li * dim..(li + 1) * dim].copy_from_slice(p);
+                        li += 1;
+                    } else {
+                        task.high_perm[hii] = src_perm[j];
+                        task.high_w[hii] = src_w[j];
+                        task.high_c[hii * dim..(hii + 1) * dim].copy_from_slice(p);
+                        hii += 1;
+                    }
+                }
+            }
+        });
+    }
+    {
+        // Range-parallel copy-back of the scratch into the working set.
+        let sp: &[u32] = &sperm;
+        let sw: &[f32] = &sweights;
+        let sc: &[f64] = &scoords;
+        let mut tasks: Vec<(usize, &mut [u32], &mut [f32], &mut [f64])> =
+            Vec::with_capacity(threads);
+        let mut p_rest: &mut [u32] = &mut work.perm[lo0..hi0];
+        let mut w_rest: &mut [f32] = &mut work.weights[lo0..hi0];
+        let mut c_rest: &mut [f64] = &mut work.coords[lo0 * dim..hi0 * dim];
+        let mut consumed = 0usize;
+        for t in 0..threads {
+            let end = n * (t + 1) / threads;
+            let len = end - consumed;
+            let (pa, r) = p_rest.split_at_mut(len);
+            p_rest = r;
+            let (wa, r) = w_rest.split_at_mut(len);
+            w_rest = r;
+            let (ca, r) = c_rest.split_at_mut(len * dim);
+            c_rest = r;
+            tasks.push((consumed, pa, wa, ca));
+            consumed = end;
+        }
+        parallel_map_tasks(
+            threads,
+            tasks,
+            |_i, (off, p, w, c): (usize, &mut [u32], &mut [f32], &mut [f64])| {
+                let len = p.len();
+                p.copy_from_slice(&sp[off..off + len]);
+                w.copy_from_slice(&sw[off..off + len]);
+                c.copy_from_slice(&sc[off * dim..(off + len) * dim]);
+            },
+        );
+    }
+    (total_low, lw)
+}
+
+/// Split value over a contiguous region of the working set, using up to
+/// `threads` workers for the coordinate-lane extraction of the median
+/// variants. The *sampling* draws stay sequential on the caller's RNG,
+/// and the extracted lane is a range-ordered concatenation, so the value
+/// is identical for every thread count.
+#[allow(clippy::too_many_arguments)]
 pub fn split_value_work(
     kind: SplitterKind,
     work: &WorkSet<'_>,
@@ -265,25 +495,22 @@ pub fn split_value_work(
     d: usize,
     bbox: &BoundingBox,
     rng: &mut SplitMix64,
+    threads: usize,
 ) -> f64 {
-    let dim = work.dim;
-    let lane = || -> Vec<f64> {
-        work.coords[lo * dim..hi * dim].iter().skip(d).step_by(dim).copied().collect()
-    };
     match kind {
         SplitterKind::Midpoint => bbox.midpoint(d),
         SplitterKind::MedianSort => {
-            let mut vals = lane();
+            let mut vals = lane_work(work, lo, hi, d, threads);
             quicksort_by(&mut vals, |v| *v);
             vals[vals.len() / 2]
         }
         SplitterKind::MedianSample { sample } => {
-            let mut vals = sample_lane(work, lo, hi, d, sample, rng);
+            let mut vals = sample_lane(work, lo, hi, d, sample, rng, threads);
             quicksort_by(&mut vals, |v| *v);
             vals[vals.len() / 2]
         }
         SplitterKind::MedianSelect { sample } => {
-            let mut vals = sample_lane(work, lo, hi, d, sample, rng);
+            let mut vals = sample_lane(work, lo, hi, d, sample, rng, threads);
             let mid = vals.len() / 2;
             quickselect(&mut vals, mid, |v| *v);
             vals[mid]
@@ -291,6 +518,29 @@ pub fn split_value_work(
     }
 }
 
+/// Extract coordinate lane `d` of region `[lo, hi)` — parallel for large
+/// regions. Output is the plain in-order lane regardless of `threads`.
+fn lane_work(work: &WorkSet<'_>, lo: usize, hi: usize, d: usize, threads: usize) -> Vec<f64> {
+    let n = hi - lo;
+    let dim = work.dim;
+    let coords: &[f64] = &*work.coords;
+    if threads <= 1 || n < PAR_PARTITION_MIN {
+        return coords[lo * dim..hi * dim].iter().skip(d).step_by(dim).copied().collect();
+    }
+    parallel_map_ranges(threads, n, |_t, a, b| {
+        coords[(lo + a) * dim..(lo + b) * dim]
+            .iter()
+            .skip(d)
+            .step_by(dim)
+            .copied()
+            .collect::<Vec<f64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
 fn sample_lane(
     work: &WorkSet<'_>,
     lo: usize,
@@ -298,11 +548,12 @@ fn sample_lane(
     d: usize,
     sample: usize,
     rng: &mut SplitMix64,
+    threads: usize,
 ) -> Vec<f64> {
     let n = hi - lo;
     let dim = work.dim;
     if n <= sample {
-        return work.coords[lo * dim..hi * dim].iter().skip(d).step_by(dim).copied().collect();
+        return lane_work(work, lo, hi, d, threads);
     }
     (0..sample)
         .map(|_| {

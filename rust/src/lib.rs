@@ -33,10 +33,23 @@
 //! // 100k clustered points in 3-D.
 //! let pts = PointSet::clustered(100_000, 3, 0.5, 42);
 //! // Partition into 16 parts: kd-tree + Hilbert-like SFC + greedy knapsack.
+//! // `threads` defaults to every available hardware thread; set it
+//! // explicitly to pin a worker count (the CLI's `--threads`, 0 = auto).
 //! let cfg = PartitionConfig { parts: 16, curve: Curve::HilbertLike, ..Default::default() };
 //! let plan = Partitioner::new(cfg).partition(&pts);
 //! assert_eq!(plan.part_of.len(), pts.len());
 //! println!("imbalance = {:.4}", plan.imbalance());
+//!
+//! // The pipeline is deterministic in the thread count: any `threads`
+//! // yields bit-identical `perm`, `part_of`, and `loads`.
+//! let serial = Partitioner::new(PartitionConfig {
+//!     parts: 16,
+//!     curve: Curve::HilbertLike,
+//!     threads: 1,
+//!     ..Default::default()
+//! })
+//! .partition(&pts);
+//! assert_eq!(serial.part_of, plan.part_of);
 //! ```
 
 pub mod bench_util;
@@ -60,8 +73,9 @@ pub mod prelude {
     pub use crate::kdtree::builder::KdTreeBuilder;
     pub use crate::kdtree::node::KdTree;
     pub use crate::kdtree::splitter::SplitterKind;
-    pub use crate::partition::knapsack::greedy_knapsack;
+    pub use crate::partition::knapsack::{greedy_knapsack, greedy_knapsack_parallel};
     pub use crate::partition::partitioner::{PartitionConfig, PartitionPlan, Partitioner};
+    pub use crate::runtime_sim::threadpool::default_threads;
     pub use crate::sfc::key::SfcKey;
     pub use crate::sfc::Curve;
 }

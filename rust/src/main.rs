@@ -50,7 +50,8 @@ fn print_help() {
     println!(
         "sfc-part — distributed geometric partitioner (SFC orders)\n\
          commands: partition | distributed | dynamic | queries | graph | spmv | info\n\
-         common flags: --points N --dim D --parts P --threads T --curve morton|hilbert\n\
+         common flags: --points N --dim D --parts P --curve morton|hilbert\n\
+         --threads T (0 or absent = all cores; results are identical for any T)\n\
          --splitter midpoint|median-sort|median-sample|median-select --bucket B\n\
          --dist uniform|clustered --seed S --config FILE"
     );
@@ -64,7 +65,12 @@ fn partition_cfg(args: &Args) -> Result<PartitionConfig> {
     };
     cfg.parts = args.usize("parts", cfg.parts);
     cfg.bucket_size = args.usize("bucket", cfg.bucket_size);
-    cfg.threads = args.usize("threads", cfg.threads);
+    // --threads absent keeps the config value (itself defaulting to all
+    // available cores); an explicit --threads 0 forces auto, overriding
+    // a pinned count from the config file.
+    if args.get("threads").is_some() {
+        cfg.threads = args.threads();
+    }
     cfg.seed = args.u64("seed", cfg.seed);
     if let Some(c) = args.get("curve") {
         cfg.curve = curve_from_name(c)?;
@@ -150,7 +156,7 @@ fn cmd_dynamic(args: &Args) -> Result<()> {
     let ps = workload(args);
     let iters = args.usize("iters", 1000);
     let step = args.usize("step", 100);
-    let threads = args.usize("threads", 4);
+    let threads = args.threads();
     let bucket = args.usize("bucket", 32);
     let summary = sfc_part::kdtree::dynamic_driver::run_dynamic(
         &ps,
@@ -176,7 +182,7 @@ fn cmd_queries(args: &Args) -> Result<()> {
     let ps = workload(args);
     let nq = args.usize("queries", 10_000);
     let k = args.usize("knn", 3);
-    let workers = args.usize("threads", 4);
+    let workers = args.threads();
     let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
     cfg.dim_rule = DimRule::Cycle;
     let sw = sfc_part::util::timer::Stopwatch::start();
@@ -239,7 +245,7 @@ fn cmd_graph(args: &Args) -> Result<()> {
     );
     for &p in &procs {
         let row = spmv_metrics(&coo, &rowwise_partition(&coo, p), p);
-        let (part, secs) = sfc_partition(&coo, p, curve, args.usize("threads", 1));
+        let (part, secs) = sfc_partition(&coo, p, curve, args.threads());
         let sfc = spmv_metrics(&coo, &part, p);
         println!(
             "{:>6} {:>12.0} {:>12} {:>10} {:>12} | {:>12.0} {:>12} {:>10} {:>12} {:>9.3}s",

@@ -7,35 +7,142 @@
 //! — holds for the prefix-target rule implemented here and is asserted by
 //! the property tests.
 //!
-//! The distributed variant uses a parallel reduction (total weight) and a
-//! parallel prefix (`exscan`) to place each rank's local weights on the
-//! global line — see [`crate::partition::distributed`].
+//! The shared-memory implementation mirrors the distributed one
+//! ([`crate::partition::distributed`], which uses an `exscan` collective):
+//! weights are cut into fixed [`SCAN_BLOCK`]-sized blocks, worker threads
+//! reduce per-block partial sums, an exclusive prefix scan over the block
+//! sums places every block on the global line, and workers then assign
+//! part ids within their blocks. Because the block structure depends only
+//! on `n` — never on the thread count — the f64 arithmetic is performed
+//! in exactly the same association for every `threads`, making the output
+//! **bit-identical across thread counts** (including `threads = 1`).
 
-/// Slice `weights` (in curve order) into `parts` contiguous chunks.
-/// Returns the part id of each item.
+use crate::runtime_sim::threadpool::parallel_map_ranges;
+
+/// Fixed reduction/scan block size (items). Independent of the thread
+/// count by design: this is what pins the floating-point association.
+pub const SCAN_BLOCK: usize = 4096;
+
+/// Weight lanes the knapsack accepts: `f32` point weights or `f64`
+/// aggregated bucket weights (no lossy down-cast for the latter).
+pub trait KnapsackWeight: Copy + Send + Sync {
+    fn as_f64(self) -> f64;
+}
+
+impl KnapsackWeight for f32 {
+    #[inline]
+    fn as_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl KnapsackWeight for f64 {
+    #[inline]
+    fn as_f64(self) -> f64 {
+        self
+    }
+}
+
+#[inline]
+fn block_sum<W: KnapsackWeight>(weights: &[W], b: usize) -> f64 {
+    let lo = b * SCAN_BLOCK;
+    let hi = (lo + SCAN_BLOCK).min(weights.len());
+    let mut s = 0.0f64;
+    for &w in &weights[lo..hi] {
+        s += w.as_f64();
+    }
+    s
+}
+
+/// Slice `weights` (in curve order) into `parts` contiguous chunks using
+/// up to `threads` workers. Returns the part id of each item.
 ///
 /// Rule: item `i` goes to part `min(P-1, floor(prefix_mid / target))`
 /// where `prefix_mid` is the prefix weight at the item's midpoint and
-/// `target = total / P`. Monotone in `i`, so chunks are contiguous.
-pub fn greedy_knapsack(weights: &[f32], parts: usize) -> Vec<u32> {
+/// `target = total / P`. Monotone in `i` (for non-negative weights), so
+/// chunks are contiguous.
+pub fn greedy_knapsack_weights<W: KnapsackWeight>(
+    weights: &[W],
+    parts: usize,
+    threads: usize,
+) -> Vec<u32> {
     assert!(parts >= 1);
-    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_blocks = n.div_ceil(SCAN_BLOCK);
+    let threads = threads.max(1).min(n_blocks);
+
+    // ---- Phase 1: per-thread partial sums (per-block reduction) ----
+    let block_sums: Vec<f64> = if threads > 1 {
+        parallel_map_ranges(threads, n_blocks, |_t, lo, hi| {
+            (lo..hi).map(|b| block_sum(weights, b)).collect::<Vec<f64>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    } else {
+        (0..n_blocks).map(|b| block_sum(weights, b)).collect()
+    };
+
+    // ---- Phase 2: exclusive prefix scan over the block sums ----
+    let mut offsets = vec![0.0f64; n_blocks + 1];
+    for b in 0..n_blocks {
+        offsets[b + 1] = offsets[b] + block_sums[b];
+    }
+    let total = offsets[n_blocks];
     if total <= 0.0 {
         // Degenerate: split by count.
-        return (0..weights.len())
-            .map(|i| (i * parts / weights.len().max(1)) as u32)
-            .collect();
+        return (0..n).map(|i| (i * parts / n) as u32).collect();
     }
     let target = total / parts as f64;
-    let mut out = Vec::with_capacity(weights.len());
-    let mut prefix = 0.0f64;
-    for &w in weights {
-        let mid = prefix + 0.5 * w as f64;
-        let p = ((mid / target) as usize).min(parts - 1);
-        out.push(p as u32);
-        prefix += w as f64;
+
+    // ---- Phase 3: per-block assignment from the scanned offsets ----
+    let assign_blocks = |blo: usize, bhi: usize| -> Vec<u32> {
+        let lo = blo * SCAN_BLOCK;
+        let hi = (bhi * SCAN_BLOCK).min(n);
+        let mut out = Vec::with_capacity(hi - lo);
+        for b in blo..bhi {
+            let lo = b * SCAN_BLOCK;
+            let hi = (lo + SCAN_BLOCK).min(n);
+            // Keep the in-block sum in its own accumulator (the same
+            // association `block_sum` used) and add the scanned offset
+            // at use time: then the last midpoint of block b is ≤
+            // offsets[b+1] ≤ the first midpoint of block b+1 even in
+            // floating point, so the assignment stays monotone across
+            // block boundaries.
+            let mut local = 0.0f64;
+            for &w in &weights[lo..hi] {
+                let mid = offsets[b] + (local + 0.5 * w.as_f64());
+                out.push(((mid / target) as usize).min(parts - 1) as u32);
+                local += w.as_f64();
+            }
+        }
+        out
+    };
+    if threads > 1 {
+        let chunks = parallel_map_ranges(threads, n_blocks, |_t, lo, hi| assign_blocks(lo, hi));
+        let mut out = Vec::with_capacity(n);
+        for c in chunks {
+            out.extend_from_slice(&c);
+        }
+        out
+    } else {
+        assign_blocks(0, n_blocks)
     }
-    out
+}
+
+/// Single-threaded entry point kept for callers without a thread budget.
+/// Same blocked arithmetic as the parallel path, so
+/// `greedy_knapsack(w, p) == greedy_knapsack_parallel(w, p, t)` for all `t`.
+pub fn greedy_knapsack(weights: &[f32], parts: usize) -> Vec<u32> {
+    greedy_knapsack_weights(weights, parts, 1)
+}
+
+/// Multi-threaded slicing of `f32` point weights.
+pub fn greedy_knapsack_parallel(weights: &[f32], parts: usize, threads: usize) -> Vec<u32> {
+    greedy_knapsack_weights(weights, parts, threads)
 }
 
 /// Boundaries view: `bounds[p]..bounds[p+1]` is part `p`'s item range.
@@ -70,15 +177,34 @@ pub fn max_load_diff(loads: &[f64]) -> f64 {
 /// Slice a *bucket-granular* weighted line: buckets (in key order) are
 /// indivisible. Returns per-bucket part ids. Same rule at bucket
 /// granularity — the imbalance bound becomes the max bucket weight.
+/// Operates on the `f64` bucket weights directly (aggregated buckets are
+/// exactly where `f32` rounding would bite).
 pub fn greedy_knapsack_buckets(bucket_weights: &[f64], parts: usize) -> Vec<u32> {
-    let w32: Vec<f32> = bucket_weights.iter().map(|&w| w as f32).collect();
-    greedy_knapsack(&w32, parts)
+    greedy_knapsack_weights(bucket_weights, parts, 1)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::forall;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    /// The unblocked serial prefix rule, as specified in §III-C. With
+    /// integer-valued weights every f64 sum is exact regardless of
+    /// association, so the blocked implementation must match this
+    /// reference bit-for-bit on such inputs.
+    fn serial_prefix_rule(weights: &[f64], parts: usize) -> Vec<u32> {
+        let total: f64 = weights.iter().sum();
+        let target = total / parts as f64;
+        let mut out = Vec::with_capacity(weights.len());
+        let mut prefix = 0.0f64;
+        for &w in weights {
+            let mid = prefix + 0.5 * w;
+            out.push(((mid / target) as usize).min(parts - 1) as u32);
+            prefix += w;
+        }
+        out
+    }
 
     #[test]
     fn unit_weights_split_evenly() {
@@ -90,6 +216,57 @@ mod tests {
         for w in parts.windows(2) {
             assert!(w[0] <= w[1]);
         }
+    }
+
+    #[test]
+    fn prefix_scan_matches_serial_rule_on_exact_weights() {
+        // Integer weights spanning several SCAN_BLOCKs: the blocked scan
+        // must equal the plain serial prefix rule exactly.
+        let mut rng = SplitMix64::new(99);
+        let n = 3 * SCAN_BLOCK + 517;
+        let w: Vec<f32> = (0..n).map(|_| (1 + rng.below(9)) as f32).collect();
+        let w64: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+        for parts in [1usize, 3, 16, 33] {
+            let want = serial_prefix_rule(&w64, parts);
+            for threads in [1usize, 2, 4, 8] {
+                let got = greedy_knapsack_parallel(&w, parts, threads);
+                assert_eq!(got, want, "parts={parts} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_output() {
+        forall("knapsack-thread-invariance", 60, |g| {
+            let n = g.usize_in(1, 3 * SCAN_BLOCK);
+            let parts = g.usize_in(1, 20);
+            let w = g.weights(n, 50.0);
+            let base = greedy_knapsack_parallel(&w, parts, 1);
+            for threads in [2usize, 4, 8] {
+                if greedy_knapsack_parallel(&w, parts, threads) != base {
+                    return (false, format!("n={n} parts={parts} threads={threads} diverged"));
+                }
+            }
+            (true, String::new())
+        });
+    }
+
+    #[test]
+    fn bucket_weights_keep_f64_precision() {
+        // A heavy aggregated bucket whose weight is not representable in
+        // f32: the f64 path must slice on the exact values. 2^25 + 1 is
+        // rounded to 2^25 by f32; with three buckets [2^25+1, 1, 2^25]
+        // the exact rule puts the boundary after bucket 0, while the f32
+        // round-trip would tie the halves.
+        let heavy = (1u64 << 25) as f64;
+        let bw = vec![heavy + 1.0, 2.0, heavy];
+        let assign = greedy_knapsack_buckets(&bw, 2);
+        assert_eq!(assign.len(), 3);
+        assert!(assign.windows(2).all(|w| w[0] <= w[1]));
+        // The first bucket alone exceeds half the total, so it must be
+        // the whole of part 0.
+        assert_eq!(assign[0], 0);
+        assert_eq!(assign[2], 1);
     }
 
     #[test]
@@ -157,5 +334,12 @@ mod tests {
         let assign = greedy_knapsack(&w, 4);
         let bounds = part_bounds(&assign, 4);
         assert_eq!(bounds, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_assignment() {
+        let w: Vec<f32> = Vec::new();
+        assert!(greedy_knapsack(&w, 4).is_empty());
+        assert!(greedy_knapsack_parallel(&w, 4, 8).is_empty());
     }
 }

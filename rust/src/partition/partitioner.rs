@@ -13,10 +13,22 @@ use crate::geom::point::PointSet;
 use crate::kdtree::builder::{BuildStats, KdTreeBuilder};
 use crate::kdtree::node::KdTree;
 use crate::kdtree::splitter::SplitterConfig;
-use crate::partition::knapsack::{greedy_knapsack, part_loads};
+use crate::partition::knapsack::{greedy_knapsack_parallel, part_loads};
+use crate::runtime_sim::threadpool::default_threads;
 use crate::sfc::traverse::{assign_sfc_parallel, TraverseStats};
 use crate::sfc::Curve;
 use crate::util::timer::Stopwatch;
+
+/// Breadth-first top-node budget (the paper's `K2`) used by the
+/// pipeline. Fixed — in particular, **not** derived from the thread
+/// count — so that where the build switches from the collective top
+/// phase to per-subtree tasks is a pure function of the input, which is
+/// what makes `perm`/`part_of`/`loads` bit-identical across thread
+/// counts. The builder's worker count is capped at this value (the
+/// builder silently raises `K2` to its thread count, which would
+/// reintroduce a thread dependence on >64-core hosts), so the
+/// guarantee holds for *every* `threads`.
+pub const TOP_FANOUT: usize = 64;
 
 /// Configuration of one partitioning run.
 #[derive(Clone, Debug)]
@@ -27,7 +39,9 @@ pub struct PartitionConfig {
     pub bucket_size: usize,
     pub splitter: SplitterConfig,
     pub curve: Curve,
-    /// Worker threads for build + traversal.
+    /// Worker threads for build + traversal + knapsack. Defaults to all
+    /// available hardware threads; the result is bit-identical for every
+    /// value (see [`TOP_FANOUT`]).
     pub threads: usize,
     pub seed: u64,
 }
@@ -39,7 +53,7 @@ impl Default for PartitionConfig {
             bucket_size: 32,
             splitter: SplitterConfig::default(),
             curve: Curve::Morton,
-            threads: 1,
+            threads: default_threads(),
             seed: 0x5fc,
         }
     }
@@ -65,8 +79,12 @@ pub struct PartitionPlan {
 }
 
 impl PartitionPlan {
-    /// Load imbalance: max/mean − 1.
+    /// Load imbalance: max/mean − 1. Degenerate plans (no parts, or all
+    /// loads zero) report 0.0 instead of `NaN`.
     pub fn imbalance(&self) -> f64 {
+        if self.loads.is_empty() {
+            return 0.0;
+        }
         let mean = self.loads.iter().sum::<f64>() / self.loads.len() as f64;
         if mean == 0.0 {
             return 0.0;
@@ -94,20 +112,23 @@ impl Partitioner {
     /// callers that need it (query structures, quality metrics).
     pub fn partition_with_tree(&self, ps: &PointSet) -> (PartitionPlan, KdTree) {
         let sw = Stopwatch::start();
-        // BuildTree
+        // BuildTree. K2 is the fixed TOP_FANOUT (not a thread-count
+        // multiple) so the phase-1/phase-2 cut — and with it the whole
+        // tree — is independent of `threads`.
         let (mut tree, build_stats) = KdTreeBuilder::new()
             .bucket_size(self.cfg.bucket_size)
             .splitter(self.cfg.splitter)
-            .threads(self.cfg.threads)
-            .k2(self.cfg.threads * 2)
+            .threads(self.cfg.threads.min(TOP_FANOUT))
+            .k2(TOP_FANOUT)
             .build_with_stats(ps);
         // SFCTraverse
         let traverse_stats = assign_sfc_parallel(&mut tree, self.cfg.curve, self.cfg.threads);
-        // GreedyKnapsack over points in curve order
+        // GreedyKnapsack over points in curve order: per-thread partial
+        // sums + an exclusive prefix scan (bit-identical to serial).
         let ksw = Stopwatch::start();
         let w_in_order: Vec<f32> =
             tree.perm.iter().map(|&pi| ps.weights[pi as usize]).collect();
-        let part_in_order = greedy_knapsack(&w_in_order, self.cfg.parts);
+        let part_in_order = greedy_knapsack_parallel(&w_in_order, self.cfg.parts, self.cfg.threads);
         let knapsack_secs = ksw.secs();
 
         let mut part_of = vec![0u32; ps.len()];
@@ -182,6 +203,61 @@ mod tests {
         let mut ids = plan.ids_in_order.clone();
         ids.sort_unstable();
         assert_eq!(ids, (0..500).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn imbalance_of_empty_plan_is_zero() {
+        // Regression: a degenerate run producing a 0-part plan used to
+        // return NaN (0/0) from imbalance().
+        let plan = PartitionPlan {
+            perm: Vec::new(),
+            ids_in_order: Vec::new(),
+            part_of: Vec::new(),
+            loads: Vec::new(),
+            parts: 0,
+            build_stats: Default::default(),
+            traverse_stats: Default::default(),
+            knapsack_secs: 0.0,
+            total_secs: 0.0,
+        };
+        assert_eq!(plan.imbalance(), 0.0);
+        let zero = PartitionPlan { loads: vec![0.0; 4], parts: 4, ..plan };
+        assert_eq!(zero.imbalance(), 0.0);
+    }
+
+    #[test]
+    fn thread_count_is_bit_identical_at_scale() {
+        // Large enough to cross PAR_PARTITION_MIN (stable blocked
+        // partition) and SCAN_BLOCK (blocked knapsack scan) — the paths
+        // small unit tests never reach.
+        for (ps, curve) in [
+            (PointSet::uniform(20_000, 3, 90), crate::sfc::Curve::Morton),
+            (PointSet::clustered(20_000, 3, 0.5, 91), crate::sfc::Curve::HilbertLike),
+        ] {
+            let run = |threads: usize| {
+                let cfg = PartitionConfig { parts: 16, threads, curve, ..Default::default() };
+                Partitioner::new(cfg).partition(&ps)
+            };
+            let base = run(1);
+            for threads in [2usize, 4, 8] {
+                let plan = run(threads);
+                assert_eq!(plan.perm, base.perm, "perm diverged at {threads} threads");
+                assert_eq!(plan.part_of, base.part_of, "part_of diverged at {threads} threads");
+                assert_eq!(plan.loads, base.loads, "loads diverged at {threads} threads");
+                assert_eq!(plan.ids_in_order, base.ids_in_order);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_plan_keeps_tree_invariants_at_scale() {
+        let ps = PointSet::uniform(20_000, 3, 92);
+        let cfg = PartitionConfig { parts: 8, threads: 4, ..Default::default() };
+        let (plan, tree) = Partitioner::new(cfg).partition_with_tree(&ps);
+        tree.check_invariants(&ps.coords, &ps.weights).unwrap();
+        assert!(plan.max_load_diff() <= 1.0 + 1e-9);
+        let on_curve: Vec<u32> = plan.perm.iter().map(|&pi| plan.part_of[pi as usize]).collect();
+        assert!(on_curve.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -97,19 +97,15 @@ pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> T
     let dim = tree.dim;
     let nodes_ref = &tree.nodes;
     let perm_ref = &tree.perm;
-    // Distribute frontier items round-robin by weight order (largest
-    // first) for balance.
-    let t_eff = threads.max(1);
+    // Dispatch frontier items largest-first so pool workers claim the
+    // heavy subtrees early. (Results come back in task order, so the
+    // ordering only affects scheduling, never the output.)
     let mut order: Vec<usize> = (0..frontier.len()).collect();
     order.sort_by(|&a, &b| {
         nodes_ref[frontier[b].node as usize]
             .count()
             .cmp(&nodes_ref[frontier[a].node as usize].count())
     });
-    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); t_eff];
-    for (i, &item) in order.iter().enumerate() {
-        assignment[i % t_eff].push(item);
-    }
 
     // Disjoint output regions per item.
     let mut regions: Vec<Option<&mut [u32]>> = Vec::with_capacity(frontier.len());
@@ -122,54 +118,51 @@ pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> T
             rest = after;
         }
     }
-    // Move regions into per-thread lists.
-    let mut thread_work: Vec<Vec<(usize, &mut [u32])>> = (0..t_eff).map(|_| Vec::new()).collect();
+    // One task per frontier item, in largest-first order.
+    let mut items: Vec<(usize, &mut [u32])> = Vec::with_capacity(frontier.len());
     {
         let mut taken: Vec<Option<&mut [u32]>> = regions;
-        for (t, items) in assignment.iter().enumerate() {
-            for &i in items {
-                thread_work[t].push((i, taken[i].take().unwrap()));
-            }
+        for &i in &order {
+            items.push((i, taken[i].take().unwrap()));
         }
     }
 
     let frontier_ref = &frontier;
     let offsets_ref = &offsets;
-    let all_rewrites: Vec<Vec<Rewrite>> = std::thread::scope(|s| {
-        let handles: Vec<_> = thread_work
-            .into_iter()
-            .map(|items| {
-                s.spawn(move || {
-                    let t0 = crate::util::timer::thread_cpu_time();
-                    let mut rewrites = Vec::new();
-                    for (i, out) in items {
-                        let it = &frontier_ref[i];
-                        let base = offsets_ref[i];
-                        dfs_subtree(
-                            nodes_ref, perm_ref, dim, curve, it.node, it.state, it.key, base,
-                            out, &mut rewrites,
-                        );
-                    }
-                    let busy = crate::util::timer::thread_cpu_time() - t0;
-                    rewrites.push(Rewrite {
-                        node: NONE,
-                        key: busy.to_bits() as u128,
-                        start: 0,
-                        end: 0,
-                        flipped: false,
-                    });
-                    rewrites
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("traverse worker")).collect()
-    });
+    let all_rewrites: Vec<Vec<Rewrite>> = crate::runtime_sim::threadpool::parallel_map_tasks(
+        threads.max(1),
+        items,
+        |_ti, (i, out): (usize, &mut [u32])| {
+            let t0 = crate::util::timer::thread_cpu_time();
+            let mut rewrites = Vec::new();
+            let it = &frontier_ref[i];
+            let base = offsets_ref[i];
+            dfs_subtree(
+                nodes_ref, perm_ref, dim, curve, it.node, it.state, it.key, base, out,
+                &mut rewrites,
+            );
+            let busy = crate::util::timer::thread_cpu_time() - t0;
+            rewrites.push(Rewrite {
+                node: NONE,
+                key: busy.to_bits() as u128,
+                start: 0,
+                end: 0,
+                flipped: false,
+            });
+            rewrites
+        },
+    );
 
-    // Apply rewrites.
+    // Apply rewrites. Busy time is per task; the simulated span is the
+    // makespan lower bound max(longest task, total work / threads).
+    let mut busy_total = 0.0f64;
+    let mut busy_max = 0.0f64;
     for group in all_rewrites {
         for rw in group {
             if rw.node == NONE {
-                stats.span_secs = stats.span_secs.max(f64::from_bits(rw.key as u64));
+                let busy = f64::from_bits(rw.key as u64);
+                busy_total += busy;
+                busy_max = busy_max.max(busy);
                 continue;
             }
             let n = &mut tree.nodes[rw.node as usize];
@@ -181,6 +174,7 @@ pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> T
             n.flipped = rw.flipped;
         }
     }
+    stats.span_secs = busy_max.max(busy_total / threads.max(1) as f64);
     // Frontier ancestors: recompute ranges/keys for nodes above the
     // frontier (they were expanded top-down; fix start/end bottom-up).
     fix_ancestors(tree, tree.root);

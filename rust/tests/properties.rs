@@ -105,6 +105,51 @@ fn prop_partition_balanced_and_contiguous() {
 }
 
 #[test]
+fn prop_parallel_matches_serial() {
+    // The tentpole determinism guarantee: for any thread count the full
+    // Algorithm 2 pipeline produces bit-identical perm / part_of / loads.
+    forall("parallel-matches-serial", 12, |g| {
+        let ps = random_points(g, 500);
+        let parts = g.usize_in(2, 9);
+        let bucket = g.usize_in(2, 32);
+        let curve = if g.bool() { Curve::Morton } else { Curve::HilbertLike };
+        let kind = match g.usize_in(0, 3) {
+            0 => SplitterKind::Midpoint,
+            1 => SplitterKind::MedianSort,
+            _ => SplitterKind::MedianSelect { sample: 128 },
+        };
+        let run = |threads: usize| {
+            let cfg = PartitionConfig {
+                parts,
+                bucket_size: bucket,
+                curve,
+                splitter: SplitterConfig::uniform(kind),
+                threads,
+                ..Default::default()
+            };
+            Partitioner::new(cfg).partition(&ps)
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 8] {
+            let plan = run(threads);
+            if plan.perm != base.perm
+                || plan.part_of != base.part_of
+                || plan.loads != base.loads
+            {
+                return (
+                    false,
+                    format!(
+                        "threads={threads} diverged (n={} parts={parts} {kind:?} {curve})",
+                        ps.len()
+                    ),
+                );
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
 fn prop_incremental_never_worse_than_stale() {
     forall("incremental-improves", 60, |g| {
         let n = g.usize_in(10, 400);

@@ -1,0 +1,193 @@
+//! Stub of the XLA/PJRT binding surface used by `sfc_part::runtime`.
+//!
+//! The real crate links the native XLA runtime, which is not available
+//! in every build environment. This stub keeps the exact call signatures
+//! so the engine layer compiles unchanged; constructing a client fails
+//! with a descriptive error, and the callers (engine, CLI, tests) all
+//! treat that as "PJRT unavailable" and fall back to the scalar oracles.
+
+/// Error type of every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error("XLA/PJRT backend not available: built with the stub `xla` crate".to_string())
+}
+
+/// Element types accepted by literals and host buffers.
+pub trait NativeType: Copy + Send + Sync + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+impl NativeType for i64 {}
+impl NativeType for u64 {}
+impl NativeType for u8 {}
+impl NativeType for i8 {}
+
+/// A host/device literal. The stub carries no data — no path produces
+/// one once client construction fails, but the type must exist for the
+/// engine layer's signatures.
+#[derive(Debug, Default, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal::default()
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    /// Decompose a 1-tuple literal into its only element.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on literal-like inputs; one output buffer list per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+
+    /// Execute on device-resident buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client. Always fails in the stub; callers treat the error as
+    /// "artifacts/PJRT unavailable" and use their scalar fallbacks.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    /// Platform name of the backing runtime.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    /// Upload a host slice as a device buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Default)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Default)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_ops_fail_cleanly() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+}
