@@ -12,13 +12,16 @@ use sfc_part::cli::{Args, Scale};
 use sfc_part::geom::point::PointSet;
 use sfc_part::partition::distributed::distributed_partition;
 use sfc_part::partition::partitioner::PartitionConfig;
-use sfc_part::runtime_sim::{run_ranks, CostModel};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
 
 fn main() {
     let args = Args::parse();
     let scale = Scale::detect(&args);
     let n = args.usize("points", scale.pick(1_000_000, 1_000_000_000));
     let ranks = args.usize_list("ranks", &[2, 4, 8, 16, 32, 64]);
+    // Worker share per rank on the persistent pool (0 = cores/ranks):
+    // the hybrid rank×thread execution of the pool-aware runtime.
+    let tpr = args.usize("threads-per-rank", 0);
     let global = PointSet::uniform(n, 3, 9);
 
     let mut t = Table::new(
@@ -29,11 +32,8 @@ fn main() {
         ],
     );
     for &p in &ranks {
-        let (outs, rep) = run_ranks(p, CostModel::default(), |ctx| {
-            let idx: Vec<u32> = (0..global.len() as u32)
-                .filter(|i| (*i as usize) % ctx.n_ranks == ctx.rank)
-                .collect();
-            let local = global.gather(&idx);
+        let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, ctx.n_ranks);
             let cfg = PartitionConfig::default();
             let dp = distributed_partition(ctx, &local, &cfg, 4 * p);
             (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs)

@@ -101,6 +101,14 @@ impl PointSet {
         self.gather(perm)
     }
 
+    /// Round-robin shard: the points whose index ≡ `rank` (mod `p`) —
+    /// the canonical pre-migration distribution used by the distributed
+    /// CLI, benches, and tests.
+    pub fn mod_shard(&self, rank: usize, p: usize) -> PointSet {
+        let idx: Vec<u32> = (0..self.len() as u32).filter(|i| (*i as usize) % p == rank).collect();
+        self.gather(&idx)
+    }
+
     /// Append all points of `other` (same dim).
     pub fn extend(&mut self, other: &PointSet) {
         assert_eq!(self.dim, other.dim);

@@ -51,7 +51,8 @@ fn print_help() {
         "sfc-part — distributed geometric partitioner (SFC orders)\n\
          commands: partition | distributed | dynamic | queries | graph | spmv | info\n\
          common flags: --points N --dim D --parts P --curve morton|hilbert\n\
-         --threads T (0 or absent = all cores; results are identical for any T)\n\
+         --threads T (0 or absent = all cores; results are identical for any T;\n\
+                      under `distributed`, T = worker share per simulated rank)\n\
          --splitter midpoint|median-sort|median-sample|median-select --bucket B\n\
          --dist uniform|clustered --seed S --config FILE"
     );
@@ -125,23 +126,27 @@ fn cmd_distributed(args: &Args) -> Result<()> {
     let ps = workload(args);
     let ranks = args.usize("ranks", 4);
     let k1 = args.usize("k1", 4 * ranks);
-    let (outs, rep) = sfc_part::runtime_sim::run_ranks(
+    // Hybrid rank×thread execution: under `distributed`, `--threads` is
+    // the worker share **per rank** on the persistent pool (0 or absent
+    // = cores/ranks, at least 1), mirroring MPI ranks × pthreads.
+    let threads_per_rank = args.usize("threads", 0);
+    let (outs, rep) = sfc_part::runtime_sim::run_ranks_threaded(
         ranks,
+        threads_per_rank,
         sfc_part::runtime_sim::CostModel::default(),
         |ctx| {
-            let idx: Vec<u32> = (0..ps.len() as u32)
-                .filter(|i| (*i as usize) % ctx.n_ranks == ctx.rank)
-                .collect();
-            let local = ps.gather(&idx);
+            let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
             let dp = sfc_part::partition::distributed::distributed_partition(ctx, &local, &cfg, k1);
-            (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs)
+            (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs, ctx.threads)
         },
     );
+    let share = outs.first().map(|o| o.4).unwrap_or(0);
     let max_n = outs.iter().map(|o| o.0).max().unwrap_or(0);
     let mean_n = ps.len() as f64 / ranks as f64;
     println!(
-        "{} ranks: shard imbalance {:.3}, sim_time {:.4}s (compute {:.4}s + net {:.4}s), msgs {}, bytes {}",
+        "{} ranks x {} threads/rank: shard imbalance {:.3}, sim_time {:.4}s (compute {:.4}s + net {:.4}s), msgs {}, bytes {}",
         ranks,
+        share,
         max_n as f64 / mean_n - 1.0,
         rep.sim_time(),
         rep.max_busy(),

@@ -12,6 +12,18 @@
 //! shared-memory builder and traverses it — after which, for any two
 //! ranks `i < j`, all SFC keys on `i` are strictly less than those on `j`
 //! (§III-C's global order invariant, asserted in tests).
+//!
+//! ## Cost structure of the top build
+//!
+//! Each active top leaf carries the **index list** of the local points it
+//! contains. A split touches only its own leaf's list (one blocked pass
+//! that partitions the list and accumulates the child weight/boxes), so
+//! every point is visited O(1) times per tree *level* — not per split as
+//! a membership-array scan would. The per-split reductions (child count,
+//! weight, and both child boxes) travel in **one** fused allreduce, and
+//! all local passes run on the rank's share of the persistent thread
+//! pool (`ctx.threads`) with a fixed block structure, which keeps
+//! [`DistPartition`] bit-identical for every thread count.
 
 use crate::geom::bbox::BoundingBox;
 use crate::geom::point::PointSet;
@@ -21,8 +33,16 @@ use crate::partition::knapsack::greedy_knapsack_buckets;
 use crate::partition::partitioner::{PartitionConfig, Partitioner};
 use crate::runtime_sim::collectives::ReduceOp;
 use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
 use crate::sfc::key::child_key;
 use crate::util::timer::Stopwatch;
+
+/// Fixed reduction block (points) for the per-leaf passes of the top
+/// build. Like `knapsack::SCAN_BLOCK`, the block structure depends only
+/// on the list length — never on the thread count — so every f64 sum is
+/// performed in the same association for any `ctx.threads`, keeping the
+/// output bit-identical across thread counts.
+pub const TOP_BLOCK: usize = 4096;
 
 /// Per-rank result of a distributed partition.
 #[derive(Clone, Debug)]
@@ -54,9 +74,22 @@ struct TopNode {
     right: i32,
 }
 
+/// One blocked pass over a leaf's index list: stable-partition the list
+/// around `value` along `d` while accumulating the left weight and both
+/// child bounding boxes.
+struct SplitPass {
+    left: Vec<u32>,
+    right: Vec<u32>,
+    lw: f64,
+    lbox: BoundingBox,
+    rbox: BoundingBox,
+}
+
 /// Distributed partition: returns this rank's migrated shard plus stats.
 /// `cfg.parts` is ignored (parts = ranks); `k1` is the top-node budget
-/// (`K1 ≥ P`; pass 0 for `4·P`).
+/// (`K1 ≥ P`; pass 0 for `4·P`). Local data-parallel phases run on the
+/// rank's pool share (`ctx.threads`); the result is bit-identical for
+/// every thread count at a fixed rank count.
 pub fn distributed_partition(
     ctx: &mut RankCtx,
     local: &PointSet,
@@ -64,6 +97,7 @@ pub fn distributed_partition(
     k1: usize,
 ) -> DistPartition {
     let p = ctx.n_ranks;
+    let threads = ctx.threads;
     let dim = local.dim;
     let k1 = if k1 == 0 { 4 * p } else { k1.max(p) };
     let sw = Stopwatch::start();
@@ -79,8 +113,6 @@ pub fn distributed_partition(
     let root_bbox = BoundingBox { lo, hi };
 
     // ---- Collective top-K1 build ----
-    // Per-point membership in the active node set.
-    let mut member: Vec<u32> = vec![0; local.len()];
     let total_w = ctx.allreduce1(ReduceOp::Sum, local.total_weight());
     let total_c = ctx.allreduce1(ReduceOp::Sum, local.len() as f64) as u64;
     let mut nodes = vec![TopNode {
@@ -94,77 +126,110 @@ pub fn distributed_partition(
         left: -1,
         right: -1,
     }];
-    let mut leaves: Vec<u32> = vec![0];
+    // Active leaves carry the index list of this rank's points inside
+    // them; retired leaves (degenerate: zero-width box or one-sided
+    // split) keep theirs too — they still own points and must reach the
+    // knapsack.
+    let mut active: Vec<(u32, Vec<u32>)> = vec![(0, (0..local.len() as u32).collect())];
+    let mut retired: Vec<(u32, Vec<u32>)> = Vec::new();
     let use_median = !matches!(cfg.splitter.top, SplitterKind::Midpoint);
 
-    while leaves.len() < k1 {
-        // All ranks deterministically pick the heaviest splittable leaf.
-        let Some(pos) = leaves
-            .iter()
-            .enumerate()
-            .filter(|(_, &l)| {
-                nodes[l as usize].count > 1 && nodes[l as usize].bbox.volume() >= 0.0
-            })
-            .max_by(|a, b| {
-                nodes[*a.1 as usize].weight.partial_cmp(&nodes[*b.1 as usize].weight).unwrap()
-            })
-            .map(|(i, _)| i)
-        else {
-            break;
-        };
-        let leaf = leaves[pos];
+    while active.len() + retired.len() < k1 {
+        // All ranks deterministically pick the heaviest splittable leaf
+        // (weights are allreduce results, hence bit-identical on every
+        // rank; total_cmp is total even for NaN weights).
+        let mut pos: Option<usize> = None;
+        for (i, (leaf, _)) in active.iter().enumerate() {
+            if nodes[*leaf as usize].count <= 1 {
+                continue;
+            }
+            let better = match pos {
+                None => true,
+                Some(j) => {
+                    let best = nodes[active[j].0 as usize].weight;
+                    nodes[*leaf as usize].weight.total_cmp(&best).is_ge()
+                }
+            };
+            if better {
+                pos = Some(i);
+            }
+        }
+        let Some(pos) = pos else { break };
+        let (leaf, list) = active.swap_remove(pos);
         let node = nodes[leaf as usize].clone();
         let d = node.bbox.widest_dim();
         if node.bbox.width(d) <= 0.0 {
-            // Degenerate (duplicates): stop splitting this leaf.
-            leaves.swap_remove(pos);
-            if leaves.is_empty() {
-                break;
-            }
+            // Degenerate (duplicates): this leaf cannot split, but its
+            // points still need an owner downstream.
+            retired.push((leaf, list));
             continue;
         }
         // Split value: midpoint locally, median by distributed bisection.
         let value = if use_median {
-            distributed_median(ctx, local, &member, leaf, d, &node.bbox, node.count)
+            distributed_median(ctx, local, &list, d, &node.bbox, node.count, threads)
         } else {
             node.bbox.midpoint(d)
         };
-        // Count the lower side to validate the split.
-        let local_lower = (0..local.len())
-            .filter(|&i| member[i] == leaf && local.coord(i, d) <= value)
-            .count() as f64;
-        let lower = ctx.allreduce1(ReduceOp::Sum, local_lower) as u64;
-        if lower == 0 || lower == node.count {
-            leaves.swap_remove(pos);
-            if leaves.is_empty() {
-                break;
+        // One blocked pass over the leaf's points: split the index list
+        // and accumulate the left weight and both child boxes. Blocks
+        // are combined in order, so the pass is thread-count-invariant.
+        let passes = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |lo, hi| {
+            let mut out = SplitPass {
+                left: Vec::new(),
+                right: Vec::new(),
+                lw: 0.0,
+                lbox: BoundingBox::empty(dim),
+                rbox: BoundingBox::empty(dim),
+            };
+            for &i in &list[lo..hi] {
+                let i = i as usize;
+                if local.coord(i, d) <= value {
+                    out.lw += local.weights[i] as f64;
+                    out.lbox.grow(local.point(i));
+                    out.left.push(i as u32);
+                } else {
+                    out.rbox.grow(local.point(i));
+                    out.right.push(i as u32);
+                }
             }
-            continue;
-        }
-        // Weights/boxes of children.
+            out
+        });
+        // left + right together hold exactly the leaf's list.
+        let mut left = Vec::with_capacity(list.len());
+        let mut right = Vec::with_capacity(list.len());
         let mut lw = 0.0f64;
         let mut lbox = BoundingBox::empty(dim);
         let mut rbox = BoundingBox::empty(dim);
-        for i in 0..local.len() {
-            if member[i] != leaf {
-                continue;
-            }
-            if local.coord(i, d) <= value {
-                lw += local.weights[i] as f64;
-                lbox.grow(local.point(i));
-            } else {
-                rbox.grow(local.point(i));
-            }
+        for b in passes {
+            left.extend_from_slice(&b.left);
+            right.extend_from_slice(&b.right);
+            lw += b.lw;
+            lbox.merge(&b.lbox);
+            rbox.merge(&b.rbox);
         }
-        let lw = ctx.allreduce1(ReduceOp::Sum, lw);
-        let llo = ctx.allreduce_f64(ReduceOp::Min, &lbox.lo);
-        let lhi = ctx.allreduce_f64(ReduceOp::Max, &lbox.hi);
-        let rlo = ctx.allreduce_f64(ReduceOp::Min, &rbox.lo);
-        let rhi = ctx.allreduce_f64(ReduceOp::Max, &rbox.hi);
-
+        // One fused collective where the scan-based build used six:
+        // lower count + left weight (Sum), both child boxes (Min/Max).
+        let fused = ctx.allreduce_f64_multi(&[
+            (ReduceOp::Sum, &[left.len() as f64]),
+            (ReduceOp::Sum, &[lw]),
+            (ReduceOp::Min, &lbox.lo),
+            (ReduceOp::Max, &lbox.hi),
+            (ReduceOp::Min, &rbox.lo),
+            (ReduceOp::Max, &rbox.hi),
+        ]);
+        let lower = fused[0][0] as u64;
+        let lw = fused[1][0];
+        if lower == 0 || lower == node.count {
+            // One-sided split (pathological splitter value): retire the
+            // leaf with its list reassembled.
+            let mut list = left;
+            list.extend_from_slice(&right);
+            retired.push((leaf, list));
+            continue;
+        }
         let li = nodes.len() as u32;
         nodes.push(TopNode {
-            bbox: BoundingBox { lo: llo, hi: lhi },
+            bbox: BoundingBox { lo: fused[2].clone(), hi: fused[3].clone() },
             weight: lw,
             count: lower,
             key: child_key(node.key, node.depth, false),
@@ -176,7 +241,7 @@ pub fn distributed_partition(
         });
         let ri = nodes.len() as u32;
         nodes.push(TopNode {
-            bbox: BoundingBox { lo: rlo, hi: rhi },
+            bbox: BoundingBox { lo: fused[4].clone(), hi: fused[5].clone() },
             weight: node.weight - lw,
             count: node.count - lower,
             key: child_key(node.key, node.depth, true),
@@ -193,40 +258,45 @@ pub fn distributed_partition(
             n.left = li as i32;
             n.right = ri as i32;
         }
-        // Update local membership.
-        for i in 0..local.len() {
-            if member[i] == leaf {
-                member[i] = if local.coord(i, d) <= value { li } else { ri };
-            }
-        }
-        leaves.swap_remove(pos);
-        leaves.push(li);
-        leaves.push(ri);
+        active.push((li, left));
+        active.push((ri, right));
     }
 
     // ---- Order leaves by SFC key, knapsack to ranks ----
-    leaves.sort_by_key(|&l| nodes[l as usize].key);
-    let leaf_weights: Vec<f64> = leaves.iter().map(|&l| nodes[l as usize].weight).collect();
+    let mut leaves = active;
+    leaves.append(&mut retired);
+    leaves.sort_by_key(|(l, _)| nodes[*l as usize].key);
+    let leaf_weights: Vec<f64> = leaves.iter().map(|(l, _)| nodes[*l as usize].weight).collect();
     let leaf_rank = greedy_knapsack_buckets(&leaf_weights, p);
-    // leaf id -> owning rank
-    let mut owner = std::collections::HashMap::new();
-    for (i, &l) in leaves.iter().enumerate() {
-        owner.insert(l, leaf_rank[i]);
-    }
     let owned_leaves = leaf_rank.iter().filter(|&&r| r as usize == ctx.rank).count();
     let top_secs = sw.secs();
 
     // ---- Migrate (transfer_t_l_t) ----
     let sw = Stopwatch::start();
-    let dest: Vec<u32> = member.iter().map(|m| owner[m]).collect();
-    let mut migrated = transfer_t_l_t(ctx, local, &dest, crate::runtime_sim::collectives::MAX_MSG_SIZE);
+    // u32::MAX sentinel: a point missing from every leaf list (a
+    // bookkeeping regression) must fail loudly in pack(), not silently
+    // migrate to rank 0.
+    let mut dest: Vec<u32> = vec![u32::MAX; local.len()];
+    for ((_, list), &r) in leaves.iter().zip(&leaf_rank) {
+        for &i in list {
+            dest[i as usize] = r;
+        }
+    }
+    debug_assert!(
+        dest.iter().all(|&r| (r as usize) < p),
+        "point lost from every top-leaf index list"
+    );
+    let mut migrated =
+        transfer_t_l_t(ctx, local, &dest, crate::runtime_sim::collectives::MAX_MSG_SIZE);
     let migrate_secs = sw.secs();
 
     // ---- Local ordering (point_order_local_subtree) ----
     let sw = Stopwatch::start();
     let mut keys = Vec::new();
     if !migrated.is_empty() {
-        let local_cfg = PartitionConfig { parts: 1, ..cfg.clone() };
+        // The local build runs on this rank's pool share; the multi-job
+        // pool lets all ranks' builds proceed thread-parallel at once.
+        let local_cfg = PartitionConfig { parts: 1, threads, ..cfg.clone() };
         let (plan, tree) = Partitioner::new(local_cfg).partition_with_tree(&migrated);
         // Reorder the shard into local curve order.
         migrated = migrated.permute(&plan.perm);
@@ -252,26 +322,30 @@ pub fn distributed_partition(
     DistPartition { local: migrated, keys, top_secs, migrate_secs, local_secs, owned_leaves }
 }
 
-/// Distributed median along `d` for points with `member == leaf`:
-/// bisection on the value range, counting with allreduce (≈40 rounds).
+/// Distributed median along `d` for the points in `list`: bisection on
+/// the value range, counting with allreduce (≈40 rounds). Counting
+/// passes only touch the leaf's own index list, on the rank's pool
+/// share (integer counts, so any summation order is exact).
 fn distributed_median(
     ctx: &mut RankCtx,
     local: &PointSet,
-    member: &[u32],
-    leaf: u32,
+    list: &[u32],
     d: usize,
     bbox: &BoundingBox,
     count: u64,
+    threads: usize,
 ) -> f64 {
     let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
     let target = count / 2;
     let mut mid = 0.5 * (lo + hi);
     for _ in 0..40 {
         mid = 0.5 * (lo + hi);
-        let local_cnt = (0..local.len())
-            .filter(|&i| member[i] == leaf && local.coord(i, d) <= mid)
-            .count() as f64;
-        let cnt = ctx.allreduce1(ReduceOp::Sum, local_cnt) as u64;
+        let local_cnt: u64 = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |lo, hi| {
+            list[lo..hi].iter().filter(|&&i| local.coord(i as usize, d) <= mid).count() as u64
+        })
+        .into_iter()
+        .sum();
+        let cnt = ctx.allreduce1(ReduceOp::Sum, local_cnt as f64) as u64;
         if cnt == target {
             break;
         }
@@ -290,12 +364,10 @@ fn distributed_median(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime_sim::{run_ranks, CostModel};
+    use crate::runtime_sim::{run_ranks, run_ranks_threaded, CostModel};
 
     fn shard(ps: &PointSet, rank: usize, p: usize) -> PointSet {
-        let idx: Vec<u32> =
-            (0..ps.len() as u32).filter(|i| (*i as usize) % p == rank).collect();
-        ps.gather(&idx)
+        ps.mod_shard(rank, p)
     }
 
     #[test]
@@ -362,6 +434,61 @@ mod tests {
             if let (Some(a), Some(b)) = (max_i, min_j) {
                 assert!(a < b, "rank {i} max {a} !< rank {} min {b}", i + 1);
             }
+        }
+    }
+
+    #[test]
+    fn duplicate_point_mass_survives_top_build() {
+        // Regression: a zero-width (all-duplicates) heaviest leaf used to
+        // be dropped from the leaf set when selected, leaving its points
+        // with no owning rank (panic at migration). It must be retired
+        // and still reach the knapsack.
+        let mut global = PointSet::new(2);
+        for i in 0..600u64 {
+            // 500 copies of one site + 100 unique points.
+            if i < 500 {
+                global.push(&[0.25, 0.25], i, 1.0);
+            } else {
+                let t = (i - 500) as f64 / 100.0;
+                global.push(&[0.5 + 0.4 * t, 0.9 - 0.3 * t], i, 1.0);
+            }
+        }
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 16);
+            dp.local.ids.clone()
+        });
+        let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..600).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn thread_count_never_changes_distributed_output() {
+        // Large enough that per-rank leaf lists cross TOP_BLOCK, so the
+        // blocked parallel passes (not just the serial fallback) are
+        // exercised.
+        let global = PointSet::clustered(40_000, 3, 0.6, 31);
+        let p = 4;
+        let run = |tpr: usize| {
+            run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let cfg = PartitionConfig {
+                    splitter: crate::kdtree::splitter::SplitterConfig::uniform(
+                        SplitterKind::MedianSort,
+                    ),
+                    ..Default::default()
+                };
+                let dp = distributed_partition(ctx, &local, &cfg, 16);
+                (dp.local.ids.clone(), dp.keys.clone(), dp.owned_leaves)
+            })
+            .0
+        };
+        let base = run(1);
+        for tpr in [2usize, 4] {
+            assert_eq!(run(tpr), base, "distributed output diverged at {tpr} threads/rank");
         }
     }
 }

@@ -17,7 +17,7 @@
 //! in exactly the same association for every `threads`, making the output
 //! **bit-identical across thread counts** (including `threads = 1`).
 
-use crate::runtime_sim::threadpool::parallel_map_ranges;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
 
 /// Fixed reduction/scan block size (items). Independent of the thread
 /// count by design: this is what pins the floating-point association.
@@ -43,17 +43,6 @@ impl KnapsackWeight for f64 {
     }
 }
 
-#[inline]
-fn block_sum<W: KnapsackWeight>(weights: &[W], b: usize) -> f64 {
-    let lo = b * SCAN_BLOCK;
-    let hi = (lo + SCAN_BLOCK).min(weights.len());
-    let mut s = 0.0f64;
-    for &w in &weights[lo..hi] {
-        s += w.as_f64();
-    }
-    s
-}
-
 /// Slice `weights` (in curve order) into `parts` contiguous chunks using
 /// up to `threads` workers. Returns the part id of each item.
 ///
@@ -72,19 +61,16 @@ pub fn greedy_knapsack_weights<W: KnapsackWeight>(
         return Vec::new();
     }
     let n_blocks = n.div_ceil(SCAN_BLOCK);
-    let threads = threads.max(1).min(n_blocks);
+    let threads = threads.max(1);
 
-    // ---- Phase 1: per-thread partial sums (per-block reduction) ----
-    let block_sums: Vec<f64> = if threads > 1 {
-        parallel_map_ranges(threads, n_blocks, |_t, lo, hi| {
-            (lo..hi).map(|b| block_sum(weights, b)).collect::<Vec<f64>>()
-        })
-        .into_iter()
-        .flatten()
-        .collect()
-    } else {
-        (0..n_blocks).map(|b| block_sum(weights, b)).collect()
-    };
+    // ---- Phase 1: per-block partial sums (fixed-block reduction) ----
+    let block_sums: Vec<f64> = parallel_map_blocks(threads, n, SCAN_BLOCK, |lo, hi| {
+        let mut s = 0.0f64;
+        for &w in &weights[lo..hi] {
+            s += w.as_f64();
+        }
+        s
+    });
 
     // ---- Phase 2: exclusive prefix scan over the block sums ----
     let mut offsets = vec![0.0f64; n_blocks + 1];
@@ -99,38 +85,27 @@ pub fn greedy_knapsack_weights<W: KnapsackWeight>(
     let target = total / parts as f64;
 
     // ---- Phase 3: per-block assignment from the scanned offsets ----
-    let assign_blocks = |blo: usize, bhi: usize| -> Vec<u32> {
-        let lo = blo * SCAN_BLOCK;
-        let hi = (bhi * SCAN_BLOCK).min(n);
+    // Keep the in-block sum in its own accumulator (the same association
+    // phase 1 used) and add the scanned offset at use time: then the
+    // last midpoint of block b is ≤ offsets[b+1] ≤ the first midpoint of
+    // block b+1 even in floating point, so the assignment stays monotone
+    // across block boundaries.
+    let chunks = parallel_map_blocks(threads, n, SCAN_BLOCK, |lo, hi| {
+        let b = lo / SCAN_BLOCK;
         let mut out = Vec::with_capacity(hi - lo);
-        for b in blo..bhi {
-            let lo = b * SCAN_BLOCK;
-            let hi = (lo + SCAN_BLOCK).min(n);
-            // Keep the in-block sum in its own accumulator (the same
-            // association `block_sum` used) and add the scanned offset
-            // at use time: then the last midpoint of block b is ≤
-            // offsets[b+1] ≤ the first midpoint of block b+1 even in
-            // floating point, so the assignment stays monotone across
-            // block boundaries.
-            let mut local = 0.0f64;
-            for &w in &weights[lo..hi] {
-                let mid = offsets[b] + (local + 0.5 * w.as_f64());
-                out.push(((mid / target) as usize).min(parts - 1) as u32);
-                local += w.as_f64();
-            }
+        let mut local = 0.0f64;
+        for &w in &weights[lo..hi] {
+            let mid = offsets[b] + (local + 0.5 * w.as_f64());
+            out.push(((mid / target) as usize).min(parts - 1) as u32);
+            local += w.as_f64();
         }
         out
-    };
-    if threads > 1 {
-        let chunks = parallel_map_ranges(threads, n_blocks, |_t, lo, hi| assign_blocks(lo, hi));
-        let mut out = Vec::with_capacity(n);
-        for c in chunks {
-            out.extend_from_slice(&c);
-        }
-        out
-    } else {
-        assign_blocks(0, n_blocks)
+    });
+    let mut out = Vec::with_capacity(n);
+    for c in chunks {
+        out.extend_from_slice(&c);
     }
+    out
 }
 
 /// Single-threaded entry point kept for callers without a thread budget.

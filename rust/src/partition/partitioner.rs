@@ -14,7 +14,7 @@ use crate::kdtree::builder::{BuildStats, KdTreeBuilder};
 use crate::kdtree::node::KdTree;
 use crate::kdtree::splitter::SplitterConfig;
 use crate::partition::knapsack::{greedy_knapsack_parallel, part_loads};
-use crate::runtime_sim::threadpool::default_threads;
+use crate::runtime_sim::threadpool::{default_threads, parallel_for, parallel_map_ranges};
 use crate::sfc::traverse::{assign_sfc_parallel, TraverseStats};
 use crate::sfc::Curve;
 use crate::util::timer::Stopwatch;
@@ -98,6 +98,56 @@ impl PartitionPlan {
     }
 }
 
+/// Below this size the output gather/scatter run serially — pool
+/// dispatch costs more than the copies.
+const PAR_OUTPUT_MIN: usize = 1 << 14;
+
+/// Range-parallel gather `out[pos] = f(perm[pos])`. Per-range chunks are
+/// concatenated in thread order, so the result is identical for every
+/// thread count. This is the knapsack output gather that shows up at
+/// 10M+ points.
+fn gather_in_order<T, F>(threads: usize, perm: &[u32], f: F) -> Vec<T>
+where
+    T: Send + Copy,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || perm.len() < PAR_OUTPUT_MIN {
+        return perm.iter().map(|&pi| f(pi as usize)).collect();
+    }
+    let chunks = parallel_map_ranges(threads, perm.len(), |_t, lo, hi| {
+        perm[lo..hi].iter().map(|&pi| f(pi as usize)).collect::<Vec<T>>()
+    });
+    let mut out = Vec::with_capacity(perm.len());
+    for c in chunks {
+        out.extend_from_slice(&c);
+    }
+    out
+}
+
+/// Range-parallel scatter `out[perm[pos]] = vals[pos]`.
+fn scatter_by_perm(threads: usize, perm: &[u32], vals: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(perm.len(), vals.len());
+    if threads <= 1 || perm.len() < PAR_OUTPUT_MIN {
+        for (pos, &pi) in perm.iter().enumerate() {
+            out[pi as usize] = vals[pos];
+        }
+        return;
+    }
+    struct OutPtr(*mut u32);
+    unsafe impl Sync for OutPtr {}
+    let ptr = OutPtr(out.as_mut_ptr());
+    let ptr = &ptr;
+    parallel_for(threads, perm.len(), 8192, |_t, lo, hi| {
+        for (&pi, &v) in perm[lo..hi].iter().zip(&vals[lo..hi]) {
+            // SAFETY: `perm` is a permutation — every target index is
+            // written by exactly one position — and `out` is only read
+            // after the dispatch completes (parallel_for blocks until
+            // all ranges ran).
+            unsafe { *ptr.0.add(pi as usize) = v };
+        }
+    });
+}
+
 /// The shared-memory partitioner (one process, `threads` workers).
 pub struct Partitioner {
     pub cfg: PartitionConfig,
@@ -124,19 +174,19 @@ impl Partitioner {
         // SFCTraverse
         let traverse_stats = assign_sfc_parallel(&mut tree, self.cfg.curve, self.cfg.threads);
         // GreedyKnapsack over points in curve order: per-thread partial
-        // sums + an exclusive prefix scan (bit-identical to serial).
+        // sums + an exclusive prefix scan (bit-identical to serial). The
+        // weight gather, part scatter, and id gather around it are
+        // range-parallel too.
         let ksw = Stopwatch::start();
-        let w_in_order: Vec<f32> =
-            tree.perm.iter().map(|&pi| ps.weights[pi as usize]).collect();
-        let part_in_order = greedy_knapsack_parallel(&w_in_order, self.cfg.parts, self.cfg.threads);
+        let threads = self.cfg.threads.max(1);
+        let w_in_order: Vec<f32> = gather_in_order(threads, &tree.perm, |pi| ps.weights[pi]);
+        let part_in_order = greedy_knapsack_parallel(&w_in_order, self.cfg.parts, threads);
         let knapsack_secs = ksw.secs();
 
         let mut part_of = vec![0u32; ps.len()];
-        for (pos, &pi) in tree.perm.iter().enumerate() {
-            part_of[pi as usize] = part_in_order[pos];
-        }
+        scatter_by_perm(threads, &tree.perm, &part_in_order, &mut part_of);
         let loads = part_loads(&part_of, &ps.weights, self.cfg.parts);
-        let ids_in_order: Vec<u64> = tree.perm.iter().map(|&pi| ps.ids[pi as usize]).collect();
+        let ids_in_order: Vec<u64> = gather_in_order(threads, &tree.perm, |pi| ps.ids[pi]);
         let plan = PartitionPlan {
             perm: tree.perm.clone(),
             ids_in_order,

@@ -3,9 +3,12 @@
 //! The paper runs on MPI processes × pthreads on Intel KNL nodes. This
 //! box has one core and no MPI, so the substrate is reproduced in-process:
 //!
-//! * [`threadpool`] — SIMD-style parallel-for over worker threads
-//!   coordinated by atomic fetch-add counters (the paper's §III "low
-//!   overhead synchronization" style).
+//! * [`threadpool`] — SIMD-style parallel-for over a persistent
+//!   **multi-job** worker pool coordinated by atomic fetch-add counters
+//!   (the paper's §III "low overhead synchronization" style). Every
+//!   simulated rank dispatches its data-parallel sections as its own
+//!   pool job with a bounded worker share, so rank-local phases run
+//!   thread-parallel concurrently across ranks (MPI × pthreads).
 //! * [`fabric`] — per-rank mailboxes with real message passing; every
 //!   byte that would have crossed the Omni-Path network is counted.
 //! * [`collectives`] — barrier / broadcast / reduce / allreduce /
@@ -31,14 +34,46 @@ pub use cost::{CostModel, SimReport};
 pub use fabric::Fabric;
 pub use rank::RankCtx;
 
-/// Run `body` on `p` simulated ranks (as OS threads) and collect each
-/// rank's return value plus the run's communication/timing report.
+/// Run `body` on `p` simulated ranks and collect each rank's return
+/// value plus the run's communication/timing report. Equivalent to
+/// [`run_ranks_threaded`] with the automatic pool share
+/// (`available cores / p`, at least 1 worker per rank).
 pub fn run_ranks<T, F>(p: usize, cost: CostModel, body: F) -> (Vec<T>, SimReport)
 where
     T: Send,
     F: Fn(&mut RankCtx) -> T + Sync,
 {
+    run_ranks_threaded(p, 0, cost, body)
+}
+
+/// Run `body` on `p` simulated ranks, giving each rank a share of
+/// `threads_per_rank` workers on the persistent pool (`0` = automatic:
+/// `available cores / p`, at least 1).
+///
+/// Each rank needs its own OS thread — rank bodies block in collectives
+/// (`recv` on the fabric), so they must stay independently schedulable;
+/// parking a blocked rank on a pool worker would deadlock the pool.
+/// What makes the runtime *pool-aware* is that every rank's
+/// data-parallel sections (`parallel_for` et al., bounded by
+/// `ctx.threads`) run as concurrent jobs of the shared multi-job pool,
+/// so a rank's local tree build is thread-parallel without contending
+/// on a global dispatch lock — the paper's MPI × pthreads composition.
+pub fn run_ranks_threaded<T, F>(
+    p: usize,
+    threads_per_rank: usize,
+    cost: CostModel,
+    body: F,
+) -> (Vec<T>, SimReport)
+where
+    T: Send,
+    F: Fn(&mut RankCtx) -> T + Sync,
+{
     assert!(p >= 1);
+    let share = if threads_per_rank == 0 {
+        (threadpool::default_threads() / p).max(1)
+    } else {
+        threads_per_rank
+    };
     let fabric = Fabric::new(p);
     let mut results: Vec<Option<T>> = (0..p).map(|_| None).collect();
     std::thread::scope(|s| {
@@ -49,7 +84,7 @@ where
                 // Panic in one rank poisons the fabric so peers blocked in
                 // recv abort instead of deadlocking (MPI-style abort).
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let mut ctx = RankCtx::new(r, p, fabric);
+                    let mut ctx = RankCtx::new(r, p, share, fabric);
                     let t0 = crate::util::timer::thread_cpu_time();
                     let out = body(&mut ctx);
                     let busy = crate::util::timer::thread_cpu_time() - t0;
@@ -85,5 +120,30 @@ mod tests {
     fn single_rank_works() {
         let (vals, _) = run_ranks(1, CostModel::default(), |ctx| ctx.n_ranks);
         assert_eq!(vals, vec![1]);
+    }
+
+    #[test]
+    fn ranks_carry_their_pool_share() {
+        let (vals, _) = run_ranks_threaded(2, 3, CostModel::default(), |ctx| ctx.threads);
+        assert_eq!(vals, vec![3, 3]);
+        // Auto share is at least one worker per rank.
+        let (vals, _) = run_ranks(4, CostModel::default(), |ctx| ctx.threads);
+        assert!(vals.iter().all(|&t| t >= 1));
+    }
+
+    #[test]
+    fn ranks_use_pool_concurrently() {
+        // Each rank runs a pool-backed parallel section between two
+        // collectives; the multi-job pool must serve all ranks without
+        // deadlock or cross-talk.
+        let (vals, _) = run_ranks_threaded(4, 2, CostModel::default(), |ctx| {
+            ctx.barrier();
+            let partials = threadpool::parallel_map_ranges(ctx.threads, 1000, |_t, lo, hi| {
+                (lo..hi).map(|i| i as u64).sum::<u64>()
+            });
+            ctx.barrier();
+            partials.iter().sum::<u64>()
+        });
+        assert!(vals.iter().all(|&s| s == 499_500));
     }
 }

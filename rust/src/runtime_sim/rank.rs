@@ -5,25 +5,31 @@ use crate::runtime_sim::fabric::Fabric;
 use crate::util::rng::SplitMix64;
 
 /// Handle given to each simulated rank. Carries identity, a deterministic
-/// per-rank RNG stream, the fabric, and a monotonically increasing tag
-/// epoch so consecutive collectives never alias.
+/// per-rank RNG stream, the fabric, the rank's worker share of the
+/// persistent thread pool, and a monotonically increasing tag epoch so
+/// consecutive collectives never alias.
 pub struct RankCtx<'f> {
     pub rank: usize,
     pub n_ranks: usize,
+    /// This rank's pool share: the `threads` bound the rank passes to
+    /// `parallel_for`/`parallel_map_ranges` for its local data-parallel
+    /// phases (the paper's pthreads-per-MPI-process). The multi-job pool
+    /// serves all ranks' shares concurrently.
+    pub threads: usize,
     pub fabric: &'f Fabric,
     pub rng: SplitMix64,
     pub(crate) epoch: u32,
 }
 
 impl<'f> RankCtx<'f> {
-    pub fn new(rank: usize, n_ranks: usize, fabric: &'f Fabric) -> Self {
+    pub fn new(rank: usize, n_ranks: usize, threads: usize, fabric: &'f Fabric) -> Self {
         // Same derivation on every rank: split a base stream `rank` times.
         let mut base = SplitMix64::new(0xfab_00d ^ n_ranks as u64);
         let mut rng = base.split();
         for _ in 0..rank {
             rng = base.split();
         }
-        RankCtx { rank, n_ranks, fabric, rng, epoch: 0 }
+        RankCtx { rank, n_ranks, threads: threads.max(1), fabric, rng, epoch: 0 }
     }
 
     /// Fresh tag namespace for one collective call. Point-to-point user
@@ -72,9 +78,9 @@ mod tests {
     fn per_rank_rng_streams_differ_and_are_deterministic() {
         use crate::util::rng::Rng;
         let f = Fabric::new(3);
-        let mut a0 = RankCtx::new(0, 3, &f);
-        let mut a1 = RankCtx::new(1, 3, &f);
-        let mut b0 = RankCtx::new(0, 3, &f);
+        let mut a0 = RankCtx::new(0, 3, 1, &f);
+        let mut a1 = RankCtx::new(1, 3, 1, &f);
+        let mut b0 = RankCtx::new(0, 3, 1, &f);
         let x0 = a0.rng.next_u64();
         let x1 = a1.rng.next_u64();
         assert_ne!(x0, x1);
@@ -84,7 +90,7 @@ mod tests {
     #[test]
     fn epochs_increase() {
         let f = Fabric::new(1);
-        let mut c = RankCtx::new(0, 1, &f);
+        let mut c = RankCtx::new(0, 1, 1, &f);
         let e1 = c.next_epoch();
         let e2 = c.next_epoch();
         assert!(e2 > e1);

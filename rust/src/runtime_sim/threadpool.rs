@@ -25,6 +25,15 @@
 //! thread-count-independent arithmetic (fixed block structure, results
 //! gathered in task order), so `threads = 1` and `threads = 8` produce
 //! bit-identical outputs.
+//!
+//! The pool is **multi-job**: any number of client threads (in
+//! particular the simulated ranks of [`super::run_ranks`]) may have jobs
+//! in flight at once, each with its own worker cap (`concurrency − 1`).
+//! Workers pick claimable jobs round-robin, so concurrent rank-local
+//! builds share the workers fairly instead of serializing behind a
+//! single dispatch lock — the rank×thread hybrid execution the paper
+//! runs as MPI × pthreads. A job never stalls: its caller always
+//! participates, so even with zero free workers every job completes.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -37,20 +46,35 @@ pub fn default_threads() -> usize {
 
 type Job = &'static (dyn Fn(usize) + Sync);
 
-struct PoolState {
-    /// Bumped once per dispatched job; workers key off it.
-    epoch: u64,
+/// One in-flight job. Slots are reused: `job == None` marks a free slot.
+struct JobSlot {
     job: Option<Job>,
-    /// Next unclaimed work id of the current job.
+    /// Next unclaimed work id.
     next: usize,
-    /// Total work ids of the current job.
+    /// Total work ids.
     total: usize,
     /// Max workers allowed to engage (concurrency − 1; caller is the +1).
     limit: usize,
-    /// Workers currently executing the current job.
+    /// Workers currently executing this job.
     running: usize,
     /// A worker's work-item panicked.
     panicked: bool,
+}
+
+impl JobSlot {
+    fn free() -> JobSlot {
+        JobSlot { job: None, next: 0, total: 0, limit: 0, running: 0, panicked: false }
+    }
+
+    fn claimable(&self) -> bool {
+        self.job.is_some() && self.next < self.total && self.running < self.limit
+    }
+}
+
+struct PoolState {
+    jobs: Vec<JobSlot>,
+    /// Round-robin scan start so concurrent jobs share workers fairly.
+    rr: usize,
 }
 
 thread_local! {
@@ -65,8 +89,6 @@ pub struct Pool {
     state: Mutex<PoolState>,
     work_cv: Condvar,
     done_cv: Condvar,
-    /// Serializes dispatches: one job in flight at a time.
-    dispatch: Mutex<()>,
     workers: usize,
 }
 
@@ -76,18 +98,9 @@ impl Pool {
         static POOL: OnceLock<Pool> = OnceLock::new();
         static SPAWN: std::sync::Once = std::sync::Once::new();
         let pool = POOL.get_or_init(|| Pool {
-            state: Mutex::new(PoolState {
-                epoch: 0,
-                job: None,
-                next: 0,
-                total: 0,
-                limit: 0,
-                running: 0,
-                panicked: false,
-            }),
+            state: Mutex::new(PoolState { jobs: Vec::new(), rr: 0 }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            dispatch: Mutex::new(()),
             workers: default_threads().saturating_sub(1).min(63),
         });
         SPAWN.call_once(|| {
@@ -103,61 +116,63 @@ impl Pool {
     }
 
     /// Lock the pool state, shrugging off poisoning: panics inside work
-    /// items are caught and re-raised by `run` *after* the epoch
-    /// completes, so a poisoned mutex only means "some job panicked",
-    /// never an inconsistent state.
+    /// items are caught and re-raised by `run` *after* the job drains,
+    /// so a poisoned mutex only means "some job panicked", never an
+    /// inconsistent state.
     fn state(&self) -> std::sync::MutexGuard<'_, PoolState> {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     fn worker_loop(&self) {
-        let mut seen = 0u64;
+        let mut st = self.state();
         loop {
-            let mut st = self.state();
-            loop {
-                if st.epoch != seen
-                    && st.job.is_some()
-                    && st.next < st.total
-                    && st.running < st.limit
-                {
+            // Find a claimable job, scanning round-robin from the last
+            // pick so no job starves while others are in flight.
+            let n = st.jobs.len();
+            let mut pick = None;
+            for k in 0..n {
+                let j = (st.rr + k) % n;
+                if st.jobs[j].claimable() {
+                    pick = Some(j);
                     break;
                 }
-                if st.epoch != seen {
-                    // Epoch already drained (or full): skip it.
-                    seen = st.epoch;
-                }
-                st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
-            seen = st.epoch;
-            let job = st.job.unwrap();
-            st.running += 1;
+            let Some(j) = pick else {
+                st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                continue;
+            };
+            st.rr = j + 1;
+            let job = st.jobs[j].job.unwrap();
+            st.jobs[j].running += 1;
             loop {
-                if st.next >= st.total {
+                if st.jobs[j].next >= st.jobs[j].total {
                     break;
                 }
-                let id = st.next;
-                st.next += 1;
+                let id = st.jobs[j].next;
+                st.jobs[j].next += 1;
                 drop(st);
                 IN_POOL.with(|c| c.set(true));
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
                 IN_POOL.with(|c| c.set(false));
                 st = self.state();
                 if r.is_err() {
-                    st.panicked = true;
+                    st.jobs[j].panicked = true;
                 }
             }
-            st.running -= 1;
-            if st.running == 0 {
+            st.jobs[j].running -= 1;
+            if st.jobs[j].running == 0 {
                 self.done_cv.notify_all();
             }
-            drop(st);
         }
     }
 
     /// Execute `f(0..ids)` with up to `concurrency` participants (the
     /// calling thread plus pool workers). Blocks until every id ran.
     /// Work ids are claimed under a lock, so use coarse ids (one per
-    /// thread / task), not one per element.
+    /// thread / task), not one per element. Multiple threads may call
+    /// `run` concurrently; each call gets its own job slot and worker
+    /// cap, and the caller always participates, so no call can stall
+    /// waiting for workers held by another job.
     pub fn run(&self, ids: usize, concurrency: usize, f: &(dyn Fn(usize) + Sync)) {
         if ids == 0 {
             return;
@@ -168,34 +183,40 @@ impl Pool {
             }
             return;
         }
-        // A previous run may have re-raised a job panic while holding
-        // this guard; that poisons the mutex without leaving any state
-        // behind it inconsistent, so recover the guard.
-        let _serial = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
-        // SAFETY: the job reference is only reachable by workers that
-        // engage while `next < total`; every engaged worker holds
-        // `running > 0`, and this function does not return until
-        // `running == 0` with all ids drained. Late workers observe a
-        // drained epoch and never touch the job. Hence the borrow of `f`
+        // SAFETY: the job reference is only reachable by workers while
+        // its slot has `job.is_some()` and `next < total`; every engaged
+        // worker holds `running > 0` on the slot, and this function does
+        // not return until all ids are drained and `running == 0`, at
+        // which point it clears the slot. Hence the borrow of `f`
         // strictly outlives all uses, and the 'static transmute is sound.
         let job: Job =
             unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), Job>(f) };
         let mut st = self.state();
-        st.epoch = st.epoch.wrapping_add(1);
-        st.job = Some(job);
-        st.next = 0;
-        st.total = ids;
-        st.limit = concurrency - 1;
-        st.panicked = false;
+        let slot = match st.jobs.iter().position(|s| s.job.is_none()) {
+            Some(j) => j,
+            None => {
+                st.jobs.push(JobSlot::free());
+                st.jobs.len() - 1
+            }
+        };
+        {
+            let s = &mut st.jobs[slot];
+            s.job = Some(job);
+            s.next = 0;
+            s.total = ids;
+            s.limit = concurrency - 1;
+            s.running = 0;
+            s.panicked = false;
+        }
         self.work_cv.notify_all();
         // The caller participates too (it would otherwise just block).
         let mut caller_panic = None;
         loop {
-            if st.next >= st.total {
+            if st.jobs[slot].next >= st.jobs[slot].total {
                 break;
             }
-            let id = st.next;
-            st.next += 1;
+            let id = st.jobs[slot].next;
+            st.jobs[slot].next += 1;
             drop(st);
             IN_POOL.with(|c| c.set(true));
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(id)));
@@ -203,14 +224,14 @@ impl Pool {
             st = self.state();
             if let Err(e) = r {
                 caller_panic = Some(e);
-                st.panicked = true;
+                st.jobs[slot].panicked = true;
             }
         }
-        while st.running > 0 {
+        while st.jobs[slot].running > 0 {
             st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
-        st.job = None;
-        let worker_panicked = st.panicked;
+        let worker_panicked = st.jobs[slot].panicked;
+        st.jobs[slot] = JobSlot::free();
         drop(st);
         if let Some(e) = caller_panic {
             std::panic::resume_unwind(e);
@@ -247,6 +268,33 @@ where
         let end = (start + chunk).min(n);
         f(t, start, end);
     });
+}
+
+/// Fixed-block parallel map: run `f(lo, hi)` once per consecutive
+/// `block`-sized element range of `0..n`, returning per-block results
+/// **in block order**. The block structure depends only on `n` and
+/// `block` — never on `threads` — so f64 reductions whose per-block
+/// results are combined in block order are performed in the same
+/// association for every thread count. This is the shared
+/// bit-identical-output idiom of the knapsack scan
+/// (`knapsack::SCAN_BLOCK`) and the distributed top build
+/// (`distributed::TOP_BLOCK`).
+pub fn parallel_map_blocks<R, F>(threads: usize, n: usize, block: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let block = block.max(1);
+    let n_blocks = n.div_ceil(block);
+    if n_blocks <= 1 || threads <= 1 {
+        return (0..n_blocks).map(|b| f(b * block, ((b + 1) * block).min(n))).collect();
+    }
+    parallel_map_ranges(threads, n_blocks, |_t, blo, bhi| {
+        (blo..bhi).map(|b| f(b * block, ((b + 1) * block).min(n))).collect::<Vec<R>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Static block partition: thread `t` gets range `[n·t/T, n·(t+1)/T)`
@@ -421,6 +469,21 @@ mod tests {
     }
 
     #[test]
+    fn map_blocks_fixed_structure_any_threads() {
+        let n = 10_000;
+        let serial = parallel_map_blocks(1, n, 128, |lo, hi| (lo, hi));
+        assert_eq!(serial.len(), n.div_ceil(128));
+        assert_eq!(serial[0].0, 0);
+        assert_eq!(serial.last().unwrap().1, n);
+        for w in serial.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        for t in [2usize, 4, 8] {
+            assert_eq!(parallel_map_blocks(t, n, 128, |lo, hi| (lo, hi)), serial, "t={t}");
+        }
+    }
+
+    #[test]
     fn map_ranges_partitions_exactly() {
         let parts = parallel_map_ranges(3, 10, |t, lo, hi| (t, lo, hi));
         assert_eq!(parts.len(), 3);
@@ -492,6 +555,26 @@ mod tests {
             });
             assert_eq!(sum.load(Ordering::Relaxed), 64, "round {round}");
         }
+    }
+
+    #[test]
+    fn concurrent_jobs_from_client_threads_all_complete() {
+        // The multi-job pool: several OS threads (simulated ranks)
+        // dispatch parallel sections at once; every job must drain even
+        // when workers are scarce, because each caller participates.
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let sum = AtomicU64::new(0);
+                        parallel_for(2, 256, 16, |_t, lo, hi| {
+                            sum.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), 256);
+                    }
+                });
+            }
+        });
     }
 
     #[test]

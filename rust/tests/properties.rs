@@ -236,6 +236,184 @@ fn prop_dynamic_tree_conserves_points() {
     });
 }
 
+/// Duplicate-heavy point set: a handful of repeated sites plus a
+/// sprinkle of unique points. Exercises degenerate (zero-width) top
+/// leaves in the distributed build.
+fn duplicate_heavy_points(g: &mut Gen, max_n: usize) -> PointSet {
+    let n = g.usize_in(32, max_n);
+    let dim = g.usize_in(2, 4);
+    let sites = g.usize_in(2, 6);
+    let site_coords = g.coords(sites, dim);
+    let mut ps = PointSet::new(dim);
+    for i in 0..n {
+        let unique = g.u64_below(4) == 0;
+        let c: Vec<f64> = if unique {
+            (0..dim).map(|_| g.f64_in(0.0, 1.0)).collect()
+        } else {
+            let s = g.usize_in(0, sites);
+            site_coords[s * dim..(s + 1) * dim].to_vec()
+        };
+        ps.push(&c, i as u64, 1.0);
+    }
+    ps
+}
+
+fn shard(ps: &PointSet, rank: usize, p: usize) -> PointSet {
+    ps.mod_shard(rank, p)
+}
+
+/// Rank counts to sweep: `SFC_TEST_RANKS=2` (or a comma list) narrows
+/// the sweep — CI uses it to run the distributed suite at 2 and 8
+/// simulated ranks.
+fn rank_sweep() -> Vec<usize> {
+    match std::env::var("SFC_TEST_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SFC_TEST_RANKS wants integers"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+#[test]
+fn prop_distributed_global_sfc_order_invariant() {
+    use sfc_part::partition::distributed::distributed_partition;
+    use sfc_part::runtime_sim::{run_ranks, CostModel};
+    // §III-C invariant across rank counts, splitters, and duplicate-heavy
+    // inputs: shards conserve the input, per-rank keys are sorted, and
+    // all keys on rank i precede all keys on rank j > i.
+    forall("distributed-global-order", 5, |g| {
+        let ps = duplicate_heavy_points(g, 400);
+        let n = ps.len();
+        for kind in [SplitterKind::Midpoint, SplitterKind::MedianSort] {
+            for &p in &rank_sweep() {
+                let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+                    let local = shard(&ps, ctx.rank, p);
+                    let cfg = PartitionConfig {
+                        splitter: SplitterConfig::uniform(kind),
+                        ..Default::default()
+                    };
+                    let dp = distributed_partition(ctx, &local, &cfg, 4 * p);
+                    (dp.local.ids.clone(), dp.keys.clone())
+                });
+                let mut all: Vec<u64> =
+                    outs.iter().flat_map(|(ids, _)| ids.iter().copied()).collect();
+                all.sort_unstable();
+                if all != (0..n as u64).collect::<Vec<u64>>() {
+                    return (false, format!("p={p} {kind:?} n={n}: ids not conserved"));
+                }
+                // Per-rank keys sorted, and strictly increasing across
+                // ranks — tracked through empty ranks, so a violation
+                // across a rank that received no points is still caught.
+                let mut prev: Option<(usize, u128)> = None;
+                for (r, (_, keys)) in outs.iter().enumerate() {
+                    if keys.windows(2).any(|w| w[0] > w[1]) {
+                        return (false, format!("p={p} {kind:?} rank {r}: keys unsorted"));
+                    }
+                    let (Some(&first), Some(&last)) = (keys.first(), keys.last()) else {
+                        continue;
+                    };
+                    if let Some((pr, pmax)) = prev {
+                        if pmax >= first {
+                            return (
+                                false,
+                                format!("p={p} {kind:?}: rank {pr} max key !< rank {r} min"),
+                            );
+                        }
+                    }
+                    prev = Some((r, last));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Shared body of the thread-invariance checks: distributed outputs
+/// must be bit-identical for threads-per-rank ∈ {1, 2, 4} at fixed `p`.
+fn distributed_is_thread_invariant(ps: &PointSet, p: usize, kind: SplitterKind) -> bool {
+    use sfc_part::partition::distributed::distributed_partition;
+    use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+    let run = |tpr: usize| {
+        run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+            let local = shard(ps, ctx.rank, p);
+            let cfg =
+                PartitionConfig { splitter: SplitterConfig::uniform(kind), ..Default::default() };
+            let dp = distributed_partition(ctx, &local, &cfg, 4 * p);
+            (dp.local.ids.clone(), dp.keys.clone(), dp.owned_leaves)
+        })
+        .0
+    };
+    let base = run(1);
+    [2usize, 4].iter().all(|&tpr| run(tpr) == base)
+}
+
+#[test]
+fn prop_distributed_outputs_thread_invariant() {
+    // Acceptance invariant: `DistPartition` (keys, migrated shard,
+    // owned leaves) is bit-identical for any threads-per-rank value at a
+    // fixed rank count.
+    forall("distributed-thread-invariance", 3, |g| {
+        let ps = duplicate_heavy_points(g, 300);
+        for kind in [SplitterKind::Midpoint, SplitterKind::MedianSort] {
+            for &p in &rank_sweep() {
+                if !distributed_is_thread_invariant(&ps, p, kind) {
+                    return (false, format!("p={p} {kind:?}: output diverged across threads"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn distributed_thread_invariant_across_block_boundary() {
+    // The small property cases above stay below TOP_BLOCK (4096 points
+    // per leaf list), exercising only the serial fallback of the blocked
+    // passes. This fixed case puts 18k duplicate-heavy points on 2
+    // ranks (root lists = 9k, several blocks), so the multi-block merge
+    // order itself is what's being pinned.
+    let uni = PointSet::uniform(18_000, 3, 99);
+    let mut ps = PointSet::new(3);
+    for i in 0..uni.len() {
+        if i % 3 == 0 {
+            ps.push(uni.point(i), i as u64, 1.0);
+        } else {
+            // Two thirds of the points pile onto four fixed sites.
+            let s = (i % 4) as f64;
+            ps.push(&[0.1 + 0.2 * s, 0.3, 0.7], i as u64, 1.0);
+        }
+    }
+    for kind in [SplitterKind::Midpoint, SplitterKind::MedianSort] {
+        assert!(
+            distributed_is_thread_invariant(&ps, 2, kind),
+            "{kind:?}: output diverged across threads at multi-block scale"
+        );
+    }
+}
+
+#[test]
+fn prop_partition_thread_invariant_on_duplicates() {
+    // The shared-memory pipeline's determinism guarantee must also hold
+    // on duplicate-heavy inputs (degenerate splits everywhere).
+    forall("partition-duplicates-thread-invariance", 8, |g| {
+        let ps = duplicate_heavy_points(g, 400);
+        let parts = g.usize_in(2, 9);
+        let run = |threads: usize| {
+            let cfg = PartitionConfig { parts, threads, ..Default::default() };
+            Partitioner::new(cfg).partition(&ps)
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let plan = run(threads);
+            if plan.perm != base.perm || plan.part_of != base.part_of || plan.loads != base.loads {
+                return (false, format!("threads={threads} parts={parts} diverged"));
+            }
+        }
+        (true, String::new())
+    });
+}
+
 #[test]
 fn prop_collectives_agree_with_local_reduction() {
     use sfc_part::runtime_sim::collectives::ReduceOp;
