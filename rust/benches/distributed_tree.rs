@@ -3,13 +3,21 @@
 //!
 //! The paper runs 1B points on 16–256 MPI ranks (KNL nodes) and observes
 //! scaling until ~100 ranks, after which data exchange dominates. Here
-//! ranks are simulated; compute is per-rank busy CPU time and network
-//! time is modeled from the measured bytes/messages, so the knee
-//! appears as `net` overtaking `compute`.
+//! ranks are simulated; compute is per-rank busy CPU time (pool-worker
+//! CPU included — the busy-accounting fix — so hybrid compute is honest)
+//! and network time is modeled from the measured bytes/messages, so the
+//! knee appears as `net` overtaking `compute`.
+//!
+//! `--median` switches the top splitters to the exact distributed median
+//! and reports `rds/spl` — allreduce rounds per median split. The
+//! multi-probe search caps this at 13 (B = 8 probes per round) where the
+//! classic bisection spent ~40; pass `--ranks`/`--points` to watch the
+//! saving grow with `p` (each round is an `α·log p` latency term).
 
 use sfc_part::bench_util::{fmt_secs, Table};
 use sfc_part::cli::{Args, Scale};
 use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::splitter::{SplitterConfig, SplitterKind};
 use sfc_part::partition::distributed::distributed_partition;
 use sfc_part::partition::partitioner::PartitionConfig;
 use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
@@ -22,27 +30,48 @@ fn main() {
     // Worker share per rank on the persistent pool (0 = cores/ranks):
     // the hybrid rank×thread execution of the pool-aware runtime.
     let tpr = args.usize("threads-per-rank", 0);
+    let use_median = args.flag("median");
     let global = PointSet::uniform(n, 3, 9);
 
     let mut t = Table::new(
-        "fig11 distributed kd-tree total time",
+        if use_median {
+            "fig11 distributed kd-tree total time (median splitters, multi-probe)"
+        } else {
+            "fig11 distributed kd-tree total time"
+        },
         &[
-            "ranks", "sim_time", "compute", "net", "top", "migrate", "local", "msgs",
-            "bytes", "max_msg", "imb",
+            "ranks", "sim_time", "compute", "net", "top", "migrate", "local", "rds/spl",
+            "msgs", "bytes", "max_msg", "imb",
         ],
     );
     for &p in &ranks {
         let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
             let local = global.mod_shard(ctx.rank, ctx.n_ranks);
-            let cfg = PartitionConfig::default();
+            let cfg = if use_median {
+                PartitionConfig {
+                    splitter: SplitterConfig::uniform(SplitterKind::MedianSort),
+                    ..Default::default()
+                }
+            } else {
+                PartitionConfig::default()
+            };
             let dp = distributed_partition(ctx, &local, &cfg, 4 * p);
-            (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs)
+            (
+                dp.local.len(),
+                dp.top_secs,
+                dp.migrate_secs,
+                dp.local_secs,
+                dp.median_rounds,
+                dp.median_splits,
+            )
         });
         let max_n = outs.iter().map(|o| o.0).max().unwrap() as f64;
         let mean_n = n as f64 / p as f64;
         let top: f64 = outs.iter().map(|o| o.1).fold(0.0, f64::max);
         let mig: f64 = outs.iter().map(|o| o.2).fold(0.0, f64::max);
         let loc: f64 = outs.iter().map(|o| o.3).fold(0.0, f64::max);
+        // Median-search rounds are collective (identical on all ranks).
+        let (rounds, splits) = (outs[0].4, outs[0].5);
         t.row(vec![
             p.to_string(),
             fmt_secs(rep.sim_time()),
@@ -51,6 +80,11 @@ fn main() {
             fmt_secs(top),
             fmt_secs(mig),
             fmt_secs(loc),
+            if splits == 0 {
+                "-".into()
+            } else {
+                format!("{:.1}", rounds as f64 / splits as f64)
+            },
             rep.total_msgs.to_string(),
             rep.total_bytes.to_string(),
             rep.max_msg_bytes.to_string(),
@@ -59,4 +93,10 @@ fn main() {
     }
     t.print();
     println!("\ncheck: compute shrinks ~1/p while net grows with p — the paper's >100-rank flattening.");
+    if use_median {
+        println!(
+            "check: rds/spl stays ≤ 13 (multi-probe) — the classic bisection spent ~40 \
+             allreduce rounds per split."
+        );
+    }
 }

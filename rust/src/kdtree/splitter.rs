@@ -18,7 +18,7 @@
 use crate::geom::bbox::BoundingBox;
 use crate::runtime_sim::threadpool::{parallel_map_ranges, parallel_map_tasks};
 use crate::util::rng::{Rng, SplitMix64};
-use crate::util::sort::{quickselect, quicksort_by};
+use crate::util::sort::{parallel_sort_by, quickselect, quicksort_by};
 
 /// How the split *value* is chosen.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -500,8 +500,12 @@ pub fn split_value_work(
     match kind {
         SplitterKind::Midpoint => bbox.midpoint(d),
         SplitterKind::MedianSort => {
+            // Pool-backed merge sort: the exact-median lane sort was the
+            // last serial O(n log n) section of shared-memory median
+            // builds. The sorted lane (and hence the median) is the same
+            // for every thread count.
             let mut vals = lane_work(work, lo, hi, d, threads);
-            quicksort_by(&mut vals, |v| *v);
+            parallel_sort_by(threads, &mut vals, |v| *v);
             vals[vals.len() / 2]
         }
         SplitterKind::MedianSample { sample } => {

@@ -5,15 +5,22 @@
 //! in rounds, by placing an upper limit on the maximum message size
 //! (`MAX_MSG_SIZE`)."*
 //!
-//! Packing/unpacking here is the multi-threaded part in the paper; at our
-//! scales a single pass is bandwidth-bound either way, so the pack loop
-//! is written as a per-destination bin pass (thread-ready) and the
-//! exchange delegates to
-//! [`crate::runtime_sim::rank::RankCtx::alltoallv_rounds`], which
+//! Packing is multi-threaded as in the paper: [`pack_parallel`] bins
+//! each fixed block of points into per-destination byte runs, merges the
+//! per-block counts into destination offsets, and concatenates the runs
+//! per destination as parallel pool tasks — byte-for-byte the serial
+//! [`pack`] wire format, for every thread count. The exchange delegates
+//! to [`crate::runtime_sim::rank::RankCtx::alltoallv_rounds`], which
 //! enforces the message cap.
 
 use crate::geom::point::PointSet;
 use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::{parallel_map_blocks, parallel_map_tasks};
+
+/// Fixed block (points) of the parallel pack's binning pass. A function
+/// of the shard size only, so the per-destination byte runs — and hence
+/// the packed buffers — are identical for every thread count.
+pub const PACK_BLOCK: usize = 8192;
 
 /// Wire format per destination: `u64 n`, then `n` ids (u64), `n` weights
 /// (f32 LE), `n*dim` coords (f64 LE).
@@ -47,6 +54,71 @@ pub fn pack(ps: &PointSet, dest_of: &[u32], n_ranks: usize) -> Vec<Vec<u8>> {
     bufs
 }
 
+/// One fixed block's destination bins: the block's bytes for each wire
+/// section, per destination, in original point order.
+struct PackBins {
+    ids: Vec<Vec<u8>>,
+    weights: Vec<Vec<u8>>,
+    coords: Vec<Vec<u8>>,
+}
+
+/// Range-parallel [`pack`] (the paper's multi-threaded `transfer_t_l_t`
+/// packing): every thread bins [`PACK_BLOCK`]-sized blocks of points
+/// into per-destination byte runs, the per-block counts are merged into
+/// destination sizes (the offsets merge), and each destination buffer is
+/// concatenated from the runs in block order as its own pool task.
+/// Blocks partition the points in original order, so the output is
+/// **byte-identical** to the serial [`pack`] for any `threads`.
+pub fn pack_parallel(
+    ps: &PointSet,
+    dest_of: &[u32],
+    n_ranks: usize,
+    threads: usize,
+) -> Vec<Vec<u8>> {
+    assert_eq!(dest_of.len(), ps.len());
+    if threads.max(1) == 1 || ps.len() <= PACK_BLOCK {
+        return pack(ps, dest_of, n_ranks);
+    }
+    // Pass 1: per-block destination bins (order-preserving within the
+    // block; blocks themselves are in point order).
+    let bins: Vec<PackBins> = parallel_map_blocks(threads, ps.len(), PACK_BLOCK, |lo, hi| {
+        let mut b = PackBins {
+            ids: vec![Vec::new(); n_ranks],
+            weights: vec![Vec::new(); n_ranks],
+            coords: vec![Vec::new(); n_ranks],
+        };
+        for i in lo..hi {
+            let d = dest_of[i] as usize;
+            b.ids[d].extend_from_slice(&ps.ids[i].to_le_bytes());
+            b.weights[d].extend_from_slice(&ps.weights[i].to_le_bytes());
+            for k in 0..ps.dim {
+                b.coords[d].extend_from_slice(&ps.coord(i, k).to_le_bytes());
+            }
+        }
+        b
+    });
+    // Pass 2: offsets merge — per-destination totals over the blocks.
+    let counts: Vec<usize> =
+        (0..n_ranks).map(|d| bins.iter().map(|b| b.ids[d].len() / 8).sum()).collect();
+    // Pass 3: per-destination concatenation, one pool task each. Runs
+    // are drained in block order, reproducing the serial byte layout:
+    // `u64 n`, all ids, all weights, all coords.
+    parallel_map_tasks(threads, (0..n_ranks).collect(), |_i, d: usize| {
+        let mut buf = Vec::with_capacity(8 + counts[d] * (8 + 4 + 8 * ps.dim));
+        buf.extend_from_slice(&(counts[d] as u64).to_le_bytes());
+        for b in &bins {
+            buf.extend_from_slice(&b.ids[d]);
+        }
+        for b in &bins {
+            buf.extend_from_slice(&b.weights[d]);
+        }
+        for b in &bins {
+            buf.extend_from_slice(&b.coords[d]);
+        }
+        buf
+    })
+}
+
 /// Inverse of [`pack`] for one received buffer.
 pub fn unpack(buf: &[u8], dim: usize, out: &mut PointSet) {
     if buf.is_empty() {
@@ -75,13 +147,14 @@ pub fn unpack(buf: &[u8], dim: usize, out: &mut PointSet) {
 
 /// The full `transfer_t_l_t`: move every local point to `dest_of[i]`,
 /// receive points destined for this rank, exchange bounded by `max_msg`.
+/// Packing runs on the rank's pool share (`ctx.threads`).
 pub fn transfer_t_l_t(
     ctx: &mut RankCtx,
     ps: &PointSet,
     dest_of: &[u32],
     max_msg: usize,
 ) -> PointSet {
-    let bufs = pack(ps, dest_of, ctx.n_ranks);
+    let bufs = pack_parallel(ps, dest_of, ctx.n_ranks, ctx.threads);
     let recv = ctx.alltoallv_rounds(bufs, max_msg);
     let mut out = PointSet::new(ps.dim);
     for buf in &recv {
@@ -112,6 +185,19 @@ mod tests {
         let pos = out.ids.iter().position(|&id| id == 42).unwrap();
         assert_eq!(out.point(pos), ps.point(42));
         assert_eq!(out.weights[pos], ps.weights[42]);
+    }
+
+    #[test]
+    fn parallel_pack_is_byte_identical_to_serial() {
+        // Multi-block shard (several PACK_BLOCK blocks) with an uneven
+        // destination mix, including a destination that receives nothing.
+        let ps = PointSet::clustered(3 * PACK_BLOCK + 501, 3, 0.5, 13);
+        let dest: Vec<u32> =
+            (0..ps.len()).map(|i| ((i.wrapping_mul(2654435761)) % 5) as u32).collect();
+        let serial = pack(&ps, &dest, 6);
+        for t in [1usize, 2, 3, 4, 8] {
+            assert_eq!(pack_parallel(&ps, &dest, 6, t), serial, "threads={t}");
+        }
     }
 
     #[test]

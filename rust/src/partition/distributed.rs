@@ -31,7 +31,7 @@ use crate::kdtree::splitter::SplitterKind;
 use crate::migrate::transfer_t_l_t;
 use crate::partition::knapsack::greedy_knapsack_buckets;
 use crate::partition::partitioner::{PartitionConfig, Partitioner};
-use crate::runtime_sim::collectives::ReduceOp;
+use crate::runtime_sim::collectives::{ReduceOp, Section};
 use crate::runtime_sim::rank::RankCtx;
 use crate::runtime_sim::threadpool::parallel_map_blocks;
 use crate::sfc::key::child_key;
@@ -43,6 +43,21 @@ use crate::util::timer::Stopwatch;
 /// performed in the same association for any `ctx.threads`, keeping the
 /// output bit-identical across thread counts.
 pub const TOP_BLOCK: usize = 4096;
+
+/// Probe values evaluated per round of the multi-probe distributed
+/// median: the `B` interior points that cut the current bracket into
+/// `B + 1` equal slices. All `B` counts travel in **one** `u64`
+/// allreduce, so each round costs the same latency as one bisection
+/// round but shrinks the bracket `(B+1)×` instead of `2×`.
+pub const MEDIAN_PROBES: usize = 8;
+
+/// Round cap of the multi-probe median: `⌈40 / log₂(B+1)⌉` rounds reach
+/// the same `~2⁻⁴⁰` relative bracket as the classic 40-round bisection
+/// (`9¹³ ≈ 2.5·10¹² > 2⁴⁰`), so a split's allreduce count drops ≥ 3×.
+pub const MEDIAN_MAX_ROUNDS: usize = 13;
+
+/// Relative bracket width at which the median search stops refining.
+const MEDIAN_EPS: f64 = 1e-12;
 
 /// Per-rank result of a distributed partition.
 #[derive(Clone, Debug)]
@@ -58,6 +73,11 @@ pub struct DistPartition {
     pub local_secs: f64,
     /// Number of top leaves this rank owns.
     pub owned_leaves: usize,
+    /// Allreduce rounds spent inside median splitter searches (0 for
+    /// midpoint splitters) and the number of splits that ran one — the
+    /// bench reports `median_rounds / median_splits` as rounds-per-split.
+    pub median_rounds: u64,
+    pub median_splits: u64,
 }
 
 /// A top node during the collective build.
@@ -114,7 +134,11 @@ pub fn distributed_partition(
 
     // ---- Collective top-K1 build ----
     let total_w = ctx.allreduce1(ReduceOp::Sum, local.total_weight());
-    let total_c = ctx.allreduce1(ReduceOp::Sum, local.len() as f64) as u64;
+    // Counts ride u64 lanes end-to-end: an f64 Sum absorbs +1 at 2^53
+    // points and the build would silently drift.
+    let total_c = ctx.allreduce_u64(ReduceOp::Sum, &[local.len() as u64])[0];
+    let mut median_rounds = 0u64;
+    let mut median_splits = 0u64;
     let mut nodes = vec![TopNode {
         bbox: root_bbox,
         weight: total_w,
@@ -164,9 +188,14 @@ pub fn distributed_partition(
             retired.push((leaf, list));
             continue;
         }
-        // Split value: midpoint locally, median by distributed bisection.
+        // Split value: midpoint locally, median by multi-probe
+        // distributed search (one fused u64 allreduce per round).
         let value = if use_median {
-            distributed_median(ctx, local, &list, d, &node.bbox, node.count, threads)
+            let (value, rounds) =
+                distributed_median(ctx, local, &list, d, &node.bbox, node.count, threads);
+            median_rounds += rounds as u64;
+            median_splits += 1;
+            value
         } else {
             node.bbox.midpoint(d)
         };
@@ -208,17 +237,18 @@ pub fn distributed_partition(
             rbox.merge(&b.rbox);
         }
         // One fused collective where the scan-based build used six:
-        // lower count + left weight (Sum), both child boxes (Min/Max).
-        let fused = ctx.allreduce_f64_multi(&[
-            (ReduceOp::Sum, &[left.len() as f64]),
-            (ReduceOp::Sum, &[lw]),
-            (ReduceOp::Min, &lbox.lo),
-            (ReduceOp::Max, &lbox.hi),
-            (ReduceOp::Min, &rbox.lo),
-            (ReduceOp::Max, &rbox.hi),
+        // lower count (exact u64 Sum), left weight (Sum), both child
+        // boxes (Min/Max).
+        let fused = ctx.allreduce_multi(&[
+            Section::U64(ReduceOp::Sum, &[left.len() as u64]),
+            Section::F64(ReduceOp::Sum, &[lw]),
+            Section::F64(ReduceOp::Min, &lbox.lo),
+            Section::F64(ReduceOp::Max, &lbox.hi),
+            Section::F64(ReduceOp::Min, &rbox.lo),
+            Section::F64(ReduceOp::Max, &rbox.hi),
         ]);
-        let lower = fused[0][0] as u64;
-        let lw = fused[1][0];
+        let lower = fused[0].u64()[0];
+        let lw = fused[1].f64()[0];
         if lower == 0 || lower == node.count {
             // One-sided split (pathological splitter value): retire the
             // leaf with its list reassembled.
@@ -229,7 +259,7 @@ pub fn distributed_partition(
         }
         let li = nodes.len() as u32;
         nodes.push(TopNode {
-            bbox: BoundingBox { lo: fused[2].clone(), hi: fused[3].clone() },
+            bbox: BoundingBox { lo: fused[2].f64().to_vec(), hi: fused[3].f64().to_vec() },
             weight: lw,
             count: lower,
             key: child_key(node.key, node.depth, false),
@@ -241,7 +271,7 @@ pub fn distributed_partition(
         });
         let ri = nodes.len() as u32;
         nodes.push(TopNode {
-            bbox: BoundingBox { lo: fused[4].clone(), hi: fused[5].clone() },
+            bbox: BoundingBox { lo: fused[4].f64().to_vec(), hi: fused[5].f64().to_vec() },
             weight: node.weight - lw,
             count: node.count - lower,
             key: child_key(node.key, node.depth, true),
@@ -319,14 +349,138 @@ pub fn distributed_partition(
     }
     let local_secs = sw.secs();
 
-    DistPartition { local: migrated, keys, top_secs, migrate_secs, local_secs, owned_leaves }
+    DistPartition {
+        local: migrated,
+        keys,
+        top_secs,
+        migrate_secs,
+        local_secs,
+        owned_leaves,
+        median_rounds,
+        median_splits,
+    }
 }
 
-/// Distributed median along `d` for the points in `list`: bisection on
-/// the value range, counting with allreduce (≈40 rounds). Counting
-/// passes only touch the leaf's own index list, on the rank's pool
-/// share (integer counts, so any summation order is exact).
-fn distributed_median(
+/// Multi-probe distributed median along `d` for the points in `list`.
+///
+/// Each round evaluates [`MEDIAN_PROBES`] interior probe values of the
+/// current bracket in **one** blocked pass over the leaf's index list
+/// (each point is binned among the sorted probes once) and reduces all
+/// probe counts through **one** `u64` allreduce — so the bracket shrinks
+/// `(B+1)×` per collective instead of the classic bisection's `2×`,
+/// cutting a split's allreduce rounds from ~40 to ≤ [`MEDIAN_MAX_ROUNDS`].
+/// Exits early the moment a probe's count hits the target exactly.
+///
+/// Returns `(value, rounds)`. The value is always one whose global
+/// `≤`-count was actually **observed** (a probed value, or the bracket
+/// top whose count is the node count): on duplicate-heavy lanes the
+/// bracket converges onto a count jump, and an unprobed interpolation —
+/// what the old bisection returned — can sit on the empty side of the
+/// jump and produce a one-sided split. Among observed candidates it
+/// picks the one whose count is closest to the target (ties prefer the
+/// `≥ target` side, then the value nearest the jump), which every rank
+/// resolves identically because the counts are allreduce results.
+pub fn distributed_median(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    list: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+    threads: usize,
+) -> (f64, u32) {
+    let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
+    let eps = MEDIAN_EPS * bbox.width(d).max(1.0);
+    let target = count / 2;
+    // Best observed two-sided candidate: (value, its global ≤-count).
+    let mut best: Option<(f64, u64)> = None;
+    let mut rounds = 0u32;
+    while rounds < MEDIAN_MAX_ROUNDS as u32 && hi - lo >= eps {
+        rounds += 1;
+        let width = hi - lo;
+        let probes: Vec<f64> = (0..MEDIAN_PROBES)
+            .map(|j| lo + width * (j + 1) as f64 / (MEDIAN_PROBES + 1) as f64)
+            .collect();
+        // One blocked pass bins every point among the sorted probes
+        // (integer counts: any block order is exact), then the bins are
+        // prefix-summed into cumulative ≤-counts per probe.
+        let bins = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |blo, bhi| {
+            let mut bins = [0u64; MEDIAN_PROBES + 1];
+            for &i in &list[blo..bhi] {
+                let v = local.coord(i as usize, d);
+                bins[probes.partition_point(|&p| p < v)] += 1;
+            }
+            bins
+        })
+        .into_iter()
+        .fold([0u64; MEDIAN_PROBES + 1], |mut acc, b| {
+            for (a, x) in acc.iter_mut().zip(b) {
+                *a += x;
+            }
+            acc
+        });
+        let mut local_cum = [0u64; MEDIAN_PROBES];
+        let mut run = 0u64;
+        for j in 0..MEDIAN_PROBES {
+            run += bins[j];
+            local_cum[j] = run;
+        }
+        // cum[j] = global number of points ≤ probes[j] (nondecreasing).
+        let cum = ctx.allreduce_u64(ReduceOp::Sum, &local_cum);
+        for (j, &c) in cum.iter().enumerate() {
+            if c == target {
+                // Exact split: no better candidate can exist.
+                return (probes[j], rounds);
+            }
+            if 0 < c && c < count && median_candidate_better(probes[j], c, best, target) {
+                best = Some((probes[j], c));
+            }
+        }
+        // New bracket: the largest probe still below the target and the
+        // smallest probe at-or-above it.
+        for (j, &c) in cum.iter().enumerate() {
+            if c < target {
+                lo = probes[j];
+            } else {
+                hi = probes[j];
+                break;
+            }
+        }
+    }
+    // `hi` is the tightest upper bracket value whose count is known
+    // (`≥ target` by the bracket invariant; initially the bbox top with
+    // count = node count) — the fallback when every probe was one-sided.
+    (best.map(|(v, _)| v).unwrap_or(hi), rounds)
+}
+
+/// Is candidate `(v, c)` a strictly better split than `best`? Closest
+/// count to target wins; ties prefer the `≥ target` side, then the value
+/// nearest the count jump (smaller above it, larger below it). Purely a
+/// function of allreduce results, so every rank picks the same value.
+fn median_candidate_better(v: f64, c: u64, best: Option<(f64, u64)>, target: u64) -> bool {
+    let Some((bv, bc)) = best else { return true };
+    let (dc, dbc) = (c.abs_diff(target), bc.abs_diff(target));
+    if dc != dbc {
+        return dc < dbc;
+    }
+    let (ge, bge) = (c >= target, bc >= target);
+    if ge != bge {
+        return ge;
+    }
+    if ge {
+        v < bv
+    } else {
+        v > bv
+    }
+}
+
+/// The classic single-probe bisection median (≈40 sequential allreduce
+/// rounds), kept as the reference implementation: the property suite
+/// checks the multi-probe search against it, and the ablation bench
+/// measures the round/message reduction. Note it returns the last
+/// bracket *midpoint* — a value whose count was never observed, the
+/// duplicate-lane defect [`distributed_median`] fixes.
+pub fn distributed_median_bisect(
     ctx: &mut RankCtx,
     local: &PointSet,
     list: &[u32],
@@ -345,7 +499,7 @@ fn distributed_median(
         })
         .into_iter()
         .sum();
-        let cnt = ctx.allreduce1(ReduceOp::Sum, local_cnt as f64) as u64;
+        let cnt = ctx.allreduce_u64(ReduceOp::Sum, &[local_cnt])[0];
         if cnt == target {
             break;
         }
@@ -354,7 +508,7 @@ fn distributed_median(
         } else {
             hi = mid;
         }
-        if hi - lo < 1e-12 * bbox.width(d).max(1.0) {
+        if hi - lo < MEDIAN_EPS * bbox.width(d).max(1.0) {
             break;
         }
     }
@@ -463,6 +617,110 @@ mod tests {
         let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..600).collect::<Vec<u64>>());
+    }
+
+    /// A duplicate-heavy lane whose count jumps over the target: 600
+    /// points at x = 0.3 and 400 spread over (0.5, 1.0), so no value has
+    /// exactly 500 points at or below it and neither search can exit on
+    /// an exact count — both run until their bracket epsilon.
+    fn jump_lane() -> PointSet {
+        let mut ps = PointSet::new(2);
+        for i in 0..1000u64 {
+            if i < 600 {
+                ps.push(&[0.3, i as f64 / 600.0], i, 1.0);
+            } else {
+                let t = (i - 600) as f64 / 400.0;
+                ps.push(&[0.5 + 0.499 * t, t], i, 1.0);
+            }
+        }
+        ps
+    }
+
+    #[test]
+    fn multiprobe_median_cuts_allreduce_rounds_3x() {
+        // Acceptance: allreduce rounds per median split down ≥ 3×,
+        // counted through the fabric. At p = 2 every allreduce is one
+        // reduce message plus one broadcast message, so total messages =
+        // 2 × rounds; the jump lane forbids exact-count early exits, so
+        // both searches run to their bracket epsilon (the worst case).
+        let global = jump_lane();
+        let p = 2;
+        let median_msgs = |multi: bool| {
+            let (vals, rep) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let list: Vec<u32> = (0..local.len() as u32).collect();
+                let bbox = global.bounding_box();
+                let n = global.len() as u64;
+                if multi {
+                    distributed_median(ctx, &local, &list, 0, &bbox, n, ctx.threads).0
+                } else {
+                    distributed_median_bisect(ctx, &local, &list, 0, &bbox, n, ctx.threads)
+                }
+            });
+            (vals[0], rep.total_msgs)
+        };
+        let (multi_val, multi_msgs) = median_msgs(true);
+        let (bisect_val, bisect_msgs) = median_msgs(false);
+        assert!(
+            3 * multi_msgs <= bisect_msgs,
+            "multi-probe used {multi_msgs} msgs vs bisection {bisect_msgs}: < 3x reduction"
+        );
+        // Same split point (both brackets converge onto the jump at 0.3).
+        assert!((multi_val - bisect_val).abs() < 1e-6, "{multi_val} vs {bisect_val}");
+    }
+
+    #[test]
+    fn multiprobe_median_returns_observed_value_on_duplicate_lane() {
+        // Regression (duplicate-heavy lane): the bisection returned the
+        // final bracket *midpoint*, whose count was never measured — it
+        // can land on the empty side of the count jump. The multi-probe
+        // search must return a value whose ≤-count was observed, i.e.
+        // one that actually includes the duplicate mass.
+        let global = jump_lane();
+        let p = 2;
+        let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let list: Vec<u32> = (0..local.len() as u32).collect();
+            let bbox = global.bounding_box();
+            distributed_median(ctx, &local, &list, 0, &bbox, global.len() as u64, ctx.threads).0
+        });
+        // All ranks agree.
+        assert!(vals.iter().all(|&v| v == vals[0]));
+        let v = vals[0];
+        // The returned value sits at the jump (x = 0.3) from above...
+        assert!((v - 0.3).abs() < 1e-9, "value {v} not at the duplicate mass");
+        // ...and its count side is the observed, non-empty one: the 600
+        // duplicates land left, the 400 spread points land right.
+        let left = (0..global.len()).filter(|&i| global.coord(i, 0) <= v).count();
+        assert_eq!(left, 600, "split does not include the duplicate mass");
+    }
+
+    #[test]
+    fn multiprobe_median_exact_count_early_exit() {
+        // A lane with a wide gap straddling the target rank: the very
+        // first round has a probe inside the gap whose count is exactly
+        // n/2, so the search must return after one allreduce.
+        let mut ps = PointSet::new(2);
+        for i in 0..400u64 {
+            let x = if i < 200 {
+                i as f64 / 200.0 * 0.1 // [0, 0.1)
+            } else {
+                0.9 + (i - 200) as f64 / 200.0 * 0.1 // [0.9, 1.0)
+            };
+            ps.push(&[x, 0.0], i, 1.0);
+        }
+        let p = 2;
+        let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&ps, ctx.rank, p);
+            let list: Vec<u32> = (0..local.len() as u32).collect();
+            let bbox = ps.bounding_box();
+            distributed_median(ctx, &local, &list, 0, &bbox, ps.len() as u64, ctx.threads)
+        });
+        for &(v, rounds) in &vals {
+            assert_eq!(rounds, 1, "exact-count probe did not exit early");
+            let left = (0..ps.len()).filter(|&i| ps.coord(i, 0) <= v).count();
+            assert_eq!(left, 200);
+        }
     }
 
     #[test]

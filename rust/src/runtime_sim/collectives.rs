@@ -39,6 +39,94 @@ impl ReduceOp {
     }
 }
 
+/// One section of a fused mixed-kind allreduce ([`RankCtx::allreduce_multi`]):
+/// a typed lane vector plus its reduction operator. `U64` sections keep
+/// integer sums exact — counts reduced as `f64` silently lose exactness
+/// above 2^53, which is why the distributed top build routes every point
+/// count through a `U64` section.
+#[derive(Clone, Copy, Debug)]
+pub enum Section<'a> {
+    F64(ReduceOp, &'a [f64]),
+    U64(ReduceOp, &'a [u64]),
+}
+
+impl Section<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Section::F64(_, v) => v.len(),
+            Section::U64(_, v) => v.len(),
+        }
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Section::F64(_, v) => {
+                for x in *v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Section::U64(_, v) => {
+                for x in *v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Element-wise reduce the 8-byte lanes `other` into `acc` under this
+    /// section's kind and operator.
+    fn combine_into(&self, acc: &mut [u8], other: &[u8]) {
+        match self {
+            Section::F64(op, _) => {
+                for (a, b) in acc.chunks_exact_mut(8).zip(other.chunks_exact(8)) {
+                    let x = f64::from_le_bytes(a[..8].try_into().unwrap());
+                    let y = f64::from_le_bytes(b.try_into().unwrap());
+                    a.copy_from_slice(&op.f64(x, y).to_le_bytes());
+                }
+            }
+            Section::U64(op, _) => {
+                for (a, b) in acc.chunks_exact_mut(8).zip(other.chunks_exact(8)) {
+                    let x = u64::from_le_bytes(a[..8].try_into().unwrap());
+                    let y = u64::from_le_bytes(b.try_into().unwrap());
+                    a.copy_from_slice(&op.u64(x, y).to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn decode(&self, bytes: &[u8]) -> SectionOut {
+        match self {
+            Section::F64(..) => SectionOut::F64(dec_f64(bytes)),
+            Section::U64(..) => SectionOut::U64(dec_u64(bytes)),
+        }
+    }
+}
+
+/// One reduced section returned by [`RankCtx::allreduce_multi`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SectionOut {
+    F64(Vec<f64>),
+    U64(Vec<u64>),
+}
+
+impl SectionOut {
+    /// The section's `f64` lanes; panics if it was a `U64` section.
+    pub fn f64(&self) -> &[f64] {
+        match self {
+            SectionOut::F64(v) => v,
+            SectionOut::U64(_) => panic!("fused section is u64, not f64"),
+        }
+    }
+
+    /// The section's `u64` lanes; panics if it was an `F64` section.
+    pub fn u64(&self) -> &[u64] {
+        match self {
+            SectionOut::U64(v) => v,
+            SectionOut::F64(_) => panic!("fused section is f64, not u64"),
+        }
+    }
+}
+
 impl<'f> RankCtx<'f> {
     /// Barrier: a 1-element allreduce (binomial reduce + broadcast).
     pub fn barrier(&mut self) {
@@ -112,17 +200,18 @@ impl<'f> RankCtx<'f> {
         dec_f64(&self.broadcast_bytes_with_tag(0, data, tag))
     }
 
-    /// Fused multi-vector allreduce: element-wise reduce several `f64`
-    /// sections, each under its own operator, in **one** binomial
-    /// reduce + broadcast round-trip. The distributed top-tree build
-    /// uses this to collapse its per-split reductions (child counts,
-    /// weight, and both child bounding boxes) from six collectives into
-    /// one, cutting the latency term from `6·α·log p` to `α·log p`.
-    pub fn allreduce_f64_multi(&mut self, sections: &[(ReduceOp, &[f64])]) -> Vec<Vec<f64>> {
-        let lens: Vec<usize> = sections.iter().map(|(_, v)| v.len()).collect();
-        let mut acc: Vec<f64> = Vec::with_capacity(lens.iter().sum());
-        for (_, v) in sections {
-            acc.extend_from_slice(v);
+    /// Fused multi-vector allreduce: element-wise reduce several typed
+    /// sections (`f64` or exact-integer `u64` lanes), each under its own
+    /// operator, in **one** binomial reduce + broadcast round-trip. The
+    /// distributed top-tree build uses this to collapse its per-split
+    /// reductions (child count — a `U64` section, so it stays exact past
+    /// 2^53 points — weight, and both child bounding boxes) from six
+    /// collectives into one, cutting the latency term from `6·α·log p`
+    /// to `α·log p`.
+    pub fn allreduce_multi(&mut self, sections: &[Section]) -> Vec<SectionOut> {
+        let mut acc: Vec<u8> = Vec::with_capacity(sections.iter().map(|s| s.len() * 8).sum());
+        for s in sections {
+            s.encode_into(&mut acc);
         }
         let tag = self.next_epoch();
         let (r, p) = (self.rank, self.n_ranks);
@@ -130,32 +219,45 @@ impl<'f> RankCtx<'f> {
         let mut mask = 1usize;
         while mask < p {
             if r & mask != 0 {
-                self.fabric.send(r, r & !mask, tag, enc_f64(&acc));
+                self.fabric.send(r, r & !mask, tag, acc.clone());
                 sent = true;
                 break;
             }
             if r | mask < p {
-                let other = dec_f64(&self.fabric.recv(r, r | mask, tag).payload);
+                let other = self.fabric.recv(r, r | mask, tag).payload;
                 let mut off = 0;
-                for ((op, _), &len) in sections.iter().zip(&lens) {
-                    for (a, b) in acc[off..off + len].iter_mut().zip(&other[off..off + len]) {
-                        *a = op.f64(*a, *b);
-                    }
-                    off += len;
+                for s in sections {
+                    let bytes = s.len() * 8;
+                    s.combine_into(&mut acc[off..off + bytes], &other[off..off + bytes]);
+                    off += bytes;
                 }
             }
             mask <<= 1;
         }
-        let data = if sent || r != 0 { Vec::new() } else { enc_f64(&acc) };
+        let data = if sent || r != 0 { Vec::new() } else { acc };
         let btag = self.next_epoch();
-        let full = dec_f64(&self.broadcast_bytes_with_tag(0, data, btag));
-        let mut out = Vec::with_capacity(lens.len());
+        let full = self.broadcast_bytes_with_tag(0, data, btag);
+        let mut out = Vec::with_capacity(sections.len());
         let mut off = 0;
-        for &len in &lens {
-            out.push(full[off..off + len].to_vec());
-            off += len;
+        for s in sections {
+            let bytes = s.len() * 8;
+            out.push(s.decode(&full[off..off + bytes]));
+            off += bytes;
         }
         out
+    }
+
+    /// All-`f64` convenience over [`Self::allreduce_multi`] (same single
+    /// round-trip and byte layout).
+    pub fn allreduce_f64_multi(&mut self, sections: &[(ReduceOp, &[f64])]) -> Vec<Vec<f64>> {
+        let secs: Vec<Section> = sections.iter().map(|&(op, v)| Section::F64(op, v)).collect();
+        self.allreduce_multi(&secs)
+            .into_iter()
+            .map(|s| match s {
+                SectionOut::F64(v) => v,
+                SectionOut::U64(_) => unreachable!("f64 section decoded as u64"),
+            })
+            .collect()
     }
 
     /// Scalar convenience for `ReduceBcast(x, op)`.
@@ -459,6 +561,49 @@ mod tests {
                 // Same binomial association → bit-identical sections.
                 assert_eq!(fused, sep, "p={p}");
             }
+        }
+    }
+
+    #[test]
+    fn mixed_fused_allreduce_matches_separate_calls() {
+        // u64 count sections and f64 sections reduced in one round-trip
+        // must agree with the standalone typed collectives.
+        for p in [1usize, 3, 4, 7] {
+            let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+                let counts = [ctx.rank as u64 + 1, 1u64 << 60];
+                let sums = [ctx.rank as f64 * 0.5];
+                let maxs = [ctx.rank as u64];
+                let fused = ctx.allreduce_multi(&[
+                    Section::U64(ReduceOp::Sum, &counts),
+                    Section::F64(ReduceOp::Sum, &sums),
+                    Section::U64(ReduceOp::Max, &maxs),
+                ]);
+                let sep_counts = ctx.allreduce_u64(ReduceOp::Sum, &counts);
+                let sep_sums = ctx.allreduce_f64(ReduceOp::Sum, &sums);
+                let sep_maxs = ctx.allreduce_u64(ReduceOp::Max, &maxs);
+                (fused, sep_counts, sep_sums, sep_maxs)
+            });
+            for (fused, sc, ss, sm) in vals {
+                assert_eq!(fused[0].u64(), &sc[..], "p={p}");
+                assert_eq!(fused[1].f64(), &ss[..], "p={p}");
+                assert_eq!(fused[2].u64(), &sm[..], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_fused_u64_sum_is_exact_past_2_pow_53() {
+        // The motivating bug: f64 addition absorbs +1 at 2^53, u64
+        // sections must not.
+        let (vals, _) = run_ranks(2, CostModel::default(), |ctx| {
+            let x = if ctx.rank == 0 { 1u64 << 53 } else { 1 };
+            let fused = ctx.allreduce_multi(&[Section::U64(ReduceOp::Sum, &[x])]);
+            fused[0].u64()[0]
+        });
+        for v in vals {
+            assert_eq!(v, (1u64 << 53) + 1);
+            // The same reduction through f64 lanes would have lost the +1.
+            assert_ne!(v, ((1u64 << 53) as f64 + 1.0) as u64);
         }
     }
 

@@ -85,9 +85,15 @@ where
                 // recv abort instead of deadlocking (MPI-style abort).
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let mut ctx = RankCtx::new(r, p, share, fabric);
+                    // Busy time = the rank thread's own CPU plus the CPU
+                    // pool workers burned on jobs this rank dispatched —
+                    // without the second term every hybrid parallel
+                    // section is charged to nobody and `max_busy` lies.
+                    let _ = threadpool::take_dispatched_cpu();
                     let t0 = crate::util::timer::thread_cpu_time();
                     let out = body(&mut ctx);
-                    let busy = crate::util::timer::thread_cpu_time() - t0;
+                    let busy = crate::util::timer::thread_cpu_time() - t0
+                        + threadpool::take_dispatched_cpu();
                     fabric.record_busy(r, busy);
                     out
                 }));
@@ -129,6 +135,40 @@ mod tests {
         // Auto share is at least one worker per rank.
         let (vals, _) = run_ranks(4, CostModel::default(), |ctx| ctx.threads);
         assert!(vals.iter().all(|&t| t >= 1));
+    }
+
+    #[test]
+    fn pool_worker_cpu_charged_to_dispatching_rank() {
+        // The rank's compute runs entirely inside pool job items (the
+        // rank body itself does nothing but dispatch). Each item measures
+        // its own CPU on whichever thread ran it; the reported busy time
+        // must cover that total — before the fix, items picked up by pool
+        // workers were charged to nobody, so `max_busy` undercounted
+        // whenever a worker (not the dispatching rank thread) ran one.
+        let item_cpu = threadpool::AtomicF64::new(0.0);
+        let (_, rep) = run_ranks_threaded(1, 4, CostModel::default(), |_ctx| {
+            threadpool::parallel_map_ranges(4, 4, |_t, lo, hi| {
+                let t0 = crate::util::timer::thread_cpu_time();
+                let mut acc = 0u64;
+                for i in 0..((hi - lo) as u64 * 3_000_000) {
+                    acc = acc.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+                }
+                std::hint::black_box(acc);
+                item_cpu.fetch_add(crate::util::timer::thread_cpu_time() - t0);
+            });
+        });
+        let burned = item_cpu.load();
+        assert!(burned > 0.0, "items burned no measurable CPU");
+        assert!(rep.max_busy() > 0.0);
+        // Caller-run items are on the rank thread's clock; worker-run
+        // items are accumulated by the per-job timers — so busy covers
+        // the full burn regardless of which threads claimed the items.
+        assert!(
+            rep.max_busy() >= 0.9 * burned,
+            "busy {} undercounts pool work {}",
+            rep.max_busy(),
+            burned
+        );
     }
 
     #[test]

@@ -11,17 +11,19 @@
 
 use crate::runtime_sim::fabric::{dec_f64, enc_f64};
 use crate::runtime_sim::rank::RankCtx;
-use crate::util::sort::quicksort_by;
+use crate::util::sort::{parallel_sort_by, quicksort_by};
 
 /// Sort `local` across all ranks; returns this rank's globally-ordered
 /// shard (shard sizes are approximately balanced by the regular sample).
+/// The local sorts run on the rank's pool share (`ctx.threads`) via the
+/// blocked merge sort, so the shared-memory phase of the "distributed
+/// concurrent quicksort" is thread-parallel too.
 pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize) -> Vec<f64> {
     let p = ctx.n_ranks;
+    parallel_sort_by(ctx.threads, &mut local, |v| *v);
     if p == 1 {
-        quicksort_by(&mut local, |v| *v);
         return local;
     }
-    quicksort_by(&mut local, |v| *v);
 
     // Regular samples (s per rank).
     let s = oversample.max(1);

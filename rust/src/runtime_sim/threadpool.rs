@@ -59,11 +59,25 @@ struct JobSlot {
     running: usize,
     /// A worker's work-item panicked.
     panicked: bool,
+    /// CPU seconds burned by *pool workers* on this job's items (the
+    /// caller's own items are already on the caller's thread clock).
+    /// `run` hands this to the dispatching thread so simulated ranks can
+    /// charge pool work to themselves — without it, `SimReport::max_busy`
+    /// undercounts every hybrid (rank × thread) compute phase.
+    cpu_secs: f64,
 }
 
 impl JobSlot {
     fn free() -> JobSlot {
-        JobSlot { job: None, next: 0, total: 0, limit: 0, running: 0, panicked: false }
+        JobSlot {
+            job: None,
+            next: 0,
+            total: 0,
+            limit: 0,
+            running: 0,
+            panicked: false,
+            cpu_secs: 0.0,
+        }
     }
 
     fn claimable(&self) -> bool {
@@ -82,6 +96,22 @@ thread_local! {
     /// dispatches then run inline (serially) instead of deadlocking on
     /// the single-job pool.
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
+
+    /// Pool-worker CPU seconds accumulated by jobs *this thread*
+    /// dispatched (one entry per completed `Pool::run`). Simulated ranks
+    /// drain it with [`take_dispatched_cpu`] to fold worker CPU into
+    /// their busy time.
+    static DISPATCHED_CPU: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Drain (return and reset) the pool-worker CPU seconds charged to the
+/// calling thread by the jobs it dispatched since the last drain. The
+/// rank runtime calls this once per rank body: per-rank busy time is
+/// `thread_cpu_time` (the rank thread itself, its own job items
+/// included) **plus** this value (items other workers ran on its
+/// behalf) — making `SimReport::max_busy` honest for hybrid compute.
+pub fn take_dispatched_cpu() -> f64 {
+    DISPATCHED_CPU.with(|c| c.replace(0.0))
 }
 
 /// The process-wide persistent worker pool.
@@ -152,9 +182,12 @@ impl Pool {
                 st.jobs[j].next += 1;
                 drop(st);
                 IN_POOL.with(|c| c.set(true));
+                let t0 = crate::util::timer::thread_cpu_time();
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+                let dt = crate::util::timer::thread_cpu_time() - t0;
                 IN_POOL.with(|c| c.set(false));
                 st = self.state();
+                st.jobs[j].cpu_secs += dt;
                 if r.is_err() {
                     st.jobs[j].panicked = true;
                 }
@@ -207,6 +240,7 @@ impl Pool {
             s.limit = concurrency - 1;
             s.running = 0;
             s.panicked = false;
+            s.cpu_secs = 0.0;
         }
         self.work_cv.notify_all();
         // The caller participates too (it would otherwise just block).
@@ -231,8 +265,12 @@ impl Pool {
             st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         let worker_panicked = st.jobs[slot].panicked;
+        let worker_cpu = st.jobs[slot].cpu_secs;
         st.jobs[slot] = JobSlot::free();
         drop(st);
+        // Charge the CPU pool workers burned on this job back to the
+        // dispatching thread (the simulated rank).
+        DISPATCHED_CPU.with(|c| c.set(c.get() + worker_cpu));
         if let Some(e) = caller_panic {
             std::panic::resume_unwind(e);
         }

@@ -9,10 +9,126 @@
 //!   leaves (the "distributed concurrent quicksort" of the dissertation is
 //!   realised at the rank level by sample-sort in
 //!   [`crate::runtime_sim::collectives`]; this is the node-local sorter).
+//! * [`parallel_sort_by`] — the pool-backed merge sort over fixed
+//!   [`SORT_BLOCK`] runs: the node-local sorter for large lanes (exact
+//!   `MedianSort` splitters, sample-sort shards), thread-count-invariant
+//!   by construction.
 //! * [`quickselect`] — expected-O(n) selection (Hoare) with
 //!   median-of-three pivots.
 //! * [`median_of_medians`] — deterministic O(n) selection, used as the
 //!   pivot fallback so adversarial inputs cannot degrade the splitters.
+
+/// Fixed run length (elements) of [`parallel_sort_by`]. Like the other
+/// blocked-determinism constants (`TOP_BLOCK`, `SCAN_BLOCK`), the run
+/// structure is a function of `n` only — never of the thread count — so
+/// the stable merge of the runs yields the same permutation for every
+/// `threads`, `threads = 1` included.
+pub const SORT_BLOCK: usize = 8192;
+
+/// Pool-backed merge sort: sort fixed [`SORT_BLOCK`]-sized runs in
+/// parallel (each with [`quicksort_by`]), then merge them pairwise in
+/// `⌈log₂ runs⌉` rounds, each round's merges running as parallel pool
+/// tasks over disjoint output ranges. Ties take the left (lower-index)
+/// run, so the result is the *stable* merge of the fixed runs and is
+/// bit-identical for every thread count. This removes the last serial
+/// `O(n log n)` section from exact-median (`MedianSort`) builds; inputs
+/// at or below one run sort serially (same cutoff for every `threads`).
+pub fn parallel_sort_by<T, K>(threads: usize, xs: &mut [T], key: impl Fn(&T) -> K + Copy + Sync)
+where
+    T: Clone + Send + Sync,
+    K: PartialOrd + Copy,
+{
+    let n = xs.len();
+    if n <= SORT_BLOCK {
+        quicksort_by(xs, key);
+        return;
+    }
+    let threads = threads.max(1);
+    // Phase 1: carve fixed runs and sort each as its own pool task.
+    let mut runs: Vec<&mut [T]> = Vec::with_capacity(n.div_ceil(SORT_BLOCK));
+    {
+        let mut rest: &mut [T] = &mut xs[..];
+        while rest.len() > SORT_BLOCK {
+            let (a, b) = rest.split_at_mut(SORT_BLOCK);
+            runs.push(a);
+            rest = b;
+        }
+        runs.push(rest);
+    }
+    let n_runs = runs.len();
+    crate::runtime_sim::threadpool::parallel_map_tasks(threads, runs, |_i, run: &mut [T]| {
+        quicksort_by(run, key)
+    });
+    // Phase 2: pairwise merge rounds, ping-ponging between `xs` and a
+    // scratch buffer. `bounds` holds the run boundaries (run i is
+    // `[bounds[i], bounds[i+1])`); each round halves it.
+    let mut bounds: Vec<usize> = (0..n_runs).map(|i| i * SORT_BLOCK).collect();
+    bounds.push(n);
+    let mut scratch: Vec<T> = xs.to_vec();
+    let mut in_xs = true;
+    while bounds.len() > 2 {
+        if in_xs {
+            merge_pairs_round(threads, xs, &mut scratch, &bounds, key);
+        } else {
+            merge_pairs_round(threads, &scratch, xs, &bounds, key);
+        }
+        in_xs = !in_xs;
+        let last = *bounds.last().unwrap();
+        let mut next: Vec<usize> = bounds.iter().copied().step_by(2).collect();
+        if *next.last().unwrap() != last {
+            next.push(last);
+        }
+        bounds = next;
+    }
+    if !in_xs {
+        xs.clone_from_slice(&scratch);
+    }
+}
+
+/// One merge round of [`parallel_sort_by`]: merge runs (0,1), (2,3), …
+/// of `src` into `dst` (an odd trailing run is copied through). Each
+/// merge owns a disjoint `dst` range, so the pairs run as parallel pool
+/// tasks; `<=` keeps the left run's elements first on ties (stability).
+fn merge_pairs_round<T, K>(
+    threads: usize,
+    src: &[T],
+    dst: &mut [T],
+    bounds: &[usize],
+    key: impl Fn(&T) -> K + Copy + Sync,
+) where
+    T: Clone + Send + Sync,
+    K: PartialOrd + Copy,
+{
+    let n_runs = bounds.len() - 1;
+    let mut tasks: Vec<(&[T], &[T], &mut [T])> = Vec::with_capacity(n_runs.div_ceil(2));
+    let mut rest: &mut [T] = &mut dst[bounds[0]..*bounds.last().unwrap()];
+    let mut i = 0;
+    while i < n_runs {
+        let (a0, a1) = (bounds[i], bounds[i + 1]);
+        let b1 = if i + 1 < n_runs { bounds[i + 2] } else { a1 };
+        let (seg, r) = rest.split_at_mut(b1 - a0);
+        rest = r;
+        tasks.push((&src[a0..a1], &src[a1..b1], seg));
+        i += 2;
+    }
+    crate::runtime_sim::threadpool::parallel_map_tasks(
+        threads,
+        tasks,
+        |_i, (a, b, out): (&[T], &[T], &mut [T])| {
+            let (mut ia, mut ib) = (0usize, 0usize);
+            for slot in out.iter_mut() {
+                let take_a = ib >= b.len() || (ia < a.len() && key(&a[ia]) <= key(&b[ib]));
+                if take_a {
+                    slot.clone_from(&a[ia]);
+                    ia += 1;
+                } else {
+                    slot.clone_from(&b[ib]);
+                    ib += 1;
+                }
+            }
+        },
+    );
+}
 
 /// In-place quicksort by a key function; three-way partition, insertion
 /// sort below 24 elements, recursion on the smaller side only.
@@ -222,6 +338,40 @@ mod tests {
         let mut c = vec![7u32; 300];
         quicksort_by(&mut c, |x| *x);
         assert!(c.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn parallel_sort_matches_serial_sort() {
+        let mut s = SplitMix64::new(9);
+        // Below one run (serial path), just past it, and several runs.
+        for n in [100usize, SORT_BLOCK + 1, 3 * SORT_BLOCK + 17] {
+            let xs: Vec<u64> = (0..n).map(|_| s.below(10_000)).collect();
+            let mut expect = xs.clone();
+            expect.sort_unstable();
+            for t in [1usize, 2, 4, 8] {
+                let mut got = xs.clone();
+                parallel_sort_by(t, &mut got, |x| *x);
+                assert_eq!(got, expect, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sort_is_stable_across_thread_counts() {
+        // Payload-carrying elements with heavy key duplication: every
+        // thread count must produce the identical permutation (the fixed
+        // run structure + left-run-wins merge).
+        let mut s = SplitMix64::new(10);
+        let n = 2 * SORT_BLOCK + 333;
+        let xs: Vec<(u64, u32)> = (0..n).map(|i| (s.below(7), i as u32)).collect();
+        let mut base = xs.clone();
+        parallel_sort_by(1, &mut base, |x| x.0);
+        assert!(base.windows(2).all(|w| w[0].0 <= w[1].0));
+        for t in [2usize, 4, 8] {
+            let mut got = xs.clone();
+            parallel_sort_by(t, &mut got, |x| x.0);
+            assert_eq!(got, base, "t={t} diverged");
+        }
     }
 
     #[test]

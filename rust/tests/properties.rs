@@ -415,6 +415,109 @@ fn prop_partition_thread_invariant_on_duplicates() {
 }
 
 #[test]
+fn prop_distributed_median_multiprobe_matches_bisection() {
+    use sfc_part::partition::distributed::{distributed_median, distributed_median_bisect};
+    use sfc_part::runtime_sim::{run_ranks, CostModel};
+    // The multi-probe median must agree with the classic 40-round
+    // bisection across rank counts and input shapes. "Agree" means an
+    // equivalent split: the two values bracket the same ≤-count (both
+    // searches may exit early anywhere inside a wide value gap whose
+    // every point is an exact median), or — when the counts differ, i.e.
+    // the returned values straddle a count jump — the values themselves
+    // coincide within the bracket epsilon.
+    forall("distributed-median-multiprobe", 4, |g| {
+        for mode in 0..3u32 {
+            let ps = match mode {
+                // uniform
+                0 => {
+                    let n = g.usize_in(64, 400);
+                    let dim = g.usize_in(2, 4);
+                    let mut ps = PointSet::new(dim);
+                    ps.coords = g.coords(n, dim);
+                    ps.ids = (0..n as u64).collect();
+                    ps.weights = vec![1.0; n];
+                    ps
+                }
+                // clustered
+                1 => PointSet::clustered(g.usize_in(64, 400), 3, 0.6, g.u64_below(1000)),
+                // duplicate-heavy
+                _ => duplicate_heavy_points(g, 400),
+            };
+            let bbox = ps.bounding_box();
+            let d = bbox.widest_dim();
+            if bbox.width(d) <= 0.0 {
+                continue;
+            }
+            let n = ps.len() as u64;
+            let scale = bbox.width(d).max(1.0);
+            for &p in &rank_sweep() {
+                let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+                    let local = shard(&ps, ctx.rank, p);
+                    let list: Vec<u32> = (0..local.len() as u32).collect();
+                    let multi =
+                        distributed_median(ctx, &local, &list, d, &bbox, n, ctx.threads);
+                    let bisect =
+                        distributed_median_bisect(ctx, &local, &list, d, &bbox, n, ctx.threads);
+                    (multi, bisect)
+                });
+                // Every rank resolves the same values.
+                if outs.iter().any(|o| *o != outs[0]) {
+                    return (false, format!("p={p} mode={mode}: ranks disagree"));
+                }
+                let ((multi, rounds), bisect) = outs[0];
+                if rounds > 13 {
+                    return (false, format!("p={p} mode={mode}: {rounds} rounds > 13"));
+                }
+                let cnt = |v: f64| (0..ps.len()).filter(|&i| ps.coord(i, d) <= v).count();
+                let (cm, cb) = (cnt(multi), cnt(bisect));
+                let equivalent_split = cm == cb;
+                let same_value = (multi - bisect).abs() <= 1e-8 * scale;
+                if !(equivalent_split || same_value) {
+                    return (
+                        false,
+                        format!(
+                            "p={p} mode={mode} n={n}: multi={multi} (cnt {cm}) vs \
+                             bisect={bisect} (cnt {cb})"
+                        ),
+                    );
+                }
+                // The observed-value guarantee: the multi-probe split is
+                // never one-sided (the bisection's duplicate-lane bug).
+                if cm == 0 || cm == ps.len() {
+                    return (false, format!("p={p} mode={mode}: one-sided multi-probe split"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_migrate_pack_parallel_is_byte_identical() {
+    use sfc_part::migrate::{pack, pack_parallel};
+    // The parallel pack preserves the wire format byte-for-byte for any
+    // thread count, destination mix, and shard size (crossing the block
+    // boundary so the multi-block path is exercised).
+    forall("pack-parallel-identical", 8, |g| {
+        let n = g.usize_in(2, 20_000);
+        let dim = g.usize_in(2, 4);
+        let mut ps = PointSet::new(dim);
+        ps.coords = g.coords(n, dim);
+        ps.ids = (0..n as u64).collect();
+        ps.weights = g.weights(n, 8.0);
+        let p = g.usize_in(1, 9);
+        let dest: Vec<u32> = (0..n).map(|_| g.u64_below(p as u64) as u32).collect();
+        let serial = pack(&ps, &dest, p);
+        for t in [1usize, 2, 4, 8] {
+            if pack_parallel(&ps, &dest, p, t) != serial {
+                return (false, format!("n={n} p={p} threads={t}: bytes diverged"));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
 fn prop_collectives_agree_with_local_reduction() {
     use sfc_part::runtime_sim::collectives::ReduceOp;
     use sfc_part::runtime_sim::{run_ranks, CostModel};
