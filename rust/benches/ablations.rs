@@ -300,45 +300,66 @@ fn main() {
     );
 
     // ---- 9. serial-median bisection vs multi-probe median (p=8) ----
-    // The split-latency tentpole: one median split's sequential allreduce
-    // rounds. The classic bisection probes one value per round (~40
-    // rounds to a 2^-40 bracket); the multi-probe search counts 8 probe
-    // values per blocked pass and ships them in one fused u64 allreduce,
-    // reaching the same bracket in ≤ 13 rounds. Both columns come from
-    // the fabric's real message counts; the values must agree (same
-    // split) up to the bracket epsilon.
+    // The split-latency tentpole plus the adaptive-B knee: one median
+    // split's sequential allreduce rounds. The classic bisection probes
+    // one value per round (~40 rounds to a 2^-40 bracket); the fixed
+    // multi-probe search ships B = 8 probe counts per fused u64
+    // allreduce (≤ 13 rounds); the adaptive search grows B with p
+    // (B = 24 at p = 8 → ≤ 9 rounds) — a round's latency is α·log p
+    // regardless of B, so extra probe bytes buy whole rounds. All
+    // rounds columns come from the fabric's real message counts; the
+    // values must agree (same split) up to the bracket epsilon.
     let mut t = Table::new(
-        "ablation: distributed median — bisection vs multi-probe (p=8)",
-        &["variant", "rounds", "msgs", "net", "value"],
+        "ablation: distributed median — bisection vs multi-probe vs adaptive (p=8)",
+        &["variant", "B", "rounds", "msgs", "net", "value"],
     );
     let mp = 8usize;
     let lane = PointSet::clustered(n.min(500_000), 3, 0.6, 77);
     let lane_bbox = lane.bounding_box();
     let lane_d = lane_bbox.widest_dim();
     let lane_n = lane.len() as u64;
-    let mut vals = [0.0f64; 2];
-    for multi in [false, true] {
+    let adaptive_b = sfc_part::partition::distributed::median_probes_for(mp);
+    let mut vals = [0.0f64; 3];
+    // Variant: 0 = bisection, 1 = fixed B=8, 2 = adaptive B(p).
+    for variant in 0..3usize {
         let (outs, rep) = run_ranks(mp, CostModel::default(), |ctx| {
             let local = lane.mod_shard(ctx.rank, ctx.n_ranks);
             let list: Vec<u32> = (0..local.len() as u32).collect();
-            if multi {
-                sfc_part::partition::distributed::distributed_median(
+            match variant {
+                0 => {
+                    let v = sfc_part::partition::distributed::distributed_median_bisect(
+                        ctx, &local, &list, lane_d, &lane_bbox, lane_n, ctx.threads,
+                    );
+                    (v, 40)
+                }
+                1 => sfc_part::partition::distributed::distributed_median_with_probes(
+                    ctx,
+                    &local,
+                    &list,
+                    lane_d,
+                    &lane_bbox,
+                    lane_n,
+                    ctx.threads,
+                    sfc_part::partition::distributed::MEDIAN_PROBES,
+                ),
+                _ => sfc_part::partition::distributed::distributed_median(
                     ctx, &local, &list, lane_d, &lane_bbox, lane_n, ctx.threads,
-                )
-            } else {
-                let v = sfc_part::partition::distributed::distributed_median_bisect(
-                    ctx, &local, &list, lane_d, &lane_bbox, lane_n, ctx.threads,
-                );
-                (v, 40)
+                ),
             }
         });
         let (value, _) = outs[0];
-        vals[multi as usize] = value;
+        vals[variant] = value;
         // Rounds measured off the wire: one allreduce (binomial reduce +
         // broadcast) is 2·(p−1) messages.
         let rounds = rep.total_msgs / (2 * (mp as u64 - 1));
+        let (name, b) = match variant {
+            0 => ("bisection", 1),
+            1 => ("multi-probe", sfc_part::partition::distributed::MEDIAN_PROBES),
+            _ => ("multi-probe adaptive", adaptive_b),
+        };
         t.row(vec![
-            if multi { "multi-probe (B=8)".into() } else { "bisection".into() },
+            name.into(),
+            b.to_string(),
             rounds.to_string(),
             rep.total_msgs.to_string(),
             fmt_secs(rep.net_secs),
@@ -347,8 +368,65 @@ fn main() {
     }
     t.print();
     println!(
-        "\ncheck: multi-probe rounds ≤ 13 and msgs ≤ bisection/3; values agree \
-         (|Δ| = {:.2e}).",
-        (vals[1] - vals[0]).abs()
+        "\ncheck: fixed-B rounds ≤ 13 and msgs ≤ bisection/3; adaptive rounds ≤ 9 at p=8 \
+         (B={adaptive_b}); values agree (|Δ| ≤ {:.2e}).",
+        (vals[1] - vals[0]).abs().max((vals[2] - vals[1]).abs())
+    );
+
+    // ---- 10. sample-sort receive merge: cursor scan vs loser tree ----
+    // The receive-path tentpole: merging the p received runs used to be
+    // an O(n·p) cursor scan; the loser tree replays one root-to-leaf
+    // path per element (≤ ⌈log₂ p⌉ key comparisons, measured below),
+    // and the pool-backed pairwise rounds parallelize the same merge.
+    // All three outputs are identical (stable in the run order).
+    let mut t = Table::new(
+        "ablation: receive merge of p sorted runs",
+        &["variant", "p=16 time", "comparisons", "cmp/elem", "identical"],
+    );
+    let merge_n = n.min(2_000_000);
+    let merge_p = 16usize;
+    let src = PointSet::uniform(merge_n, 1, 33);
+    let mut merge_runs: Vec<Vec<f64>> = (0..merge_p)
+        .map(|r| src.coords.iter().skip(r).step_by(merge_p).copied().collect())
+        .collect();
+    for run in merge_runs.iter_mut() {
+        run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    let total = merge_n as u64;
+    let sw = Stopwatch::start();
+    let reference = sfc_part::util::sort::merge_runs_cursor_scan(&merge_runs, |v| *v);
+    let cursor_secs = sw.secs();
+    t.row(vec![
+        "cursor scan (old)".into(),
+        fmt_secs(cursor_secs),
+        (total * merge_p as u64).to_string(),
+        format!("{merge_p}"),
+        "true".into(),
+    ]);
+    let sw = Stopwatch::start();
+    let (merged, cmps) = sfc_part::util::sort::merge_runs_loser_tree_counted(&merge_runs, |v| *v);
+    let lt_secs = sw.secs();
+    t.row(vec![
+        "loser tree".into(),
+        fmt_secs(lt_secs),
+        cmps.to_string(),
+        format!("{:.2}", cmps as f64 / total as f64),
+        (merged == reference).to_string(),
+    ]);
+    let sw = Stopwatch::start();
+    let par = sfc_part::util::sort::parallel_merge_runs(4, merge_runs.clone(), |v| *v);
+    let par_secs = sw.secs();
+    t.row(vec![
+        "pairwise rounds (4 threads)".into(),
+        fmt_secs(par_secs),
+        "-".into(),
+        "-".into(),
+        (par == reference).to_string(),
+    ]);
+    t.print();
+    println!(
+        "\ncheck: loser-tree cmp/elem ≤ ⌈log₂ p⌉ = {} (vs {merge_p} for the cursor scan) and \
+         identical=true on every row.",
+        merge_p.next_power_of_two().trailing_zeros()
     );
 }

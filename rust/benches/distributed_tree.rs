@@ -10,9 +10,13 @@
 //!
 //! `--median` switches the top splitters to the exact distributed median
 //! and reports `rds/spl` — allreduce rounds per median split. The
-//! multi-probe search caps this at 13 (B = 8 probes per round) where the
-//! classic bisection spent ~40; pass `--ranks`/`--points` to watch the
-//! saving grow with `p` (each round is an `α·log p` latency term).
+//! multi-probe search caps this at 13 (B = 8 probes per round) where
+//! the classic bisection spent ~40, and the probe count is **adaptive**
+//! in the rank count (`median_probes_for`: B = 8·⌈log₂ p⌉, capped at
+//! 64), so rds/spl *falls* as `p` grows — at p ≥ 8 the cap is 9, at
+//! p ≥ 16 it is 8. Each round is an `α·log p` latency term, so watch
+//! the rds/spl column shrink while the per-round payload grows by a few
+//! dozen bytes.
 
 use sfc_part::bench_util::{fmt_secs, Table};
 use sfc_part::cli::{Args, Scale};
@@ -95,8 +99,8 @@ fn main() {
     println!("\ncheck: compute shrinks ~1/p while net grows with p — the paper's >100-rank flattening.");
     if use_median {
         println!(
-            "check: rds/spl stays ≤ 13 (multi-probe) — the classic bisection spent ~40 \
-             allreduce rounds per split."
+            "check: rds/spl stays ≤ 13 everywhere and falls with p (adaptive B: ≤ 9 at p ≥ 8, \
+             ≤ 8 at p ≥ 16) — the classic bisection spent ~40 allreduce rounds per split."
         );
     }
 }

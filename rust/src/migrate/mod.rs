@@ -119,17 +119,40 @@ pub fn pack_parallel(
     })
 }
 
-/// Inverse of [`pack`] for one received buffer.
-pub fn unpack(buf: &[u8], dim: usize, out: &mut PointSet) {
+/// Point count declared by one received buffer's header, with the wire
+/// format checked **strictly**: the buffer must be exactly
+/// `8 + n·(8 + 4 + dim·8)` bytes. Trailing garbage used to be accepted
+/// silently (`len >= c_end`), which would let a framing bug upstream
+/// corrupt the next PR's wire changes unnoticed.
+fn unpack_count(buf: &[u8], dim: usize) -> usize {
     if buf.is_empty() {
+        return 0;
+    }
+    assert!(buf.len() >= 8, "migration buffer shorter than its header");
+    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    let expect = 8 + n * (8 + 4 + dim * 8);
+    assert_eq!(
+        buf.len(),
+        expect,
+        "migration buffer length mismatch: {} bytes for n={n} dim={dim} (want {expect})",
+        buf.len()
+    );
+    n
+}
+
+/// Inverse of [`pack`] for one received buffer. Rejects trailing or
+/// missing bytes (exact-length wire format) and pre-reserves the output.
+pub fn unpack(buf: &[u8], dim: usize, out: &mut PointSet) {
+    let n = unpack_count(buf, dim);
+    if n == 0 {
         return;
     }
-    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
     let mut off = 8;
     let ids_end = off + n * 8;
     let w_end = ids_end + n * 4;
-    let c_end = w_end + n * dim * 8;
-    assert!(buf.len() >= c_end, "short migration buffer");
+    out.ids.reserve(n);
+    out.weights.reserve(n);
+    out.coords.reserve(n * dim);
     for i in 0..n {
         out.ids.push(u64::from_le_bytes(buf[off + i * 8..off + (i + 1) * 8].try_into().unwrap()));
     }
@@ -145,9 +168,76 @@ pub fn unpack(buf: &[u8], dim: usize, out: &mut PointSet) {
     }
 }
 
+/// Parallel inverse of the receive side: one sizing pass over the
+/// received headers computes per-source offsets into a pre-sized
+/// [`PointSet`], then each source's ids/weights/coords sections decode
+/// into their disjoint output slices as pool tasks. Sources land in
+/// buffer order at fixed offsets, so the output is **bit-identical** to
+/// serially [`unpack`]ing each buffer in order, for every `threads`.
+#[allow(clippy::type_complexity)]
+pub fn unpack_parallel(bufs: &[Vec<u8>], dim: usize, threads: usize) -> PointSet {
+    // Sizing pass (also the strict wire check for every buffer).
+    let counts: Vec<usize> = bufs.iter().map(|b| unpack_count(b, dim)).collect();
+    let total: usize = counts.iter().sum();
+    let mut out = PointSet::new(dim);
+    if threads.max(1) == 1 || total <= PACK_BLOCK {
+        for buf in bufs {
+            unpack(buf, dim, &mut out);
+        }
+        return out;
+    }
+    out.ids = vec![0u64; total];
+    out.weights = vec![0.0f32; total];
+    out.coords = vec![0.0f64; total * dim];
+    // Carve one disjoint (ids, weights, coords) slice triple per source.
+    let mut tasks: Vec<(&[u8], &mut [u64], &mut [f32], &mut [f64])> =
+        Vec::with_capacity(bufs.len());
+    {
+        let mut ids_rest: &mut [u64] = &mut out.ids;
+        let mut w_rest: &mut [f32] = &mut out.weights;
+        let mut c_rest: &mut [f64] = &mut out.coords;
+        for (buf, &n) in bufs.iter().zip(&counts) {
+            let (ids, ir) = ids_rest.split_at_mut(n);
+            let (ws, wr) = w_rest.split_at_mut(n);
+            let (cs, cr) = c_rest.split_at_mut(n * dim);
+            ids_rest = ir;
+            w_rest = wr;
+            c_rest = cr;
+            if n > 0 {
+                tasks.push((buf.as_slice(), ids, ws, cs));
+            }
+        }
+    }
+    parallel_map_tasks(
+        threads,
+        tasks,
+        |_i, (buf, ids, ws, cs): (&[u8], &mut [u64], &mut [f32], &mut [f64])| {
+            let mut off = 8;
+            for slot in ids.iter_mut() {
+                *slot = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+                off += 8;
+            }
+            for slot in ws.iter_mut() {
+                *slot = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+            for slot in cs.iter_mut() {
+                *slot = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+                off += 8;
+            }
+            // The sizing pass already validated the exact length; the
+            // decode must consume every byte of it.
+            debug_assert_eq!(off, buf.len());
+        },
+    );
+    out
+}
+
 /// The full `transfer_t_l_t`: move every local point to `dest_of[i]`,
 /// receive points destined for this rank, exchange bounded by `max_msg`.
-/// Packing runs on the rank's pool share (`ctx.threads`).
+/// Packing **and unpacking** run on the rank's pool share
+/// (`ctx.threads`); both ends are bit-identical to the serial wire path
+/// for every thread count.
 pub fn transfer_t_l_t(
     ctx: &mut RankCtx,
     ps: &PointSet,
@@ -156,11 +246,7 @@ pub fn transfer_t_l_t(
 ) -> PointSet {
     let bufs = pack_parallel(ps, dest_of, ctx.n_ranks, ctx.threads);
     let recv = ctx.alltoallv_rounds(bufs, max_msg);
-    let mut out = PointSet::new(ps.dim);
-    for buf in &recv {
-        unpack(buf, ps.dim, &mut out);
-    }
-    out
+    unpack_parallel(&recv, ps.dim, ctx.threads)
 }
 
 #[cfg(test)]
@@ -197,6 +283,54 @@ mod tests {
         let serial = pack(&ps, &dest, 6);
         for t in [1usize, 2, 3, 4, 8] {
             assert_eq!(pack_parallel(&ps, &dest, 6, t), serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn unpack_rejects_trailing_garbage() {
+        let ps = PointSet::uniform_weighted(10, 2, 3.0, 1);
+        let dest = vec![0u32; 10];
+        let mut bufs = pack(&ps, &dest, 1);
+        bufs[0].push(0xAB); // one stray byte past the declared payload
+        let r = std::panic::catch_unwind(|| {
+            let mut out = PointSet::new(2);
+            unpack(&bufs[0], 2, &mut out);
+        });
+        assert!(r.is_err(), "trailing garbage must be rejected");
+    }
+
+    #[test]
+    fn unpack_rejects_short_buffer() {
+        let ps = PointSet::uniform_weighted(10, 2, 3.0, 1);
+        let dest = vec![0u32; 10];
+        let bufs = pack(&ps, &dest, 1);
+        let truncated = &bufs[0][..bufs[0].len() - 3];
+        let r = std::panic::catch_unwind(|| {
+            let mut out = PointSet::new(2);
+            unpack(truncated, 2, &mut out);
+        });
+        assert!(r.is_err(), "short buffer must be rejected");
+    }
+
+    #[test]
+    fn parallel_unpack_is_identical_to_serial() {
+        // Multi-block total (past PACK_BLOCK) spread over several source
+        // buffers, one of them empty; every thread count must reproduce
+        // the serial append order bit-for-bit.
+        let ps = PointSet::clustered(2 * PACK_BLOCK + 777, 3, 0.5, 21);
+        let n_src = 5;
+        let dest: Vec<u32> =
+            (0..ps.len()).map(|i| ((i.wrapping_mul(2654435761)) % (n_src - 1)) as u32).collect();
+        let bufs = pack(&ps, &dest, n_src); // source n_src-1 receives nothing
+        let mut serial = PointSet::new(3);
+        for b in &bufs {
+            unpack(b, 3, &mut serial);
+        }
+        for t in [1usize, 2, 3, 4, 8] {
+            let par = unpack_parallel(&bufs, 3, t);
+            assert_eq!(par.ids, serial.ids, "threads={t}");
+            assert_eq!(par.weights, serial.weights, "threads={t}");
+            assert_eq!(par.coords, serial.coords, "threads={t}");
         }
     }
 

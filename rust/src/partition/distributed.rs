@@ -44,17 +44,41 @@ use crate::util::timer::Stopwatch;
 /// output bit-identical across thread counts.
 pub const TOP_BLOCK: usize = 4096;
 
-/// Probe values evaluated per round of the multi-probe distributed
+/// Baseline probe count per round of the multi-probe distributed
 /// median: the `B` interior points that cut the current bracket into
 /// `B + 1` equal slices. All `B` counts travel in **one** `u64`
 /// allreduce, so each round costs the same latency as one bisection
 /// round but shrinks the bracket `(B+1)×` instead of `2×`.
+/// [`median_probes_for`] scales `B` up with the rank count.
 pub const MEDIAN_PROBES: usize = 8;
 
-/// Round cap of the multi-probe median: `⌈40 / log₂(B+1)⌉` rounds reach
-/// the same `~2⁻⁴⁰` relative bracket as the classic 40-round bisection
-/// (`9¹³ ≈ 2.5·10¹² > 2⁴⁰`), so a split's allreduce count drops ≥ 3×.
+/// Round cap of the multi-probe median at the baseline `B = 8`:
+/// `⌈40 / log₂(B+1)⌉` rounds reach the same `~2⁻⁴⁰` relative bracket as
+/// the classic 40-round bisection (`9¹³ ≈ 2.5·10¹² > 2⁴⁰`), so a
+/// split's allreduce count drops ≥ 3×. For other probe counts the cap
+/// is [`median_rounds_for`].
 pub const MEDIAN_MAX_ROUNDS: usize = 13;
+
+/// Adaptive probe count: a round's latency is `α·log p` **regardless of
+/// B** (the counts ride one fused allreduce), while its payload grows
+/// only 8 bytes per extra probe — so as `p` grows, trading bytes for
+/// rounds moves along the paper's latency/bandwidth knee in the right
+/// direction. `B(p) = 8·⌈log₂ p⌉`, clamped to `[8, 64]`: p ≤ 2 keeps
+/// the baseline 8 (13 rounds), p = 8 probes 24 values (9 rounds),
+/// p ≥ 256 probes 64 (7 rounds).
+pub fn median_probes_for(p: usize) -> usize {
+    // ⌈log₂ p⌉ without floats: trailing zeros of the next power of two.
+    let log_p = p.max(1).next_power_of_two().trailing_zeros().max(1) as usize;
+    (MEDIAN_PROBES * log_p).clamp(MEDIAN_PROBES, 64)
+}
+
+/// Round cap for a given probe count: `⌈40 / log₂(B+1)⌉` rounds shrink
+/// the bracket below the same `~2⁻⁴⁰` relative width the classic
+/// bisection reaches in 40.
+pub fn median_rounds_for(probes: usize) -> usize {
+    let shrink = ((probes + 1) as f64).log2();
+    (40.0 / shrink).ceil() as usize
+}
 
 /// Relative bracket width at which the median search stops refining.
 const MEDIAN_EPS: f64 = 1e-12;
@@ -361,15 +385,34 @@ pub fn distributed_partition(
     }
 }
 
-/// Multi-probe distributed median along `d` for the points in `list`.
+/// Multi-probe distributed median along `d` for the points in `list`,
+/// with the probe count chosen adaptively from the rank count
+/// ([`median_probes_for`]): more ranks → more probes per round → fewer
+/// `α·log p` rounds per split. The fixed-B core is
+/// [`distributed_median_with_probes`].
+pub fn distributed_median(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    list: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+    threads: usize,
+) -> (f64, u32) {
+    let probes = median_probes_for(ctx.n_ranks);
+    distributed_median_with_probes(ctx, local, list, d, bbox, count, threads, probes)
+}
+
+/// Multi-probe distributed median with an explicit probe count `b`.
 ///
-/// Each round evaluates [`MEDIAN_PROBES`] interior probe values of the
-/// current bracket in **one** blocked pass over the leaf's index list
-/// (each point is binned among the sorted probes once) and reduces all
-/// probe counts through **one** `u64` allreduce — so the bracket shrinks
-/// `(B+1)×` per collective instead of the classic bisection's `2×`,
-/// cutting a split's allreduce rounds from ~40 to ≤ [`MEDIAN_MAX_ROUNDS`].
-/// Exits early the moment a probe's count hits the target exactly.
+/// Each round evaluates `b` interior probe values of the current
+/// bracket in **one** blocked pass over the leaf's index list (each
+/// point is binned among the sorted probes once) and reduces all probe
+/// counts through **one** `u64` allreduce — so the bracket shrinks
+/// `(b+1)×` per collective instead of the classic bisection's `2×`,
+/// cutting a split's allreduce rounds from ~40 to ≤
+/// [`median_rounds_for`]`(b)`. Exits early the moment a probe's count
+/// hits the target exactly.
 ///
 /// Returns `(value, rounds)`. The value is always one whose global
 /// `≤`-count was actually **observed** (a probed value, or the bracket
@@ -380,7 +423,8 @@ pub fn distributed_partition(
 /// picks the one whose count is closest to the target (ties prefer the
 /// `≥ target` side, then the value nearest the jump), which every rank
 /// resolves identically because the counts are allreduce results.
-pub fn distributed_median(
+#[allow(clippy::too_many_arguments)]
+pub fn distributed_median_with_probes(
     ctx: &mut RankCtx,
     local: &PointSet,
     list: &[u32],
@@ -388,24 +432,26 @@ pub fn distributed_median(
     bbox: &BoundingBox,
     count: u64,
     threads: usize,
+    b: usize,
 ) -> (f64, u32) {
+    let b = b.max(1);
+    let max_rounds = median_rounds_for(b) as u32;
     let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
     let eps = MEDIAN_EPS * bbox.width(d).max(1.0);
     let target = count / 2;
     // Best observed two-sided candidate: (value, its global ≤-count).
     let mut best: Option<(f64, u64)> = None;
     let mut rounds = 0u32;
-    while rounds < MEDIAN_MAX_ROUNDS as u32 && hi - lo >= eps {
+    while rounds < max_rounds && hi - lo >= eps {
         rounds += 1;
         let width = hi - lo;
-        let probes: Vec<f64> = (0..MEDIAN_PROBES)
-            .map(|j| lo + width * (j + 1) as f64 / (MEDIAN_PROBES + 1) as f64)
-            .collect();
+        let probes: Vec<f64> =
+            (0..b).map(|j| lo + width * (j + 1) as f64 / (b + 1) as f64).collect();
         // One blocked pass bins every point among the sorted probes
         // (integer counts: any block order is exact), then the bins are
         // prefix-summed into cumulative ≤-counts per probe.
         let bins = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |blo, bhi| {
-            let mut bins = [0u64; MEDIAN_PROBES + 1];
+            let mut bins = vec![0u64; b + 1];
             for &i in &list[blo..bhi] {
                 let v = local.coord(i as usize, d);
                 bins[probes.partition_point(|&p| p < v)] += 1;
@@ -413,15 +459,15 @@ pub fn distributed_median(
             bins
         })
         .into_iter()
-        .fold([0u64; MEDIAN_PROBES + 1], |mut acc, b| {
-            for (a, x) in acc.iter_mut().zip(b) {
+        .fold(vec![0u64; b + 1], |mut acc, bl| {
+            for (a, x) in acc.iter_mut().zip(bl) {
                 *a += x;
             }
             acc
         });
-        let mut local_cum = [0u64; MEDIAN_PROBES];
+        let mut local_cum = vec![0u64; b];
         let mut run = 0u64;
-        for j in 0..MEDIAN_PROBES {
+        for j in 0..b {
             run += bins[j];
             local_cum[j] = run;
         }
@@ -667,6 +713,59 @@ mod tests {
         );
         // Same split point (both brackets converge onto the jump at 0.3).
         assert!((multi_val - bisect_val).abs() < 1e-6, "{multi_val} vs {bisect_val}");
+    }
+
+    #[test]
+    fn adaptive_probes_cut_rounds_vs_fixed_b8_at_p8() {
+        // Acceptance: adaptive B (24 probes at p = 8) demonstrably
+        // reduces median rounds-per-split vs fixed B = 8, measured off
+        // the wire. The jump lane forbids exact-count early exits, so
+        // both searches run to their bracket epsilon; at p = 8 one
+        // allreduce is 2·(p−1) = 14 fabric messages.
+        assert_eq!(median_probes_for(8), 24);
+        assert_eq!(median_probes_for(2), MEDIAN_PROBES);
+        assert_eq!(median_rounds_for(MEDIAN_PROBES), MEDIAN_MAX_ROUNDS);
+        let global = jump_lane();
+        let p = 8;
+        let median_msgs = |b: usize| {
+            let (vals, rep) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let list: Vec<u32> = (0..local.len() as u32).collect();
+                let bbox = global.bounding_box();
+                let n = global.len() as u64;
+                if b == 0 {
+                    distributed_median(ctx, &local, &list, 0, &bbox, n, ctx.threads)
+                } else {
+                    distributed_median_with_probes(
+                        ctx,
+                        &local,
+                        &list,
+                        0,
+                        &bbox,
+                        n,
+                        ctx.threads,
+                        b,
+                    )
+                }
+            });
+            (vals[0], rep.total_msgs)
+        };
+        let ((fixed_val, fixed_rounds), fixed_msgs) = median_msgs(MEDIAN_PROBES);
+        let ((adapt_val, adapt_rounds), adapt_msgs) = median_msgs(0);
+        assert!(
+            adapt_rounds < fixed_rounds,
+            "adaptive {adapt_rounds} rounds !< fixed {fixed_rounds}"
+        );
+        assert!(
+            adapt_msgs < fixed_msgs,
+            "adaptive used {adapt_msgs} msgs vs fixed B=8 {fixed_msgs}"
+        );
+        // Off-the-wire rounds agree with the returned counter: one
+        // allreduce per round, 2·(p−1) messages each.
+        assert_eq!(adapt_msgs, adapt_rounds as u64 * 2 * (p as u64 - 1));
+        assert_eq!(fixed_msgs, fixed_rounds as u64 * 2 * (p as u64 - 1));
+        // Same split point either way.
+        assert!((adapt_val - fixed_val).abs() < 1e-6, "{adapt_val} vs {fixed_val}");
     }
 
     #[test]

@@ -330,6 +330,39 @@ impl<'f> RankCtx<'f> {
         excl
     }
 
+    /// Exclusive prefix sum of one `u64` per rank — the exact-count lane
+    /// of [`Self::exscan_f64`]. Point counts and shard ranks must ride
+    /// this, not the f64 scan: f64 addition absorbs +1 at 2^53, so an
+    /// f64-lane exscan of shard sizes silently mis-ranks every element
+    /// past that point. Same dissemination (Hillis–Steele) structure,
+    /// `⌈log₂ p⌉` rounds.
+    pub fn exscan_u64(&mut self, x: u64) -> u64 {
+        let (r, p) = (self.rank, self.n_ranks);
+        if p == 1 {
+            return 0;
+        }
+        let rounds = usize::BITS - (p - 1).leading_zeros();
+        let tag = self.alloc_tags(rounds);
+        let mut incl = x;
+        let mut excl = 0u64;
+        let mut have = false;
+        let mut dist = 1usize;
+        for round in 0..rounds {
+            let t = tag + round;
+            if r + dist < p {
+                self.fabric.send(r, r + dist, t, enc_u64(&[incl]));
+            }
+            if r >= dist {
+                let v = dec_u64(&self.fabric.recv(r, r - dist, t).payload)[0];
+                incl += v;
+                excl = if have { v + excl } else { v };
+                have = true;
+            }
+            dist <<= 1;
+        }
+        excl
+    }
+
     /// Gather variable-size byte buffers to root; returns per-rank buffers
     /// on root, `None` elsewhere.
     pub fn gather_bytes(&mut self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
@@ -526,6 +559,38 @@ mod tests {
                 acc += (r * 2 + 1) as f64;
             }
         }
+    }
+
+    #[test]
+    fn exscan_u64_all_rank_counts() {
+        for p in 1..=9usize {
+            let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+                ctx.exscan_u64(ctx.rank as u64 * 2 + 1)
+            });
+            let mut acc = 0u64;
+            for (r, &v) in vals.iter().enumerate() {
+                assert_eq!(v, acc, "p={p} r={r}");
+                acc += r as u64 * 2 + 1;
+            }
+        }
+    }
+
+    #[test]
+    fn exscan_u64_is_exact_past_2_pow_53() {
+        // Regression for the f64 count-lane hole: shard sizes of 2^53
+        // and 1 — the f64 scan absorbs the +1, the u64 scan must not.
+        let (vals, _) = run_ranks(3, CostModel::default(), |ctx| {
+            let x = match ctx.rank {
+                0 => 1u64 << 53,
+                1 => 1,
+                _ => 0,
+            };
+            (ctx.exscan_u64(x), ctx.exscan_f64(x as f64) as u64)
+        });
+        let (exact, lossy) = vals[2];
+        assert_eq!(exact, (1u64 << 53) + 1);
+        // The f64 lane demonstrably loses the +1 at this magnitude.
+        assert_eq!(lossy, 1u64 << 53);
     }
 
     #[test]

@@ -8,10 +8,26 @@
 //! the bounded-message all-to-all, and each rank merges its received
 //! runs. The output satisfies the §III-C global-order invariant: all
 //! keys on rank `i` ≤ all keys on rank `i+1`.
+//!
+//! Two receive-side properties worth calling out:
+//!
+//! * **Merge complexity.** The `p` received runs merge through the
+//!   loser tree (O(log p) comparisons per element) or, for large
+//!   shards, the pool-backed pairwise merge rounds — never the old
+//!   O(n·p) cursor scan, which survives only as the test reference
+//!   (`util::sort::merge_runs_cursor_scan`).
+//! * **Tie splitting.** Duplicates of a splitter value are *spread*
+//!   across every bucket adjacent to that splitter group instead of all
+//!   routing to one rank — on a duplicate-heavy lane the old
+//!   `partition_point(v <= sp)` walk collapsed the whole duplicate mass
+//!   onto a single shard. Equal keys may legally live on any
+//!   consecutive rank range, so the global-order invariant still holds.
 
 use crate::runtime_sim::fabric::{dec_f64, enc_f64};
 use crate::runtime_sim::rank::RankCtx;
-use crate::util::sort::{parallel_sort_by, quicksort_by};
+use crate::util::sort::{
+    merge_runs_loser_tree, parallel_merge_runs, parallel_sort_by, quicksort_by, SORT_BLOCK,
+};
 
 /// Sort `local` across all ranks; returns this rank's globally-ordered
 /// shard (shard sizes are approximately balanced by the regular sample).
@@ -54,41 +70,62 @@ pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize
     };
     let splitters = dec_f64(&ctx.broadcast_bytes(0, splitters));
 
-    // Bucket by splitter (local is sorted: walk once).
-    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
-    let mut start = 0usize;
-    for sp in &splitters {
-        let end = start + local[start..].partition_point(|v| v <= sp);
-        bufs.push(enc_f64(&local[start..end]));
-        start = end;
-    }
-    bufs.push(enc_f64(&local[start..]));
+    // Bucket by splitter (local is sorted: walk once). Duplicated
+    // splitter values are handled as a group: the local run of ties with
+    // value `sp` is split evenly over every destination adjacent to the
+    // group (buckets b..=j+1 for splitters b..=j equal to `sp`). Every
+    // rank spreads its own ties the same way, so globally each of those
+    // destinations receives ~1/(j−b+2) of the duplicate mass instead of
+    // one rank receiving all of it.
+    let cuts = tie_split_cuts(&local, &splitters);
+    let bufs: Vec<Vec<u8>> =
+        cuts.windows(2).map(|w| enc_f64(&local[w[0]..w[1]])).collect();
 
     let got = ctx.alltoallv(bufs);
-    // Merge p sorted runs.
-    let mut runs: Vec<Vec<f64>> = got.iter().map(|b| dec_f64(b)).collect();
-    let mut out = Vec::with_capacity(runs.iter().map(|r| r.len()).sum());
-    let mut cursors = vec![0usize; runs.len()];
-    loop {
-        let mut best: Option<(usize, f64)> = None;
-        for (r, run) in runs.iter().enumerate() {
-            if cursors[r] < run.len() {
-                let v = run[cursors[r]];
-                if best.map(|(_, bv)| v < bv).unwrap_or(true) {
-                    best = Some((r, v));
-                }
-            }
-        }
-        match best {
-            Some((r, v)) => {
-                out.push(v);
-                cursors[r] += 1;
-            }
-            None => break,
-        }
+    // Merge the p sorted runs: loser tree (O(log p) comparisons per
+    // element), or the pool-backed pairwise merge rounds once the shard
+    // is large enough to amortize the dispatch. Both are stable in the
+    // run order, so the output is identical either way (and identical
+    // to the cursor-scan reference) for every thread count.
+    let runs: Vec<Vec<f64>> = got.iter().map(|b| dec_f64(b)).collect();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    if ctx.threads > 1 && total > SORT_BLOCK {
+        parallel_merge_runs(ctx.threads, runs, |v| *v)
+    } else {
+        merge_runs_loser_tree(&runs, |v| *v)
     }
-    let _ = &mut runs;
-    out
+}
+
+/// Bucket boundaries (`p + 1` cuts into the sorted `local`) for the
+/// splitter walk of [`sample_sort_f64`]: values strictly between
+/// splitters route as usual; ties of each distinct splitter value are
+/// split evenly across all buckets adjacent to that splitter group.
+fn tie_split_cuts(local: &[f64], splitters: &[f64]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(splitters.len() + 2);
+    cuts.push(0);
+    let mut start = 0usize;
+    let mut b = 0usize;
+    while b < splitters.len() {
+        let sp = splitters[b];
+        // The group of equal splitters [b, j].
+        let mut j = b;
+        while j + 1 < splitters.len() && splitters[j + 1] == sp {
+            j += 1;
+        }
+        let lt = start + local[start..].partition_point(|v| *v < sp);
+        let le = lt + local[lt..].partition_point(|v| *v <= sp);
+        let ties = le - lt;
+        // Destinations b..=j+1 share the ties: boundary t of the k−1
+        // interior boundaries sits at lt + ties·t/k.
+        let k = j - b + 2;
+        for t in 1..k {
+            cuts.push(lt + ties * t / k);
+        }
+        start = le;
+        b = j + 1;
+    }
+    cuts.push(local.len());
+    cuts
 }
 
 /// Exact global median via sample sort (used by the median splitter in a
@@ -96,10 +133,13 @@ pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize
 /// `partition::distributed` trades exactness for fewer bytes).
 pub fn distributed_median_exact(ctx: &mut RankCtx, local: &[f64]) -> f64 {
     use crate::runtime_sim::collectives::ReduceOp;
-    let total = ctx.allreduce1(ReduceOp::Sum, local.len() as f64) as u64;
+    // Counts and shard ranks ride exact u64 lanes end-to-end: an f64 Sum
+    // lane absorbs +1 at 2^53 points and the target rank would silently
+    // drift (the same hole the top build's count reductions closed).
+    let total = ctx.allreduce_u64(ReduceOp::Sum, &[local.len() as u64])[0];
     let sorted = sample_sort_f64(ctx, local.to_vec(), 32);
     // Global rank of my first element = exscan of shard sizes.
-    let before = ctx.exscan_f64(sorted.len() as f64) as u64;
+    let before = ctx.exscan_u64(sorted.len() as u64);
     let target = total / 2;
     let have = if target >= before && target < before + sorted.len() as u64 {
         sorted[(target - before) as usize]
@@ -167,6 +207,38 @@ mod tests {
         let all: Vec<f64> = outs.iter().flatten().copied().collect();
         assert_eq!(all.len(), 300);
         assert!(all.windows(2).all(|w| w[0] <= w[1]), "concatenation not sorted");
+    }
+
+    #[test]
+    fn duplicate_heavy_input_does_not_collapse_onto_one_shard() {
+        // Regression (tie skew): the old bucket walk
+        // `partition_point(|v| v <= sp)` routed every duplicate of a
+        // splitter value to that splitter's rank, so an 80%-duplicate
+        // lane put ≥ 80% of the global data on one shard. Tie splitting
+        // spreads the duplicate mass across the splitter group's
+        // adjacent buckets.
+        let p = 4;
+        let n_per = 500;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let mut rng = SplitMix64::new(11 + ctx.rank as u64);
+            let local: Vec<f64> = (0..n_per)
+                .map(|_| if rng.below(5) < 4 { 0.25 } else { rng.uniform(0.0, 1.0) })
+                .collect();
+            sample_sort_f64(ctx, local, 16)
+        });
+        let total: usize = outs.iter().map(|o| o.len()).sum();
+        assert_eq!(total, p * n_per);
+        // Global order still holds (equal keys on consecutive ranks).
+        for i in 0..p - 1 {
+            if let (Some(a), Some(b)) = (outs[i].last(), outs[i + 1].first()) {
+                assert!(a <= b, "rank {i} max {a} > rank {} min {b}", i + 1);
+            }
+        }
+        // No shard holds even half the data (the old walk put ~85% of
+        // it on rank 0).
+        for (r, o) in outs.iter().enumerate() {
+            assert!(o.len() < total / 2, "rank {r} holds {} of {total}", o.len());
+        }
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //!   [`SORT_BLOCK`] runs: the node-local sorter for large lanes (exact
 //!   `MedianSort` splitters, sample-sort shards), thread-count-invariant
 //!   by construction.
+//! * [`merge_runs_loser_tree`] — k-way merge of sorted runs through a
+//!   loser tree: O(log k) key comparisons per element, the receive-side
+//!   merge of the distributed sample sort (§III-C). The old O(n·k)
+//!   cursor scan survives as [`merge_runs_cursor_scan`], the reference
+//!   the property suite checks both merges against.
+//! * [`parallel_merge_runs`] — the pool-backed variant: the same
+//!   pairwise merge rounds [`parallel_sort_by`] uses, over caller-
+//!   provided runs. All three merges are stable in the run order, so
+//!   they produce identical output.
 //! * [`quickselect`] — expected-O(n) selection (Hoare) with
 //!   median-of-three pivots.
 //! * [`median_of_medians`] — deterministic O(n) selection, used as the
@@ -59,11 +68,27 @@ where
     crate::runtime_sim::threadpool::parallel_map_tasks(threads, runs, |_i, run: &mut [T]| {
         quicksort_by(run, key)
     });
-    // Phase 2: pairwise merge rounds, ping-ponging between `xs` and a
-    // scratch buffer. `bounds` holds the run boundaries (run i is
-    // `[bounds[i], bounds[i+1])`); each round halves it.
+    // Phase 2: pairwise merge rounds over the fixed run boundaries.
     let mut bounds: Vec<usize> = (0..n_runs).map(|i| i * SORT_BLOCK).collect();
     bounds.push(n);
+    merge_rounds(threads, xs, bounds, key);
+}
+
+/// Merge the sorted runs delimited by `bounds` (run i is
+/// `[bounds[i], bounds[i+1])`) in place: pairwise merge rounds,
+/// ping-ponging between `xs` and a scratch buffer, each round's merges
+/// running as parallel pool tasks over disjoint output ranges. Ties take
+/// the left (lower-index) run, so the result is the *stable* merge of
+/// the runs and is bit-identical for every thread count.
+fn merge_rounds<T, K>(
+    threads: usize,
+    xs: &mut [T],
+    mut bounds: Vec<usize>,
+    key: impl Fn(&T) -> K + Copy + Sync,
+) where
+    T: Clone + Send + Sync,
+    K: PartialOrd + Copy,
+{
     let mut scratch: Vec<T> = xs.to_vec();
     let mut in_xs = true;
     while bounds.len() > 2 {
@@ -83,6 +108,159 @@ where
     if !in_xs {
         xs.clone_from_slice(&scratch);
     }
+}
+
+/// Pool-backed k-way merge: concatenate the runs and merge them with the
+/// same pairwise merge rounds [`parallel_sort_by`] uses (`⌈log₂ k⌉`
+/// rounds, each round's merges as parallel pool tasks). Stable in the
+/// run order, so the output equals [`merge_runs_loser_tree`] — and is
+/// bit-identical for every thread count.
+pub fn parallel_merge_runs<T, K>(
+    threads: usize,
+    runs: Vec<Vec<T>>,
+    key: impl Fn(&T) -> K + Copy + Sync,
+) -> Vec<T>
+where
+    T: Clone + Send + Sync,
+    K: PartialOrd + Copy,
+{
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut xs = Vec::with_capacity(total);
+    let mut bounds = Vec::with_capacity(runs.len() + 1);
+    bounds.push(0);
+    for r in &runs {
+        xs.extend_from_slice(r);
+        bounds.push(xs.len());
+    }
+    if bounds.len() > 2 {
+        merge_rounds(threads, &mut xs, bounds, key);
+    }
+    xs
+}
+
+/// K-way merge of sorted runs through a **loser tree**: each emitted
+/// element replays one root-to-leaf path, i.e. at most `⌈log₂ k⌉` key
+/// comparisons — O(n log k) total where the cursor scan
+/// ([`merge_runs_cursor_scan`]) pays O(n·k). Ties go to the lower run
+/// index, so the merge is stable in the run order.
+pub fn merge_runs_loser_tree<T, K>(runs: &[Vec<T>], key: impl Fn(&T) -> K + Copy) -> Vec<T>
+where
+    T: Clone,
+    K: PartialOrd + Copy,
+{
+    merge_runs_loser_tree_counted(runs, key).0
+}
+
+/// [`merge_runs_loser_tree`] plus the number of key comparisons it
+/// performed — the per-element O(log k) bound is asserted in tests and
+/// reported by the ablation bench.
+pub fn merge_runs_loser_tree_counted<T, K>(
+    runs: &[Vec<T>],
+    key: impl Fn(&T) -> K + Copy,
+) -> (Vec<T>, u64)
+where
+    T: Clone,
+    K: PartialOrd + Copy,
+{
+    const NONE: usize = usize::MAX;
+    let k = runs.len();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut cmps = 0u64;
+    if k == 0 {
+        return (out, cmps);
+    }
+    if k == 1 {
+        out.extend_from_slice(&runs[0]);
+        return (out, cmps);
+    }
+    let mut cur = vec![0usize; k];
+    // `beats(a, b)`: run a's head is emitted before run b's. Exhausted
+    // runs (and the `NONE` padding leaves) lose to everything; key ties
+    // go to the lower run index (stability).
+    let beats = |a: usize, b: usize, cur: &[usize], cmps: &mut u64| -> bool {
+        if a == NONE || cur[a] >= runs[a].len() {
+            return false;
+        }
+        if b == NONE || cur[b] >= runs[b].len() {
+            return true;
+        }
+        *cmps += 1;
+        let (ka, kb) = (key(&runs[a][cur[a]]), key(&runs[b][cur[b]]));
+        if ka < kb {
+            return true;
+        }
+        if kb < ka {
+            return false;
+        }
+        a < b
+    };
+    // Bottom-up tournament: leaves `m..2m` hold run indices (padded with
+    // NONE up to the power of two), internal node i keeps the *loser* of
+    // its subtree's final; the overall winner pops out at the root.
+    let m = k.next_power_of_two();
+    let mut win = vec![NONE; 2 * m];
+    for (i, w) in win.iter_mut().skip(m).take(k).enumerate() {
+        *w = i;
+    }
+    let mut loser = vec![NONE; m];
+    for i in (1..m).rev() {
+        let (a, b) = (win[2 * i], win[2 * i + 1]);
+        if beats(a, b, &cur, &mut cmps) {
+            win[i] = a;
+            loser[i] = b;
+        } else {
+            win[i] = b;
+            loser[i] = a;
+        }
+    }
+    let mut winner = win[1];
+    // Replay loop: emit the winner's head, advance its cursor, and play
+    // it back up its leaf-to-root path against the stored losers.
+    while winner != NONE && cur[winner] < runs[winner].len() {
+        out.push(runs[winner][cur[winner]].clone());
+        cur[winner] += 1;
+        let mut node = (m + winner) / 2;
+        while node >= 1 {
+            if beats(loser[node], winner, &cur, &mut cmps) {
+                std::mem::swap(&mut loser[node], &mut winner);
+            }
+            node /= 2;
+        }
+    }
+    (out, cmps)
+}
+
+/// The pre-loser-tree receive merge: scan all `k` run heads per emitted
+/// element (O(n·k)). Kept as the reference implementation the property
+/// suite checks [`merge_runs_loser_tree`] and [`parallel_merge_runs`]
+/// against; ties keep the earliest run (stable), like both successors.
+pub fn merge_runs_cursor_scan<T, K>(runs: &[Vec<T>], key: impl Fn(&T) -> K + Copy) -> Vec<T>
+where
+    T: Clone,
+    K: PartialOrd + Copy,
+{
+    let mut out = Vec::with_capacity(runs.iter().map(|r| r.len()).sum());
+    let mut cursors = vec![0usize; runs.len()];
+    loop {
+        let mut best: Option<(usize, K)> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if cursors[r] < run.len() {
+                let v = key(&run[cursors[r]]);
+                if best.map(|(_, bv)| v < bv).unwrap_or(true) {
+                    best = Some((r, v));
+                }
+            }
+        }
+        match best {
+            Some((r, _)) => {
+                out.push(runs[r][cursors[r]].clone());
+                cursors[r] += 1;
+            }
+            None => break,
+        }
+    }
+    out
 }
 
 /// One merge round of [`parallel_sort_by`]: merge runs (0,1), (2,3), …
@@ -372,6 +550,73 @@ mod tests {
             parallel_sort_by(t, &mut got, |x| x.0);
             assert_eq!(got, base, "t={t} diverged");
         }
+    }
+
+    /// Random sorted runs with heavy key duplication, plus empty runs.
+    fn random_runs(seed: u64, k: usize, max_len: usize, key_space: u64) -> Vec<Vec<u64>> {
+        let mut s = SplitMix64::new(seed);
+        (0..k)
+            .map(|_| {
+                let len = s.below(max_len as u64 + 1) as usize;
+                let mut r: Vec<u64> = (0..len).map(|_| s.below(key_space)).collect();
+                r.sort_unstable();
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn loser_tree_matches_cursor_scan_reference() {
+        for (seed, k) in [(1u64, 1usize), (2, 2), (3, 3), (4, 7), (5, 8), (6, 17)] {
+            let runs = random_runs(seed, k, 200, 13);
+            let want = merge_runs_cursor_scan(&runs, |x| *x);
+            assert_eq!(merge_runs_loser_tree(&runs, |x| *x), want, "k={k}");
+            for t in [1usize, 2, 4, 8] {
+                assert_eq!(parallel_merge_runs(t, runs.clone(), |x| *x), want, "k={k} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn loser_tree_is_stable_in_run_order() {
+        // Payload-carrying elements with equal keys: every merge must
+        // emit run 0's ties before run 1's, etc.
+        let runs: Vec<Vec<(u64, u32)>> = (0..5)
+            .map(|r| (0..40).map(|i| (i / 10, r as u32 * 100 + i as u32)).collect())
+            .collect();
+        let want = merge_runs_cursor_scan(&runs, |x| x.0);
+        assert_eq!(merge_runs_loser_tree(&runs, |x| x.0), want);
+        for t in [1usize, 2, 4] {
+            assert_eq!(parallel_merge_runs(t, runs.clone(), |x| x.0), want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn loser_tree_comparisons_are_log_k_per_element() {
+        // The tentpole complexity claim: ≤ ⌈log₂ k⌉ key comparisons per
+        // emitted element (plus the one-off m−1 tournament build).
+        for k in [2usize, 3, 8, 16, 33] {
+            let runs = random_runs(100 + k as u64, k, 500, 1000);
+            let total: u64 = runs.iter().map(|r| r.len() as u64).sum();
+            let (out, cmps) = merge_runs_loser_tree_counted(&runs, |x| *x);
+            assert_eq!(out.len() as u64, total);
+            let m = k.next_power_of_two() as u64;
+            let log_k = m.trailing_zeros() as u64;
+            assert!(
+                cmps <= total * log_k + (m - 1),
+                "k={k}: {cmps} comparisons for {total} elements (log2 m = {log_k})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_runs_handle_empty_inputs() {
+        let empty: Vec<Vec<u64>> = Vec::new();
+        assert!(merge_runs_loser_tree(&empty, |x: &u64| *x).is_empty());
+        assert!(parallel_merge_runs(4, empty, |x: &u64| *x).is_empty());
+        let all_empty: Vec<Vec<u64>> = vec![Vec::new(); 6];
+        assert!(merge_runs_loser_tree(&all_empty, |x| *x).is_empty());
+        assert!(parallel_merge_runs(4, all_empty, |x| *x).is_empty());
     }
 
     #[test]

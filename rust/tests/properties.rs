@@ -518,6 +518,137 @@ fn prop_migrate_pack_parallel_is_byte_identical() {
 }
 
 #[test]
+fn prop_transfer_t_l_t_matches_serial_wire_path() {
+    use sfc_part::migrate::{pack, transfer_t_l_t, unpack};
+    use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+    // The parallel receive path (pack_parallel → rounds → unpack_parallel)
+    // must be bit-identical to the serial pack/unpack reference for every
+    // threads-per-rank × max_msg × duplicate-heavy input. The reference
+    // is computed outside the fabric: pack each rank's shard serially,
+    // route buffer [src][dst], and serially unpack per destination in
+    // source order — exactly what `transfer_t_l_t` did before it went
+    // parallel.
+    forall("transfer-matches-serial-path", 4, |g| {
+        let ps = duplicate_heavy_points(g, 600);
+        let dim = ps.dim;
+        let p = g.usize_in(2, 5);
+        let max_msg = [64usize, 4096, 1 << 20][g.usize_in(0, 3)];
+        // Destination: by id hash, so ranks exchange uneven buffers.
+        let dest_of = |ids: &[u64]| -> Vec<u32> {
+            ids.iter().map(|&id| ((id.wrapping_mul(0x9e3779b9)) % p as u64) as u32).collect()
+        };
+        // Serial reference: per-destination buffers in source order.
+        let mut expected: Vec<sfc_part::geom::point::PointSet> =
+            (0..p).map(|_| sfc_part::geom::point::PointSet::new(dim)).collect();
+        {
+            let routed: Vec<Vec<Vec<u8>>> = (0..p)
+                .map(|src| {
+                    let local = shard(&ps, src, p);
+                    pack(&local, &dest_of(&local.ids), p)
+                })
+                .collect();
+            for (dst, exp) in expected.iter_mut().enumerate() {
+                for routed_src in routed.iter() {
+                    unpack(&routed_src[dst], dim, exp);
+                }
+            }
+        }
+        for tpr in [1usize, 2, 4] {
+            let (outs, _) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+                let local = shard(&ps, ctx.rank, p);
+                let dest = dest_of(&local.ids);
+                transfer_t_l_t(ctx, &local, &dest, max_msg)
+            });
+            for (r, (got, want)) in outs.iter().zip(&expected).enumerate() {
+                if got.ids != want.ids || got.weights != want.weights || got.coords != want.coords
+                {
+                    return (
+                        false,
+                        format!("p={p} tpr={tpr} max_msg={max_msg} rank {r}: shard diverged"),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_merge_runs_match_cursor_scan_reference() {
+    use sfc_part::util::sort::{
+        merge_runs_cursor_scan, merge_runs_loser_tree, parallel_merge_runs,
+    };
+    // The loser tree and the pool-backed pairwise merge must both equal
+    // the old cursor-scan merge (kept as the reference) on sorted runs
+    // with heavy duplication, including empty runs, for every thread
+    // count.
+    forall("merge-runs-reference", 25, |g| {
+        let k = g.usize_in(1, 12);
+        let runs: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let len = g.usize_in(0, 300);
+                // Small key space → many cross-run duplicates.
+                let mut r: Vec<f64> = (0..len).map(|_| g.u64_below(9) as f64 * 0.125).collect();
+                r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                r
+            })
+            .collect();
+        let want = merge_runs_cursor_scan(&runs, |v| *v);
+        if merge_runs_loser_tree(&runs, |v| *v) != want {
+            return (false, format!("k={k}: loser tree diverged from cursor scan"));
+        }
+        for t in [1usize, 2, 4, 8] {
+            if parallel_merge_runs(t, runs.clone(), |v| *v) != want {
+                return (false, format!("k={k} t={t}: parallel merge diverged"));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_sample_sort_balances_duplicate_heavy_lanes() {
+    use sfc_part::runtime_sim::sample_sort::sample_sort_f64;
+    use sfc_part::runtime_sim::{run_ranks, CostModel};
+    // Regression property for the tie-skew bug: when ~80% of keys equal
+    // one value, the old `v <= sp` bucket walk collapsed the whole
+    // duplicate mass onto a single shard (≥ 80% of the data on one
+    // rank). With tie splitting the worst case is p = 2 with an
+    // off-center site: half the tie mass (~40%) plus one uniform tail
+    // (≤ 18%) — comfortably under the 70% bound asserted here.
+    forall("sample-sort-duplicate-balance", 6, |g| {
+        let p = g.usize_in(2, 6);
+        let n_per = g.usize_in(200, 500);
+        let site = g.f64_in(0.1, 0.9);
+        let seed = g.u64_below(1 << 40);
+        let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+            use sfc_part::util::rng::{Rng, SplitMix64};
+            let mut rng = SplitMix64::new(seed ^ ctx.rank as u64);
+            let local: Vec<f64> = (0..n_per)
+                .map(|_| if rng.below(5) < 4 { site } else { rng.uniform(0.0, 1.0) })
+                .collect();
+            sample_sort_f64(ctx, local, 16)
+        });
+        let total: usize = outs.iter().map(|o| o.len()).sum();
+        if total != p * n_per {
+            return (false, format!("p={p}: content lost ({total} of {})", p * n_per));
+        }
+        for i in 0..p - 1 {
+            if let (Some(a), Some(b)) = (outs[i].last(), outs[i + 1].first()) {
+                if a > b {
+                    return (false, format!("p={p}: order violated across ranks {i},{}", i + 1));
+                }
+            }
+        }
+        let max = outs.iter().map(|o| o.len()).max().unwrap();
+        (
+            max <= total * 7 / 10,
+            format!("p={p} n_per={n_per}: max shard {max} of {total} (duplicate collapse)"),
+        )
+    });
+}
+
+#[test]
 fn prop_collectives_agree_with_local_reduction() {
     use sfc_part::runtime_sim::collectives::ReduceOp;
     use sfc_part::runtime_sim::{run_ranks, CostModel};
