@@ -429,4 +429,108 @@ fn main() {
          identical=true on every row.",
         merge_p.next_power_of_two().trailing_zeros()
     );
+
+    // ---- 11. incremental session vs from-scratch rebuild (p=8, hotspot) ----
+    // The dynamic-repartitioning tentpole: a persistent `DistSession`
+    // refreshes leaf weights in ONE fused allreduce, re-splits only
+    // drifted leaves, sticks the ownership map, and migrates only the
+    // delta — vs paying the full top build + knapsack + migration every
+    // step. Rounds are collective tag epochs; msgs come off the fabric;
+    // both runs evolve the same global points (pure per-point scenario).
+    {
+        use sfc_part::partition::distributed::{rebuild_step, DistSession, SessionConfig};
+        use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+        use std::sync::Mutex;
+
+        let dp_n = args.usize("dyn-points", n.min(60_000));
+        let dp_p = 8usize;
+        let dyn_steps = args.usize("dyn-steps", 3);
+        let dyn_k1 = 4 * dp_p;
+        let scen = Scenario::new(ScenarioKind::Hotspot);
+        let dyn_cfg = PartitionConfig {
+            splitter: SplitterConfig::uniform(SplitterKind::MedianSort),
+            ..Default::default()
+        };
+        let dyn_global = PointSet::uniform(dp_n, 3, 91);
+        let mut t = Table::new(
+            "ablation: DistSession::repartition vs rebuild-per-step (p=8, moving hotspot)",
+            &["step", "s.rounds", "b.rounds", "s.msgs", "b.msgs", "s.mig%", "b.mig%", "s.imb", "b.imb"],
+        );
+        // Session lane.
+        let cfg0 = dyn_cfg.clone();
+        let (created, _) = run_ranks_threaded(dp_p, 0, CostModel::default(), |ctx| {
+            let local = dyn_global.mod_shard(ctx.rank, ctx.n_ranks);
+            DistSession::create(ctx, &local, &cfg0, dyn_k1, SessionConfig::default())
+        });
+        let mut sessions = created;
+        let mut srows: Vec<(u64, u64, f64, f64)> = Vec::new(); // rounds, msgs, mig%, imb
+        for step in 0..dyn_steps {
+            let slots: Vec<Mutex<Option<DistSession>>> =
+                sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
+            let (outs, rep) = run_ranks_threaded(dp_p, 0, CostModel::default(), |ctx| {
+                let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
+                let batch = scen.update_for(sess.local(), step);
+                let stats = sess.repartition(ctx, &batch);
+                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                (sess, stats, load)
+            });
+            let migrated: u64 = outs.iter().map(|(_, s, _)| s.migrated_out).sum();
+            let total: u64 = outs.iter().map(|(_, s, _)| s.local_points).sum();
+            let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+            srows.push((
+                outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0),
+                rep.total_msgs,
+                100.0 * migrated as f64 / total.max(1) as f64,
+                sfc_part::partition::quality::load_summary(&loads).imbalance,
+            ));
+            sessions = outs.into_iter().map(|(s, _, _)| s).collect();
+        }
+        // Rebuild lane (same evolution rule).
+        let mut locals: Vec<PointSet> =
+            (0..dp_p).map(|r| dyn_global.mod_shard(r, dp_p)).collect();
+        let mut brows: Vec<(u64, u64, f64, f64)> = Vec::new();
+        for step in 0..dyn_steps {
+            let slots: Vec<Mutex<Option<PointSet>>> =
+                locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
+            let cfgb = dyn_cfg.clone();
+            let (outs, rep) = run_ranks_threaded(dp_p, 0, CostModel::default(), |ctx| {
+                let local = slots[ctx.rank].lock().unwrap().take().unwrap();
+                let batch = scen.update_for(&local, step);
+                let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, &cfgb, dyn_k1);
+                let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
+                (shard, rounds, migrated, load)
+            });
+            let migrated: u64 = outs.iter().map(|(_, _, m, _)| *m).sum();
+            let total: u64 = outs.iter().map(|(l, _, _, _)| l.len() as u64).sum();
+            let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
+            brows.push((
+                outs.first().map(|(_, r, _, _)| *r).unwrap_or(0),
+                rep.total_msgs,
+                100.0 * migrated as f64 / total.max(1) as f64,
+                sfc_part::partition::quality::load_summary(&loads).imbalance,
+            ));
+            locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
+        }
+        for (i, (s, b)) in srows.iter().zip(&brows).enumerate() {
+            t.row(vec![
+                i.to_string(),
+                s.0.to_string(),
+                b.0.to_string(),
+                s.1.to_string(),
+                b.1.to_string(),
+                format!("{:.1}", s.2),
+                format!("{:.1}", b.2),
+                format!("{:.3}", s.3),
+                format!("{:.3}", b.3),
+            ]);
+        }
+        t.print();
+        let sr: u64 = srows.iter().map(|r| r.0).sum();
+        let br: u64 = brows.iter().map(|r| r.0).sum();
+        println!(
+            "\ncheck: session rounds ≤ 50% of rebuild rounds ({} vs {}) and s.mig% ≤ 50% of \
+             b.mig% per step, at equal or better s.imb.",
+            sr, br
+        );
+    }
 }

@@ -1,0 +1,189 @@
+//! Dynamic repartitioning: `DistSession::repartition` vs a
+//! from-scratch `distributed_partition` every step — the paper's
+//! "partitioning costs were minimized … to tolerate frequent
+//! adjustments" claim, measured off the wire.
+//!
+//! Both runs evolve the *same* global point multiset (scenario updates
+//! are pure per-point rules), and every step executes in its own
+//! simulated fabric, so the per-step `rounds` (collective tag epochs),
+//! `msgs`/`bytes` (fabric counters), migrated fraction, and weight
+//! imbalance are exact, not sampled. The acceptance target: on the
+//! moving-hotspot scenario at p = 8, a session step issues **< 50% of
+//! the collective rounds** and migrates **< 50% of the points** of the
+//! from-scratch baseline, at equal or better imbalance.
+
+use std::sync::Mutex;
+
+use sfc_part::bench_util::Table;
+use sfc_part::cli::{Args, Scale};
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::splitter::{SplitterConfig, SplitterKind};
+use sfc_part::partition::distributed::{rebuild_step, DistSession, SessionConfig};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+
+/// One step's aggregated measurements.
+struct StepRow {
+    rounds: u64,
+    msgs: u64,
+    bytes: u64,
+    migrated: u64,
+    total: u64,
+    imb: f64,
+    splits: u64,
+    merges: u64,
+}
+
+fn imbalance(loads: &[f64]) -> f64 {
+    sfc_part::partition::quality::load_summary(loads).imbalance
+}
+
+fn main() {
+    let args = Args::parse();
+    let scale = Scale::detect(&args);
+    let n = args.usize("points", scale.pick(200_000, 20_000_000));
+    let p = args.usize("ranks", 8);
+    let steps = args.usize("steps", 6);
+    let tpr = args.usize("threads-per-rank", 0);
+    let k1 = args.usize("k1", 4 * p);
+    let scenario_name = args.get_or("scenario", "hotspot").to_string();
+    let kind: ScenarioKind = scenario_name.parse().expect("bad --scenario");
+    let scenario = Scenario::new(kind);
+    let use_median = !args.flag("midpoint");
+    let global = PointSet::uniform(n, 3, 9);
+    let cfg = if use_median {
+        PartitionConfig {
+            splitter: SplitterConfig::uniform(SplitterKind::MedianSort),
+            ..Default::default()
+        }
+    } else {
+        PartitionConfig::default()
+    };
+    let scfg = SessionConfig::default();
+
+    // ---- Session run: create once, repartition per step ----
+    let cfg0 = cfg.clone();
+    let (created, rep0) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+        let local = global.mod_shard(ctx.rank, ctx.n_ranks);
+        let e0 = ctx.epochs_used();
+        let sess = DistSession::create(ctx, &local, &cfg0, k1, scfg);
+        (sess, (ctx.epochs_used() - e0) as u64)
+    });
+    let build_rounds = created.first().map(|(_, r)| *r).unwrap_or(0);
+    let build_msgs = rep0.total_msgs;
+    let mut sessions: Vec<DistSession> = created.into_iter().map(|(s, _)| s).collect();
+
+    let scen = &scenario;
+    let mut session_rows: Vec<StepRow> = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let slots: Vec<Mutex<Option<DistSession>>> =
+            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
+        let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scen.update_for(sess.local(), step);
+            let stats = sess.repartition(ctx, &batch);
+            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+            (sess, stats, load)
+        });
+        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        session_rows.push(StepRow {
+            rounds: outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0),
+            msgs: rep.total_msgs,
+            bytes: rep.total_bytes,
+            migrated: outs.iter().map(|(_, s, _)| s.migrated_out).sum(),
+            total: outs.iter().map(|(_, s, _)| s.local_points).sum(),
+            imb: imbalance(&loads),
+            splits: outs.first().map(|(_, s, _)| s.splits).unwrap_or(0),
+            merges: outs.first().map(|(_, s, _)| s.merges).unwrap_or(0),
+        });
+        sessions = outs.into_iter().map(|(s, _, _)| s).collect();
+    }
+
+    // ---- Baseline run: from-scratch distributed_partition per step ----
+    let mut locals: Vec<PointSet> = (0..p).map(|r| global.mod_shard(r, p)).collect();
+    let mut baseline_rows: Vec<StepRow> = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let slots: Vec<Mutex<Option<PointSet>>> =
+            locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
+        let cfgb = cfg.clone();
+        let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+            let local = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scen.update_for(&local, step);
+            let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, &cfgb, k1);
+            let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
+            (shard, rounds, migrated, load)
+        });
+        let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
+        baseline_rows.push(StepRow {
+            rounds: outs.first().map(|(_, r, _, _)| *r).unwrap_or(0),
+            msgs: rep.total_msgs,
+            bytes: rep.total_bytes,
+            migrated: outs.iter().map(|(_, _, m, _)| *m).sum(),
+            total: outs.iter().map(|(l, _, _, _)| l.len() as u64).sum(),
+            imb: imbalance(&loads),
+            splits: 0,
+            merges: 0,
+        });
+        locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
+    }
+
+    // ---- Report ----
+    println!(
+        "dynamic repartitioning: n={n}, p={p}, k1={k1}, scenario={scenario_name}, \
+         splitter={}, create rounds={build_rounds} msgs={build_msgs}",
+        if use_median { "median" } else { "midpoint" }
+    );
+    let mut t = Table::new(
+        "per step: DistSession::repartition vs from-scratch rebuild",
+        &[
+            "step", "s.rounds", "b.rounds", "s.msgs", "b.msgs", "s.mig%", "b.mig%",
+            "s.imb", "b.imb", "splits", "merges",
+        ],
+    );
+    let pct = |num: u64, den: u64| 100.0 * num as f64 / den.max(1) as f64;
+    for (i, (s, b)) in session_rows.iter().zip(&baseline_rows).enumerate() {
+        t.row(vec![
+            i.to_string(),
+            s.rounds.to_string(),
+            b.rounds.to_string(),
+            s.msgs.to_string(),
+            b.msgs.to_string(),
+            format!("{:.1}", pct(s.migrated, s.total)),
+            format!("{:.1}", pct(b.migrated, b.total)),
+            format!("{:.3}", s.imb),
+            format!("{:.3}", b.imb),
+            s.splits.to_string(),
+            s.merges.to_string(),
+        ]);
+    }
+    t.print();
+    let sums = |rows: &[StepRow]| {
+        let r: u64 = rows.iter().map(|x| x.rounds).sum();
+        let m: u64 = rows.iter().map(|x| x.migrated).sum();
+        let tot: u64 = rows.iter().map(|x| x.total).sum();
+        let msgs: u64 = rows.iter().map(|x| x.msgs).sum();
+        let bytes: u64 = rows.iter().map(|x| x.bytes).sum();
+        let imb = rows.last().map(|x| x.imb).unwrap_or(0.0);
+        (r, m, tot, msgs, bytes, imb)
+    };
+    let (sr, sm, st, smsg, sbytes, simb) = sums(&session_rows);
+    let (br, bm, bt, bmsg, bbytes, bimb) = sums(&baseline_rows);
+    println!(
+        "\ntotals over {steps} steps — session: rounds {sr}, msgs {smsg}, bytes {sbytes}, migrated {:.1}%, final imb {simb:.3}",
+        pct(sm, st)
+    );
+    println!(
+        "totals over {steps} steps — rebuild: rounds {br}, msgs {bmsg}, bytes {bbytes}, migrated {:.1}%, final imb {bimb:.3}",
+        pct(bm, bt)
+    );
+    println!(
+        "session/rebuild: rounds {:.0}%, migrated points {:.0}%",
+        100.0 * sr as f64 / br.max(1) as f64,
+        100.0 * sm as f64 / bm.max(1) as f64,
+    );
+    println!(
+        "\ncheck: on --scenario hotspot at p=8, session rounds < 50% and migrated points < 50% \
+         of the rebuild baseline, with s.imb ≤ b.imb + tol (the acceptance bar)."
+    );
+}

@@ -186,6 +186,63 @@ pub fn partition_config(cfg: &ConfigFile) -> Result<PartitionConfig> {
     Ok(out)
 }
 
+/// Typed knobs of the `distributed-dynamic` loop (section `[dynamic]`):
+/// the step count, the load scenario, the session drift band, and the
+/// sticky-knapsack tolerance. CLI flags override file values.
+#[derive(Clone, Debug)]
+pub struct DynamicConfig {
+    pub steps: usize,
+    pub scenario: String,
+    pub drift_lo: f64,
+    pub drift_hi: f64,
+    pub imbalance_tol: f64,
+    pub amplitude: f64,
+    pub speed: f64,
+    pub churn_frac: f64,
+}
+
+impl Default for DynamicConfig {
+    fn default() -> Self {
+        DynamicConfig {
+            steps: 8,
+            scenario: "hotspot".to_string(),
+            drift_lo: 0.5,
+            drift_hi: 2.0,
+            imbalance_tol: 0.10,
+            amplitude: 8.0,
+            speed: 0.05,
+            churn_frac: 0.05,
+        }
+    }
+}
+
+/// Build a [`DynamicConfig`] from a config file (section `dynamic`),
+/// falling back to defaults for missing keys and rejecting unknown ones.
+pub fn dynamic_config(cfg: &ConfigFile) -> Result<DynamicConfig> {
+    let mut out = DynamicConfig::default();
+    for (key, val) in &cfg.values {
+        let Some(name) = key.strip_prefix("dynamic.") else { continue };
+        match name {
+            "steps" => out.steps = val.as_usize()?,
+            "scenario" => {
+                let s = val.as_str()?;
+                // Validate early so a typo fails at load, not mid-run.
+                s.parse::<crate::partition::scenario::ScenarioKind>()
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                out.scenario = s.to_string();
+            }
+            "drift_lo" => out.drift_lo = val.as_f64()?,
+            "drift_hi" => out.drift_hi = val.as_f64()?,
+            "imbalance_tol" => out.imbalance_tol = val.as_f64()?,
+            "amplitude" => out.amplitude = val.as_f64()?,
+            "speed" => out.speed = val.as_f64()?,
+            "churn_frac" => out.churn_frac = val.as_f64()?,
+            other => bail!("unknown key dynamic.{other}"),
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +285,26 @@ mod tests {
     fn malformed_lines_error() {
         assert!(ConfigFile::parse("just some text").is_err());
         assert!(ConfigFile::parse("key = @nope").is_err());
+    }
+
+    #[test]
+    fn dynamic_config_from_file() {
+        let cfg = ConfigFile::parse(
+            "[dynamic]\nsteps = 12\nscenario = \"wave\"\ndrift_hi = 3.0\nimbalance_tol = 0.2\n",
+        )
+        .unwrap();
+        let dc = dynamic_config(&cfg).unwrap();
+        assert_eq!(dc.steps, 12);
+        assert_eq!(dc.scenario, "wave");
+        assert_eq!(dc.drift_hi, 3.0);
+        assert_eq!(dc.imbalance_tol, 0.2);
+        // Untouched keys keep their defaults.
+        assert_eq!(dc.drift_lo, 0.5);
+        // Unknown keys and bad scenario names are rejected.
+        let bad = ConfigFile::parse("[dynamic]\nstepz = 1\n").unwrap();
+        assert!(dynamic_config(&bad).is_err());
+        let bad = ConfigFile::parse("[dynamic]\nscenario = \"tsunami\"\n").unwrap();
+        assert!(dynamic_config(&bad).is_err());
     }
 
     #[test]

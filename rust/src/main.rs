@@ -26,6 +26,7 @@ fn main() {
     let result = match cmd {
         "partition" => cmd_partition(&args),
         "distributed" => cmd_distributed(&args),
+        "distributed-dynamic" => cmd_distributed_dynamic(&args),
         "dynamic" => cmd_dynamic(&args),
         "queries" => cmd_queries(&args),
         "graph" => cmd_graph(&args),
@@ -49,12 +50,15 @@ fn main() {
 fn print_help() {
     println!(
         "sfc-part — distributed geometric partitioner (SFC orders)\n\
-         commands: partition | distributed | dynamic | queries | graph | spmv | info\n\
+         commands: partition | distributed | distributed-dynamic | dynamic | queries | graph | spmv | info\n\
          common flags: --points N --dim D --parts P --curve morton|hilbert\n\
          --threads T (0 or absent = all cores; results are identical for any T;\n\
                       under `distributed`, T = worker share per simulated rank)\n\
          --splitter midpoint|median-sort|median-sample|median-select --bucket B\n\
-         --dist uniform|clustered --seed S --config FILE"
+         --dist uniform|clustered --seed S --config FILE\n\
+         distributed-dynamic: --ranks P --steps N --scenario hotspot|wave|churn\n\
+         --drift-lo F --drift-hi F --imb-tol F --amplitude F --speed F --churn-frac F\n\
+         --baseline=true (also run the from-scratch-per-step comparison)"
     );
 }
 
@@ -154,6 +158,156 @@ fn cmd_distributed(args: &Args) -> Result<()> {
         rep.total_msgs,
         rep.total_bytes
     );
+    Ok(())
+}
+
+/// The incremental repartitioning loop: a persistent `DistSession` per
+/// rank, one scripted load scenario, one `repartition` per step — the
+/// paper's "dynamic applications" workload. Each step runs in its own
+/// simulated fabric, so the reported rounds/msgs/bytes are exact
+/// per-step wire measurements. `--baseline=true` replays the same load
+/// script against a from-scratch `distributed_partition` per step.
+fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
+    use sfc_part::partition::distributed::{DistSession, SessionConfig};
+    use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+    use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+    use std::sync::Mutex;
+
+    let cfg = partition_cfg(args)?;
+    let mut dyncfg = match args.get("config") {
+        Some(path) => {
+            sfc_part::config::dynamic_config(&ConfigFile::load(std::path::Path::new(path))?)?
+        }
+        None => sfc_part::config::DynamicConfig::default(),
+    };
+    dyncfg.steps = args.usize("steps", dyncfg.steps);
+    if let Some(s) = args.get("scenario") {
+        dyncfg.scenario = s.to_string();
+    }
+    dyncfg.drift_lo = args.f64("drift-lo", dyncfg.drift_lo);
+    dyncfg.drift_hi = args.f64("drift-hi", dyncfg.drift_hi);
+    dyncfg.imbalance_tol = args.f64("imb-tol", dyncfg.imbalance_tol);
+    dyncfg.amplitude = args.f64("amplitude", dyncfg.amplitude);
+    dyncfg.speed = args.f64("speed", dyncfg.speed);
+    dyncfg.churn_frac = args.f64("churn-frac", dyncfg.churn_frac);
+
+    let kind: ScenarioKind =
+        dyncfg.scenario.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut scenario = Scenario::new(kind);
+    scenario.amplitude = dyncfg.amplitude;
+    scenario.speed = dyncfg.speed;
+    scenario.churn_frac = dyncfg.churn_frac;
+
+    let ps = workload(args);
+    let ranks = args.usize("ranks", 4);
+    let k1 = args.usize("k1", 4 * ranks);
+    let tpr = args.usize("threads", 0);
+    let scfg = SessionConfig {
+        drift_lo: dyncfg.drift_lo,
+        drift_hi: dyncfg.drift_hi,
+        imbalance_tol: dyncfg.imbalance_tol,
+    };
+
+    // Step 0: fresh sessions (the one-time build).
+    let cfg0 = cfg.clone();
+    let (mut sessions, rep0) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
+        let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+        let e0 = ctx.epochs_used();
+        let sess = DistSession::create(ctx, &local, &cfg0, k1, scfg);
+        (sess, (ctx.epochs_used() - e0) as u64)
+    });
+    let build_rounds = sessions.first().map(|(_, r)| *r).unwrap_or(0);
+    println!(
+        "create: {} ranks, k1={}, rounds={}, msgs={}, bytes={}",
+        ranks, k1, build_rounds, rep0.total_msgs, rep0.total_bytes
+    );
+
+    println!(
+        "{:>4} {:>7} {:>9} {:>7} {:>6} {:>6} {:>6} {:>6} {:>7} {:>9} {:>11}",
+        "step", "rounds", "migrated", "mig%", "split", "merge", "moved", "leaves", "imb",
+        "msgs", "bytes"
+    );
+    let scen = &scenario;
+    let mut sess_sum = (0u64, 0u64, 0u64); // rounds, migrated, total points
+    for step in 0..dyncfg.steps {
+        let slots: Vec<Mutex<Option<DistSession>>> =
+            sessions.into_iter().map(|(s, _)| Mutex::new(Some(s))).collect();
+        let (outs, rep) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
+            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scen.update_for(sess.local(), step);
+            let stats = sess.repartition(ctx, &batch);
+            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+            (sess, stats, load)
+        });
+        let rounds = outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0);
+        let migrated: u64 = outs.iter().map(|(_, s, _)| s.migrated_out).sum();
+        let total: u64 = outs.iter().map(|(_, s, _)| s.local_points).sum();
+        let splits: u64 = outs.first().map(|(_, s, _)| s.splits).unwrap_or(0);
+        let merges: u64 = outs.first().map(|(_, s, _)| s.merges).unwrap_or(0);
+        let moved: u64 = outs.first().map(|(_, s, _)| s.moved_leaves).unwrap_or(0);
+        let leaves: u64 = outs.first().map(|(_, s, _)| s.leaves).unwrap_or(0);
+        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        let imb = sfc_part::partition::quality::load_summary(&loads).imbalance;
+        println!(
+            "{:>4} {:>7} {:>9} {:>6.1}% {:>6} {:>6} {:>6} {:>6} {:>7.3} {:>9} {:>11}",
+            step,
+            rounds,
+            migrated,
+            100.0 * migrated as f64 / total.max(1) as f64,
+            splits,
+            merges,
+            moved,
+            leaves,
+            imb,
+            rep.total_msgs,
+            rep.total_bytes
+        );
+        sess_sum.0 += rounds;
+        sess_sum.1 += migrated;
+        sess_sum.2 += total;
+        sessions = outs.into_iter().map(|(s, st, _)| (s, st.collective_rounds)).collect();
+    }
+    println!(
+        "session avg/step: rounds {:.1} ({:.0}% of one rebuild), migrated {:.1}%",
+        sess_sum.0 as f64 / dyncfg.steps.max(1) as f64,
+        100.0 * sess_sum.0 as f64 / (dyncfg.steps.max(1) as f64 * build_rounds.max(1) as f64),
+        100.0 * sess_sum.1 as f64 / sess_sum.2.max(1) as f64
+    );
+
+    // Both `--baseline` (bare, trailing) and `--baseline=true` enable the
+    // comparison — the parser stores the `=value` form as an option, not
+    // a flag.
+    let baseline = args.flag("baseline")
+        || matches!(args.get("baseline"), Some("true") | Some("1"));
+    if baseline {
+        let mut locals: Vec<sfc_part::geom::point::PointSet> =
+            (0..ranks).map(|r| ps.mod_shard(r, ranks)).collect();
+        let mut base_sum = (0u64, 0u64, 0u64);
+        for step in 0..dyncfg.steps {
+            let slots: Vec<Mutex<Option<sfc_part::geom::point::PointSet>>> =
+                locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
+            let cfgb = cfg.clone();
+            let (outs, _) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
+                let local = slots[ctx.rank].lock().unwrap().take().unwrap();
+                let batch = scen.update_for(&local, step);
+                sfc_part::partition::distributed::rebuild_step(ctx, local, &batch, &cfgb, k1)
+            });
+            let rounds = outs.first().map(|(_, r, _)| *r).unwrap_or(0);
+            let migrated: u64 = outs.iter().map(|(_, _, m)| *m).sum();
+            let total: u64 = outs.iter().map(|(l, _, _)| l.len() as u64).sum();
+            base_sum.0 += rounds;
+            base_sum.1 += migrated;
+            base_sum.2 += total;
+            locals = outs.into_iter().map(|(l, _, _)| l).collect();
+        }
+        println!(
+            "baseline avg/step: rounds {:.1}, migrated {:.1}% — session used {:.0}% of the rounds, {:.0}% of the migration",
+            base_sum.0 as f64 / dyncfg.steps.max(1) as f64,
+            100.0 * base_sum.1 as f64 / base_sum.2.max(1) as f64,
+            100.0 * sess_sum.0 as f64 / base_sum.0.max(1) as f64,
+            100.0 * sess_sum.1 as f64 / base_sum.1.max(1) as f64
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,37 @@
+//! Stage 3: leaf → rank ownership over the SFC-ordered leaf line.
+//!
+//! Fresh builds slice the leaf weights with the plain greedy knapsack;
+//! session steps use the **sticky** knapsack, which keeps every
+//! surviving leaf's current owner unless a part boundary must move to
+//! bring the load back inside the tolerance band — the paper's
+//! "partitioning costs were minimized … to tolerate frequent
+//! adjustments" requirement applied to the ownership map. Both run on
+//! allreduce-identical weights, so every rank computes the same
+//! assignment with zero additional communication.
+
+use crate::partition::knapsack::{greedy_knapsack_buckets, greedy_knapsack_sticky};
+
+use super::TopNode;
+
+/// Leaf weights in the given leaf order (callers pass leaves already
+/// sorted by SFC key).
+pub(crate) fn leaf_weights(nodes: &[TopNode], leaf_ids: &[u32]) -> Vec<f64> {
+    leaf_ids.iter().map(|&l| nodes[l as usize].weight).collect()
+}
+
+/// Fresh assignment: greedy knapsack over the leaf weights.
+pub(crate) fn assign_fresh(nodes: &[TopNode], leaf_ids: &[u32], parts: usize) -> Vec<u32> {
+    greedy_knapsack_buckets(&leaf_weights(nodes, leaf_ids), parts)
+}
+
+/// Sticky incremental assignment: keep `prev_owner` wherever the load
+/// band allows, minimally moving part boundaries otherwise.
+pub(crate) fn assign_sticky(
+    nodes: &[TopNode],
+    leaf_ids: &[u32],
+    prev_owner: &[u32],
+    parts: usize,
+    tol: f64,
+) -> Vec<u32> {
+    greedy_knapsack_sticky(&leaf_weights(nodes, leaf_ids), prev_owner, parts, tol)
+}

@@ -1,0 +1,393 @@
+//! The multi-probe distributed median engine (split-value selection for
+//! median top splitters), plus the classic bisection kept as the test
+//! reference.
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::runtime_sim::collectives::ReduceOp;
+use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+
+use super::TOP_BLOCK;
+
+/// Baseline probe count per round of the multi-probe distributed
+/// median: the `B` interior points that cut the current bracket into
+/// `B + 1` equal slices. All `B` counts travel in **one** `u64`
+/// allreduce, so each round costs the same latency as one bisection
+/// round but shrinks the bracket `(B+1)×` instead of `2×`.
+/// [`median_probes_for`] scales `B` up with the rank count.
+pub const MEDIAN_PROBES: usize = 8;
+
+/// Round cap of the multi-probe median at the baseline `B = 8`:
+/// `⌈40 / log₂(B+1)⌉` rounds reach the same `~2⁻⁴⁰` relative bracket as
+/// the classic 40-round bisection (`9¹³ ≈ 2.5·10¹² > 2⁴⁰`), so a
+/// split's allreduce count drops ≥ 3×. For other probe counts the cap
+/// is [`median_rounds_for`].
+pub const MEDIAN_MAX_ROUNDS: usize = 13;
+
+/// Adaptive probe count: a round's latency is `α·log p` **regardless of
+/// B** (the counts ride one fused allreduce), while its payload grows
+/// only 8 bytes per extra probe — so as `p` grows, trading bytes for
+/// rounds moves along the paper's latency/bandwidth knee in the right
+/// direction. `B(p) = 8·⌈log₂ p⌉`, clamped to `[8, 64]`: p ≤ 2 keeps
+/// the baseline 8 (13 rounds), p = 8 probes 24 values (9 rounds),
+/// p ≥ 256 probes 64 (7 rounds).
+pub fn median_probes_for(p: usize) -> usize {
+    // ⌈log₂ p⌉ without floats: trailing zeros of the next power of two.
+    let log_p = p.max(1).next_power_of_two().trailing_zeros().max(1) as usize;
+    (MEDIAN_PROBES * log_p).clamp(MEDIAN_PROBES, 64)
+}
+
+/// Round cap for a given probe count: `⌈40 / log₂(B+1)⌉` rounds shrink
+/// the bracket below the same `~2⁻⁴⁰` relative width the classic
+/// bisection reaches in 40.
+pub fn median_rounds_for(probes: usize) -> usize {
+    let shrink = ((probes + 1) as f64).log2();
+    (40.0 / shrink).ceil() as usize
+}
+
+/// Relative bracket width at which the median search stops refining.
+const MEDIAN_EPS: f64 = 1e-12;
+
+/// Multi-probe distributed median along `d` for the points in `list`,
+/// with the probe count chosen adaptively from the rank count
+/// ([`median_probes_for`]): more ranks → more probes per round → fewer
+/// `α·log p` rounds per split. The fixed-B core is
+/// [`distributed_median_with_probes`].
+pub fn distributed_median(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    list: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+    threads: usize,
+) -> (f64, u32) {
+    let probes = median_probes_for(ctx.n_ranks);
+    distributed_median_with_probes(ctx, local, list, d, bbox, count, threads, probes)
+}
+
+/// Multi-probe distributed median with an explicit probe count `b`.
+///
+/// Each round evaluates `b` interior probe values of the current
+/// bracket in **one** blocked pass over the leaf's index list (each
+/// point is binned among the sorted probes once) and reduces all probe
+/// counts through **one** `u64` allreduce — so the bracket shrinks
+/// `(b+1)×` per collective instead of the classic bisection's `2×`,
+/// cutting a split's allreduce rounds from ~40 to ≤
+/// [`median_rounds_for`]`(b)`. Exits early the moment a probe's count
+/// hits the target exactly.
+///
+/// Returns `(value, rounds)`. The value is always one whose global
+/// `≤`-count was actually **observed** (a probed value, or the bracket
+/// top whose count is the node count): on duplicate-heavy lanes the
+/// bracket converges onto a count jump, and an unprobed interpolation —
+/// what the old bisection returned — can sit on the empty side of the
+/// jump and produce a one-sided split. Among observed candidates it
+/// picks the one whose count is closest to the target (ties prefer the
+/// `≥ target` side, then the value nearest the jump), which every rank
+/// resolves identically because the counts are allreduce results.
+#[allow(clippy::too_many_arguments)]
+pub fn distributed_median_with_probes(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    list: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+    threads: usize,
+    b: usize,
+) -> (f64, u32) {
+    let b = b.max(1);
+    let max_rounds = median_rounds_for(b) as u32;
+    let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
+    let eps = MEDIAN_EPS * bbox.width(d).max(1.0);
+    let target = count / 2;
+    // Best observed two-sided candidate: (value, its global ≤-count).
+    let mut best: Option<(f64, u64)> = None;
+    let mut rounds = 0u32;
+    while rounds < max_rounds && hi - lo >= eps {
+        rounds += 1;
+        let width = hi - lo;
+        let probes: Vec<f64> =
+            (0..b).map(|j| lo + width * (j + 1) as f64 / (b + 1) as f64).collect();
+        // One blocked pass bins every point among the sorted probes
+        // (integer counts: any block order is exact), then the bins are
+        // prefix-summed into cumulative ≤-counts per probe.
+        let bins = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |blo, bhi| {
+            let mut bins = vec![0u64; b + 1];
+            for &i in &list[blo..bhi] {
+                let v = local.coord(i as usize, d);
+                bins[probes.partition_point(|&p| p < v)] += 1;
+            }
+            bins
+        })
+        .into_iter()
+        .fold(vec![0u64; b + 1], |mut acc, bl| {
+            for (a, x) in acc.iter_mut().zip(bl) {
+                *a += x;
+            }
+            acc
+        });
+        let mut local_cum = vec![0u64; b];
+        let mut run = 0u64;
+        for j in 0..b {
+            run += bins[j];
+            local_cum[j] = run;
+        }
+        // cum[j] = global number of points ≤ probes[j] (nondecreasing).
+        let cum = ctx.allreduce_u64(ReduceOp::Sum, &local_cum);
+        for (j, &c) in cum.iter().enumerate() {
+            if c == target {
+                // Exact split: no better candidate can exist.
+                return (probes[j], rounds);
+            }
+            if 0 < c && c < count && median_candidate_better(probes[j], c, best, target) {
+                best = Some((probes[j], c));
+            }
+        }
+        // New bracket: the largest probe still below the target and the
+        // smallest probe at-or-above it.
+        for (j, &c) in cum.iter().enumerate() {
+            if c < target {
+                lo = probes[j];
+            } else {
+                hi = probes[j];
+                break;
+            }
+        }
+    }
+    // `hi` is the tightest upper bracket value whose count is known
+    // (`≥ target` by the bracket invariant; initially the bbox top with
+    // count = node count) — the fallback when every probe was one-sided.
+    (best.map(|(v, _)| v).unwrap_or(hi), rounds)
+}
+
+/// Is candidate `(v, c)` a strictly better split than `best`? Closest
+/// count to target wins; ties prefer the `≥ target` side, then the value
+/// nearest the count jump (smaller above it, larger below it). Purely a
+/// function of allreduce results, so every rank picks the same value.
+fn median_candidate_better(v: f64, c: u64, best: Option<(f64, u64)>, target: u64) -> bool {
+    let Some((bv, bc)) = best else { return true };
+    let (dc, dbc) = (c.abs_diff(target), bc.abs_diff(target));
+    if dc != dbc {
+        return dc < dbc;
+    }
+    let (ge, bge) = (c >= target, bc >= target);
+    if ge != bge {
+        return ge;
+    }
+    if ge {
+        v < bv
+    } else {
+        v > bv
+    }
+}
+
+/// The classic single-probe bisection median (≈40 sequential allreduce
+/// rounds), kept as the reference implementation: the property suite
+/// checks the multi-probe search against it, and the ablation bench
+/// measures the round/message reduction. Note it returns the last
+/// bracket *midpoint* — a value whose count was never observed, the
+/// duplicate-lane defect [`distributed_median`] fixes.
+pub fn distributed_median_bisect(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    list: &[u32],
+    d: usize,
+    bbox: &BoundingBox,
+    count: u64,
+    threads: usize,
+) -> f64 {
+    let (mut lo, mut hi) = (bbox.lo[d], bbox.hi[d]);
+    let target = count / 2;
+    let mut mid = 0.5 * (lo + hi);
+    for _ in 0..40 {
+        mid = 0.5 * (lo + hi);
+        let local_cnt: u64 = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |lo, hi| {
+            list[lo..hi].iter().filter(|&&i| local.coord(i as usize, d) <= mid).count() as u64
+        })
+        .into_iter()
+        .sum();
+        let cnt = ctx.allreduce_u64(ReduceOp::Sum, &[local_cnt])[0];
+        if cnt == target {
+            break;
+        }
+        if cnt < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < MEDIAN_EPS * bbox.width(d).max(1.0) {
+            break;
+        }
+    }
+    mid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, CostModel};
+
+    fn shard(ps: &PointSet, rank: usize, p: usize) -> PointSet {
+        ps.mod_shard(rank, p)
+    }
+
+    /// A duplicate-heavy lane whose count jumps over the target: 600
+    /// points at x = 0.3 and 400 spread over (0.5, 1.0), so no value has
+    /// exactly 500 points at or below it and neither search can exit on
+    /// an exact count — both run until their bracket epsilon.
+    fn jump_lane() -> PointSet {
+        let mut ps = PointSet::new(2);
+        for i in 0..1000u64 {
+            if i < 600 {
+                ps.push(&[0.3, i as f64 / 600.0], i, 1.0);
+            } else {
+                let t = (i - 600) as f64 / 400.0;
+                ps.push(&[0.5 + 0.499 * t, t], i, 1.0);
+            }
+        }
+        ps
+    }
+
+    #[test]
+    fn multiprobe_median_cuts_allreduce_rounds_3x() {
+        // Acceptance: allreduce rounds per median split down ≥ 3×,
+        // counted through the fabric. At p = 2 every allreduce is one
+        // reduce message plus one broadcast message, so total messages =
+        // 2 × rounds; the jump lane forbids exact-count early exits, so
+        // both searches run to their bracket epsilon (the worst case).
+        let global = jump_lane();
+        let p = 2;
+        let median_msgs = |multi: bool| {
+            let (vals, rep) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let list: Vec<u32> = (0..local.len() as u32).collect();
+                let bbox = global.bounding_box();
+                let n = global.len() as u64;
+                if multi {
+                    distributed_median(ctx, &local, &list, 0, &bbox, n, ctx.threads).0
+                } else {
+                    distributed_median_bisect(ctx, &local, &list, 0, &bbox, n, ctx.threads)
+                }
+            });
+            (vals[0], rep.total_msgs)
+        };
+        let (multi_val, multi_msgs) = median_msgs(true);
+        let (bisect_val, bisect_msgs) = median_msgs(false);
+        assert!(
+            3 * multi_msgs <= bisect_msgs,
+            "multi-probe used {multi_msgs} msgs vs bisection {bisect_msgs}: < 3x reduction"
+        );
+        // Same split point (both brackets converge onto the jump at 0.3).
+        assert!((multi_val - bisect_val).abs() < 1e-6, "{multi_val} vs {bisect_val}");
+    }
+
+    #[test]
+    fn adaptive_probes_cut_rounds_vs_fixed_b8_at_p8() {
+        // Acceptance: adaptive B (24 probes at p = 8) demonstrably
+        // reduces median rounds-per-split vs fixed B = 8, measured off
+        // the wire. The jump lane forbids exact-count early exits, so
+        // both searches run to their bracket epsilon; at p = 8 one
+        // allreduce is 2·(p−1) = 14 fabric messages.
+        assert_eq!(median_probes_for(8), 24);
+        assert_eq!(median_probes_for(2), MEDIAN_PROBES);
+        assert_eq!(median_rounds_for(MEDIAN_PROBES), MEDIAN_MAX_ROUNDS);
+        let global = jump_lane();
+        let p = 8;
+        let median_msgs = |b: usize| {
+            let (vals, rep) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let list: Vec<u32> = (0..local.len() as u32).collect();
+                let bbox = global.bounding_box();
+                let n = global.len() as u64;
+                if b == 0 {
+                    distributed_median(ctx, &local, &list, 0, &bbox, n, ctx.threads)
+                } else {
+                    distributed_median_with_probes(
+                        ctx,
+                        &local,
+                        &list,
+                        0,
+                        &bbox,
+                        n,
+                        ctx.threads,
+                        b,
+                    )
+                }
+            });
+            (vals[0], rep.total_msgs)
+        };
+        let ((fixed_val, fixed_rounds), fixed_msgs) = median_msgs(MEDIAN_PROBES);
+        let ((adapt_val, adapt_rounds), adapt_msgs) = median_msgs(0);
+        assert!(
+            adapt_rounds < fixed_rounds,
+            "adaptive {adapt_rounds} rounds !< fixed {fixed_rounds}"
+        );
+        assert!(
+            adapt_msgs < fixed_msgs,
+            "adaptive used {adapt_msgs} msgs vs fixed B=8 {fixed_msgs}"
+        );
+        // Off-the-wire rounds agree with the returned counter: one
+        // allreduce per round, 2·(p−1) messages each.
+        assert_eq!(adapt_msgs, adapt_rounds as u64 * 2 * (p as u64 - 1));
+        assert_eq!(fixed_msgs, fixed_rounds as u64 * 2 * (p as u64 - 1));
+        // Same split point either way.
+        assert!((adapt_val - fixed_val).abs() < 1e-6, "{adapt_val} vs {fixed_val}");
+    }
+
+    #[test]
+    fn multiprobe_median_returns_observed_value_on_duplicate_lane() {
+        // Regression (duplicate-heavy lane): the bisection returned the
+        // final bracket *midpoint*, whose count was never measured — it
+        // can land on the empty side of the count jump. The multi-probe
+        // search must return a value whose ≤-count was observed, i.e.
+        // one that actually includes the duplicate mass.
+        let global = jump_lane();
+        let p = 2;
+        let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let list: Vec<u32> = (0..local.len() as u32).collect();
+            let bbox = global.bounding_box();
+            distributed_median(ctx, &local, &list, 0, &bbox, global.len() as u64, ctx.threads).0
+        });
+        // All ranks agree.
+        assert!(vals.iter().all(|&v| v == vals[0]));
+        let v = vals[0];
+        // The returned value sits at the jump (x = 0.3) from above...
+        assert!((v - 0.3).abs() < 1e-9, "value {v} not at the duplicate mass");
+        // ...and its count side is the observed, non-empty one: the 600
+        // duplicates land left, the 400 spread points land right.
+        let left = (0..global.len()).filter(|&i| global.coord(i, 0) <= v).count();
+        assert_eq!(left, 600, "split does not include the duplicate mass");
+    }
+
+    #[test]
+    fn multiprobe_median_exact_count_early_exit() {
+        // A lane with a wide gap straddling the target rank: the very
+        // first round has a probe inside the gap whose count is exactly
+        // n/2, so the search must return after one allreduce.
+        let mut ps = PointSet::new(2);
+        for i in 0..400u64 {
+            let x = if i < 200 {
+                i as f64 / 200.0 * 0.1 // [0, 0.1)
+            } else {
+                0.9 + (i - 200) as f64 / 200.0 * 0.1 // [0.9, 1.0)
+            };
+            ps.push(&[x, 0.0], i, 1.0);
+        }
+        let p = 2;
+        let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&ps, ctx.rank, p);
+            let list: Vec<u32> = (0..local.len() as u32).collect();
+            let bbox = ps.bounding_box();
+            distributed_median(ctx, &local, &list, 0, &bbox, ps.len() as u64, ctx.threads)
+        });
+        for &(v, rounds) in &vals {
+            assert_eq!(rounds, 1, "exact-count probe did not exit early");
+            let left = (0..ps.len()).filter(|&i| ps.coord(i, 0) <= v).count();
+            assert_eq!(left, 200);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Stage 4: migration + local ordering.
+//!
+//! `transfer_t_l_t` only puts bytes on the wire for points whose
+//! destination differs from their current rank (self-buffers are
+//! delivered through the mailbox without being counted as traffic), so
+//! when the session's sticky assignment keeps most owners put, the wire
+//! cost of a step is proportional to the **ownership delta**, not the
+//! shard size. After migration each rank rebuilds its local subtree and
+//! derives the rank-prefixed global SFC keys — the same local ordering
+//! the one-shot path always ran.
+
+use crate::geom::point::PointSet;
+use crate::migrate::transfer_t_l_t;
+use crate::partition::partitioner::{PartitionConfig, Partitioner};
+use crate::runtime_sim::collectives::MAX_MSG_SIZE;
+use crate::runtime_sim::rank::RankCtx;
+use crate::util::timer::Stopwatch;
+
+/// Result of one migrate + local-order pass.
+pub(crate) struct MigrateOut {
+    /// This rank's shard after migration, in local SFC order.
+    pub local: PointSet,
+    /// Rank-prefixed global SFC keys, same order as `local`.
+    pub keys: Vec<u128>,
+    /// Points this rank shipped to a different rank (the delta).
+    pub migrated_out: u64,
+    pub migrate_secs: f64,
+    pub local_secs: f64,
+}
+
+/// Move every point to `dest[i]`, then order the received shard
+/// locally. `dest` entries equal to `ctx.rank` stay off the wire.
+pub(crate) fn migrate_and_order(
+    ctx: &mut RankCtx,
+    points: &PointSet,
+    dest: &[u32],
+    cfg: &PartitionConfig,
+    threads: usize,
+) -> MigrateOut {
+    let sw = Stopwatch::start();
+    let migrated_out = dest.iter().filter(|&&d| d as usize != ctx.rank).count() as u64;
+    let migrated = transfer_t_l_t(ctx, points, dest, MAX_MSG_SIZE);
+    let migrate_secs = sw.secs();
+
+    let sw = Stopwatch::start();
+    let (local, keys) = local_order(migrated, cfg, threads, ctx.rank);
+    let local_secs = sw.secs();
+    MigrateOut { local, keys, migrated_out, migrate_secs, local_secs }
+}
+
+/// The local ordering (`point_order_local_subtree`): build this rank's
+/// subtree over the migrated shard with the shared-memory builder,
+/// permute the shard into local curve order, and prefix each local key
+/// with the rank so the cross-rank order is total (rank-order dominance
+/// is guaranteed by the knapsack contiguity over SFC-sorted leaves).
+pub(crate) fn local_order(
+    migrated: PointSet,
+    cfg: &PartitionConfig,
+    threads: usize,
+    rank: usize,
+) -> (PointSet, Vec<u128>) {
+    if migrated.is_empty() {
+        return (migrated, Vec::new());
+    }
+    // The local build runs on this rank's pool share; the multi-job
+    // pool lets all ranks' builds proceed thread-parallel at once.
+    let local_cfg = PartitionConfig { parts: 1, threads, ..cfg.clone() };
+    let (plan, tree) = Partitioner::new(local_cfg).partition_with_tree(&migrated);
+    let out = migrated.permute(&plan.perm);
+    let leaves_dfs = tree.leaves_dfs();
+    let mut keys = vec![0u128; out.len()];
+    for &l in &leaves_dfs {
+        let n = &tree.nodes[l as usize];
+        for pos in n.start..n.end {
+            // Local tree was built over the migrated shard only; its
+            // root covers exactly this rank's top leaves. Encode the
+            // rank in the top bits to make the (rank, local key) pair
+            // totally ordered across ranks.
+            keys[pos as usize] = ((rank as u128) << 112) | (n.sfc_key >> 16);
+        }
+    }
+    (out, keys)
+}

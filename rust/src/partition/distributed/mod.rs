@@ -1,0 +1,275 @@
+//! The distributed partitioner — `point_order_dist_kd` +
+//! `load_balance` + `transfer_t_l_t` over simulated ranks (paper §III-A,
+//! §III-C, Fig 11) — refactored into a persistent, incrementally
+//! refinable [`DistSession`].
+//!
+//! Every rank holds a shard of the points. The top `K1 ≥ P` tree nodes
+//! are computed collectively: bounding boxes by min/max allreduce, median
+//! splitters by the multi-probe distributed search (the inter-process
+//! communication the paper attributes to `partitioner_init` /
+//! `point_order_dist_kd`). Top leaves are ordered by their SFC keys,
+//! greedy-knapsacked to ranks, and the data is migrated with
+//! `transfer_t_l_t`. Each rank then builds its local subtree with the
+//! shared-memory builder and traverses it — after which, for any two
+//! ranks `i < j`, all SFC keys on `i` are strictly less than those on `j`
+//! (§III-C's global order invariant, asserted in tests).
+//!
+//! ## Stages
+//!
+//! The former 850-line monolith is split along the pipeline it always
+//! contained, so each stage is reusable by both the one-shot build and
+//! the incremental session:
+//!
+//! * [`top_build`] — the fresh collective top-K1 build, with
+//!   **heap-based heaviest-leaf selection** (O(K1 log K1) total instead
+//!   of the old O(K1²) scan over the active list);
+//! * [`refine`] — drift-triggered incremental refinement: re-split top
+//!   leaves whose refreshed weight left the drift band, re-merge
+//!   underweight sibling pairs;
+//! * [`assign`] — leaf → rank ownership (fresh greedy knapsack, or the
+//!   sticky incremental knapsack that minimizes owner churn);
+//! * [`migrate_delta`] — `transfer_t_l_t` of exactly the points whose
+//!   owner changed, then the local subtree order;
+//! * [`median`] — the multi-probe distributed median engine;
+//! * [`session`] — [`DistSession`], the persistent per-rank state tying
+//!   the stages together across timesteps.
+//!
+//! [`distributed_partition`] survives as a thin "fresh session, one
+//! step" wrapper, so every caller of the one-shot API (CLI, benches,
+//! property suites) is unchanged.
+//!
+//! ## Cost structure of the top build
+//!
+//! Each active top leaf carries the **index list** of the local points it
+//! contains. A split touches only its own leaf's list (one blocked pass
+//! that partitions the list and accumulates the child weight/boxes), so
+//! every point is visited O(1) times per tree *level* — not per split as
+//! a membership-array scan would. The per-split reductions (child count,
+//! weight, and both child boxes) travel in **one** fused allreduce, and
+//! all local passes run on the rank's share of the persistent thread
+//! pool (`ctx.threads`) with a fixed block structure, which keeps
+//! [`DistPartition`] bit-identical for every thread count.
+
+pub mod assign;
+pub mod median;
+pub mod migrate_delta;
+pub mod refine;
+pub mod session;
+pub mod top_build;
+
+pub use median::{
+    distributed_median, distributed_median_bisect, distributed_median_with_probes,
+    median_probes_for, median_rounds_for, MEDIAN_MAX_ROUNDS, MEDIAN_PROBES,
+};
+pub use session::{rebuild_step, DistSession, SessionConfig, StepStats, UpdateBatch};
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::partition::partitioner::PartitionConfig;
+use crate::runtime_sim::rank::RankCtx;
+
+/// Fixed reduction block (points) for the per-leaf passes of the top
+/// build. Like `knapsack::SCAN_BLOCK`, the block structure depends only
+/// on the list length — never on the thread count — so every f64 sum is
+/// performed in the same association for any `ctx.threads`, keeping the
+/// output bit-identical across thread counts.
+pub const TOP_BLOCK: usize = 4096;
+
+/// Per-rank result of a distributed partition.
+#[derive(Clone, Debug)]
+pub struct DistPartition {
+    /// This rank's points after migration, in local SFC order.
+    pub local: PointSet,
+    /// Local SFC keys (same order as `local`), offset by the owning top
+    /// leaf so the global order across ranks is total.
+    pub keys: Vec<u128>,
+    /// Phase timings (seconds).
+    pub top_secs: f64,
+    pub migrate_secs: f64,
+    pub local_secs: f64,
+    /// Number of top leaves this rank owns.
+    pub owned_leaves: usize,
+    /// Allreduce rounds spent inside median splitter searches (0 for
+    /// midpoint splitters) and the number of splits that ran one — the
+    /// bench reports `median_rounds / median_splits` as rounds-per-split.
+    pub median_rounds: u64,
+    pub median_splits: u64,
+}
+
+/// A top node of the collectively built tree. Interior nodes carry their
+/// split; leaves carry the collective weight/count/bbox refreshed by the
+/// session each step.
+#[derive(Clone, Debug)]
+pub(crate) struct TopNode {
+    pub(crate) bbox: BoundingBox,
+    pub(crate) weight: f64,
+    pub(crate) count: u64,
+    pub(crate) key: u128,
+    pub(crate) depth: u16,
+    pub(crate) split_dim: usize,
+    pub(crate) split_val: f64,
+    pub(crate) left: i32,
+    pub(crate) right: i32,
+}
+
+/// One current top leaf of a session, at rest kept in SFC-key order:
+/// the arena node it points at, the rank that owns its points, and
+/// whether split attempts are suspended (degenerate/one-sided leaf).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LeafSlot {
+    pub(crate) node: u32,
+    pub(crate) owner: u32,
+    pub(crate) retired: bool,
+}
+
+/// Distributed partition: returns this rank's migrated shard plus stats.
+/// `cfg.parts` is ignored (parts = ranks); `k1` is the top-node budget
+/// (`K1 ≥ P`; pass 0 for `4·P`). Local data-parallel phases run on the
+/// rank's pool share (`ctx.threads`); the result is bit-identical for
+/// every thread count at a fixed rank count.
+///
+/// This is the "fresh session, one step" wrapper over [`DistSession`]:
+/// dynamic applications keep the session and call
+/// [`DistSession::repartition`] instead of paying this from-scratch
+/// build every timestep.
+pub fn distributed_partition(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    cfg: &PartitionConfig,
+    k1: usize,
+) -> DistPartition {
+    DistSession::create(ctx, local, cfg, k1, SessionConfig::default()).into_partition()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kdtree::splitter::SplitterKind;
+    use crate::runtime_sim::{run_ranks, run_ranks_threaded, CostModel};
+
+    fn shard(ps: &PointSet, rank: usize, p: usize) -> PointSet {
+        ps.mod_shard(rank, p)
+    }
+
+    #[test]
+    fn distributed_partition_balances_and_conserves() {
+        let global = PointSet::uniform(2000, 3, 77);
+        let p = 4;
+        let (outs, rep) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 16);
+            (dp.local.ids.clone(), dp.owned_leaves)
+        });
+        // Conservation: all ids present exactly once.
+        let mut all: Vec<u64> = outs.iter().flat_map(|(ids, _)| ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..2000).collect::<Vec<u64>>());
+        // Balance: each rank within ±30% of mean (leaf-granular knapsack).
+        for (ids, _) in &outs {
+            let frac = ids.len() as f64 / (2000.0 / p as f64);
+            assert!((0.5..1.5).contains(&frac), "rank holds {}", ids.len());
+        }
+        // Every rank owns at least one top leaf.
+        assert!(outs.iter().all(|(_, owned)| *owned > 0));
+        assert!(rep.total_bytes > 0);
+    }
+
+    #[test]
+    fn median_splitters_tighten_balance() {
+        let global = PointSet::clustered(3000, 3, 0.7, 13);
+        let p = 4;
+        let imbalance = |use_median: bool| {
+            let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let mut cfg = PartitionConfig::default();
+                if use_median {
+                    cfg.splitter =
+                        crate::kdtree::splitter::SplitterConfig::uniform(SplitterKind::MedianSort);
+                }
+                let dp = distributed_partition(ctx, &local, &cfg, 32);
+                dp.local.len() as f64
+            });
+            let mean: f64 = outs.iter().sum::<f64>() / p as f64;
+            outs.iter().fold(0.0f64, |m, &x| m.max(x)) / mean - 1.0
+        };
+        let med = imbalance(true);
+        // Median top-splitters on clustered data keep shards balanced.
+        assert!(med < 0.35, "median imbalance {med}");
+    }
+
+    #[test]
+    fn cross_rank_key_order_is_total() {
+        let global = PointSet::uniform(800, 2, 21);
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 12);
+            dp.keys
+        });
+        // §III-C invariant: keys on rank i all less than keys on rank j>i.
+        for i in 0..p - 1 {
+            let max_i = outs[i].iter().max();
+            let min_j = outs[i + 1].iter().min();
+            if let (Some(a), Some(b)) = (max_i, min_j) {
+                assert!(a < b, "rank {i} max {a} !< rank {} min {b}", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_point_mass_survives_top_build() {
+        // Regression: a zero-width (all-duplicates) heaviest leaf used to
+        // be dropped from the leaf set when selected, leaving its points
+        // with no owning rank (panic at migration). It must be retired
+        // and still reach the knapsack.
+        let mut global = PointSet::new(2);
+        for i in 0..600u64 {
+            // 500 copies of one site + 100 unique points.
+            if i < 500 {
+                global.push(&[0.25, 0.25], i, 1.0);
+            } else {
+                let t = (i - 500) as f64 / 100.0;
+                global.push(&[0.5 + 0.4 * t, 0.9 - 0.3 * t], i, 1.0);
+            }
+        }
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = shard(&global, ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = distributed_partition(ctx, &local, &cfg, 16);
+            dp.local.ids.clone()
+        });
+        let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..600).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn thread_count_never_changes_distributed_output() {
+        // Large enough that per-rank leaf lists cross TOP_BLOCK, so the
+        // blocked parallel passes (not just the serial fallback) are
+        // exercised.
+        let global = PointSet::clustered(40_000, 3, 0.6, 31);
+        let p = 4;
+        let run = |tpr: usize| {
+            run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+                let local = shard(&global, ctx.rank, p);
+                let cfg = PartitionConfig {
+                    splitter: crate::kdtree::splitter::SplitterConfig::uniform(
+                        SplitterKind::MedianSort,
+                    ),
+                    ..Default::default()
+                };
+                let dp = distributed_partition(ctx, &local, &cfg, 16);
+                (dp.local.ids.clone(), dp.keys.clone(), dp.owned_leaves)
+            })
+            .0
+        };
+        let base = run(1);
+        for tpr in [2usize, 4] {
+            assert_eq!(run(tpr), base, "distributed output diverged at {tpr} threads/rank");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Stage 2: drift-triggered incremental refinement of the top tree.
+//!
+//! After the session's fused weight refresh, every rank holds identical
+//! per-leaf weights. Refinement keeps the leaf granularity near the
+//! target mean `total / K1` by doing **local surgery only where the
+//! load drifted**:
+//!
+//! * leaves whose weight rose above `drift_hi × mean` are re-split with
+//!   the exact same collective split primitive the fresh build uses
+//!   (heap order, multi-probe median, one fused allreduce per split) —
+//!   so a mild load shift costs O(drifted · rounds-per-split)
+//!   collectives instead of a full K1 rebuild;
+//! * sibling leaf **pairs** whose combined weight fell below
+//!   `drift_lo × mean` are re-merged into their parent (pure local
+//!   bookkeeping: zero collectives), freeing leaf budget for the hot
+//!   regions. One merge level per step; sustained shrinkage cascades
+//!   over successive steps.
+//!
+//! Every decision is a function of allreduce results, so all ranks
+//! perform the identical surgery in the identical order (SPMD), and all
+//! local passes keep the fixed block structure — the session's outputs
+//! stay bit-identical for every threads-per-rank.
+
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+use crate::geom::point::PointSet;
+use crate::runtime_sim::rank::RankCtx;
+
+use super::session::SessionConfig;
+use super::top_build::{split_leaf, HeapLeaf, SplitOutcome, SplitStats};
+use super::{LeafSlot, TopNode};
+
+/// What one refinement pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefineOutcome {
+    pub splits: u64,
+    pub merges: u64,
+    pub stats: SplitStats,
+}
+
+/// Refine the leaf set in place. `leaf_node_of` maps every local point
+/// to its (current) leaf's arena node id and is kept consistent through
+/// the surgery; `leaves` comes in and leaves in SFC-key order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn refine(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    nodes: &mut Vec<TopNode>,
+    leaves: &mut Vec<LeafSlot>,
+    leaf_node_of: &mut [u32],
+    k1: usize,
+    total_w: f64,
+    scfg: &SessionConfig,
+    use_median: bool,
+    threads: usize,
+) -> RefineOutcome {
+    let mut out = RefineOutcome::default();
+    let mean = total_w / k1.max(1) as f64;
+    if mean.is_nan() || mean <= 0.0 {
+        return out; // zero/NaN total weight: nothing to balance against
+    }
+    let hi_thresh = scfg.drift_hi.max(1.0) * mean;
+    let lo_thresh = scfg.drift_lo.clamp(0.0, 1.0) * mean;
+
+    // ---- Merge pass (no collectives) ----
+    {
+        let mut parent_of: Vec<i32> = vec![-1; nodes.len()];
+        for (i, nd) in nodes.iter().enumerate() {
+            if nd.left >= 0 {
+                parent_of[nd.left as usize] = i as i32;
+                parent_of[nd.right as usize] = i as i32;
+            }
+        }
+        let mut slot_of: Vec<i32> = vec![-1; nodes.len()];
+        for (s, l) in leaves.iter().enumerate() {
+            slot_of[l.node as usize] = s as i32;
+        }
+        // child node id -> parent node id for this pass's merges.
+        let mut merged_into: Vec<i32> = vec![-1; nodes.len()];
+        let mut removed = vec![false; leaves.len()];
+        let mut added: Vec<LeafSlot> = Vec::new();
+        for s in 0..leaves.len() {
+            if removed[s] {
+                continue;
+            }
+            let node = leaves[s].node;
+            let par = parent_of[node as usize];
+            if par < 0 {
+                continue;
+            }
+            let (lch, rch) = (nodes[par as usize].left as u32, nodes[par as usize].right as u32);
+            if node != lch {
+                continue; // handle each pair from its left child only
+            }
+            let rs = slot_of[rch as usize];
+            if rs < 0 || removed[rs as usize] {
+                continue; // sibling is not currently a leaf
+            }
+            let combined = nodes[lch as usize].weight + nodes[rch as usize].weight;
+            if combined >= lo_thresh {
+                continue;
+            }
+            // Merge: the parent becomes a leaf again with the refreshed
+            // aggregates of its children.
+            let mut bbox = nodes[lch as usize].bbox.clone();
+            bbox.merge(&nodes[rch as usize].bbox);
+            let count = nodes[lch as usize].count + nodes[rch as usize].count;
+            {
+                let pm = &mut nodes[par as usize];
+                pm.weight = combined;
+                pm.count = count;
+                pm.bbox = bbox;
+                pm.split_dim = usize::MAX;
+                pm.split_val = 0.0;
+                pm.left = -1;
+                pm.right = -1;
+            }
+            merged_into[lch as usize] = par;
+            merged_into[rch as usize] = par;
+            removed[s] = true;
+            removed[rs as usize] = true;
+            // Owner: the left (key-first) child's — keeps the ownership
+            // map monotone along the SFC leaf line.
+            added.push(LeafSlot { node: par as u32, owner: leaves[s].owner, retired: false });
+            out.merges += 1;
+        }
+        if out.merges > 0 {
+            let mut fin: Vec<LeafSlot> = leaves
+                .iter()
+                .enumerate()
+                .filter(|(s, _)| !removed[*s])
+                .map(|(_, l)| *l)
+                .collect();
+            fin.extend(added);
+            fin.sort_by_key(|l| nodes[l.node as usize].key);
+            *leaves = fin;
+            for ln in leaf_node_of.iter_mut() {
+                if merged_into[*ln as usize] >= 0 {
+                    *ln = merged_into[*ln as usize] as u32;
+                }
+            }
+        }
+    }
+
+    // ---- Split pass (collective, only for drifted leaves) ----
+    let cap = 2 * k1; // hard leaf-budget cap during one refinement
+    let splittable = |nd: &TopNode| nd.count > 1 && nd.weight > hi_thresh;
+    let cand: Vec<u32> = leaves
+        .iter()
+        .filter(|l| !l.retired && splittable(&nodes[l.node as usize]))
+        .map(|l| l.node)
+        .collect();
+    if !cand.is_empty() {
+        // Local index lists for exactly the candidate leaves, gathered in
+        // point order (deterministic for every thread count). A candidate
+        // with no local points still splits collectively with an empty
+        // list — every rank must join every fused allreduce (SPMD).
+        let mut lists: Vec<Option<Vec<u32>>> = vec![None; nodes.len()];
+        for &c in &cand {
+            lists[c as usize] = Some(Vec::new());
+        }
+        for (i, &ln) in leaf_node_of.iter().enumerate() {
+            if let Some(list) = lists[ln as usize].as_mut() {
+                list.push(i as u32);
+            }
+        }
+        let mut heap: BinaryHeap<HeapLeaf> = cand
+            .iter()
+            .map(|&c| HeapLeaf { weight: nodes[c as usize].weight, node: c })
+            .collect();
+        let mut owner_of: HashMap<u32, u32> = leaves.iter().map(|l| (l.node, l.owner)).collect();
+        let mut n_leaves = leaves.len();
+        let mut removed: HashSet<u32> = HashSet::new();
+        let mut retired: HashSet<u32> = HashSet::new();
+        let mut added: Vec<LeafSlot> = Vec::new();
+        while let Some(HeapLeaf { node, .. }) = heap.pop() {
+            if n_leaves >= cap {
+                break;
+            }
+            let list = lists[node as usize].take().expect("refine candidate lost its list");
+            match split_leaf(ctx, local, nodes, node, list, use_median, threads, &mut out.stats) {
+                SplitOutcome::Retire(_list) => {
+                    // Degenerate or one-sided: suspend split attempts on
+                    // this leaf until its collective count changes.
+                    retired.insert(node);
+                }
+                SplitOutcome::Split { left, right, left_list, right_list } => {
+                    out.splits += 1;
+                    n_leaves += 1;
+                    let own = *owner_of.get(&node).expect("split leaf had no owner");
+                    removed.insert(node);
+                    lists.resize(nodes.len(), None);
+                    for (child, clist) in [(left, left_list), (right, right_list)] {
+                        for &i in &clist {
+                            leaf_node_of[i as usize] = child;
+                        }
+                        owner_of.insert(child, own);
+                        added.push(LeafSlot { node: child, owner: own, retired: false });
+                        let nd = &nodes[child as usize];
+                        if splittable(nd) && n_leaves < cap {
+                            lists[child as usize] = Some(clist);
+                            heap.push(HeapLeaf { weight: nd.weight, node: child });
+                        }
+                    }
+                }
+            }
+        }
+        if out.splits > 0 || !retired.is_empty() {
+            let mut fin: Vec<LeafSlot> = Vec::with_capacity(n_leaves);
+            for l in leaves.iter() {
+                if removed.contains(&l.node) {
+                    continue;
+                }
+                let mut l = *l;
+                if retired.contains(&l.node) {
+                    l.retired = true;
+                }
+                fin.push(l);
+            }
+            for mut l in added {
+                if removed.contains(&l.node) {
+                    continue;
+                }
+                // A child created this pass can itself have retired
+                // (one-sided splitter on its first attempt) — it must
+                // carry the flag or every later step re-pays the failed
+                // collective split.
+                if retired.contains(&l.node) {
+                    l.retired = true;
+                }
+                fin.push(l);
+            }
+            fin.sort_by_key(|l| nodes[l.node as usize].key);
+            *leaves = fin;
+        }
+    }
+    out
+}

@@ -1,0 +1,645 @@
+//! The persistent per-rank [`DistSession`]: the top tree, ownership
+//! map, and migrated shard survive across timesteps, and
+//! [`DistSession::repartition`] adjusts the partition incrementally —
+//! one fused allreduce to refresh every leaf's weight/count/bbox,
+//! collective splits only for leaves whose load drifted out of the
+//! band, a sticky knapsack that keeps owners put, and a migration that
+//! ships only the ownership delta. This is the loop the paper's
+//! "dynamic applications with load distributions that vary with time"
+//! claim needs: adjustment cost ≪ rebuild cost, every step.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::splitter::SplitterKind;
+use crate::partition::partitioner::PartitionConfig;
+use crate::runtime_sim::collectives::{ReduceOp, Section};
+use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::util::timer::Stopwatch;
+
+use super::assign::{assign_fresh, assign_sticky};
+use super::migrate_delta::migrate_and_order;
+use super::refine::refine;
+use super::top_build::top_build;
+use super::{DistPartition, LeafSlot, TopNode, TOP_BLOCK};
+
+/// Session knobs: the drift band and the sticky-knapsack tolerance.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Re-merge a sibling leaf pair when its combined weight falls below
+    /// `drift_lo × (total / K1)`. Clamped to `[0, 1]`.
+    pub drift_lo: f64,
+    /// Re-split a leaf when its weight rises above
+    /// `drift_hi × (total / K1)`. Clamped to `≥ 1`.
+    pub drift_hi: f64,
+    /// Relative load tolerance of the sticky knapsack: part boundaries
+    /// stay put while every part load remains within `target·(1 ± tol)`.
+    pub imbalance_tol: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { drift_lo: 0.5, drift_hi: 2.0, imbalance_tol: 0.10 }
+    }
+}
+
+/// One step's worth of local point updates, applied by
+/// [`DistSession::repartition`] before it rebalances. All fields are
+/// optional-by-emptiness; an all-empty batch is a pure rebalance probe.
+#[derive(Clone, Debug)]
+pub struct UpdateBatch {
+    /// New weights for **all** local points, in the shard's current
+    /// order (`None` = weights unchanged).
+    pub reweight_all: Option<Vec<f32>>,
+    /// New coordinates for individual local points, by id.
+    pub relocate: Vec<(u64, Vec<f64>)>,
+    /// Ids of local points to delete.
+    pub delete_ids: Vec<u64>,
+    /// New points to insert on this rank.
+    pub insert: PointSet,
+}
+
+impl UpdateBatch {
+    pub fn new(dim: usize) -> UpdateBatch {
+        UpdateBatch {
+            reweight_all: None,
+            relocate: Vec::new(),
+            delete_ids: Vec::new(),
+            insert: PointSet::new(dim),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reweight_all.is_none()
+            && self.relocate.is_empty()
+            && self.delete_ids.is_empty()
+            && self.insert.is_empty()
+    }
+
+    /// Apply this batch to a shard (pure local bookkeeping). Public so a
+    /// from-scratch-per-step baseline can evolve its points by the exact
+    /// rule the session uses.
+    pub fn apply_to(&self, points: &mut PointSet) {
+        if let Some(w) = &self.reweight_all {
+            assert_eq!(w.len(), points.len(), "reweight_all must cover the whole shard");
+            points.weights.copy_from_slice(w);
+        }
+        if !self.relocate.is_empty() {
+            let idx: HashMap<u64, usize> =
+                points.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+            let dim = points.dim;
+            for (id, c) in &self.relocate {
+                if let Some(&i) = idx.get(id) {
+                    assert_eq!(c.len(), dim, "relocation coords must match the dimension");
+                    points.coords[i * dim..(i + 1) * dim].copy_from_slice(c);
+                }
+            }
+        }
+        if !self.delete_ids.is_empty() {
+            let del: HashSet<u64> = self.delete_ids.iter().copied().collect();
+            let keep: Vec<u32> = (0..points.len() as u32)
+                .filter(|&i| !del.contains(&points.ids[i as usize]))
+                .collect();
+            *points = points.gather(&keep);
+        }
+        if !self.insert.is_empty() {
+            points.extend(&self.insert);
+        }
+    }
+}
+
+/// Per-rank statistics of one `repartition` step. Everything here is
+/// local to the rank (no extra collectives are spent on bookkeeping);
+/// benches aggregate across the returned per-rank values and read wire
+/// traffic off the fabric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Collective tag epochs this step consumed (`RankCtx::epochs_used`
+    /// delta) — the step's "collective rounds", directly comparable to
+    /// wrapping a from-scratch `distributed_partition` with the same
+    /// counter.
+    pub collective_rounds: u64,
+    /// Points this rank shipped to a different rank (the migration
+    /// delta; self-deliveries stay off the wire).
+    pub migrated_out: u64,
+    /// Points this rank holds after the step.
+    pub local_points: u64,
+    /// Drift surgery performed this step.
+    pub splits: u64,
+    pub merges: u64,
+    /// Leaves whose owner changed in the sticky assignment.
+    pub moved_leaves: u64,
+    /// Total top leaves after the step.
+    pub leaves: u64,
+    /// Allreduce rounds inside median searches this step.
+    pub median_rounds: u64,
+    /// Phase timings (seconds): refresh+refine+assign / migrate / local
+    /// subtree order.
+    pub top_secs: f64,
+    pub migrate_secs: f64,
+    pub local_secs: f64,
+}
+
+/// Build-time figures kept so [`DistSession::into_partition`] can
+/// reproduce the one-shot [`DistPartition`] exactly.
+#[derive(Clone, Copy, Debug, Default)]
+struct BuildInfo {
+    top_secs: f64,
+    migrate_secs: f64,
+    local_secs: f64,
+    owned_leaves: usize,
+    median_rounds: u64,
+    median_splits: u64,
+}
+
+/// Persistent per-rank partitioning session (see module docs).
+pub struct DistSession {
+    cfg: PartitionConfig,
+    scfg: SessionConfig,
+    k1: usize,
+    use_median: bool,
+    /// The collectively built top tree (same arena on every rank).
+    nodes: Vec<TopNode>,
+    /// Current leaves in SFC-key order, with owners.
+    leaves: Vec<LeafSlot>,
+    /// This rank's shard, in local SFC order.
+    local: PointSet,
+    /// Rank-prefixed global SFC keys, same order as `local`.
+    keys: Vec<u128>,
+    build: BuildInfo,
+}
+
+impl DistSession {
+    /// Fresh session: the full collective build + assignment + migration
+    /// + local order — exactly what the one-shot `distributed_partition`
+    /// always did, with the state retained for incremental steps.
+    pub fn create(
+        ctx: &mut RankCtx,
+        local: &PointSet,
+        cfg: &PartitionConfig,
+        k1: usize,
+        scfg: SessionConfig,
+    ) -> DistSession {
+        let p = ctx.n_ranks;
+        let threads = ctx.threads;
+        let k1 = if k1 == 0 { 4 * p } else { k1.max(p) };
+        let use_median = !matches!(cfg.splitter.top, SplitterKind::Midpoint);
+        let sw = Stopwatch::start();
+
+        let tb = top_build(ctx, local, cfg, k1, threads);
+        let nodes = tb.nodes;
+        let mut built = tb.leaves;
+        built.sort_by_key(|(l, _, _)| nodes[*l as usize].key);
+        let leaf_ids: Vec<u32> = built.iter().map(|(l, _, _)| *l).collect();
+        let owner = assign_fresh(&nodes, &leaf_ids, p);
+        let owned_leaves = owner.iter().filter(|&&r| r as usize == ctx.rank).count();
+        let top_secs = sw.secs();
+
+        // u32::MAX sentinel: a point missing from every leaf list (a
+        // bookkeeping regression) must fail loudly in pack(), not
+        // silently migrate to rank 0.
+        let mut dest: Vec<u32> = vec![u32::MAX; local.len()];
+        for ((_, list, _), &r) in built.iter().zip(&owner) {
+            for &i in list {
+                dest[i as usize] = r;
+            }
+        }
+        debug_assert!(
+            dest.iter().all(|&r| (r as usize) < p),
+            "point lost from every top-leaf index list"
+        );
+        let mig = migrate_and_order(ctx, local, &dest, cfg, threads);
+
+        let leaves: Vec<LeafSlot> = built
+            .iter()
+            .zip(&owner)
+            .map(|((node, _, retired), &owner)| LeafSlot { node: *node, owner, retired: *retired })
+            .collect();
+        DistSession {
+            cfg: cfg.clone(),
+            scfg,
+            k1,
+            use_median,
+            nodes,
+            leaves,
+            local: mig.local,
+            keys: mig.keys,
+            build: BuildInfo {
+                top_secs,
+                migrate_secs: mig.migrate_secs,
+                local_secs: mig.local_secs,
+                owned_leaves,
+                median_rounds: tb.stats.median_rounds,
+                median_splits: tb.stats.median_splits,
+            },
+        }
+    }
+
+    /// One incremental timestep: apply `updates` to the local shard,
+    /// refresh every leaf's weight/count/bbox with **one** fused
+    /// allreduce, refine only drifted leaves, stick the ownership map,
+    /// and migrate only the delta.
+    pub fn repartition(&mut self, ctx: &mut RankCtx, updates: &UpdateBatch) -> StepStats {
+        let p = ctx.n_ranks;
+        let threads = ctx.threads;
+        let epoch0 = ctx.epochs_used();
+        let sw = Stopwatch::start();
+
+        let dim = self.local.dim;
+        let mut points = std::mem::replace(&mut self.local, PointSet::new(dim));
+        self.keys.clear();
+        updates.apply_to(&mut points);
+
+        // ---- Re-bin: every local point to its top leaf (local only) ----
+        let mut leaf_node_of = route_to_leaves(&points, &self.nodes, threads);
+
+        // ---- Fused refresh: weights + counts + boxes, ONE allreduce ----
+        let total_w = self.refresh_leaves(ctx, &points, &leaf_node_of, threads);
+
+        // ---- Drift-triggered refinement ----
+        let rout = refine(
+            ctx,
+            &points,
+            &mut self.nodes,
+            &mut self.leaves,
+            &mut leaf_node_of,
+            self.k1,
+            total_w,
+            &self.scfg,
+            self.use_median,
+            threads,
+        );
+
+        // ---- Sticky ownership ----
+        let leaf_ids: Vec<u32> = self.leaves.iter().map(|l| l.node).collect();
+        let prev_owner: Vec<u32> = self.leaves.iter().map(|l| l.owner).collect();
+        let owner =
+            assign_sticky(&self.nodes, &leaf_ids, &prev_owner, p, self.scfg.imbalance_tol);
+        let moved_leaves =
+            owner.iter().zip(&prev_owner).filter(|(a, b)| a != b).count() as u64;
+        for (l, &o) in self.leaves.iter_mut().zip(&owner) {
+            l.owner = o;
+        }
+        let top_secs = sw.secs();
+
+        // ---- Delta migration + local order ----
+        let mut owner_of_node: Vec<u32> = vec![u32::MAX; self.nodes.len()];
+        for l in &self.leaves {
+            owner_of_node[l.node as usize] = l.owner;
+        }
+        let dest: Vec<u32> =
+            leaf_node_of.iter().map(|&nd| owner_of_node[nd as usize]).collect();
+        debug_assert!(
+            dest.iter().all(|&r| (r as usize) < p),
+            "point routed to a node that is no longer a leaf"
+        );
+        let mig = migrate_and_order(ctx, &points, &dest, &self.cfg, threads);
+        self.local = mig.local;
+        self.keys = mig.keys;
+
+        StepStats {
+            collective_rounds: (ctx.epochs_used() - epoch0) as u64,
+            migrated_out: mig.migrated_out,
+            local_points: self.local.len() as u64,
+            splits: rout.splits,
+            merges: rout.merges,
+            moved_leaves,
+            leaves: self.leaves.len() as u64,
+            median_rounds: rout.stats.median_rounds,
+            top_secs,
+            migrate_secs: mig.migrate_secs,
+            local_secs: mig.local_secs,
+        }
+    }
+
+    /// Refresh every leaf's collective weight/count/bbox in one fused
+    /// allreduce; returns the (identical-on-every-rank) total weight.
+    /// Leaves whose collective count changed get their `retired` flag
+    /// cleared — points moved, so a previously unsplittable leaf may
+    /// split now.
+    fn refresh_leaves(
+        &mut self,
+        ctx: &mut RankCtx,
+        points: &PointSet,
+        leaf_node_of: &[u32],
+        threads: usize,
+    ) -> f64 {
+        let nl = self.leaves.len();
+        let dim = points.dim;
+        let mut slot_of: Vec<u32> = vec![u32::MAX; self.nodes.len()];
+        for (s, l) in self.leaves.iter().enumerate() {
+            slot_of[l.node as usize] = s as u32;
+        }
+        // Blocked local accumulation, blocks combined in order: the f64
+        // sums see the same association for every thread count.
+        let blocks = parallel_map_blocks(threads, points.len(), TOP_BLOCK, |blo, bhi| {
+            let mut w = vec![0.0f64; nl];
+            let mut c = vec![0u64; nl];
+            let mut lo = vec![f64::INFINITY; nl * dim];
+            let mut hi = vec![f64::NEG_INFINITY; nl * dim];
+            for i in blo..bhi {
+                let s = slot_of[leaf_node_of[i] as usize] as usize;
+                w[s] += points.weights[i] as f64;
+                c[s] += 1;
+                for k in 0..dim {
+                    let v = points.coord(i, k);
+                    if v < lo[s * dim + k] {
+                        lo[s * dim + k] = v;
+                    }
+                    if v > hi[s * dim + k] {
+                        hi[s * dim + k] = v;
+                    }
+                }
+            }
+            (w, c, lo, hi)
+        });
+        let mut w = vec![0.0f64; nl];
+        let mut c = vec![0u64; nl];
+        let mut lo = vec![f64::INFINITY; nl * dim];
+        let mut hi = vec![f64::NEG_INFINITY; nl * dim];
+        for (bw, bc, blo, bhi) in blocks {
+            for (a, x) in w.iter_mut().zip(bw) {
+                *a += x;
+            }
+            for (a, x) in c.iter_mut().zip(bc) {
+                *a += x;
+            }
+            for (a, x) in lo.iter_mut().zip(blo) {
+                if x < *a {
+                    *a = x;
+                }
+            }
+            for (a, x) in hi.iter_mut().zip(bhi) {
+                if x > *a {
+                    *a = x;
+                }
+            }
+        }
+        let fused = ctx.allreduce_multi(&[
+            Section::U64(ReduceOp::Sum, &c),
+            Section::F64(ReduceOp::Sum, &w),
+            Section::F64(ReduceOp::Min, &lo),
+            Section::F64(ReduceOp::Max, &hi),
+        ]);
+        let gc = fused[0].u64();
+        let gw = fused[1].f64();
+        let glo = fused[2].f64();
+        let ghi = fused[3].f64();
+        let mut total_w = 0.0f64;
+        for (s, leaf) in self.leaves.iter_mut().enumerate() {
+            let nd = &mut self.nodes[leaf.node as usize];
+            if nd.count != gc[s] {
+                leaf.retired = false;
+            }
+            nd.count = gc[s];
+            nd.weight = gw[s];
+            nd.bbox = BoundingBox {
+                lo: glo[s * dim..(s + 1) * dim].to_vec(),
+                hi: ghi[s * dim..(s + 1) * dim].to_vec(),
+            };
+            total_w += gw[s];
+        }
+        total_w
+    }
+
+    /// Consume the session into the one-shot result type.
+    pub fn into_partition(self) -> DistPartition {
+        DistPartition {
+            local: self.local,
+            keys: self.keys,
+            top_secs: self.build.top_secs,
+            migrate_secs: self.build.migrate_secs,
+            local_secs: self.build.local_secs,
+            owned_leaves: self.build.owned_leaves,
+            median_rounds: self.build.median_rounds,
+            median_splits: self.build.median_splits,
+        }
+    }
+
+    /// This rank's shard, in local SFC order.
+    pub fn local(&self) -> &PointSet {
+        &self.local
+    }
+
+    /// Rank-prefixed global SFC keys, same order as [`Self::local`].
+    pub fn keys(&self) -> &[u128] {
+        &self.keys
+    }
+
+    /// Current number of top leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Leaves currently owned by `rank`.
+    pub fn owned_leaves(&self, rank: usize) -> usize {
+        self.leaves.iter().filter(|l| l.owner as usize == rank).count()
+    }
+
+    /// The leaf budget `K1` the drift band is anchored to.
+    pub fn k1(&self) -> usize {
+        self.k1
+    }
+}
+
+/// One from-scratch baseline step for session comparisons: apply
+/// `updates` to `points`, rebuild with the one-shot
+/// [`distributed_partition`](super::distributed_partition), and report
+/// `(migrated shard, collective rounds, points shipped off-rank)` —
+/// the same meters a [`DistSession::repartition`] step reports,
+/// measured the same way (tag-epoch delta; a point "migrated" iff it
+/// left this rank). Shared by the `dynamic_tree` bench, the ablations
+/// table, the CLI `--baseline` lane, and the property suite so the
+/// session-vs-rebuild comparison can never drift between them.
+pub fn rebuild_step(
+    ctx: &mut RankCtx,
+    mut points: PointSet,
+    updates: &UpdateBatch,
+    cfg: &PartitionConfig,
+    k1: usize,
+) -> (PointSet, u64, u64) {
+    updates.apply_to(&mut points);
+    let e0 = ctx.epochs_used();
+    let dp = super::distributed_partition(ctx, &points, cfg, k1);
+    let rounds = (ctx.epochs_used() - e0) as u64;
+    let out_ids: HashSet<u64> = dp.local.ids.iter().copied().collect();
+    let migrated = points.ids.iter().filter(|&&id| !out_ids.contains(&id)).count() as u64;
+    (dp.local, rounds, migrated)
+}
+
+/// Route every local point down the top tree to its leaf's arena node
+/// id. Points that drifted outside their old leaf's box follow the
+/// split planes like any other point, so the map is total. One blocked
+/// parallel pass; per-point results are independent, so the output is
+/// identical for every thread count.
+fn route_to_leaves(points: &PointSet, nodes: &[TopNode], threads: usize) -> Vec<u32> {
+    parallel_map_blocks(threads, points.len(), TOP_BLOCK, |blo, bhi| {
+        let mut out = Vec::with_capacity(bhi - blo);
+        for i in blo..bhi {
+            let mut cur = 0u32;
+            loop {
+                let nd = &nodes[cur as usize];
+                if nd.left < 0 {
+                    break;
+                }
+                cur = if points.coord(i, nd.split_dim) <= nd.split_val {
+                    nd.left as u32
+                } else {
+                    nd.right as u32
+                };
+            }
+            out.push(cur);
+        }
+        out
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, CostModel};
+
+    fn conserve_ids(outs: &[Vec<u64>], expect: &mut Vec<u64>) {
+        let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        expect.sort_unstable();
+        assert_eq!(&all, expect, "ids not conserved across the session step");
+    }
+
+    #[test]
+    fn static_step_is_a_no_op_migration() {
+        // No updates, wide band: the session must keep every owner, do no
+        // surgery, and put zero migration bytes on the wire.
+        let global = PointSet::uniform(1500, 3, 5);
+        let p = 4;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let scfg = SessionConfig { drift_lo: 0.0, drift_hi: 1e30, ..Default::default() };
+            let mut sess = DistSession::create(ctx, &local, &cfg, 16, scfg);
+            let ids_before = sess.local().ids.clone();
+            let batch = UpdateBatch::new(3);
+            let stats = sess.repartition(ctx, &batch);
+            (ids_before, sess.local().ids.clone(), stats)
+        });
+        for (before, after, stats) in &outs {
+            assert_eq!(before, after, "static step reshuffled the shard");
+            assert_eq!(stats.migrated_out, 0, "static step migrated points");
+            assert_eq!(stats.splits + stats.merges, 0);
+            assert_eq!(stats.moved_leaves, 0);
+        }
+    }
+
+    #[test]
+    fn reweight_step_conserves_and_rebalances() {
+        // Pile weight onto one corner: the session must conserve ids and
+        // end with the heavy corner spread over ranks within the band.
+        let global = PointSet::uniform(2400, 2, 9);
+        let p = 4;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let mut sess =
+                DistSession::create(ctx, &local, &cfg, 16, SessionConfig::default());
+            let w: Vec<f32> = (0..sess.local().len())
+                .map(|i| if sess.local().coord(i, 0) < 0.25 { 20.0 } else { 1.0 })
+                .collect();
+            let batch = UpdateBatch { reweight_all: Some(w), ..UpdateBatch::new(2) };
+            let stats = sess.repartition(ctx, &batch);
+            let load: f64 = sess.local().weights.iter().map(|&x| x as f64).sum();
+            (sess.local().ids.clone(), load, stats)
+        });
+        let mut expect: Vec<u64> = (0..2400).collect();
+        let ids: Vec<Vec<u64>> = outs.iter().map(|(ids, _, _)| ids.clone()).collect();
+        conserve_ids(&ids, &mut expect);
+        // The weight refresh must have shifted ownership toward balance.
+        let loads: Vec<f64> = outs.iter().map(|(_, l, _)| *l).collect();
+        let total: f64 = loads.iter().sum();
+        let mx = loads.iter().copied().fold(0.0f64, f64::max);
+        let imb = mx / (total / p as f64) - 1.0;
+        assert!(imb < 1.0, "session left imbalance {imb} after reweight");
+    }
+
+    #[test]
+    fn churn_step_conserves_the_evolved_id_set() {
+        // Delete some ids, insert replacements: the post-step global id
+        // multiset must be exactly the evolved one.
+        let global = PointSet::uniform(900, 3, 21);
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let mut sess =
+                DistSession::create(ctx, &local, &cfg, 12, SessionConfig::default());
+            // Deterministic churn: drop ids divisible by 10, insert a
+            // fresh point (id + 10_000) for each dropped one.
+            let drop: Vec<u64> =
+                sess.local().ids.iter().copied().filter(|id| id % 10 == 0).collect();
+            let mut ins = PointSet::new(3);
+            for &id in &drop {
+                let t = (id % 97) as f64 / 97.0;
+                ins.push(&[t, 1.0 - t, 0.5], 10_000 + id, 1.0);
+            }
+            let batch = UpdateBatch {
+                delete_ids: drop,
+                insert: ins,
+                ..UpdateBatch::new(3)
+            };
+            sess.repartition(ctx, &batch);
+            sess.local().ids.clone()
+        });
+        let mut expect: Vec<u64> = (0..900u64)
+            .filter(|id| id % 10 != 0)
+            .chain((0..900u64).filter(|id| id % 10 == 0).map(|id| 10_000 + id))
+            .collect();
+        conserve_ids(&outs, &mut expect);
+    }
+
+    #[test]
+    fn repartition_costs_less_than_rebuild() {
+        // The headline economics, asserted at test scale: a session step
+        // under a mild hotspot issues fewer than half the collective
+        // rounds of a from-scratch build and migrates fewer points.
+        let global = PointSet::uniform(2000, 3, 33);
+        let p = 4;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig {
+                splitter: crate::kdtree::splitter::SplitterConfig::uniform(
+                    SplitterKind::MedianSort,
+                ),
+                ..Default::default()
+            };
+            let mut sess =
+                DistSession::create(ctx, &local, &cfg, 16, SessionConfig::default());
+            // Mild drift: 2x weight on one octant.
+            let w: Vec<f32> = (0..sess.local().len())
+                .map(|i| if sess.local().coord(i, 0) < 0.5 { 2.0 } else { 1.0 })
+                .collect();
+            let batch = UpdateBatch { reweight_all: Some(w), ..UpdateBatch::new(3) };
+            let e0 = ctx.epochs_used();
+            let stats = sess.repartition(ctx, &batch);
+            let step_rounds = (ctx.epochs_used() - e0) as u64;
+            assert_eq!(step_rounds, stats.collective_rounds);
+            // From-scratch baseline on the session's own output shard.
+            let shard = sess.local().clone();
+            let e1 = ctx.epochs_used();
+            let dp = super::super::distributed_partition(ctx, &shard, &cfg, 16);
+            let rebuild_rounds = (ctx.epochs_used() - e1) as u64;
+            (stats, rebuild_rounds, dp.local.len())
+        });
+        for (stats, rebuild_rounds, _) in &outs {
+            assert!(
+                stats.collective_rounds * 2 < *rebuild_rounds,
+                "step spent {} rounds vs rebuild {} — not < 50%",
+                stats.collective_rounds,
+                rebuild_rounds
+            );
+        }
+    }
+}

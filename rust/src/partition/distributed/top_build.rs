@@ -1,0 +1,333 @@
+//! Stage 1: the fresh collective top-K1 build, and the single-leaf
+//! split primitive shared with drift refinement.
+//!
+//! Heaviest-leaf selection runs over a **max-heap** keyed by the
+//! allreduce'd leaf weights (O(log K1) per split, O(K1 log K1) total)
+//! instead of the old linear rescan of the whole active list (O(K1²)
+//! total). Every heap input is an allreduce result and the tie-break is
+//! the arena node id, so all ranks pop the same leaf in the same order —
+//! the SPMD discipline the selection always needed, now with the right
+//! complexity for large K1 and for the session's refinement loop.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::splitter::SplitterKind;
+use crate::partition::partitioner::PartitionConfig;
+use crate::runtime_sim::collectives::{ReduceOp, Section};
+use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::sfc::key::child_key;
+
+use super::median::distributed_median;
+use super::{TopNode, TOP_BLOCK};
+
+/// Collective-cost accounting for a sequence of top-leaf splits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SplitStats {
+    /// Allreduce rounds spent inside median splitter searches.
+    pub median_rounds: u64,
+    /// Number of splits that ran a median search.
+    pub median_splits: u64,
+    /// Fused per-split reductions issued (one per attempted non-degenerate
+    /// split).
+    pub fused_allreduces: u64,
+}
+
+/// Max-heap entry for heaviest-leaf selection. Ordered by weight
+/// (`total_cmp`, so NaN weights still order identically on every rank),
+/// ties broken toward the smaller arena node id — both are SPMD-identical
+/// inputs, so every rank pops the same sequence.
+pub(crate) struct HeapLeaf {
+    pub weight: f64,
+    pub node: u32,
+}
+
+impl PartialEq for HeapLeaf {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapLeaf {}
+
+impl PartialOrd for HeapLeaf {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapLeaf {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.weight.total_cmp(&other.weight).then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+/// One blocked pass over a leaf's index list: stable-partition the list
+/// around `value` along `d` while accumulating the left weight and both
+/// child bounding boxes.
+struct SplitPass {
+    left: Vec<u32>,
+    right: Vec<u32>,
+    lw: f64,
+    lbox: BoundingBox,
+    rbox: BoundingBox,
+}
+
+/// Outcome of one collective split attempt on a top leaf.
+pub(crate) enum SplitOutcome {
+    /// The leaf split: arena ids of the two children plus their local
+    /// index lists (children were pushed onto `nodes`).
+    Split { left: u32, right: u32, left_list: Vec<u32>, right_list: Vec<u32> },
+    /// Degenerate (zero-width box) or one-sided splitter value: the leaf
+    /// cannot split; its list is handed back so it still reaches the
+    /// knapsack/migration.
+    Retire(Vec<u32>),
+}
+
+/// Collectively split one top leaf: pick the split value (midpoint or
+/// multi-probe distributed median), partition the leaf's local index
+/// list in one blocked pass, and ship child count/weight/boxes in one
+/// fused allreduce. Shared verbatim by the fresh build and the session's
+/// drift refinement, so both paths have identical split semantics and
+/// cost accounting.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn split_leaf(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    nodes: &mut Vec<TopNode>,
+    leaf: u32,
+    list: Vec<u32>,
+    use_median: bool,
+    threads: usize,
+    stats: &mut SplitStats,
+) -> SplitOutcome {
+    let dim = local.dim;
+    let node = nodes[leaf as usize].clone();
+    let d = node.bbox.widest_dim();
+    if node.bbox.width(d) <= 0.0 {
+        // Degenerate (duplicates): this leaf cannot split, but its
+        // points still need an owner downstream.
+        return SplitOutcome::Retire(list);
+    }
+    // Split value: midpoint locally, median by multi-probe
+    // distributed search (one fused u64 allreduce per round).
+    let value = if use_median {
+        let (value, rounds) =
+            distributed_median(ctx, local, &list, d, &node.bbox, node.count, threads);
+        stats.median_rounds += rounds as u64;
+        stats.median_splits += 1;
+        value
+    } else {
+        node.bbox.midpoint(d)
+    };
+    // One blocked pass over the leaf's points: split the index list
+    // and accumulate the left weight and both child boxes. Blocks
+    // are combined in order, so the pass is thread-count-invariant.
+    let passes = parallel_map_blocks(threads, list.len(), TOP_BLOCK, |lo, hi| {
+        let mut out = SplitPass {
+            left: Vec::new(),
+            right: Vec::new(),
+            lw: 0.0,
+            lbox: BoundingBox::empty(dim),
+            rbox: BoundingBox::empty(dim),
+        };
+        for &i in &list[lo..hi] {
+            let i = i as usize;
+            if local.coord(i, d) <= value {
+                out.lw += local.weights[i] as f64;
+                out.lbox.grow(local.point(i));
+                out.left.push(i as u32);
+            } else {
+                out.rbox.grow(local.point(i));
+                out.right.push(i as u32);
+            }
+        }
+        out
+    });
+    // left + right together hold exactly the leaf's list.
+    let mut left = Vec::with_capacity(list.len());
+    let mut right = Vec::with_capacity(list.len());
+    let mut lw = 0.0f64;
+    let mut lbox = BoundingBox::empty(dim);
+    let mut rbox = BoundingBox::empty(dim);
+    for b in passes {
+        left.extend_from_slice(&b.left);
+        right.extend_from_slice(&b.right);
+        lw += b.lw;
+        lbox.merge(&b.lbox);
+        rbox.merge(&b.rbox);
+    }
+    // One fused collective where the scan-based build used six:
+    // lower count (exact u64 Sum), left weight (Sum), both child
+    // boxes (Min/Max).
+    stats.fused_allreduces += 1;
+    let fused = ctx.allreduce_multi(&[
+        Section::U64(ReduceOp::Sum, &[left.len() as u64]),
+        Section::F64(ReduceOp::Sum, &[lw]),
+        Section::F64(ReduceOp::Min, &lbox.lo),
+        Section::F64(ReduceOp::Max, &lbox.hi),
+        Section::F64(ReduceOp::Min, &rbox.lo),
+        Section::F64(ReduceOp::Max, &rbox.hi),
+    ]);
+    let lower = fused[0].u64()[0];
+    let lw = fused[1].f64()[0];
+    if lower == 0 || lower == node.count {
+        // One-sided split (pathological splitter value): retire the
+        // leaf with its list reassembled.
+        let mut list = left;
+        list.extend_from_slice(&right);
+        return SplitOutcome::Retire(list);
+    }
+    let li = nodes.len() as u32;
+    nodes.push(TopNode {
+        bbox: BoundingBox { lo: fused[2].f64().to_vec(), hi: fused[3].f64().to_vec() },
+        weight: lw,
+        count: lower,
+        key: child_key(node.key, node.depth, false),
+        depth: node.depth + 1,
+        split_dim: usize::MAX,
+        split_val: 0.0,
+        left: -1,
+        right: -1,
+    });
+    let ri = nodes.len() as u32;
+    nodes.push(TopNode {
+        bbox: BoundingBox { lo: fused[4].f64().to_vec(), hi: fused[5].f64().to_vec() },
+        weight: node.weight - lw,
+        count: node.count - lower,
+        key: child_key(node.key, node.depth, true),
+        depth: node.depth + 1,
+        split_dim: usize::MAX,
+        split_val: 0.0,
+        left: -1,
+        right: -1,
+    });
+    {
+        let n = &mut nodes[leaf as usize];
+        n.split_dim = d;
+        n.split_val = value;
+        n.left = li as i32;
+        n.right = ri as i32;
+    }
+    SplitOutcome::Split { left: li, right: ri, left_list: left, right_list: right }
+}
+
+/// Result of the fresh collective top build.
+pub(crate) struct TopBuild {
+    pub nodes: Vec<TopNode>,
+    /// Final leaves, unsorted: arena node id, this rank's local index
+    /// list, and whether the leaf retired (degenerate/one-sided).
+    pub leaves: Vec<(u32, Vec<u32>, bool)>,
+    pub stats: SplitStats,
+}
+
+/// The fresh collective top-K1 build: global bbox + totals, then
+/// heaviest-leaf splits off the weight heap until `k1` leaves exist or
+/// nothing splittable remains.
+pub(crate) fn top_build(
+    ctx: &mut RankCtx,
+    local: &PointSet,
+    cfg: &PartitionConfig,
+    k1: usize,
+    threads: usize,
+) -> TopBuild {
+    let dim = local.dim;
+
+    // ---- Global bounding box ----
+    let local_bbox = if local.is_empty() {
+        BoundingBox::empty(dim)
+    } else {
+        local.bounding_box()
+    };
+    let lo = ctx.allreduce_f64(ReduceOp::Min, &local_bbox.lo);
+    let hi = ctx.allreduce_f64(ReduceOp::Max, &local_bbox.hi);
+    let root_bbox = BoundingBox { lo, hi };
+
+    // ---- Collective totals ----
+    let total_w = ctx.allreduce1(ReduceOp::Sum, local.total_weight());
+    // Counts ride u64 lanes end-to-end: an f64 Sum absorbs +1 at 2^53
+    // points and the build would silently drift.
+    let total_c = ctx.allreduce_u64(ReduceOp::Sum, &[local.len() as u64])[0];
+    let mut nodes = vec![TopNode {
+        bbox: root_bbox,
+        weight: total_w,
+        count: total_c,
+        key: 0,
+        depth: 0,
+        split_dim: usize::MAX,
+        split_val: 0.0,
+        left: -1,
+        right: -1,
+    }];
+    let use_median = !matches!(cfg.splitter.top, SplitterKind::Midpoint);
+    let mut stats = SplitStats::default();
+
+    // Splittable leaves live on the weight heap with their index list
+    // parked in the arena-parallel `lists` slab; unsplittable or retired
+    // leaves go straight to `done`. Total leaf count = heap + done.
+    let mut heap: BinaryHeap<HeapLeaf> = BinaryHeap::new();
+    let mut lists: Vec<Option<Vec<u32>>> = vec![None];
+    let mut done: Vec<(u32, Vec<u32>, bool)> = Vec::new();
+    let root_list: Vec<u32> = (0..local.len() as u32).collect();
+    if total_c > 1 {
+        lists[0] = Some(root_list);
+        heap.push(HeapLeaf { weight: total_w, node: 0 });
+    } else {
+        done.push((0, root_list, false));
+    }
+
+    while heap.len() + done.len() < k1 {
+        let Some(HeapLeaf { node: leaf, .. }) = heap.pop() else { break };
+        let list = lists[leaf as usize].take().expect("heap leaf lost its index list");
+        match split_leaf(ctx, local, &mut nodes, leaf, list, use_median, threads, &mut stats) {
+            SplitOutcome::Retire(list) => done.push((leaf, list, true)),
+            SplitOutcome::Split { left, right, left_list, right_list } => {
+                lists.resize(nodes.len(), None);
+                for (child, clist) in [(left, left_list), (right, right_list)] {
+                    if nodes[child as usize].count > 1 {
+                        lists[child as usize] = Some(clist);
+                        heap.push(HeapLeaf { weight: nodes[child as usize].weight, node: child });
+                    } else {
+                        done.push((child, clist, false));
+                    }
+                }
+            }
+        }
+    }
+    let mut leaves = done;
+    while let Some(HeapLeaf { node, .. }) = heap.pop() {
+        leaves.push((node, lists[node as usize].take().expect("heap leaf lost its list"), false));
+    }
+    TopBuild { nodes, leaves, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_orders_by_weight_then_smaller_node_id() {
+        let mut h = BinaryHeap::new();
+        h.push(HeapLeaf { weight: 1.0, node: 5 });
+        h.push(HeapLeaf { weight: 3.0, node: 9 });
+        h.push(HeapLeaf { weight: 3.0, node: 2 });
+        h.push(HeapLeaf { weight: 2.0, node: 1 });
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|l| l.node)).collect();
+        // Heaviest first; among the 3.0 tie the smaller node id pops first.
+        assert_eq!(order, vec![2, 9, 1, 5]);
+    }
+
+    #[test]
+    fn heap_total_cmp_handles_nan_deterministically() {
+        let mut h = BinaryHeap::new();
+        h.push(HeapLeaf { weight: f64::NAN, node: 1 });
+        h.push(HeapLeaf { weight: 1.0, node: 2 });
+        // total_cmp puts +NaN above every finite weight; the point is the
+        // order is total and identical on every rank, never a panic.
+        let first = h.pop().unwrap();
+        assert_eq!(first.node, 1);
+    }
+}

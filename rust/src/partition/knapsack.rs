@@ -158,6 +158,111 @@ pub fn greedy_knapsack_buckets(bucket_weights: &[f64], parts: usize) -> Vec<u32>
     greedy_knapsack_weights(bucket_weights, parts, 1)
 }
 
+/// **Sticky** bucket-granular knapsack for incremental repartitioning:
+/// keep every bucket's previous owner unless moving a part boundary is
+/// needed to bring the load back inside a tolerance band, and when a
+/// boundary must move, move it to the feasible position **nearest its
+/// previous spot** — the move that reassigns the fewest buckets (and so
+/// migrates the least weight) while restoring balance.
+///
+/// `prev_owner` must be a monotone contiguous assignment (as produced by
+/// [`greedy_knapsack_buckets`] or a previous sticky call). `tol` is the
+/// allowed relative load deviation: every boundary `t` is kept anywhere
+/// its weight prefix stays within `t·target ± (tol·target + wmax)/2`,
+/// which bounds each part's load to `target·(1 ± tol) + wmax` — the
+/// from-scratch prefix rule's own granularity bound plus the sticky
+/// tolerance. The `wmax/2` half-width matters: the fresh rule's cuts
+/// themselves deviate by up to half the heaviest bucket, so without it a
+/// *perfectly balanced, unchanged* assignment could be "corrected" into
+/// pointless migration. Where granularity makes even that band empty,
+/// the boundary falls back to the fresh prefix-rule cut — so the result
+/// is never worse than the from-scratch knapsack's bound.
+///
+/// Purely a function of the (allreduce-identical) weights and the
+/// previous assignment, so every rank computes the same answer with no
+/// communication.
+pub fn greedy_knapsack_sticky(
+    weights: &[f64],
+    prev_owner: &[u32],
+    parts: usize,
+    tol: f64,
+) -> Vec<u32> {
+    assert!(parts >= 1);
+    assert_eq!(weights.len(), prev_owner.len());
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    debug_assert!(
+        prev_owner.windows(2).all(|w| w[0] <= w[1]),
+        "previous assignment must be monotone contiguous"
+    );
+    let mut prefix = vec![0.0f64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + weights[i];
+    }
+    let total = prefix[n];
+    if total <= 0.0 {
+        // Degenerate (all-zero weights): any assignment balances; keep
+        // the previous owners, clamped into range.
+        return prev_owner.iter().map(|&o| o.min(parts as u32 - 1)).collect();
+    }
+    let target = total / parts as f64;
+    let wmax = weights.iter().copied().fold(0.0f64, f64::max);
+    let slack = 0.5 * (tol.max(0.0) * target + wmax);
+
+    // Previous boundary positions: prev_cut[t] = first bucket of part t.
+    let mut prev_cut = vec![n; parts + 1];
+    prev_cut[0] = 0;
+    {
+        let mut pos = 0usize;
+        for (t, slot) in prev_cut.iter_mut().enumerate().take(parts).skip(1) {
+            while pos < n && (prev_owner[pos] as usize) < t {
+                pos += 1;
+            }
+            *slot = pos;
+        }
+    }
+
+    let mut cuts = vec![0usize; parts + 1];
+    cuts[parts] = n;
+    for t in 1..parts {
+        let ideal = t as f64 * target;
+        // Feasible cut positions: prefix within the band. `prefix` is
+        // nondecreasing, so they form one contiguous index range.
+        let lo_pos = prefix.partition_point(|&x| x < ideal - slack);
+        let hi_end = prefix.partition_point(|&x| x <= ideal + slack);
+        let chosen = if lo_pos < hi_end {
+            // Keep the old boundary when it is still in the band;
+            // otherwise the nearest edge of the band (fewest reassigned
+            // buckets).
+            prev_cut[t].clamp(lo_pos, hi_end - 1)
+        } else {
+            // Band empty at this granularity: fresh prefix-rule cut (the
+            // observed prefix nearest the ideal).
+            let up = prefix.partition_point(|&x| x < ideal);
+            if up == 0 {
+                0
+            } else if up > n {
+                n
+            } else if ideal - prefix[up - 1] <= prefix[up] - ideal {
+                up - 1
+            } else {
+                up
+            }
+        };
+        cuts[t] = chosen.max(cuts[t - 1]).min(n);
+    }
+
+    let mut out = vec![0u32; n];
+    for t in 0..parts {
+        for slot in out.iter_mut().take(cuts[t + 1]).skip(cuts[t]) {
+            *slot = t as u32;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,5 +421,97 @@ mod tests {
         let w: Vec<f32> = Vec::new();
         assert!(greedy_knapsack(&w, 4).is_empty());
         assert!(greedy_knapsack_parallel(&w, 4, 8).is_empty());
+    }
+
+    #[test]
+    fn sticky_keeps_assignment_when_loads_unchanged() {
+        // A balanced previous assignment with unchanged weights must come
+        // back untouched: zero reassigned buckets, zero migration.
+        let w: Vec<f64> = vec![1.0; 64];
+        let prev = greedy_knapsack_buckets(&w, 4);
+        let sticky = greedy_knapsack_sticky(&w, &prev, 4, 0.1);
+        assert_eq!(sticky, prev);
+    }
+
+    #[test]
+    fn sticky_tolerates_mild_drift_without_moves() {
+        // Perturb weights within the band: the previous cuts still satisfy
+        // the ±tol/2 prefix band, so no bucket may change owner.
+        let mut w: Vec<f64> = vec![1.0; 80];
+        let prev = greedy_knapsack_buckets(&w, 4);
+        for (i, item) in w.iter_mut().enumerate() {
+            *item = 1.0 + 0.01 * ((i % 7) as f64 - 3.0); // ±3% wiggles
+        }
+        let sticky = greedy_knapsack_sticky(&w, &prev, 4, 0.2);
+        assert_eq!(sticky, prev, "mild drift must not move any bucket");
+    }
+
+    #[test]
+    fn sticky_restores_balance_under_heavy_drift() {
+        // Load piles onto the first part: sticky must move boundaries, and
+        // the result must balance within the tolerance band.
+        let n = 120;
+        let mut w: Vec<f64> = vec![1.0; n];
+        let prev = greedy_knapsack_buckets(&w, 4);
+        for item in w.iter_mut().take(n / 4) {
+            *item = 5.0; // part 0's region is now 5x heavier
+        }
+        let tol = 0.1;
+        let sticky = greedy_knapsack_sticky(&w, &prev, 4, tol);
+        // Monotone contiguous.
+        assert!(sticky.windows(2).all(|p| p[0] <= p[1]));
+        let loads = {
+            let mut l = vec![0.0f64; 4];
+            for (&p, &wi) in sticky.iter().zip(&w) {
+                l[p as usize] += wi;
+            }
+            l
+        };
+        let total: f64 = w.iter().sum();
+        let target = total / 4.0;
+        let wmax = w.iter().copied().fold(0.0f64, f64::max);
+        let mx = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        // Within the band, or at worst the fresh granularity bound.
+        assert!(
+            mx <= target * (1.0 + tol) + wmax + 1e-9,
+            "sticky failed to rebalance: loads={loads:?} target={target}"
+        );
+        // It must differ from the stale assignment (boundaries moved).
+        assert_ne!(sticky, prev);
+    }
+
+    #[test]
+    fn sticky_moves_fewer_buckets_than_fresh_on_local_drift() {
+        // A local hotspot: the fresh knapsack re-slices every downstream
+        // boundary; sticky only moves the boundaries whose band broke.
+        let n = 200;
+        let mut w: Vec<f64> = vec![1.0; n];
+        let prev = greedy_knapsack_buckets(&w, 8);
+        for item in w.iter_mut().take(10) {
+            *item = 3.0;
+        }
+        let fresh = greedy_knapsack_buckets(&w, 8);
+        let sticky = greedy_knapsack_sticky(&w, &prev, 8, 0.15);
+        let moved = |a: &[u32]| a.iter().zip(&prev).filter(|(x, y)| x != y).count();
+        assert!(
+            moved(&sticky) <= moved(&fresh),
+            "sticky moved {} buckets, fresh {}",
+            moved(&sticky),
+            moved(&fresh)
+        );
+        assert!(sticky.windows(2).all(|p| p[0] <= p[1]));
+    }
+
+    #[test]
+    fn sticky_handles_degenerate_inputs() {
+        // Zero total weight: previous owners kept (clamped).
+        let w = vec![0.0f64; 6];
+        let prev = vec![0u32, 0, 1, 1, 2, 2];
+        assert_eq!(greedy_knapsack_sticky(&w, &prev, 3, 0.1), prev);
+        // Empty input.
+        assert!(greedy_knapsack_sticky(&[], &[], 4, 0.1).is_empty());
+        // Single part: everything on part 0.
+        let w = vec![2.0f64, 1.0];
+        assert_eq!(greedy_knapsack_sticky(&w, &[0, 0], 1, 0.1), vec![0, 0]);
     }
 }

@@ -1,7 +1,8 @@
 //! Load balancing (paper §III-C, §IV): greedy knapsack over the weighted
 //! SFC line, the full partitioning pipeline (Algorithm 2), incremental
-//! rebalancing, the amortized credit controller (Algorithm 3), and
-//! partition-quality metrics.
+//! rebalancing, the amortized credit controller (Algorithm 3), the
+//! persistent distributed session with drift-triggered repartitioning,
+//! scripted dynamic-load scenarios, and partition-quality metrics.
 
 pub mod amortized;
 pub mod distributed;
@@ -9,3 +10,4 @@ pub mod incremental;
 pub mod knapsack;
 pub mod partitioner;
 pub mod quality;
+pub mod scenario;

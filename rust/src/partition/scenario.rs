@@ -1,0 +1,196 @@
+//! Scripted dynamic-load scenarios for the repartitioning loop: the
+//! workloads the paper's "load distributions that vary with time" claim
+//! is exercised against.
+//!
+//! Every scenario is a **pure per-point rule** — the update a point
+//! receives at step `t` depends only on its own id/coordinates and the
+//! scenario parameters, never on which rank currently holds it or on
+//! the thread count. That is what lets a `DistSession` run and a
+//! from-scratch-per-step baseline run evolve the *same global point
+//! multiset* independently (the property suite relies on it), and what
+//! keeps the session outputs bit-identical for every threads-per-rank.
+//!
+//! * [`ScenarioKind::Hotspot`] — a Gaussian weight bump whose center
+//!   drifts along the main diagonal: the classic moving adaptive-mesh
+//!   refinement front.
+//! * [`ScenarioKind::Wave`] — a sinusoidal weight wave rotating along
+//!   dimension 0: every rank's load oscillates, no locality to exploit.
+//! * [`ScenarioKind::Churn`] — insert/delete churn: a deterministic
+//!   fraction of points is deleted each step and replaced by fresh
+//!   points at new positions (fresh ids), the dynamic-tree workload.
+
+use crate::geom::point::PointSet;
+use crate::partition::distributed::UpdateBatch;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Which load script to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    Hotspot,
+    Wave,
+    Churn,
+}
+
+impl std::str::FromStr for ScenarioKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ScenarioKind, String> {
+        match s {
+            "hotspot" => Ok(ScenarioKind::Hotspot),
+            "wave" => Ok(ScenarioKind::Wave),
+            "churn" => Ok(ScenarioKind::Churn),
+            other => Err(format!("unknown scenario {other:?} (hotspot|wave|churn)")),
+        }
+    }
+}
+
+/// A parameterized scenario script.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+    /// Peak extra weight of the moving load (hotspot/wave), as a
+    /// multiple of the base weight 1.
+    pub amplitude: f64,
+    /// Fraction of the unit domain the pattern advances per step.
+    pub speed: f64,
+    /// Fraction of points deleted + reinserted per step (churn).
+    pub churn_frac: f64,
+    /// Seed for the churn replacement positions.
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub fn new(kind: ScenarioKind) -> Scenario {
+        Scenario { kind, amplitude: 8.0, speed: 0.05, churn_frac: 0.05, seed: 0xd15ea5e }
+    }
+
+    /// The update batch for `step` on the given shard. Pure per-point:
+    /// identical results whether applied shard-by-shard or to the whole
+    /// set at once.
+    pub fn update_for(&self, local: &PointSet, step: usize) -> UpdateBatch {
+        match self.kind {
+            ScenarioKind::Hotspot => self.hotspot_batch(local, step),
+            ScenarioKind::Wave => self.wave_batch(local, step),
+            ScenarioKind::Churn => self.churn_batch(local, step),
+        }
+    }
+
+    /// Gaussian bump of width `σ = 0.15` centered at `fract(0.2 + t·v)`
+    /// on every axis (the center walks the main diagonal, wrapping).
+    fn hotspot_batch(&self, local: &PointSet, step: usize) -> UpdateBatch {
+        let c = (0.2 + self.speed * (step + 1) as f64).fract();
+        let inv_2s2 = 1.0 / (2.0 * 0.15 * 0.15);
+        let w: Vec<f32> = (0..local.len())
+            .map(|i| {
+                let mut d2 = 0.0;
+                for k in 0..local.dim {
+                    // Wrapped distance on the unit torus, so the hotspot
+                    // re-enters smoothly instead of teleporting.
+                    let d = (local.coord(i, k) - c).abs();
+                    let d = d.min(1.0 - d.min(1.0));
+                    d2 += d * d;
+                }
+                (1.0 + self.amplitude * (-d2 * inv_2s2).exp()) as f32
+            })
+            .collect();
+        UpdateBatch { reweight_all: Some(w), ..UpdateBatch::new(local.dim) }
+    }
+
+    /// Sinusoidal wave along dimension 0, phase advancing by `v` per
+    /// step: `w(x) = 1 + A·(1 + sin 2π(x₀ − t·v))/2`.
+    fn wave_batch(&self, local: &PointSet, step: usize) -> UpdateBatch {
+        let phase = self.speed * (step + 1) as f64;
+        let w: Vec<f32> = (0..local.len())
+            .map(|i| {
+                let x = local.coord(i, 0);
+                let s = (std::f64::consts::TAU * (x - phase)).sin();
+                (1.0 + self.amplitude * 0.5 * (1.0 + s)) as f32
+            })
+            .collect();
+        UpdateBatch { reweight_all: Some(w), ..UpdateBatch::new(local.dim) }
+    }
+
+    /// Delete a deterministic `churn_frac` of points (chosen by a hash of
+    /// id × step) and insert one replacement per deletion at a position
+    /// seeded by the same hash. Replacement ids are `(step+1)·ID_EPOCH +
+    /// old_id`, so ids stay globally unique across steps.
+    fn churn_batch(&self, local: &PointSet, step: usize) -> UpdateBatch {
+        let dim = local.dim;
+        let mut batch = UpdateBatch::new(dim);
+        let cut = (self.churn_frac.clamp(0.0, 1.0) * u32::MAX as f64) as u64;
+        for i in 0..local.len() {
+            let id = local.ids[i];
+            let mut h = SplitMix64::new(self.seed ^ id ^ ((step as u64 + 1) << 32));
+            if (h.next_u64() & 0xffff_ffff) >= cut {
+                continue;
+            }
+            batch.delete_ids.push(id);
+            let coords: Vec<f64> = (0..dim).map(|_| h.next_f64()).collect();
+            batch.insert.push(&coords, churn_replacement_id(id, step), 1.0);
+        }
+        batch
+    }
+}
+
+/// Id-space epoch for churn replacements: replacement ids never collide
+/// with base ids (< ID_EPOCH) or with another step's replacements.
+pub const ID_EPOCH: u64 = 1 << 40;
+
+/// The id a point deleted at `step` is replaced under.
+pub fn churn_replacement_id(old_id: u64, step: usize) -> u64 {
+    (step as u64 + 1) * ID_EPOCH + (old_id % ID_EPOCH)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_point_rule_is_shard_independent() {
+        // Applying the scenario to the whole set or to shards must yield
+        // the same per-point updates (this is what makes the baseline
+        // comparable to the session).
+        let ps = PointSet::uniform(300, 3, 4);
+        let sc = Scenario::new(ScenarioKind::Hotspot);
+        let whole = sc.update_for(&ps, 2).reweight_all.unwrap();
+        for rank in 0..3 {
+            let shard = ps.mod_shard(rank, 3);
+            let part = sc.update_for(&shard, 2).reweight_all.unwrap();
+            for (j, &id) in shard.ids.iter().enumerate() {
+                assert_eq!(part[j], whole[id as usize], "rank {rank} point {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_is_deterministic_and_bounded() {
+        let ps = PointSet::uniform(1000, 2, 8);
+        let sc = Scenario { churn_frac: 0.1, ..Scenario::new(ScenarioKind::Churn) };
+        let a = sc.update_for(&ps, 0);
+        let b = sc.update_for(&ps, 0);
+        assert_eq!(a.delete_ids, b.delete_ids);
+        assert_eq!(a.insert.ids, b.insert.ids);
+        // One insert per delete, fresh non-colliding ids.
+        assert_eq!(a.delete_ids.len(), a.insert.len());
+        assert!(a.insert.ids.iter().all(|&id| id >= ID_EPOCH));
+        // Roughly the requested fraction (hash-chosen): 10% ± 4pp.
+        let frac = a.delete_ids.len() as f64 / ps.len() as f64;
+        assert!((0.06..0.14).contains(&frac), "churn fraction {frac}");
+        // A different step churns a different subset.
+        let c = sc.update_for(&ps, 1);
+        assert_ne!(a.delete_ids, c.delete_ids);
+    }
+
+    #[test]
+    fn wave_and_hotspot_weights_stay_in_range() {
+        let ps = PointSet::uniform(500, 3, 10);
+        for kind in [ScenarioKind::Hotspot, ScenarioKind::Wave] {
+            let sc = Scenario::new(kind);
+            for step in 0..4 {
+                let w = sc.update_for(&ps, step).reweight_all.unwrap();
+                assert_eq!(w.len(), ps.len());
+                assert!(w.iter().all(|&x| (1.0..=(1.0 + sc.amplitude + 1e-6) as f32).contains(&x)));
+            }
+        }
+    }
+}

@@ -334,29 +334,46 @@ impl<'f> RankCtx<'f> {
     /// of [`Self::exscan_f64`]. Point counts and shard ranks must ride
     /// this, not the f64 scan: f64 addition absorbs +1 at 2^53, so an
     /// f64-lane exscan of shard sizes silently mis-ranks every element
-    /// past that point. Same dissemination (Hillis–Steele) structure,
-    /// `⌈log₂ p⌉` rounds.
+    /// past that point. One lane of [`Self::exscan_u64_many`] — same
+    /// dissemination structure, `⌈log₂ p⌉` rounds, identical wire cost.
     pub fn exscan_u64(&mut self, x: u64) -> u64 {
+        self.exscan_u64_many(&[x])[0]
+    }
+
+    /// Element-wise exclusive prefix sum of a `u64` vector: one
+    /// dissemination scan whose payload carries every lane, so `k`
+    /// counters scan in the same `⌈log₂ p⌉` rounds (and tag epochs) as
+    /// one. The sample sort uses this to learn each rank's global offset
+    /// inside every splitter-duplicate run in a single collective.
+    pub fn exscan_u64_many(&mut self, xs: &[u64]) -> Vec<u64> {
         let (r, p) = (self.rank, self.n_ranks);
-        if p == 1 {
-            return 0;
+        if p == 1 || xs.is_empty() {
+            return vec![0; xs.len()];
         }
         let rounds = usize::BITS - (p - 1).leading_zeros();
         let tag = self.alloc_tags(rounds);
-        let mut incl = x;
-        let mut excl = 0u64;
+        let mut incl = xs.to_vec();
+        let mut excl = vec![0u64; xs.len()];
         let mut have = false;
         let mut dist = 1usize;
         for round in 0..rounds {
             let t = tag + round;
             if r + dist < p {
-                self.fabric.send(r, r + dist, t, enc_u64(&[incl]));
+                self.fabric.send(r, r + dist, t, enc_u64(&incl));
             }
             if r >= dist {
-                let v = dec_u64(&self.fabric.recv(r, r - dist, t).payload)[0];
-                incl += v;
-                excl = if have { v + excl } else { v };
-                have = true;
+                let v = dec_u64(&self.fabric.recv(r, r - dist, t).payload);
+                for (a, b) in incl.iter_mut().zip(&v) {
+                    *a += b;
+                }
+                if have {
+                    for (e, b) in excl.iter_mut().zip(&v) {
+                        *e += b;
+                    }
+                } else {
+                    excl.copy_from_slice(&v);
+                    have = true;
+                }
             }
             dist <<= 1;
         }
@@ -573,6 +590,31 @@ mod tests {
                 acc += r as u64 * 2 + 1;
             }
         }
+    }
+
+    #[test]
+    fn exscan_u64_many_matches_per_lane_scalar_scan() {
+        // The fused vector scan must equal one scalar exscan per lane at
+        // every rank count, in the rounds of a single scan.
+        for p in 1..=9usize {
+            let (vals, _) = run_ranks(p, CostModel::default(), |ctx| {
+                let xs = [ctx.rank as u64 + 1, (ctx.rank as u64) * 3, 1u64 << 60];
+                let many = ctx.exscan_u64_many(&xs);
+                let per: Vec<u64> = xs.iter().map(|&x| ctx.exscan_u64(x)).collect();
+                (many, per)
+            });
+            for (r, (many, per)) in vals.iter().enumerate() {
+                assert_eq!(many, per, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn exscan_u64_many_has_log_depth_traffic() {
+        let p = 8;
+        let (_, rep) = run_ranks(p, CostModel::default(), |ctx| ctx.exscan_u64_many(&[1, 2, 3]));
+        // ⌈log₂ 8⌉ = 3 sends per rank at most, regardless of lane count.
+        assert!(rep.max_rank_msgs <= 3, "max_rank_msgs={}", rep.max_rank_msgs);
     }
 
     #[test]

@@ -64,6 +64,14 @@ impl<'f> RankCtx<'f> {
     pub fn is_root(&self) -> bool {
         self.rank == 0
     }
+
+    /// Tag epochs consumed by collectives so far — a deterministic,
+    /// SPMD-identical proxy for "collective rounds issued". Phase code
+    /// (e.g. `DistSession::repartition`) reads it before and after a
+    /// stage to report how many collective rounds the stage cost.
+    pub fn epochs_used(&self) -> u32 {
+        self.epoch
+    }
 }
 
 /// Tags `0..TAG_USER_MAX` are free for application point-to-point traffic;

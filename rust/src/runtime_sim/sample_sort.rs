@@ -16,11 +16,17 @@
 //!   shards, the pool-backed pairwise merge rounds — never the old
 //!   O(n·p) cursor scan, which survives only as the test reference
 //!   (`util::sort::merge_runs_cursor_scan`).
-//! * **Tie splitting.** Duplicates of a splitter value are *spread*
-//!   across every bucket adjacent to that splitter group instead of all
-//!   routing to one rank — on a duplicate-heavy lane the old
-//!   `partition_point(v <= sp)` walk collapsed the whole duplicate mass
-//!   onto a single shard. Equal keys may legally live on any
+//! * **Tie splitting by global rank.** Duplicates of a splitter value
+//!   are routed by their **global position** in the sorted order: one
+//!   `u64` allreduce learns each splitter group's global below-count and
+//!   tie count, one vector `exscan_u64_many` learns this rank's offset
+//!   inside each tie run, and every tie then goes to the destination
+//!   whose `[q·N/p, (q+1)·N/p)` window contains its global position
+//!   (clamped to the group's adjacent buckets). This bounds every shard
+//!   at mean + oversampling error even when the tie mass is off-center
+//!   or unevenly distributed across ranks — the local even-split it
+//!   replaces left ~60–65% on one shard at p = 2 when one rank held the
+//!   whole duplicate mass. Equal keys may legally live on any
 //!   consecutive rank range, so the global-order invariant still holds.
 
 use crate::runtime_sim::fabric::{dec_f64, enc_f64};
@@ -71,13 +77,10 @@ pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize
     let splitters = dec_f64(&ctx.broadcast_bytes(0, splitters));
 
     // Bucket by splitter (local is sorted: walk once). Duplicated
-    // splitter values are handled as a group: the local run of ties with
-    // value `sp` is split evenly over every destination adjacent to the
-    // group (buckets b..=j+1 for splitters b..=j equal to `sp`). Every
-    // rank spreads its own ties the same way, so globally each of those
-    // destinations receives ~1/(j−b+2) of the duplicate mass instead of
-    // one rank receiving all of it.
-    let cuts = tie_split_cuts(&local, &splitters);
+    // splitter values are handled as a group, split across the group's
+    // adjacent buckets by each tie's *global* rank in the sorted order
+    // (see module docs) — one fused allreduce + one vector exscan.
+    let cuts = global_tie_split_cuts(ctx, &local, &splitters);
     let bufs: Vec<Vec<u8>> =
         cuts.windows(2).map(|w| enc_f64(&local[w[0]..w[1]])).collect();
 
@@ -97,32 +100,74 @@ pub fn sample_sort_f64(ctx: &mut RankCtx, mut local: Vec<f64>, oversample: usize
 }
 
 /// Bucket boundaries (`p + 1` cuts into the sorted `local`) for the
-/// splitter walk of [`sample_sort_f64`]: values strictly between
-/// splitters route as usual; ties of each distinct splitter value are
-/// split evenly across all buckets adjacent to that splitter group.
-fn tie_split_cuts(local: &[f64], splitters: &[f64]) -> Vec<usize> {
-    let mut cuts = Vec::with_capacity(splitters.len() + 2);
-    cuts.push(0);
-    let mut start = 0usize;
+/// splitter walk of [`sample_sort_f64`], with splitter-duplicate runs
+/// split by **global rank**.
+///
+/// Values strictly between splitters route as usual. For each group of
+/// equal splitters (value `sp`, buckets `b..=j+1` adjacent), the global
+/// sorted order puts all values `< sp` first (`glt` of them, from the
+/// allreduce), then every rank's tie run in rank order (this rank's run
+/// starts at offset `off`, from the vector exscan). A tie at global
+/// position `P` belongs to the destination whose window
+/// `[q·N/p, (q+1)·N/p)` contains `P` — so the boundary before bucket `q`
+/// falls at local tie index `ceil(q·N/p) − glt − off`, clamped into the
+/// run. Ties and non-ties compose monotonically, so the cuts stay
+/// sorted and the cross-rank order invariant is preserved.
+///
+/// Collective cost: one `u64` allreduce + one vector exscan per sort —
+/// two latency terms, independent of the duplicate structure.
+fn global_tie_split_cuts(ctx: &mut RankCtx, local: &[f64], splitters: &[f64]) -> Vec<usize> {
+    use crate::runtime_sim::collectives::ReduceOp;
+    let p = ctx.n_ranks;
+    // Splitter groups: (first bucket b, last splitter j, value).
+    let mut groups: Vec<(usize, usize, f64)> = Vec::new();
     let mut b = 0usize;
     while b < splitters.len() {
         let sp = splitters[b];
-        // The group of equal splitters [b, j].
         let mut j = b;
         while j + 1 < splitters.len() && splitters[j + 1] == sp {
             j += 1;
         }
+        groups.push((b, j, sp));
+        b = j + 1;
+    }
+    // Local counts per group: values < sp (an absolute index into the
+    // sorted local array) and ties == sp. Lane 0 carries the local n.
+    let mut lanes: Vec<u64> = Vec::with_capacity(1 + 2 * groups.len());
+    lanes.push(local.len() as u64);
+    let mut lt_le: Vec<(usize, usize)> = Vec::with_capacity(groups.len());
+    let mut start = 0usize;
+    for &(_, _, sp) in &groups {
         let lt = start + local[start..].partition_point(|v| *v < sp);
         let le = lt + local[lt..].partition_point(|v| *v <= sp);
-        let ties = le - lt;
-        // Destinations b..=j+1 share the ties: boundary t of the k−1
-        // interior boundaries sits at lt + ties·t/k.
-        let k = j - b + 2;
-        for t in 1..k {
-            cuts.push(lt + ties * t / k);
-        }
+        lt_le.push((lt, le));
+        lanes.push(lt as u64);
+        lanes.push((le - lt) as u64);
         start = le;
-        b = j + 1;
+    }
+    let totals = ctx.allreduce_u64(ReduceOp::Sum, &lanes);
+    let tie_lanes: Vec<u64> = lt_le.iter().map(|&(lt, le)| (le - lt) as u64).collect();
+    let offs = ctx.exscan_u64_many(&tie_lanes);
+    let n_glob = totals[0];
+
+    let mut cuts = Vec::with_capacity(p + 1);
+    cuts.push(0);
+    for (gi, &(b, j, _)) in groups.iter().enumerate() {
+        let (lt, le) = lt_le[gi];
+        let glt = totals[1 + 2 * gi];
+        let my_ties = (le - lt) as u64;
+        let run_start = glt + offs[gi];
+        for q in (b + 1)..=(j + 1) {
+            // First global position belonging to bucket ≥ q.
+            let start_q =
+                ((q as u128 * n_glob as u128 + (p as u128 - 1)) / p as u128) as u64;
+            let cut = if start_q <= run_start {
+                0
+            } else {
+                (start_q - run_start).min(my_ties)
+            };
+            cuts.push(lt + cut as usize);
+        }
     }
     cuts.push(local.len());
     cuts
@@ -239,6 +284,42 @@ mod tests {
         for (r, o) in outs.iter().enumerate() {
             assert!(o.len() < total / 2, "rank {r} holds {} of {total}", o.len());
         }
+    }
+
+    #[test]
+    fn p2_off_center_duplicates_split_by_global_rank() {
+        // Regression (ROADMAP "shard balance under extreme skew"): rank 0
+        // holds 1000 copies of one off-center site, rank 1 holds 1000
+        // uniform values. The local even tie split sent exactly half of
+        // rank 0's ties to each side, leaving ~65% of the data on one
+        // shard (500 ties + ~800 uniform values above the site). Global-
+        // rank splitting places the tie run against the true N/p windows,
+        // so both shards land at mean + oversampling error.
+        let p = 2;
+        let n_per = 1000usize;
+        let site = 0.2f64;
+        let (outs, _) = run_ranks(p, CostModel::default(), move |ctx| {
+            let local: Vec<f64> = if ctx.rank == 0 {
+                vec![site; n_per]
+            } else {
+                let mut rng = SplitMix64::new(99);
+                (0..n_per).map(|_| rng.uniform(0.0, 1.0)).collect()
+            };
+            sample_sort_f64(ctx, local, 16)
+        });
+        let total: usize = outs.iter().map(|o| o.len()).sum();
+        assert_eq!(total, p * n_per);
+        // Cross-rank order still holds.
+        if let (Some(a), Some(b)) = (outs[0].last(), outs[1].first()) {
+            assert!(a <= b, "order violated: {a} > {b}");
+        }
+        // Every shard bounded at mean + oversampling error — well under
+        // the ~65% the local even split produced on this lane.
+        let max = outs.iter().map(|o| o.len()).max().unwrap();
+        assert!(
+            max <= total * 55 / 100,
+            "global-rank tie split left {max} of {total} on one shard"
+        );
     }
 
     #[test]

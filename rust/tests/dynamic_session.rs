@@ -1,0 +1,283 @@
+//! Property suite for the incremental repartitioning session:
+//! `DistSession::repartition` swept over rank counts × load scenarios.
+//!
+//! Invariants per step:
+//! * **conservation** — the global id multiset equals the independently
+//!   evolved reference (scenario rules are pure per-point, so a global
+//!   replica evolves to the same multiset);
+//! * **global SFC order** — per-rank keys sorted, all keys on rank `i`
+//!   strictly below all keys on rank `j > i`;
+//! * **imbalance** — after the final step, no worse than a from-scratch
+//!   `distributed_partition` of the same evolved points plus a
+//!   tolerance (leaf granularity differs between the two, hence the
+//!   slack);
+//! * **determinism** — the whole multi-step run is bit-identical for
+//!   every threads-per-rank at a fixed rank count.
+//!
+//! `SFC_TEST_RANKS` narrows the rank sweep; CI partitions it exactly as
+//! it does for the `properties` suite.
+
+use std::sync::Mutex;
+
+use sfc_part::geom::point::PointSet;
+use sfc_part::kdtree::splitter::{SplitterConfig, SplitterKind};
+use sfc_part::partition::distributed::{
+    distributed_partition, rebuild_step, DistSession, SessionConfig,
+};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+use sfc_part::util::prop::forall;
+
+/// Rank counts to sweep (`SFC_TEST_RANKS=2` or a comma list narrows it;
+/// CI partitions {1,4} / {2} / {8}).
+fn rank_sweep() -> Vec<usize> {
+    match std::env::var("SFC_TEST_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SFC_TEST_RANKS wants integers"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// Per-rank snapshot after one step: (ids, keys, weight load).
+type Snap = (Vec<u64>, Vec<u128>, f64);
+
+/// Run create + `steps` repartitions; returns per-step per-rank snaps.
+fn run_session(
+    global: &PointSet,
+    p: usize,
+    tpr: usize,
+    steps: usize,
+    scenario: &Scenario,
+    cfg: &PartitionConfig,
+) -> Vec<Vec<Snap>> {
+    let (created, _) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+        let local = global.mod_shard(ctx.rank, ctx.n_ranks);
+        DistSession::create(ctx, &local, cfg, 4 * p, SessionConfig::default())
+    });
+    let mut sessions = created;
+    let mut out: Vec<Vec<Snap>> = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let slots: Vec<Mutex<Option<DistSession>>> =
+            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
+        let (outs, _) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scenario.update_for(sess.local(), step);
+            sess.repartition(ctx, &batch);
+            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+            let snap: Snap = (sess.local().ids.clone(), sess.keys().to_vec(), load);
+            (sess, snap)
+        });
+        out.push(outs.iter().map(|(_, s)| s.clone()).collect());
+        sessions = outs.into_iter().map(|(s, _)| s).collect();
+    }
+    out
+}
+
+/// Evolve a global replica through the scenario; returns the replica
+/// after every step (the conservation + baseline reference).
+fn evolve_replica(global: &PointSet, steps: usize, scenario: &Scenario) -> Vec<PointSet> {
+    let mut ps = global.clone();
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let batch = scenario.update_for(&ps, step);
+        batch.apply_to(&mut ps);
+        out.push(ps.clone());
+    }
+    out
+}
+
+fn sorted_ids(ps: &PointSet) -> Vec<u64> {
+    let mut ids = ps.ids.clone();
+    ids.sort_unstable();
+    ids
+}
+
+/// Weight imbalance (max/mean − 1) of per-rank loads.
+fn imbalance(loads: &[f64]) -> f64 {
+    sfc_part::partition::quality::load_summary(loads).imbalance
+}
+
+/// Fresh from-scratch imbalance on an evolved global set.
+fn fresh_imbalance(evolved: &PointSet, p: usize, cfg: &PartitionConfig) -> f64 {
+    let (loads, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+        let local = evolved.mod_shard(ctx.rank, ctx.n_ranks);
+        let dp = distributed_partition(ctx, &local, cfg, 4 * p);
+        dp.local.weights.iter().map(|&w| w as f64).sum::<f64>()
+    });
+    imbalance(&loads)
+}
+
+#[test]
+fn prop_session_scenarios_preserve_invariants() {
+    forall("session-scenarios", 2, |g| {
+        let n = g.usize_in(600, 1100);
+        let seed = g.u64_below(1000) as u32;
+        let ps = PointSet::uniform(n, 3, seed);
+        let steps = 2;
+        let cfg = PartitionConfig::default();
+        for kind in [ScenarioKind::Hotspot, ScenarioKind::Wave, ScenarioKind::Churn] {
+            let scenario = Scenario::new(kind);
+            let replicas = evolve_replica(&ps, steps, &scenario);
+            for &p in &rank_sweep() {
+                let runs = run_session(&ps, p, 1, steps, &scenario, &cfg);
+                for (step, ranks_out) in runs.iter().enumerate() {
+                    // Conservation against the evolved replica.
+                    let mut all: Vec<u64> =
+                        ranks_out.iter().flat_map(|(ids, _, _)| ids.clone()).collect();
+                    all.sort_unstable();
+                    if all != sorted_ids(&replicas[step]) {
+                        return (
+                            false,
+                            format!("{kind:?} p={p} step={step}: ids not conserved"),
+                        );
+                    }
+                    // Per-rank keys sorted; cross-rank strictly increasing
+                    // (tracked through empty ranks).
+                    let mut prev: Option<u128> = None;
+                    for (r, (_, keys, _)) in ranks_out.iter().enumerate() {
+                        if keys.windows(2).any(|w| w[0] > w[1]) {
+                            return (
+                                false,
+                                format!("{kind:?} p={p} step={step} rank={r}: keys unsorted"),
+                            );
+                        }
+                        let (Some(&first), Some(&last)) = (keys.first(), keys.last()) else {
+                            continue;
+                        };
+                        if let Some(pmax) = prev {
+                            if pmax >= first {
+                                return (
+                                    false,
+                                    format!(
+                                        "{kind:?} p={p} step={step}: global order broken at rank {r}"
+                                    ),
+                                );
+                            }
+                        }
+                        prev = Some(last);
+                    }
+                }
+                // Final imbalance: no worse than from-scratch + slack (the
+                // two differ in leaf granularity, hence the tolerance).
+                let final_loads: Vec<f64> =
+                    runs[steps - 1].iter().map(|(_, _, l)| *l).collect();
+                let sess_imb = imbalance(&final_loads);
+                let fresh_imb = fresh_imbalance(&replicas[steps - 1], p, &cfg);
+                // Theoretical sticky bound: target·(1+tol) + wmax_leaf,
+                // with wmax_leaf ≤ drift_hi·total/k1 — allow that much
+                // over the fresh build before calling it a failure.
+                if sess_imb > (fresh_imb + 0.5).max(0.75) {
+                    return (
+                        false,
+                        format!(
+                            "{kind:?} p={p}: session imbalance {sess_imb:.3} vs fresh {fresh_imb:.3}"
+                        ),
+                    );
+                }
+                // Determinism: bit-identical run at 2 threads per rank.
+                let runs2 = run_session(&ps, p, 2, steps, &scenario, &cfg);
+                if runs2 != runs {
+                    return (
+                        false,
+                        format!("{kind:?} p={p}: outputs diverged across threads-per-rank"),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_session_hotspot_cheaper_than_rebuild() {
+    // The acceptance direction at test scale, measured the same way the
+    // bench measures it: collective rounds (tag epochs) and migrated
+    // points of a session step vs a from-scratch rebuild per step, on
+    // the moving hotspot with median splitters.
+    let p = rank_sweep().into_iter().max().unwrap_or(4);
+    if p < 2 {
+        return; // single rank: no collectives or migration to compare
+    }
+    let n = 4000;
+    let steps = 3;
+    let global = PointSet::uniform(n, 3, 123);
+    let cfg = PartitionConfig {
+        splitter: SplitterConfig::uniform(SplitterKind::MedianSort),
+        ..Default::default()
+    };
+    let scenario = Scenario::new(ScenarioKind::Hotspot);
+
+    // Session lane.
+    let (created, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+        let local = global.mod_shard(ctx.rank, ctx.n_ranks);
+        DistSession::create(ctx, &local, &cfg, 4 * p, SessionConfig::default())
+    });
+    let mut sessions = created;
+    let mut sess_rounds = 0u64;
+    let mut sess_migrated = 0u64;
+    let mut sess_total = 0u64;
+    let mut sess_final_imb = 0.0f64;
+    for step in 0..steps {
+        let slots: Vec<Mutex<Option<DistSession>>> =
+            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
+        let scen = &scenario;
+        let (outs, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scen.update_for(sess.local(), step);
+            let stats = sess.repartition(ctx, &batch);
+            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+            (sess, stats, load)
+        });
+        sess_rounds += outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0);
+        sess_migrated += outs.iter().map(|(_, s, _)| s.migrated_out).sum::<u64>();
+        sess_total += outs.iter().map(|(_, s, _)| s.local_points).sum::<u64>();
+        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        sess_final_imb = imbalance(&loads);
+        sessions = outs.into_iter().map(|(s, _, _)| s).collect();
+    }
+
+    // Rebuild lane on the same evolution.
+    let mut locals: Vec<PointSet> = (0..p).map(|r| global.mod_shard(r, p)).collect();
+    let mut base_rounds = 0u64;
+    let mut base_migrated = 0u64;
+    let mut base_final_imb = 0.0f64;
+    for step in 0..steps {
+        let slots: Vec<Mutex<Option<PointSet>>> =
+            locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
+        let scen = &scenario;
+        let cfgb = &cfg;
+        let (outs, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+            let local = slots[ctx.rank].lock().unwrap().take().unwrap();
+            let batch = scen.update_for(&local, step);
+            let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, cfgb, 4 * p);
+            let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
+            (shard, rounds, migrated, load)
+        });
+        base_rounds += outs.first().map(|(_, r, _, _)| *r).unwrap_or(0);
+        base_migrated += outs.iter().map(|(_, _, m, _)| *m).sum::<u64>();
+        let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
+        base_final_imb = imbalance(&loads);
+        locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
+    }
+
+    // Acceptance direction: rounds strictly under half the rebuild cost.
+    assert!(
+        2 * sess_rounds < base_rounds,
+        "session rounds {sess_rounds} not < 50% of rebuild {base_rounds} (p={p})"
+    );
+    // Migration: comparable-or-better than the rebuild (10% cumulative
+    // absolute slack — the strict < 50% acceptance bar is measured by the
+    // `dynamic_tree` bench at its larger scale).
+    assert!(
+        sess_migrated <= base_migrated + sess_total / 10,
+        "session migrated {sess_migrated} vs rebuild {base_migrated} of {sess_total}"
+    );
+    // Balance: equal or better, up to the granularity slack.
+    assert!(
+        sess_final_imb <= base_final_imb + 0.5,
+        "session imbalance {sess_final_imb:.3} vs rebuild {base_final_imb:.3}"
+    );
+}
