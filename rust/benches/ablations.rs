@@ -438,9 +438,10 @@ fn main() {
     // step. Rounds are collective tag epochs; msgs come off the fabric;
     // both runs evolve the same global points (pure per-point scenario).
     {
-        use sfc_part::partition::distributed::{rebuild_step, DistSession, SessionConfig};
+        use sfc_part::partition::distributed::{
+            rebuild_step, step_ranks, DistSession, SessionConfig,
+        };
         use sfc_part::partition::scenario::{Scenario, ScenarioKind};
-        use std::sync::Mutex;
 
         let dp_n = args.usize("dyn-points", n.min(60_000));
         let dp_p = 8usize;
@@ -465,51 +466,49 @@ fn main() {
         let mut sessions = created;
         let mut srows: Vec<(u64, u64, f64, f64)> = Vec::new(); // rounds, msgs, mig%, imb
         for step in 0..dyn_steps {
-            let slots: Vec<Mutex<Option<DistSession>>> =
-                sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
-            let (outs, rep) = run_ranks_threaded(dp_p, 0, CostModel::default(), |ctx| {
-                let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
-                let batch = scen.update_for(sess.local(), step);
-                let stats = sess.repartition(ctx, &batch);
-                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
-                (sess, stats, load)
-            });
-            let migrated: u64 = outs.iter().map(|(_, s, _)| s.migrated_out).sum();
-            let total: u64 = outs.iter().map(|(_, s, _)| s.local_points).sum();
-            let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+            let (next, outs, rep) =
+                step_ranks(dp_p, 0, CostModel::default(), sessions, |ctx, mut sess| {
+                    let batch = scen.update_for(sess.local(), step);
+                    let stats = sess.repartition(ctx, &batch);
+                    let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                    (sess, (stats, load))
+                });
+            sessions = next;
+            let migrated: u64 = outs.iter().map(|(s, _)| s.migrated_out).sum();
+            let total: u64 = outs.iter().map(|(s, _)| s.local_points).sum();
+            let loads: Vec<f64> = outs.iter().map(|(_, l)| *l).collect();
             srows.push((
-                outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0),
+                outs.first().map(|(s, _)| s.collective_rounds).unwrap_or(0),
                 rep.total_msgs,
                 100.0 * migrated as f64 / total.max(1) as f64,
                 sfc_part::partition::quality::load_summary(&loads).imbalance,
             ));
-            sessions = outs.into_iter().map(|(s, _, _)| s).collect();
         }
         // Rebuild lane (same evolution rule).
         let mut locals: Vec<PointSet> =
             (0..dp_p).map(|r| dyn_global.mod_shard(r, dp_p)).collect();
         let mut brows: Vec<(u64, u64, f64, f64)> = Vec::new();
         for step in 0..dyn_steps {
-            let slots: Vec<Mutex<Option<PointSet>>> =
-                locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
             let cfgb = dyn_cfg.clone();
-            let (outs, rep) = run_ranks_threaded(dp_p, 0, CostModel::default(), |ctx| {
-                let local = slots[ctx.rank].lock().unwrap().take().unwrap();
-                let batch = scen.update_for(&local, step);
-                let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, &cfgb, dyn_k1);
-                let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
-                (shard, rounds, migrated, load)
-            });
-            let migrated: u64 = outs.iter().map(|(_, _, m, _)| *m).sum();
-            let total: u64 = outs.iter().map(|(l, _, _, _)| l.len() as u64).sum();
+            let (next, outs, rep) =
+                step_ranks(dp_p, 0, CostModel::default(), locals, |ctx, local| {
+                    let batch = scen.update_for(&local, step);
+                    let (shard, rounds, migrated) =
+                        rebuild_step(ctx, local, &batch, &cfgb, dyn_k1);
+                    let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
+                    let nloc = shard.len() as u64;
+                    (shard, (rounds, migrated, nloc, load))
+                });
+            locals = next;
+            let migrated: u64 = outs.iter().map(|(_, m, _, _)| *m).sum();
+            let total: u64 = outs.iter().map(|(_, _, n, _)| *n).sum();
             let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
             brows.push((
-                outs.first().map(|(_, r, _, _)| *r).unwrap_or(0),
+                outs.first().map(|(r, _, _, _)| *r).unwrap_or(0),
                 rep.total_msgs,
                 100.0 * migrated as f64 / total.max(1) as f64,
                 sfc_part::partition::quality::load_summary(&loads).imbalance,
             ));
-            locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
         }
         for (i, (s, b)) in srows.iter().zip(&brows).enumerate() {
             t.row(vec![

@@ -12,13 +12,11 @@
 //! the collective rounds** and migrates **< 50% of the points** of the
 //! from-scratch baseline, at equal or better imbalance.
 
-use std::sync::Mutex;
-
 use sfc_part::bench_util::Table;
 use sfc_part::cli::{Args, Scale};
 use sfc_part::geom::point::PointSet;
 use sfc_part::kdtree::splitter::{SplitterConfig, SplitterKind};
-use sfc_part::partition::distributed::{rebuild_step, DistSession, SessionConfig};
+use sfc_part::partition::distributed::{rebuild_step, step_ranks, DistSession, SessionConfig};
 use sfc_part::partition::partitioner::PartitionConfig;
 use sfc_part::partition::scenario::{Scenario, ScenarioKind};
 use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
@@ -77,55 +75,52 @@ fn main() {
     let scen = &scenario;
     let mut session_rows: Vec<StepRow> = Vec::with_capacity(steps);
     for step in 0..steps {
-        let slots: Vec<Mutex<Option<DistSession>>> =
-            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
-        let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
-            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
-            let batch = scen.update_for(sess.local(), step);
-            let stats = sess.repartition(ctx, &batch);
-            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
-            (sess, stats, load)
-        });
-        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        let (next, outs, rep) =
+            step_ranks(p, tpr, CostModel::default(), sessions, |ctx, mut sess| {
+                let batch = scen.update_for(sess.local(), step);
+                let stats = sess.repartition(ctx, &batch);
+                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                (sess, (stats, load))
+            });
+        sessions = next;
+        let loads: Vec<f64> = outs.iter().map(|(_, l)| *l).collect();
         session_rows.push(StepRow {
-            rounds: outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0),
+            rounds: outs.first().map(|(s, _)| s.collective_rounds).unwrap_or(0),
             msgs: rep.total_msgs,
             bytes: rep.total_bytes,
-            migrated: outs.iter().map(|(_, s, _)| s.migrated_out).sum(),
-            total: outs.iter().map(|(_, s, _)| s.local_points).sum(),
+            migrated: outs.iter().map(|(s, _)| s.migrated_out).sum(),
+            total: outs.iter().map(|(s, _)| s.local_points).sum(),
             imb: imbalance(&loads),
-            splits: outs.first().map(|(_, s, _)| s.splits).unwrap_or(0),
-            merges: outs.first().map(|(_, s, _)| s.merges).unwrap_or(0),
+            splits: outs.first().map(|(s, _)| s.splits).unwrap_or(0),
+            merges: outs.first().map(|(s, _)| s.merges).unwrap_or(0),
         });
-        sessions = outs.into_iter().map(|(s, _, _)| s).collect();
     }
 
     // ---- Baseline run: from-scratch distributed_partition per step ----
     let mut locals: Vec<PointSet> = (0..p).map(|r| global.mod_shard(r, p)).collect();
     let mut baseline_rows: Vec<StepRow> = Vec::with_capacity(steps);
     for step in 0..steps {
-        let slots: Vec<Mutex<Option<PointSet>>> =
-            locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
         let cfgb = cfg.clone();
-        let (outs, rep) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
-            let local = slots[ctx.rank].lock().unwrap().take().unwrap();
-            let batch = scen.update_for(&local, step);
-            let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, &cfgb, k1);
-            let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
-            (shard, rounds, migrated, load)
-        });
+        let (next, outs, rep) =
+            step_ranks(p, tpr, CostModel::default(), locals, |ctx, local| {
+                let batch = scen.update_for(&local, step);
+                let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, &cfgb, k1);
+                let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
+                let n = shard.len() as u64;
+                (shard, (rounds, migrated, n, load))
+            });
+        locals = next;
         let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
         baseline_rows.push(StepRow {
-            rounds: outs.first().map(|(_, r, _, _)| *r).unwrap_or(0),
+            rounds: outs.first().map(|(r, _, _, _)| *r).unwrap_or(0),
             msgs: rep.total_msgs,
             bytes: rep.total_bytes,
-            migrated: outs.iter().map(|(_, _, m, _)| *m).sum(),
-            total: outs.iter().map(|(l, _, _, _)| l.len() as u64).sum(),
+            migrated: outs.iter().map(|(_, m, _, _)| *m).sum(),
+            total: outs.iter().map(|(_, _, n, _)| *n).sum(),
             imb: imbalance(&loads),
             splits: 0,
             merges: 0,
         });
-        locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
     }
 
     // ---- Report ----

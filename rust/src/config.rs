@@ -76,6 +76,13 @@ impl Value {
             _ => bail!("expected string, got {self:?}"),
         }
     }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
 }
 
 /// Flat `section.key -> value` map.
@@ -196,6 +203,9 @@ pub struct DynamicConfig {
     pub drift_lo: f64,
     pub drift_hi: f64,
     pub imbalance_tol: f64,
+    /// Adapt the drift band to the observed drift (see
+    /// `SessionConfig::adaptive`).
+    pub adaptive: bool,
     pub amplitude: f64,
     pub speed: f64,
     pub churn_frac: f64,
@@ -209,6 +219,7 @@ impl Default for DynamicConfig {
             drift_lo: 0.5,
             drift_hi: 2.0,
             imbalance_tol: 0.10,
+            adaptive: false,
             amplitude: 8.0,
             speed: 0.05,
             churn_frac: 0.05,
@@ -234,10 +245,29 @@ pub fn dynamic_config(cfg: &ConfigFile) -> Result<DynamicConfig> {
             "drift_lo" => out.drift_lo = val.as_f64()?,
             "drift_hi" => out.drift_hi = val.as_f64()?,
             "imbalance_tol" => out.imbalance_tol = val.as_f64()?,
+            "adaptive" => out.adaptive = val.as_bool()?,
             "amplitude" => out.amplitude = val.as_f64()?,
             "speed" => out.speed = val.as_f64()?,
             "churn_frac" => out.churn_frac = val.as_f64()?,
             other => bail!("unknown key dynamic.{other}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Which partitioner backend to run (section `[backend]`, key `kind`):
+/// `"sfc"` (the paper's pipeline, default), `"kmeans"` (distributed
+/// balanced k-means), or `"rectilinear"` (the SGORP-style grid
+/// yardstick). The CLI `--backend` flag overrides the file value.
+pub fn backend_config(cfg: &ConfigFile) -> Result<crate::partition::backend::BackendKind> {
+    let mut out = crate::partition::backend::BackendKind::Sfc;
+    for (key, val) in &cfg.values {
+        let Some(name) = key.strip_prefix("backend.") else { continue };
+        match name {
+            "kind" => {
+                out = val.as_str()?.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            }
+            other => bail!("unknown key backend.{other}"),
         }
     }
     Ok(out)
@@ -304,6 +334,30 @@ mod tests {
         let bad = ConfigFile::parse("[dynamic]\nstepz = 1\n").unwrap();
         assert!(dynamic_config(&bad).is_err());
         let bad = ConfigFile::parse("[dynamic]\nscenario = \"tsunami\"\n").unwrap();
+        assert!(dynamic_config(&bad).is_err());
+    }
+
+    #[test]
+    fn backend_config_from_file() {
+        use crate::partition::backend::BackendKind;
+        let cfg = ConfigFile::parse("[backend]\nkind = \"kmeans\"\n").unwrap();
+        assert_eq!(backend_config(&cfg).unwrap(), BackendKind::KMeans);
+        // Absent section → default sfc.
+        let cfg = ConfigFile::parse("[partition]\nparts = 4\n").unwrap();
+        assert_eq!(backend_config(&cfg).unwrap(), BackendKind::Sfc);
+        // Bad names and unknown keys are rejected.
+        let bad = ConfigFile::parse("[backend]\nkind = \"voronoi\"\n").unwrap();
+        assert!(backend_config(&bad).is_err());
+        let bad = ConfigFile::parse("[backend]\nname = \"sfc\"\n").unwrap();
+        assert!(backend_config(&bad).is_err());
+    }
+
+    #[test]
+    fn dynamic_adaptive_flag_parses() {
+        let cfg = ConfigFile::parse("[dynamic]\nadaptive = true\n").unwrap();
+        assert!(dynamic_config(&cfg).unwrap().adaptive);
+        assert!(!dynamic_config(&ConfigFile::default()).unwrap().adaptive);
+        let bad = ConfigFile::parse("[dynamic]\nadaptive = 1\n").unwrap();
         assert!(dynamic_config(&bad).is_err());
     }
 

@@ -18,7 +18,8 @@ use anyhow::{bail, Result};
 use sfc_part::cli::Args;
 use sfc_part::config::{curve_from_name, splitter_from_name, ConfigFile};
 use sfc_part::geom::point::PointSet;
-use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::partition::{make_backend, BackendKind};
 
 fn main() {
     let args = Args::parse();
@@ -56,8 +57,11 @@ fn print_help() {
                       under `distributed`, T = worker share per simulated rank)\n\
          --splitter midpoint|median-sort|median-sample|median-select --bucket B\n\
          --dist uniform|clustered --seed S --config FILE\n\
+         --backend sfc|kmeans|rectilinear (partition/distributed; default sfc,\n\
+                   or `[backend] kind` from --config)\n\
          distributed-dynamic: --ranks P --steps N --scenario hotspot|wave|churn\n\
          --drift-lo F --drift-hi F --imb-tol F --amplitude F --speed F --churn-frac F\n\
+         --adaptive=true (EMA drift controller widens the band under static load)\n\
          --baseline=true (also run the from-scratch-per-step comparison)"
     );
 }
@@ -89,6 +93,20 @@ fn partition_cfg(args: &Args) -> Result<PartitionConfig> {
     Ok(cfg)
 }
 
+/// Backend selection: `--backend` wins over the config file's
+/// `[backend] kind`, which defaults to the SFC+knapsack pipeline.
+fn backend_choice(args: &Args) -> Result<BackendKind> {
+    if let Some(b) = args.get("backend") {
+        return b.parse().map_err(|e: String| anyhow::anyhow!(e));
+    }
+    match args.get("config") {
+        Some(path) => {
+            sfc_part::config::backend_config(&ConfigFile::load(std::path::Path::new(path))?)
+        }
+        None => Ok(BackendKind::Sfc),
+    }
+}
+
 fn workload(args: &Args) -> PointSet {
     let n = args.usize("points", 100_000);
     let dim = args.usize("dim", 3);
@@ -101,10 +119,12 @@ fn workload(args: &Args) -> PointSet {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let cfg = partition_cfg(args)?;
+    let backend = make_backend(backend_choice(args)?);
     let ps = workload(args);
-    let plan = Partitioner::new(cfg.clone()).partition(&ps);
+    let plan = backend.partition(&ps, &cfg);
     println!(
-        "partitioned {} points into {} parts in {:.3}s (build {:.3}s, sfc {:.3}s, knapsack {:.3}s)",
+        "[{}] partitioned {} points into {} parts in {:.3}s (build {:.3}s, sfc {:.3}s, knapsack {:.3}s)",
+        backend.name(),
         ps.len(),
         cfg.parts,
         plan.total_secs,
@@ -127,6 +147,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 fn cmd_distributed(args: &Args) -> Result<()> {
     let cfg = partition_cfg(args)?;
+    let backend = make_backend(backend_choice(args)?);
     let ps = workload(args);
     let ranks = args.usize("ranks", 4);
     let k1 = args.usize("k1", 4 * ranks);
@@ -134,13 +155,14 @@ fn cmd_distributed(args: &Args) -> Result<()> {
     // the worker share **per rank** on the persistent pool (0 or absent
     // = cores/ranks, at least 1), mirroring MPI ranks × pthreads.
     let threads_per_rank = args.usize("threads", 0);
+    let backend = &*backend;
     let (outs, rep) = sfc_part::runtime_sim::run_ranks_threaded(
         ranks,
         threads_per_rank,
         sfc_part::runtime_sim::CostModel::default(),
         |ctx| {
             let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
-            let dp = sfc_part::partition::distributed::distributed_partition(ctx, &local, &cfg, k1);
+            let dp = backend.partition_dist(ctx, &local, &cfg, k1);
             (dp.local.len(), dp.top_secs, dp.migrate_secs, dp.local_secs, ctx.threads)
         },
     );
@@ -148,7 +170,8 @@ fn cmd_distributed(args: &Args) -> Result<()> {
     let max_n = outs.iter().map(|o| o.0).max().unwrap_or(0);
     let mean_n = ps.len() as f64 / ranks as f64;
     println!(
-        "{} ranks x {} threads/rank: shard imbalance {:.3}, sim_time {:.4}s (compute {:.4}s + net {:.4}s), msgs {}, bytes {}",
+        "[{}] {} ranks x {} threads/rank: shard imbalance {:.3}, sim_time {:.4}s (compute {:.4}s + net {:.4}s), msgs {}, bytes {}",
+        backend.name(),
         ranks,
         share,
         max_n as f64 / mean_n - 1.0,
@@ -168,10 +191,9 @@ fn cmd_distributed(args: &Args) -> Result<()> {
 /// per-step wire measurements. `--baseline=true` replays the same load
 /// script against a from-scratch `distributed_partition` per step.
 fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
-    use sfc_part::partition::distributed::{DistSession, SessionConfig};
+    use sfc_part::partition::distributed::{step_ranks, DistSession, SessionConfig};
     use sfc_part::partition::scenario::{Scenario, ScenarioKind};
     use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
-    use std::sync::Mutex;
 
     let cfg = partition_cfg(args)?;
     let mut dyncfg = match args.get("config") {
@@ -190,6 +212,10 @@ fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
     dyncfg.amplitude = args.f64("amplitude", dyncfg.amplitude);
     dyncfg.speed = args.f64("speed", dyncfg.speed);
     dyncfg.churn_frac = args.f64("churn-frac", dyncfg.churn_frac);
+    // `--adaptive` (bare, trailing) or `--adaptive=true`, like --baseline.
+    if args.flag("adaptive") || matches!(args.get("adaptive"), Some("true") | Some("1")) {
+        dyncfg.adaptive = true;
+    }
 
     let kind: ScenarioKind =
         dyncfg.scenario.parse().map_err(|e: String| anyhow::anyhow!(e))?;
@@ -206,17 +232,19 @@ fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
         drift_lo: dyncfg.drift_lo,
         drift_hi: dyncfg.drift_hi,
         imbalance_tol: dyncfg.imbalance_tol,
+        adaptive: dyncfg.adaptive,
     };
 
     // Step 0: fresh sessions (the one-time build).
     let cfg0 = cfg.clone();
-    let (mut sessions, rep0) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
+    let (outs0, rep0) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
         let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
         let e0 = ctx.epochs_used();
         let sess = DistSession::create(ctx, &local, &cfg0, k1, scfg);
         (sess, (ctx.epochs_used() - e0) as u64)
     });
-    let build_rounds = sessions.first().map(|(_, r)| *r).unwrap_or(0);
+    let build_rounds = outs0.first().map(|(_, r)| *r).unwrap_or(0);
+    let mut sessions: Vec<DistSession> = outs0.into_iter().map(|(s, _)| s).collect();
     println!(
         "create: {} ranks, k1={}, rounds={}, msgs={}, bytes={}",
         ranks, k1, build_rounds, rep0.total_msgs, rep0.total_bytes
@@ -230,23 +258,22 @@ fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
     let scen = &scenario;
     let mut sess_sum = (0u64, 0u64, 0u64); // rounds, migrated, total points
     for step in 0..dyncfg.steps {
-        let slots: Vec<Mutex<Option<DistSession>>> =
-            sessions.into_iter().map(|(s, _)| Mutex::new(Some(s))).collect();
-        let (outs, rep) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
-            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
-            let batch = scen.update_for(sess.local(), step);
-            let stats = sess.repartition(ctx, &batch);
-            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
-            (sess, stats, load)
-        });
-        let rounds = outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0);
-        let migrated: u64 = outs.iter().map(|(_, s, _)| s.migrated_out).sum();
-        let total: u64 = outs.iter().map(|(_, s, _)| s.local_points).sum();
-        let splits: u64 = outs.first().map(|(_, s, _)| s.splits).unwrap_or(0);
-        let merges: u64 = outs.first().map(|(_, s, _)| s.merges).unwrap_or(0);
-        let moved: u64 = outs.first().map(|(_, s, _)| s.moved_leaves).unwrap_or(0);
-        let leaves: u64 = outs.first().map(|(_, s, _)| s.leaves).unwrap_or(0);
-        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        let (next, outs, rep) =
+            step_ranks(ranks, tpr, CostModel::default(), sessions, |ctx, mut sess| {
+                let batch = scen.update_for(sess.local(), step);
+                let stats = sess.repartition(ctx, &batch);
+                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                (sess, (stats, load))
+            });
+        sessions = next;
+        let rounds = outs.first().map(|(s, _)| s.collective_rounds).unwrap_or(0);
+        let migrated: u64 = outs.iter().map(|(s, _)| s.migrated_out).sum();
+        let total: u64 = outs.iter().map(|(s, _)| s.local_points).sum();
+        let splits: u64 = outs.first().map(|(s, _)| s.splits).unwrap_or(0);
+        let merges: u64 = outs.first().map(|(s, _)| s.merges).unwrap_or(0);
+        let moved: u64 = outs.first().map(|(s, _)| s.moved_leaves).unwrap_or(0);
+        let leaves: u64 = outs.first().map(|(s, _)| s.leaves).unwrap_or(0);
+        let loads: Vec<f64> = outs.iter().map(|(_, l)| *l).collect();
         let imb = sfc_part::partition::quality::load_summary(&loads).imbalance;
         println!(
             "{:>4} {:>7} {:>9} {:>6.1}% {:>6} {:>6} {:>6} {:>6} {:>7.3} {:>9} {:>11}",
@@ -265,7 +292,6 @@ fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
         sess_sum.0 += rounds;
         sess_sum.1 += migrated;
         sess_sum.2 += total;
-        sessions = outs.into_iter().map(|(s, st, _)| (s, st.collective_rounds)).collect();
     }
     println!(
         "session avg/step: rounds {:.1} ({:.0}% of one rebuild), migrated {:.1}%",
@@ -284,21 +310,23 @@ fn cmd_distributed_dynamic(args: &Args) -> Result<()> {
             (0..ranks).map(|r| ps.mod_shard(r, ranks)).collect();
         let mut base_sum = (0u64, 0u64, 0u64);
         for step in 0..dyncfg.steps {
-            let slots: Vec<Mutex<Option<sfc_part::geom::point::PointSet>>> =
-                locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
             let cfgb = cfg.clone();
-            let (outs, _) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
-                let local = slots[ctx.rank].lock().unwrap().take().unwrap();
-                let batch = scen.update_for(&local, step);
-                sfc_part::partition::distributed::rebuild_step(ctx, local, &batch, &cfgb, k1)
-            });
-            let rounds = outs.first().map(|(_, r, _)| *r).unwrap_or(0);
-            let migrated: u64 = outs.iter().map(|(_, _, m)| *m).sum();
-            let total: u64 = outs.iter().map(|(l, _, _)| l.len() as u64).sum();
+            let (next, outs, _) =
+                step_ranks(ranks, tpr, CostModel::default(), locals, |ctx, local| {
+                    let batch = scen.update_for(&local, step);
+                    let (local, rounds, migrated) = sfc_part::partition::distributed::rebuild_step(
+                        ctx, local, &batch, &cfgb, k1,
+                    );
+                    let n = local.len() as u64;
+                    (local, (rounds, migrated, n))
+                });
+            locals = next;
+            let rounds = outs.first().map(|(r, _, _)| *r).unwrap_or(0);
+            let migrated: u64 = outs.iter().map(|(_, m, _)| *m).sum();
+            let total: u64 = outs.iter().map(|(_, _, n)| *n).sum();
             base_sum.0 += rounds;
             base_sum.1 += migrated;
             base_sum.2 += total;
-            locals = outs.into_iter().map(|(l, _, _)| l).collect();
         }
         println!(
             "baseline avg/step: rounds {:.1}, migrated {:.1}% — session used {:.0}% of the rounds, {:.0}% of the migration",

@@ -1,0 +1,398 @@
+//! Pluggable partitioner backends.
+//!
+//! The paper's SFC+knapsack pipeline is one point in the geometric
+//! partitioning design space; this module turns the stack into a
+//! *multi-backend* architecture so other points (balanced k-means, the
+//! SGORP-style rectilinear yardstick) can be dropped in and bench-raced
+//! against it on equal terms.
+//!
+//! ```text
+//!            PartitionBackend (trait)
+//!            ├── partition(ps, cfg)            shared-memory plan
+//!            └── partition_dist(ctx, shard, …) per-rank shard
+//!                        │
+//!      ┌─────────────────┼──────────────────────┐
+//!  SfcKnapsack      BalancedKMeans         RectilinearGrid
+//!  BuildTree →      SFC-seeded Lloyd +     weight-equalized
+//!  SFCTraverse →    influence balancing    per-axis quantile
+//!  GreedyKnapsack   (1 fused allreduce     cuts (SGORP-style
+//!  (the paper)      per iteration)         baseline)
+//! ```
+//!
+//! A backend must be **deterministic**: the same input and config yield
+//! bit-identical output for every thread count and (distributed) every
+//! threads-per-rank — the same contract the SFC pipeline already obeys,
+//! enforced for all backends by `tests/backends.rs`.
+//!
+//! Backends that are not rank-decomposed get the distributed entry point
+//! for free: the default [`PartitionBackend::partition_dist`] allgathers
+//! every shard, runs the shared-memory path identically on all ranks
+//! with `parts = n_ranks`, and migrates. That is intentionally naive —
+//! it is the yardstick's transport, not a scalable path — and any real
+//! backend (both `SfcKnapsack` and `BalancedKMeans`) overrides it.
+
+use std::str::FromStr;
+
+use crate::geom::point::PointSet;
+use crate::partition::distributed::{distributed_partition, migrate_delta, DistPartition};
+use crate::partition::partitioner::{PartitionConfig, PartitionPlan, Partitioner};
+use crate::runtime_sim::rank::RankCtx;
+use crate::util::timer::Stopwatch;
+
+/// A partitioning backend: shared-memory and distributed entry points.
+pub trait PartitionBackend: Sync {
+    /// Short stable name, used by the CLI/benches ("sfc", "kmeans", …).
+    fn name(&self) -> &'static str;
+
+    /// Shared-memory path: one process, `cfg.threads` workers,
+    /// `cfg.parts` parts.
+    fn partition(&self, ps: &PointSet, cfg: &PartitionConfig) -> PartitionPlan;
+
+    /// Distributed path: every rank passes its shard; parts = ranks.
+    /// `k1` is the top-node budget where the backend has one (0 = auto);
+    /// backends without a top tree ignore it.
+    ///
+    /// The default implementation is the *gather fallback*: allgather
+    /// all shards, run [`PartitionBackend::partition`] on the identical
+    /// global set on every rank, and migrate each local point to its
+    /// part. Correct for any deterministic shared-memory backend, but
+    /// O(n) wire bytes per rank — real backends override this.
+    fn partition_dist(
+        &self,
+        ctx: &mut RankCtx,
+        shard: &PointSet,
+        cfg: &PartitionConfig,
+        _k1: usize,
+    ) -> DistPartition {
+        let sw = Stopwatch::start();
+        let shards = ctx.allgather_bytes(pack_pointset(shard));
+        let mut global = PointSet::new(shard.dim.max(1));
+        let mut my_offset = 0usize;
+        for (r, buf) in shards.iter().enumerate() {
+            if r == ctx.rank {
+                my_offset = global.len();
+            }
+            let part = unpack_pointset(buf);
+            if !part.is_empty() {
+                if global.is_empty() {
+                    global = PointSet::new(part.dim);
+                }
+                global.extend(&part);
+            }
+        }
+        let global_cfg = PartitionConfig { parts: ctx.n_ranks, ..cfg.clone() };
+        let plan = self.partition(&global, &global_cfg);
+        let dest: Vec<u32> =
+            plan.part_of[my_offset..my_offset + shard.len()].to_vec();
+        let top_secs = sw.secs();
+        let out = migrate_delta::migrate_and_order(ctx, shard, &dest, cfg, ctx.threads);
+        DistPartition {
+            local: out.local,
+            keys: out.keys,
+            top_secs,
+            migrate_secs: out.migrate_secs,
+            local_secs: out.local_secs,
+            owned_leaves: 1,
+            median_rounds: 0,
+            median_splits: 0,
+        }
+    }
+}
+
+/// The paper's pipeline behind the trait: `BuildTree → SFCTraverse →
+/// GreedyKnapsack` shared-memory, the `DistSession` top build
+/// distributed. Bit-identical to calling [`Partitioner`] /
+/// [`distributed_partition`] directly (property-tested).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SfcKnapsack;
+
+impl PartitionBackend for SfcKnapsack {
+    fn name(&self) -> &'static str {
+        "sfc"
+    }
+
+    fn partition(&self, ps: &PointSet, cfg: &PartitionConfig) -> PartitionPlan {
+        Partitioner::new(cfg.clone()).partition(ps)
+    }
+
+    fn partition_dist(
+        &self,
+        ctx: &mut RankCtx,
+        shard: &PointSet,
+        cfg: &PartitionConfig,
+        k1: usize,
+    ) -> DistPartition {
+        distributed_partition(ctx, shard, cfg, k1)
+    }
+}
+
+/// SGORP-style rectilinear yardstick: factor `parts` over the axes,
+/// then cut each axis at weight-equalizing quantiles of its coordinate
+/// marginal. Parts are axis-aligned boxes of a global rectilinear grid
+/// — the baseline the paper's quality tables are judged against.
+/// Uses the default gather transport for the distributed path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RectilinearGrid;
+
+impl RectilinearGrid {
+    /// Factor `parts` into per-axis grid counts, assigning each prime
+    /// factor (largest first) to the axis with the widest per-cell
+    /// extent. Deterministic; `Π counts == parts`.
+    fn grid_counts(parts: usize, widths: &[f64]) -> Vec<usize> {
+        let d = widths.len().max(1);
+        let mut counts = vec![1usize; d];
+        let mut factors = Vec::new();
+        let mut rem = parts.max(1);
+        let mut f = 2usize;
+        while f * f <= rem {
+            while rem % f == 0 {
+                factors.push(f);
+                rem /= f;
+            }
+            f += 1;
+        }
+        if rem > 1 {
+            factors.push(rem);
+        }
+        factors.sort_unstable_by(|a, b| b.cmp(a));
+        for f in factors {
+            // Widest current cell extent wins; ties go to the lowest axis.
+            let mut best = 0usize;
+            for k in 1..d {
+                let wk = widths.get(k).copied().unwrap_or(0.0) / counts[k] as f64;
+                let wb = widths.get(best).copied().unwrap_or(0.0) / counts[best] as f64;
+                if wk > wb {
+                    best = k;
+                }
+            }
+            counts[best] *= f;
+        }
+        counts
+    }
+
+    /// Weight-equalizing cuts for one axis: `cells − 1` values such
+    /// that each slab holds ≈ total/cells of the weight.
+    fn axis_cuts(ps: &PointSet, axis: usize, cells: usize) -> Vec<f64> {
+        if cells <= 1 || ps.is_empty() {
+            return Vec::new();
+        }
+        let mut vals: Vec<(f64, f32)> =
+            (0..ps.len()).map(|i| (ps.coord(i, axis), ps.weights[i])).collect();
+        vals.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let total: f64 = vals.iter().map(|&(_, w)| w as f64).sum();
+        let mut cuts = Vec::with_capacity(cells - 1);
+        let mut acc = 0.0f64;
+        let mut next = 1usize;
+        for &(v, w) in &vals {
+            acc += w as f64;
+            while next < cells && acc >= total * next as f64 / cells as f64 {
+                cuts.push(v);
+                next += 1;
+            }
+        }
+        while cuts.len() < cells - 1 {
+            cuts.push(vals.last().map(|&(v, _)| v).unwrap_or(0.0));
+        }
+        cuts
+    }
+}
+
+impl PartitionBackend for RectilinearGrid {
+    fn name(&self) -> &'static str {
+        "rectilinear"
+    }
+
+    fn partition(&self, ps: &PointSet, cfg: &PartitionConfig) -> PartitionPlan {
+        let sw = Stopwatch::start();
+        let parts = cfg.parts.max(1);
+        let dim = ps.dim.max(1);
+        let bbox = ps.bounding_box();
+        let widths: Vec<f64> = (0..dim).map(|k| bbox.width(k).max(0.0)).collect();
+        let counts = Self::grid_counts(parts, &widths);
+        let cuts: Vec<Vec<f64>> =
+            (0..dim).map(|k| Self::axis_cuts(ps, k, counts[k])).collect();
+        // Row-major part index over the grid cells (axis 0 slowest).
+        let mut strides = vec![1usize; dim];
+        for k in (0..dim.saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * counts[k + 1];
+        }
+        let part_of: Vec<u32> = (0..ps.len())
+            .map(|i| {
+                let mut part = 0usize;
+                for k in 0..dim {
+                    // Points on a cut go to the lower cell.
+                    let cell = cuts[k].iter().filter(|&&c| ps.coord(i, k) > c).count();
+                    part += cell.min(counts[k] - 1) * strides[k];
+                }
+                part as u32
+            })
+            .collect();
+        // Parts contiguous in the output order; stable within a part.
+        let mut perm: Vec<u32> = (0..ps.len() as u32).collect();
+        perm.sort_by_key(|&i| (part_of[i as usize], i));
+        let ids_in_order: Vec<u64> = perm.iter().map(|&i| ps.ids[i as usize]).collect();
+        let loads = crate::partition::knapsack::part_loads(&part_of, &ps.weights, parts);
+        PartitionPlan {
+            perm,
+            ids_in_order,
+            part_of,
+            loads,
+            parts,
+            build_stats: Default::default(),
+            traverse_stats: Default::default(),
+            knapsack_secs: 0.0,
+            total_secs: sw.secs(),
+        }
+    }
+}
+
+/// Which backend to run — the CLI `--backend` / config `[backend]` value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Sfc,
+    KMeans,
+    Rectilinear,
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sfc" => Ok(BackendKind::Sfc),
+            "kmeans" => Ok(BackendKind::KMeans),
+            "rectilinear" | "rect" => Ok(BackendKind::Rectilinear),
+            other => Err(format!(
+                "unknown backend '{other}' (expected sfc | kmeans | rectilinear)"
+            )),
+        }
+    }
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sfc => "sfc",
+            BackendKind::KMeans => "kmeans",
+            BackendKind::Rectilinear => "rectilinear",
+        }
+    }
+}
+
+/// Instantiate a backend with its default knobs.
+pub fn make_backend(kind: BackendKind) -> Box<dyn PartitionBackend> {
+    match kind {
+        BackendKind::Sfc => Box::new(SfcKnapsack),
+        BackendKind::KMeans => Box::new(crate::partition::kmeans::BalancedKMeans::default()),
+        BackendKind::Rectilinear => Box::new(RectilinearGrid),
+    }
+}
+
+/// Wire format for the gather fallback: dim, n, coords, ids, weights.
+fn pack_pointset(ps: &PointSet) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + ps.coords.len() * 8 + ps.ids.len() * 12);
+    buf.extend_from_slice(&(ps.dim as u64).to_le_bytes());
+    buf.extend_from_slice(&(ps.len() as u64).to_le_bytes());
+    for &c in &ps.coords {
+        buf.extend_from_slice(&c.to_le_bytes());
+    }
+    for &id in &ps.ids {
+        buf.extend_from_slice(&id.to_le_bytes());
+    }
+    for &w in &ps.weights {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf
+}
+
+fn unpack_pointset(buf: &[u8]) -> PointSet {
+    let rd_u64 = |at: usize| u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+    let dim = rd_u64(0) as usize;
+    let n = rd_u64(8) as usize;
+    let mut ps = PointSet::new(dim.max(1));
+    let mut at = 16;
+    let mut coords = Vec::with_capacity(n * dim);
+    for _ in 0..n * dim {
+        coords.push(f64::from_le_bytes(buf[at..at + 8].try_into().unwrap()));
+        at += 8;
+    }
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(rd_u64(at));
+        at += 8;
+    }
+    let mut weights = Vec::with_capacity(n);
+    for _ in 0..n {
+        weights.push(f32::from_le_bytes(buf[at..at + 4].try_into().unwrap()));
+        at += 4;
+    }
+    assert_eq!(at, buf.len(), "trailing bytes in gathered shard");
+    ps.coords = coords;
+    ps.ids = ids;
+    ps.weights = weights;
+    ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, CostModel};
+
+    #[test]
+    fn sfc_backend_matches_direct_partitioner() {
+        let ps = PointSet::clustered(3000, 3, 0.6, 17);
+        let cfg = PartitionConfig { parts: 6, ..Default::default() };
+        let via_trait = SfcKnapsack.partition(&ps, &cfg);
+        let direct = Partitioner::new(cfg).partition(&ps);
+        assert_eq!(via_trait.perm, direct.perm);
+        assert_eq!(via_trait.part_of, direct.part_of);
+        assert_eq!(via_trait.loads, direct.loads);
+        assert_eq!(via_trait.ids_in_order, direct.ids_in_order);
+    }
+
+    #[test]
+    fn pointset_wire_roundtrip() {
+        let ps = PointSet::uniform_weighted(137, 3, 5.0, 9);
+        let back = unpack_pointset(&pack_pointset(&ps));
+        assert_eq!(back.dim, ps.dim);
+        assert_eq!(back.coords, ps.coords);
+        assert_eq!(back.ids, ps.ids);
+        assert_eq!(back.weights, ps.weights);
+    }
+
+    #[test]
+    fn rectilinear_covers_and_balances_uniform() {
+        let ps = PointSet::uniform(4000, 2, 3);
+        let cfg = PartitionConfig { parts: 8, ..Default::default() };
+        let plan = RectilinearGrid.partition(&ps, &cfg);
+        let mut sorted = plan.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..4000).collect::<Vec<u32>>());
+        assert!(plan.part_of.iter().all(|&p| (p as usize) < 8));
+        // Marginal quantile cuts are not a joint equi-partition, but on
+        // uniform data they come close.
+        assert!(plan.imbalance() < 0.25, "imbalance {}", plan.imbalance());
+    }
+
+    #[test]
+    fn grid_counts_factor_fully() {
+        for parts in [1usize, 2, 6, 7, 8, 12, 30] {
+            let counts = RectilinearGrid::grid_counts(parts, &[1.0, 1.0, 1.0]);
+            assert_eq!(counts.iter().product::<usize>(), parts, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn gather_fallback_conserves_ids() {
+        let global = PointSet::uniform(900, 2, 41);
+        let p = 3;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let dp = RectilinearGrid.partition_dist(ctx, &local, &cfg, 0);
+            dp.local.ids.clone()
+        });
+        let mut all: Vec<u64> = outs.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..900).collect::<Vec<u64>>());
+    }
+}

@@ -61,7 +61,9 @@ pub use median::{
     distributed_median, distributed_median_bisect, distributed_median_with_probes,
     median_probes_for, median_rounds_for, MEDIAN_MAX_ROUNDS, MEDIAN_PROBES,
 };
-pub use session::{rebuild_step, DistSession, SessionConfig, StepStats, UpdateBatch};
+pub use session::{
+    rebuild_step, step_ranks, DistSession, SessionConfig, StepStats, UpdateBatch,
+};
 
 use crate::geom::bbox::BoundingBox;
 use crate::geom::point::PointSet;

@@ -9,6 +9,7 @@
 //! claim needs: adjustment cost ≪ rebuild cost, every step.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
 
 use crate::geom::bbox::BoundingBox;
 use crate::geom::point::PointSet;
@@ -17,6 +18,7 @@ use crate::partition::partitioner::PartitionConfig;
 use crate::runtime_sim::collectives::{ReduceOp, Section};
 use crate::runtime_sim::rank::RankCtx;
 use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::runtime_sim::{run_ranks_threaded, CostModel, SimReport};
 use crate::util::timer::Stopwatch;
 
 use super::assign::{assign_fresh, assign_sticky};
@@ -37,13 +39,27 @@ pub struct SessionConfig {
     /// Relative load tolerance of the sticky knapsack: part boundaries
     /// stay put while every part load remains within `target·(1 ± tol)`.
     pub imbalance_tol: f64,
+    /// Adapt the drift band to the observed per-step drift: widen it
+    /// (up to [`BAND_SCALE_MAX`]×) while the load is near-static so a
+    /// quiet workload converges to zero refinement work, snap back to
+    /// the configured band as soon as the drift picks up. `false`
+    /// (default) keeps every step bit-identical to the fixed band.
+    pub adaptive: bool,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { drift_lo: 0.5, drift_hi: 2.0, imbalance_tol: 0.10 }
+        SessionConfig { drift_lo: 0.5, drift_hi: 2.0, imbalance_tol: 0.10, adaptive: false }
     }
 }
+
+/// Widest adaptive band relative to the configured one.
+pub const BAND_SCALE_MAX: f64 = 8.0;
+
+/// EMA drift below which a step counts as "static" (band widens) and
+/// above which the band snaps back to its configured width.
+const DRIFT_STATIC: f64 = 0.02;
+const DRIFT_FAST: f64 = 0.10;
 
 /// One step's worth of local point updates, applied by
 /// [`DistSession::repartition`] before it rebalances. All fields are
@@ -169,6 +185,11 @@ pub struct DistSession {
     /// Rank-prefixed global SFC keys, same order as `local`.
     keys: Vec<u128>,
     build: BuildInfo,
+    /// EMA of the per-step relative leaf-weight drift. Computed from
+    /// allreduce-identical values only, so it is the same on every rank.
+    drift_ema: f64,
+    /// Current adaptive widening of the drift band (1 = configured).
+    band_scale: f64,
 }
 
 impl DistSession {
@@ -234,6 +255,8 @@ impl DistSession {
                 median_rounds: tb.stats.median_rounds,
                 median_splits: tb.stats.median_splits,
             },
+            drift_ema: 0.0,
+            band_scale: 1.0,
         }
     }
 
@@ -256,9 +279,10 @@ impl DistSession {
         let mut leaf_node_of = route_to_leaves(&points, &self.nodes, threads);
 
         // ---- Fused refresh: weights + counts + boxes, ONE allreduce ----
-        let total_w = self.refresh_leaves(ctx, &points, &leaf_node_of, threads);
+        let (total_w, drift_abs) = self.refresh_leaves(ctx, &points, &leaf_node_of, threads);
 
-        // ---- Drift-triggered refinement ----
+        // ---- Drift-triggered refinement (possibly adaptive band) ----
+        let eff_scfg = self.adapt_band(total_w, drift_abs);
         let rout = refine(
             ctx,
             &points,
@@ -267,7 +291,7 @@ impl DistSession {
             &mut leaf_node_of,
             self.k1,
             total_w,
-            &self.scfg,
+            &eff_scfg,
             self.use_median,
             threads,
         );
@@ -315,17 +339,18 @@ impl DistSession {
     }
 
     /// Refresh every leaf's collective weight/count/bbox in one fused
-    /// allreduce; returns the (identical-on-every-rank) total weight.
-    /// Leaves whose collective count changed get their `retired` flag
-    /// cleared — points moved, so a previously unsplittable leaf may
-    /// split now.
+    /// allreduce; returns the (identical-on-every-rank) total weight
+    /// and the absolute leaf-weight drift `Σ|w_new − w_prev|` since the
+    /// last refresh. Leaves whose collective count changed get their
+    /// `retired` flag cleared — points moved, so a previously
+    /// unsplittable leaf may split now.
     fn refresh_leaves(
         &mut self,
         ctx: &mut RankCtx,
         points: &PointSet,
         leaf_node_of: &[u32],
         threads: usize,
-    ) -> f64 {
+    ) -> (f64, f64) {
         let nl = self.leaves.len();
         let dim = points.dim;
         let mut slot_of: Vec<u32> = vec![u32::MAX; self.nodes.len()];
@@ -388,11 +413,15 @@ impl DistSession {
         let glo = fused[2].f64();
         let ghi = fused[3].f64();
         let mut total_w = 0.0f64;
+        let mut drift_abs = 0.0f64;
         for (s, leaf) in self.leaves.iter_mut().enumerate() {
             let nd = &mut self.nodes[leaf.node as usize];
             if nd.count != gc[s] {
                 leaf.retired = false;
             }
+            // Old weight came from a collective too, so the drift is
+            // the same on every rank.
+            drift_abs += (gw[s] - nd.weight).abs();
             nd.count = gc[s];
             nd.weight = gw[s];
             nd.bbox = BoundingBox {
@@ -401,7 +430,32 @@ impl DistSession {
             };
             total_w += gw[s];
         }
-        total_w
+        (total_w, drift_abs)
+    }
+
+    /// Satellite of the refresh: fold the observed drift into the EMA
+    /// and derive this step's effective drift band. With
+    /// `scfg.adaptive == false` this is the identity — the configured
+    /// band is returned untouched and no state changes, keeping the
+    /// fixed-band behavior bit-identical.
+    fn adapt_band(&mut self, total_w: f64, drift_abs: f64) -> SessionConfig {
+        if !self.scfg.adaptive {
+            return self.scfg;
+        }
+        let rel = if total_w > 0.0 { drift_abs / total_w } else { 0.0 };
+        self.drift_ema = 0.5 * self.drift_ema + 0.5 * rel;
+        if self.drift_ema < DRIFT_STATIC {
+            // Near-static load: widen the band so refinement goes quiet.
+            self.band_scale = (self.band_scale * 1.5).min(BAND_SCALE_MAX);
+        } else if self.drift_ema > DRIFT_FAST {
+            // Fast drift: snap straight back to the configured band.
+            self.band_scale = 1.0;
+        }
+        SessionConfig {
+            drift_lo: self.scfg.drift_lo / self.band_scale,
+            drift_hi: self.scfg.drift_hi * self.band_scale,
+            ..self.scfg
+        }
     }
 
     /// Consume the session into the one-shot result type.
@@ -442,6 +496,18 @@ impl DistSession {
     pub fn k1(&self) -> usize {
         self.k1
     }
+
+    /// Current adaptive widening of the drift band (1.0 when the band
+    /// is at its configured width or `adaptive` is off).
+    pub fn band_scale(&self) -> f64 {
+        self.band_scale
+    }
+
+    /// EMA of the observed per-step relative drift (0.0 until the first
+    /// adaptive step).
+    pub fn drift_ema(&self) -> f64 {
+        self.drift_ema
+    }
 }
 
 /// One from-scratch baseline step for session comparisons: apply
@@ -467,6 +533,40 @@ pub fn rebuild_step(
     let out_ids: HashSet<u64> = dp.local.ids.iter().copied().collect();
     let migrated = points.ids.iter().filter(|&&id| !out_ids.contains(&id)).count() as u64;
     (dp.local, rounds, migrated)
+}
+
+/// Drive one timestep of `p` per-rank states through a fresh fabric:
+/// each rank body takes its state out of a slot, runs `body`, and puts
+/// the evolved state back, so callers can keep per-rank sessions (or
+/// baseline shards) alive across steps while measuring every step with
+/// its own [`SimReport`]. This is the step-loop harness shared by the
+/// `distributed-dynamic` CLI, the `dynamic_tree`/`ablations` benches,
+/// and the property suite — one driver, so every consumer measures a
+/// step the same way.
+///
+/// Returns the evolved states and per-rank results in rank order, plus
+/// the step's fabric report.
+pub fn step_ranks<S, T, F>(
+    p: usize,
+    threads_per_rank: usize,
+    cost: CostModel,
+    states: Vec<S>,
+    body: F,
+) -> (Vec<S>, Vec<T>, SimReport)
+where
+    S: Send,
+    T: Send,
+    F: Fn(&mut RankCtx, S) -> (S, T) + Sync,
+{
+    assert_eq!(states.len(), p, "one state per rank");
+    let slots: Vec<Mutex<Option<S>>> =
+        states.into_iter().map(|s| Mutex::new(Some(s))).collect();
+    let (outs, report) = run_ranks_threaded(p, threads_per_rank, cost, |ctx| {
+        let state = slots[ctx.rank].lock().unwrap().take().expect("state taken twice");
+        body(ctx, state)
+    });
+    let (states, results) = outs.into_iter().unzip();
+    (states, results, report)
 }
 
 /// Route every local point down the top tree to its leaf's arena node
@@ -641,5 +741,107 @@ mod tests {
                 rebuild_rounds
             );
         }
+    }
+
+    #[test]
+    fn adaptive_band_quiets_static_load() {
+        // A deliberately tight band on clustered data, then nothing but
+        // empty batches: the adaptive controller must widen the band
+        // and the per-step refinement work must converge to zero.
+        let global = PointSet::clustered(2000, 2, 0.7, 42);
+        let p = 2;
+        let steps = 8usize;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let scfg = SessionConfig {
+                drift_lo: 0.6,
+                drift_hi: 1.0,
+                adaptive: true,
+                ..Default::default()
+            };
+            let mut sess = DistSession::create(ctx, &local, &cfg, 8, scfg);
+            let mut work = Vec::new();
+            for _ in 0..steps {
+                let stats = sess.repartition(ctx, &UpdateBatch::new(2));
+                work.push(stats.splits + stats.merges);
+            }
+            (work, sess.band_scale())
+        });
+        for (work, scale) in &outs {
+            assert!(*scale > 1.0, "static load never widened the band");
+            let tail: u64 = work[steps - 3..].iter().sum();
+            assert_eq!(tail, 0, "refinement work did not converge: {work:?}");
+        }
+    }
+
+    #[test]
+    fn adaptive_band_snaps_back_under_fast_drift() {
+        // Violent reweights every step: the EMA must register the drift
+        // and the band must sit at its configured width.
+        let global = PointSet::uniform(1500, 2, 77);
+        let p = 2;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let scfg = SessionConfig { adaptive: true, ..Default::default() };
+            let mut sess = DistSession::create(ctx, &local, &cfg, 8, scfg);
+            for t in 0..5usize {
+                let heavy_left = t % 2 == 0;
+                let w: Vec<f32> = (0..sess.local().len())
+                    .map(|i| {
+                        if (sess.local().coord(i, 0) < 0.5) == heavy_left {
+                            10.0
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect();
+                let batch = UpdateBatch { reweight_all: Some(w), ..UpdateBatch::new(2) };
+                sess.repartition(ctx, &batch);
+            }
+            (sess.band_scale(), sess.drift_ema())
+        });
+        for (scale, ema) in &outs {
+            assert_eq!(*scale, 1.0, "fast drift left the band widened");
+            assert!(*ema > DRIFT_STATIC, "EMA {ema} never saw the drift");
+        }
+    }
+
+    #[test]
+    fn fixed_band_session_ignores_adaptive_state() {
+        // adaptive=false must keep the band untouched step after step.
+        let global = PointSet::uniform(1000, 2, 3);
+        let p = 2;
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let cfg = PartitionConfig::default();
+            let mut sess =
+                DistSession::create(ctx, &local, &cfg, 8, SessionConfig::default());
+            for _ in 0..3 {
+                sess.repartition(ctx, &UpdateBatch::new(2));
+            }
+            (sess.band_scale(), sess.drift_ema())
+        });
+        for (scale, ema) in &outs {
+            assert_eq!((*scale, *ema), (1.0, 0.0));
+        }
+    }
+
+    #[test]
+    fn step_ranks_threads_state_through_steps() {
+        let p = 3;
+        let mut states: Vec<u64> = vec![0; p];
+        for step in 0..4u64 {
+            let (next, results, rep) =
+                step_ranks(p, 1, CostModel::default(), states, |ctx, s| {
+                    let v = ctx.allreduce1(ReduceOp::Sum, (s + 1) as f64) as u64;
+                    (s + 1, v)
+                });
+            states = next;
+            assert_eq!(rep.ranks, p);
+            assert!(results.iter().all(|&v| v == (step + 1) * p as u64));
+        }
+        assert_eq!(states, vec![4u64; p]);
     }
 }

@@ -1,0 +1,525 @@
+//! Balanced k-means backend (von Looz et al., *Balanced k-means for
+//! Parallel Geometric Partitioning*).
+//!
+//! A genuinely different geometric partitioner from the SFC pipeline:
+//! parts are Voronoi-like cells of `k` centroids instead of curve
+//! segments, which gives more compact (lower surface-to-volume, lower
+//! edge-cut) parts on non-axis-aligned load. Balance is not free as it
+//! is for the knapsack — it is enforced by an **influence** (penalty)
+//! factor per cluster: points are assigned by `dist²(x, c_j) · f_j`,
+//! and after every Lloyd round each overloaded cluster's `f_j` grows
+//! (underloaded shrinks) by a clamped multiplicative step, so the
+//! assignment pressure drives loads toward `total/k`.
+//!
+//! Determinism contract (same as every other code path):
+//! * seeding is k-means++-style but deterministic — seeds are evenly
+//!   spaced points of the global **SFC order** (Morton keys of the
+//!   domain box, ties by id), so they spread with the data's density;
+//! * the assignment pass accumulates per-cluster partial sums in fixed
+//!   [`KM_BLOCK`] blocks folded in block order — bit-identical for any
+//!   thread count;
+//! * ties in the argmin go to the lowest cluster index;
+//! * the distributed path reduces all per-cluster partials (u64 count
+//!   lanes + f64 weight/coordinate-sum lanes + the global
+//!   changed-assignments count) in **one fused [`allreduce_multi`] per
+//!   Lloyd iteration**, and every control-flow decision (early exit,
+//!   best-round tracking) depends only on allreduced values, so all
+//!   ranks stay in lockstep and the output is threads-per-rank and
+//!   rank-decomposition invariant.
+//!
+//! The iteration cap is fixed (`max_iters` Lloyd rounds with centroid
+//! motion, then up to `balance_iters` balance-only rounds with frozen
+//! centroids and ramped influence pressure); the best assignment seen
+//! (by global imbalance) is the one returned.
+//!
+//! [`allreduce_multi`]: crate::runtime_sim::rank::RankCtx::allreduce_multi
+
+use crate::geom::point::PointSet;
+use crate::partition::backend::PartitionBackend;
+use crate::partition::distributed::{migrate_delta, DistPartition};
+use crate::partition::knapsack::part_loads;
+use crate::partition::partitioner::{PartitionConfig, PartitionPlan};
+use crate::runtime_sim::collectives::{ReduceOp, Section};
+use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::sfc::morton::{bits_per_dim, morton_key_cycling};
+use crate::util::timer::Stopwatch;
+
+/// Fixed accumulation block for the assignment pass; like `TOP_BLOCK`,
+/// the block structure depends only on the input length, never the
+/// thread count, so every f64 partial sum folds in the same order.
+pub const KM_BLOCK: usize = 4096;
+
+/// Per-round multiplicative clamp on an influence update — small steps
+/// prevent the penalty from oscillating.
+const INFL_STEP: f64 = 1.25;
+
+/// Balanced k-means partitioner. `parts = k` clusters shared-memory;
+/// `parts = ranks` distributed.
+#[derive(Clone, Copy, Debug)]
+pub struct BalancedKMeans {
+    /// Lloyd rounds with centroid motion.
+    pub max_iters: usize,
+    /// Extra balance-only rounds (centroids frozen, influence ramped).
+    pub balance_iters: usize,
+    /// Influence exponent: `f_j ← f_j · (load_j/target)^beta`.
+    pub beta: f64,
+    /// Target imbalance (max/mean − 1) the influence loop drives toward.
+    pub tol: f64,
+}
+
+impl Default for BalancedKMeans {
+    fn default() -> Self {
+        BalancedKMeans { max_iters: 20, balance_iters: 40, beta: 0.5, tol: 0.10 }
+    }
+}
+
+/// Result of one blocked assignment pass over a (local) point set.
+struct PassOut {
+    assign: Vec<u32>,
+    counts: Vec<u64>,
+    wsums: Vec<f64>,
+    /// Weighted coordinate sums, `k * dim` lanes.
+    csums: Vec<f64>,
+    changed: u64,
+}
+
+/// Assign every point to `argmin_j dist²(x, c_j) · f_j` (ties → lowest
+/// j) and accumulate per-cluster count / weight / weighted coordinate
+/// sums in fixed blocks folded in order.
+fn assign_pass(
+    ps: &PointSet,
+    prev: &[u32],
+    centroids: &[f64],
+    infl: &[f64],
+    k: usize,
+    threads: usize,
+) -> PassOut {
+    let dim = ps.dim.max(1);
+    let blocks = parallel_map_blocks(threads, ps.len(), KM_BLOCK, |lo, hi| {
+        let mut assign = Vec::with_capacity(hi - lo);
+        let mut counts = vec![0u64; k];
+        let mut wsums = vec![0.0f64; k];
+        let mut csums = vec![0.0f64; k * dim];
+        let mut changed = 0u64;
+        for i in lo..hi {
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for j in 0..k {
+                let cost = ps.dist2_to(i, &centroids[j * dim..(j + 1) * dim]) * infl[j];
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = j;
+                }
+            }
+            if prev[i] != best as u32 {
+                changed += 1;
+            }
+            assign.push(best as u32);
+            let w = ps.weights[i] as f64;
+            counts[best] += 1;
+            wsums[best] += w;
+            for d in 0..dim {
+                csums[best * dim + d] += w * ps.coord(i, d);
+            }
+        }
+        (assign, counts, wsums, csums, changed)
+    });
+    let mut out = PassOut {
+        assign: Vec::with_capacity(ps.len()),
+        counts: vec![0u64; k],
+        wsums: vec![0.0f64; k],
+        csums: vec![0.0f64; k * dim],
+        changed: 0,
+    };
+    for (assign, counts, wsums, csums, changed) in blocks {
+        out.assign.extend_from_slice(&assign);
+        for j in 0..k {
+            out.counts[j] += counts[j];
+            out.wsums[j] += wsums[j];
+        }
+        for l in 0..k * dim {
+            out.csums[l] += csums[l];
+        }
+        out.changed += changed;
+    }
+    out
+}
+
+/// Centroid + influence update from the (global) per-cluster sums.
+/// Pure arithmetic on reduction outputs, so every rank computes
+/// bit-identical state. Returns the global imbalance.
+#[allow(clippy::too_many_arguments)]
+fn update_state(
+    centroids: &mut [f64],
+    infl: &mut [f64],
+    counts: &[u64],
+    wsums: &[f64],
+    csums: &[f64],
+    dim: usize,
+    move_centroids: bool,
+    beta: f64,
+    tol: f64,
+) -> f64 {
+    let k = counts.len();
+    let total: f64 = wsums.iter().sum();
+    let target = total / k as f64;
+    let max = wsums.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let imb = if target > 0.0 { max / target - 1.0 } else { 0.0 };
+    if move_centroids {
+        for j in 0..k {
+            if counts[j] > 0 && wsums[j] > 0.0 {
+                for d in 0..dim {
+                    centroids[j * dim + d] = csums[j * dim + d] / wsums[j];
+                }
+            }
+        }
+    }
+    let any_empty = counts.iter().any(|&c| c == 0);
+    if target > 0.0 && (imb > tol || any_empty) {
+        for j in 0..k {
+            let step = if counts[j] == 0 {
+                // An empty cluster gets cheaper until it attracts points.
+                1.0 / INFL_STEP
+            } else {
+                (wsums[j] / target).powf(beta).clamp(1.0 / INFL_STEP, INFL_STEP)
+            };
+            infl[j] = (infl[j] * step).clamp(1e-9, 1e9);
+        }
+    }
+    imb
+}
+
+/// Seeds = `k` evenly spaced positions of an SFC-sorted order.
+fn seed_positions(n: usize, k: usize) -> Vec<usize> {
+    (0..k).map(|j| (((2 * j + 1) * n) / (2 * k)).min(n.saturating_sub(1))).collect()
+}
+
+/// Morton key of every point over `domain`, full interleave depth.
+fn morton_keys(ps: &PointSet, domain: &crate::geom::bbox::BoundingBox) -> Vec<u128> {
+    let depth = (ps.dim.max(1) as u32 * bits_per_dim(ps.dim.max(1))) as u16;
+    (0..ps.len()).map(|i| morton_key_cycling(ps.point(i), domain, depth)).collect()
+}
+
+impl BalancedKMeans {
+    /// The Lloyd + influence loop over a point set whose per-round
+    /// cluster sums are produced by `reduce` (identity shared-memory,
+    /// fused allreduce distributed). Returns the best assignment seen
+    /// and its global loads.
+    fn lloyd_loop<R>(
+        &self,
+        ps: &PointSet,
+        k: usize,
+        dim: usize,
+        mut centroids: Vec<f64>,
+        threads: usize,
+        mut reduce: R,
+    ) -> (Vec<u32>, Vec<f64>)
+    where
+        R: FnMut(&PassOut) -> (Vec<u64>, Vec<f64>, Vec<f64>, u64),
+    {
+        let mut infl = vec![1.0f64; k];
+        let mut assign = vec![u32::MAX; ps.len()];
+        let mut best_assign: Vec<u32> = Vec::new();
+        let mut best_loads = vec![0.0f64; k];
+        let mut best_imb = f64::INFINITY;
+        for iter in 0..self.max_iters + self.balance_iters {
+            let pass = assign_pass(ps, &assign, &centroids, &infl, k, threads);
+            assign = pass.assign.clone();
+            let (counts, wsums, csums, changed) = reduce(&pass);
+            let move_centroids = iter < self.max_iters;
+            // Ramp the influence pressure once centroids freeze.
+            let beta = if move_centroids { self.beta } else { 2.0 * self.beta };
+            let imb = update_state(
+                &mut centroids,
+                &mut infl,
+                &counts,
+                &wsums,
+                &csums,
+                dim,
+                move_centroids,
+                beta,
+                self.tol,
+            );
+            if imb < best_imb {
+                best_imb = imb;
+                best_assign = assign.clone();
+                best_loads = wsums;
+            }
+            // All inputs to this branch are globally reduced values, so
+            // every rank takes it on the same iteration.
+            if changed == 0 && imb <= self.tol {
+                break;
+            }
+        }
+        if best_assign.is_empty() {
+            best_assign = assign;
+        }
+        (best_assign, best_loads)
+    }
+}
+
+impl PartitionBackend for BalancedKMeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn partition(&self, ps: &PointSet, cfg: &PartitionConfig) -> PartitionPlan {
+        let sw = Stopwatch::start();
+        let k = cfg.parts.max(1);
+        let threads = cfg.threads.max(1);
+        let dim = ps.dim.max(1);
+        if ps.is_empty() {
+            return PartitionPlan {
+                perm: Vec::new(),
+                ids_in_order: Vec::new(),
+                part_of: Vec::new(),
+                loads: vec![0.0; k],
+                parts: k,
+                build_stats: Default::default(),
+                traverse_stats: Default::default(),
+                knapsack_secs: 0.0,
+                total_secs: sw.secs(),
+            };
+        }
+        let domain = ps.bounding_box();
+        let keys = morton_keys(ps, &domain);
+        let mut order: Vec<u32> = (0..ps.len() as u32).collect();
+        order.sort_by_key(|&i| (keys[i as usize], ps.ids[i as usize], i));
+        let mut centroids = vec![0.0f64; k * dim];
+        for (j, &pos) in seed_positions(ps.len(), k).iter().enumerate() {
+            centroids[j * dim..(j + 1) * dim].copy_from_slice(ps.point(order[pos] as usize));
+        }
+        let (assign, _) = self.lloyd_loop(ps, k, dim, centroids, threads, |pass| {
+            (pass.counts.clone(), pass.wsums.clone(), pass.csums.clone(), pass.changed)
+        });
+        // Parts contiguous in the output order, SFC-sorted within a part.
+        let mut perm: Vec<u32> = (0..ps.len() as u32).collect();
+        perm.sort_by_key(|&i| (assign[i as usize], keys[i as usize], ps.ids[i as usize], i));
+        let ids_in_order: Vec<u64> = perm.iter().map(|&i| ps.ids[i as usize]).collect();
+        let loads = part_loads(&assign, &ps.weights, k);
+        PartitionPlan {
+            perm,
+            ids_in_order,
+            part_of: assign,
+            loads,
+            parts: k,
+            build_stats: Default::default(),
+            traverse_stats: Default::default(),
+            knapsack_secs: 0.0,
+            total_secs: sw.secs(),
+        }
+    }
+
+    fn partition_dist(
+        &self,
+        ctx: &mut RankCtx,
+        shard: &PointSet,
+        cfg: &PartitionConfig,
+        _k1: usize,
+    ) -> DistPartition {
+        let sw = Stopwatch::start();
+        let k = ctx.n_ranks;
+        let dim = shard.dim.max(1);
+        let threads = ctx.threads;
+        // Round 1 (fused): global bbox + global point count.
+        let local_bbox = shard.bounding_box();
+        let (lo, hi) = if shard.is_empty() {
+            (vec![f64::INFINITY; dim], vec![f64::NEG_INFINITY; dim])
+        } else {
+            (local_bbox.lo.clone(), local_bbox.hi.clone())
+        };
+        let out = ctx.allreduce_multi(&[
+            Section::F64(ReduceOp::Min, &lo),
+            Section::F64(ReduceOp::Max, &hi),
+            Section::U64(ReduceOp::Sum, &[shard.len() as u64]),
+        ]);
+        let mut domain = crate::geom::bbox::BoundingBox::empty(dim);
+        domain.lo = out[0].f64().to_vec();
+        domain.hi = out[1].f64().to_vec();
+        let n_global = out[2].u64()[0];
+
+        if n_global == 0 {
+            let out = migrate_delta::migrate_and_order(ctx, shard, &[], cfg, threads);
+            return DistPartition {
+                local: out.local,
+                keys: out.keys,
+                top_secs: sw.secs(),
+                migrate_secs: out.migrate_secs,
+                local_secs: out.local_secs,
+                owned_leaves: 1,
+                median_rounds: 0,
+                median_splits: 0,
+            };
+        }
+
+        let keys = morton_keys(shard, &domain);
+        let mut order: Vec<u32> = (0..shard.len() as u32).collect();
+        order.sort_by_key(|&i| (keys[i as usize], shard.ids[i as usize], i));
+
+        // Deterministic global seeding from allgathered SFC-order
+        // samples: every rank contributes up to 4k evenly spaced local
+        // points, all ranks merge the identical sample list and take k
+        // evenly spaced seeds from it.
+        let s_local = shard.len().min(4 * k.max(1));
+        let mut sample_buf = Vec::with_capacity(s_local * (24 + dim * 8));
+        for &pos in &seed_positions(shard.len(), s_local) {
+            let i = order[pos] as usize;
+            sample_buf.extend_from_slice(&keys[i].to_le_bytes());
+            sample_buf.extend_from_slice(&shard.ids[i].to_le_bytes());
+            for d in 0..dim {
+                sample_buf.extend_from_slice(&shard.coord(i, d).to_le_bytes());
+            }
+        }
+        let gathered = ctx.allgather_bytes(sample_buf);
+        let rec = 16 + 8 + dim * 8;
+        let mut samples: Vec<(u128, u64, Vec<f64>)> = Vec::new();
+        for buf in &gathered {
+            assert_eq!(buf.len() % rec, 0, "ragged seed-sample record");
+            for r in buf.chunks_exact(rec) {
+                let key = u128::from_le_bytes(r[0..16].try_into().unwrap());
+                let id = u64::from_le_bytes(r[16..24].try_into().unwrap());
+                let q: Vec<f64> = (0..dim)
+                    .map(|d| {
+                        f64::from_le_bytes(r[24 + d * 8..24 + (d + 1) * 8].try_into().unwrap())
+                    })
+                    .collect();
+                samples.push((key, id, q));
+            }
+        }
+        samples.sort_by_key(|&(key, id, _)| (key, id));
+        let mut centroids = vec![0.0f64; k * dim];
+        for (j, &pos) in seed_positions(samples.len(), k).iter().enumerate() {
+            centroids[j * dim..(j + 1) * dim].copy_from_slice(&samples[pos].2);
+        }
+
+        // Lloyd + influence; ONE fused allreduce per iteration.
+        let (assign, _) = self.lloyd_loop(shard, k, dim, centroids, threads, |pass| {
+            let mut u64_lanes = pass.counts.clone();
+            u64_lanes.push(pass.changed);
+            let mut f64_lanes = pass.wsums.clone();
+            f64_lanes.extend_from_slice(&pass.csums);
+            let out = ctx.allreduce_multi(&[
+                Section::U64(ReduceOp::Sum, &u64_lanes),
+                Section::F64(ReduceOp::Sum, &f64_lanes),
+            ]);
+            let u = out[0].u64();
+            let f = out[1].f64();
+            (u[..k].to_vec(), f[..k].to_vec(), f[k..].to_vec(), u[k])
+        });
+        let top_secs = sw.secs();
+
+        // Cluster j lives on rank j.
+        let out = migrate_delta::migrate_and_order(ctx, shard, &assign, cfg, threads);
+        DistPartition {
+            local: out.local,
+            keys: out.keys,
+            top_secs,
+            migrate_secs: out.migrate_secs,
+            local_secs: out.local_secs,
+            owned_leaves: 1,
+            median_rounds: 0,
+            median_splits: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime_sim::{run_ranks, run_ranks_threaded, CostModel};
+
+    #[test]
+    fn kmeans_balances_uniform_within_tol() {
+        let ps = PointSet::uniform(4000, 2, 11);
+        let cfg = PartitionConfig { parts: 8, ..Default::default() };
+        let km = BalancedKMeans::default();
+        let plan = km.partition(&ps, &cfg);
+        let mut sorted = plan.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..4000).collect::<Vec<u32>>());
+        assert!(plan.imbalance() <= km.tol + 1e-9, "imbalance {}", plan.imbalance());
+    }
+
+    #[test]
+    fn kmeans_balances_clustered_within_tol() {
+        let ps = PointSet::clustered(4000, 3, 0.7, 23);
+        let cfg = PartitionConfig { parts: 6, ..Default::default() };
+        let km = BalancedKMeans::default();
+        let plan = km.partition(&ps, &cfg);
+        assert!(plan.imbalance() <= km.tol + 1e-9, "imbalance {}", plan.imbalance());
+    }
+
+    #[test]
+    fn kmeans_is_thread_invariant() {
+        let ps = PointSet::clustered(20_000, 3, 0.5, 7);
+        let run = |threads: usize| {
+            let cfg = PartitionConfig { parts: 8, threads, ..Default::default() };
+            BalancedKMeans::default().partition(&ps, &cfg)
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let plan = run(threads);
+            assert_eq!(plan.part_of, base.part_of, "diverged at {threads} threads");
+            assert_eq!(plan.perm, base.perm);
+            assert_eq!(plan.loads, base.loads);
+        }
+    }
+
+    #[test]
+    fn kmeans_survives_duplicate_heavy_input() {
+        let mut ps = PointSet::new(2);
+        for i in 0..800u64 {
+            if i < 600 {
+                ps.push(&[0.5, 0.5], i, 1.0);
+            } else {
+                ps.push(&[(i % 10) as f64 / 10.0, 0.1], i, 1.0);
+            }
+        }
+        let cfg = PartitionConfig { parts: 4, ..Default::default() };
+        let plan = BalancedKMeans::default().partition(&ps, &cfg);
+        assert_eq!(plan.part_of.len(), 800);
+        assert!(plan.part_of.iter().all(|&p| p < 4));
+    }
+
+    #[test]
+    fn distributed_kmeans_conserves_and_balances() {
+        let global = PointSet::uniform(3000, 3, 57);
+        let p = 4;
+        let km = BalancedKMeans::default();
+        let (outs, _) = run_ranks(p, CostModel::default(), |ctx| {
+            let local = global.mod_shard(ctx.rank, p);
+            let dp = km.partition_dist(ctx, &local, &PartitionConfig::default(), 0);
+            (dp.local.ids.clone(), dp.local.total_weight())
+        });
+        let mut all: Vec<u64> = outs.iter().flat_map(|(ids, _)| ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..3000).collect::<Vec<u64>>());
+        let mean = outs.iter().map(|(_, w)| w).sum::<f64>() / p as f64;
+        let max = outs.iter().map(|(_, w)| *w).fold(f64::NEG_INFINITY, f64::max);
+        assert!(max / mean - 1.0 <= km.tol + 1e-9, "imbalance {}", max / mean - 1.0);
+    }
+
+    #[test]
+    fn distributed_kmeans_is_threads_per_rank_invariant() {
+        let global = PointSet::clustered(8000, 3, 0.6, 19);
+        let p = 4;
+        let run = |tpr: usize| {
+            run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+                let local = global.mod_shard(ctx.rank, p);
+                let dp = BalancedKMeans::default().partition_dist(
+                    ctx,
+                    &local,
+                    &PartitionConfig::default(),
+                    0,
+                );
+                (dp.local.ids.clone(), dp.keys.clone())
+            })
+            .0
+        };
+        let base = run(1);
+        for tpr in [2usize, 4] {
+            assert_eq!(run(tpr), base, "diverged at {tpr} threads/rank");
+        }
+    }
+}

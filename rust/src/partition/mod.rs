@@ -2,12 +2,19 @@
 //! SFC line, the full partitioning pipeline (Algorithm 2), incremental
 //! rebalancing, the amortized credit controller (Algorithm 3), the
 //! persistent distributed session with drift-triggered repartitioning,
-//! scripted dynamic-load scenarios, and partition-quality metrics.
+//! scripted dynamic-load scenarios, pluggable partitioner backends
+//! (SFC+knapsack, balanced k-means, rectilinear yardstick), and the
+//! partition-quality metrics that bake them off.
 
 pub mod amortized;
+pub mod backend;
 pub mod distributed;
 pub mod incremental;
+pub mod kmeans;
 pub mod knapsack;
 pub mod partitioner;
 pub mod quality;
 pub mod scenario;
+
+pub use backend::{make_backend, BackendKind, PartitionBackend, RectilinearGrid, SfcKnapsack};
+pub use kmeans::BalancedKMeans;

@@ -95,6 +95,70 @@ pub fn edge_cut_metrics(
     (total, max_cut, max_deg)
 }
 
+/// Deterministic k-nearest-neighbor edges over an evenly spaced sample
+/// of the points — the bakeoff's proxy adjacency when no mesh/graph is
+/// attached. Sample indices are `(j·n)/s` (no RNG), neighbors are found
+/// brute-force within the sample, and ties break by `(dist², index)`,
+/// so the edge list is a pure function of the point set. Edges are
+/// returned once (`a < b` after dedup) with **global** point indices,
+/// ready for [`edge_cut_metrics`].
+pub fn sampled_neighbor_edges(ps: &PointSet, sample: usize, neighbors: usize) -> Vec<(u32, u32)> {
+    let n = ps.len();
+    let s = sample.min(n);
+    if s < 2 || neighbors == 0 {
+        return Vec::new();
+    }
+    let idx: Vec<u32> = (0..s).map(|j| ((j * n) / s) as u32).collect();
+    let mut edges = Vec::with_capacity(s * neighbors);
+    for (a, &ia) in idx.iter().enumerate() {
+        // (dist², sample position) for every other sample, k smallest.
+        let mut cand: Vec<(f64, u32)> = idx
+            .iter()
+            .enumerate()
+            .filter(|&(b, _)| b != a)
+            .map(|(b, &ib)| (ps.dist2(ia as usize, ib as usize), b as u32))
+            .collect();
+        cand.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        for &(_, b) in cand.iter().take(neighbors) {
+            let ib = idx[b as usize];
+            edges.push((ia.min(ib), ia.max(ib)));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+/// One backend/scenario cell of the bakeoff: the quality metrics that
+/// do not depend on how the partition was produced.
+#[derive(Clone, Debug, Default)]
+pub struct QualitySummary {
+    /// max/mean − 1 over part loads.
+    pub imbalance: f64,
+    /// Mean surface-to-volume over non-empty parts.
+    pub sv_mean: f64,
+    pub sv_max: f64,
+    /// Cut edges / total edges of the sampled neighbor graph.
+    pub cut_frac: f64,
+}
+
+/// Evaluate a partition against the point set: load balance from
+/// `loads`, geometric quality from part bounding boxes, edge cut on
+/// the given (e.g. [`sampled_neighbor_edges`]) adjacency.
+pub fn quality_summary(
+    ps: &PointSet,
+    part_of: &[u32],
+    loads: &[f64],
+    parts: usize,
+    edges: &[(u32, u32)],
+) -> QualitySummary {
+    let ls = load_summary(loads);
+    let (sv_mean, sv_max) = surface_volume_summary(&surface_to_volume(ps, part_of, parts));
+    let (cut, _, _) = edge_cut_metrics(edges, part_of, parts);
+    let cut_frac = if edges.is_empty() { 0.0 } else { cut as f64 / edges.len() as f64 };
+    QualitySummary { imbalance: ls.imbalance, sv_mean, sv_max, cut_frac }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +211,41 @@ mod tests {
         assert_eq!(total, 1);
         assert_eq!(max_cut, 1);
         assert_eq!(max_deg, 1);
+    }
+
+    #[test]
+    fn sampled_edges_are_deterministic_and_local() {
+        let ps = PointSet::uniform(2000, 2, 8);
+        let e1 = sampled_neighbor_edges(&ps, 256, 4);
+        let e2 = sampled_neighbor_edges(&ps, 256, 4);
+        assert_eq!(e1, e2);
+        assert!(!e1.is_empty());
+        // Dedup holds and endpoints are ordered.
+        assert!(e1.windows(2).all(|w| w[0] < w[1]));
+        assert!(e1.iter().all(|&(a, b)| a < b));
+        // Neighbor edges are short relative to the domain on average.
+        let avg: f64 = e1.iter().map(|&(a, b)| ps.dist2(a as usize, b as usize)).sum::<f64>()
+            / e1.len() as f64;
+        assert!(avg < 0.05, "avg sampled-neighbor dist² {avg}");
+    }
+
+    #[test]
+    fn quality_summary_prefers_compact_partition() {
+        // Same 16x16 grid as above: squares beat slabs on cut and S/V.
+        let ps = crate::geom::dist::regular_mesh(16, 2);
+        let squares: Vec<u32> = (0..256)
+            .map(|i| {
+                let (x, y) = (ps.coord(i, 0), ps.coord(i, 1));
+                ((x >= 0.5) as u32) * 2 + ((y >= 0.5) as u32)
+            })
+            .collect();
+        let slabs: Vec<u32> = (0..256).map(|i| (ps.coord(i, 0) * 4.0) as u32).collect();
+        let edges = sampled_neighbor_edges(&ps, 256, 4);
+        let loads = vec![64.0; 4];
+        let sq = quality_summary(&ps, &squares, &loads, 4, &edges);
+        let sl = quality_summary(&ps, &slabs, &loads, 4, &edges);
+        assert!(sq.cut_frac <= sl.cut_frac, "squares {} !<= slabs {}", sq.cut_frac, sl.cut_frac);
+        assert!(sq.sv_mean < sl.sv_mean);
+        assert_eq!(sq.imbalance, 0.0);
     }
 }

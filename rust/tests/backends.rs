@@ -1,0 +1,170 @@
+//! Backend-conformance suite: every [`PartitionBackend`] must satisfy
+//! the same contract — each id assigned exactly once, parts in bounds,
+//! loads consistent with the weights, and bit-identical output for any
+//! thread count — and the `SfcKnapsack` backend must be bit-identical
+//! to the pre-trait entry points it wraps.
+
+use sfc_part::geom::point::PointSet;
+use sfc_part::partition::distributed::distributed_partition;
+use sfc_part::partition::knapsack::part_loads;
+use sfc_part::partition::partitioner::{PartitionConfig, Partitioner};
+use sfc_part::partition::{make_backend, BackendKind};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+
+/// Rank counts to sweep: `SFC_TEST_RANKS=2` (or a comma list) narrows
+/// the sweep — CI uses it to run the distributed suite at 2 and 8
+/// simulated ranks.
+fn rank_sweep() -> Vec<usize> {
+    match std::env::var("SFC_TEST_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SFC_TEST_RANKS wants integers"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// The three input shapes every backend must survive: smooth, skewed,
+/// and duplicate-heavy (zero-extent clusters), all with mixed weights.
+fn datasets() -> Vec<(&'static str, PointSet)> {
+    let mut dup = PointSet::new(2);
+    for i in 0..600u64 {
+        let w = 1.0 + (i % 7) as f32 * 0.5;
+        if i < 450 {
+            dup.push(&[0.3, 0.7], i, w);
+        } else {
+            let t = (i - 450) as f64 / 150.0;
+            dup.push(&[0.8 * t + 0.1, 0.2 + 0.6 * t], i, w);
+        }
+    }
+    vec![
+        ("uniform", PointSet::uniform_weighted(900, 3, 4.0, 11)),
+        ("clustered", PointSet::clustered(900, 2, 0.7, 23)),
+        ("duplicate-heavy", dup),
+    ]
+}
+
+const BACKENDS: [BackendKind; 3] =
+    [BackendKind::Sfc, BackendKind::KMeans, BackendKind::Rectilinear];
+
+/// Shared-memory contract: `partition` yields a valid permutation,
+/// in-bounds parts, loads that equal the per-part weight sums, and the
+/// same bits for 1 and 4 threads.
+#[test]
+fn backend_partition_conformance() {
+    for (dname, ps) in datasets() {
+        for kind in BACKENDS {
+            let backend = make_backend(kind);
+            for &parts in &rank_sweep() {
+                let run = |threads: usize| {
+                    let cfg = PartitionConfig { parts, threads, ..Default::default() };
+                    backend.partition(&ps, &cfg)
+                };
+                let plan = run(1);
+                let tag = format!("{dname}/{}/p={parts}", kind.name());
+                // perm is a permutation of 0..n, consistent with ids_in_order.
+                let mut sorted = plan.perm.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..ps.len() as u32).collect::<Vec<u32>>(), "{tag}: perm");
+                assert_eq!(plan.ids_in_order.len(), ps.len(), "{tag}: ids_in_order");
+                for (j, &pi) in plan.perm.iter().enumerate() {
+                    assert_eq!(plan.ids_in_order[j], ps.ids[pi as usize], "{tag}: id order");
+                }
+                // Parts in bounds, loads = exact per-part weight sums.
+                assert_eq!(plan.part_of.len(), ps.len(), "{tag}: part_of len");
+                assert!(plan.part_of.iter().all(|&q| (q as usize) < parts), "{tag}: bounds");
+                assert_eq!(plan.loads, part_loads(&plan.part_of, &ps.weights, parts), "{tag}: loads");
+                // Thread invariance is bitwise.
+                let plan4 = run(4);
+                assert_eq!(plan.perm, plan4.perm, "{tag}: perm diverged at 4 threads");
+                assert_eq!(plan.part_of, plan4.part_of, "{tag}: part_of diverged");
+                assert_eq!(plan.loads, plan4.loads, "{tag}: loads diverged");
+            }
+        }
+    }
+}
+
+/// Distributed contract: `partition_dist` conserves the id multiset,
+/// conserves total weight across ranks, and is bit-identical for 1 and
+/// 2 threads per rank.
+#[test]
+fn backend_partition_dist_conformance() {
+    for (dname, ps) in datasets() {
+        let total_w: f64 = ps.weights.iter().map(|&w| w as f64).sum();
+        for kind in BACKENDS {
+            for &p in &rank_sweep() {
+                let backend = make_backend(kind);
+                let backend = &*backend;
+                let run = |tpr: usize| {
+                    run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+                        let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+                        let cfg = PartitionConfig::default();
+                        let dp = backend.partition_dist(ctx, &local, &cfg, 4 * p);
+                        let load: f64 =
+                            dp.local.weights.iter().map(|&w| w as f64).sum();
+                        (dp.local.ids.clone(), dp.keys.clone(), load)
+                    })
+                    .0
+                };
+                let outs = run(1);
+                let tag = format!("{dname}/{}/p={p}", kind.name());
+                // Conservation: every id lands on exactly one rank.
+                let mut all: Vec<u64> =
+                    outs.iter().flat_map(|(ids, _, _)| ids.iter().copied()).collect();
+                all.sort_unstable();
+                assert_eq!(all, ps.ids.iter().copied().collect::<Vec<u64>>(), "{tag}: ids");
+                // Keys travel with the points.
+                for (ids, keys, _) in &outs {
+                    assert_eq!(ids.len(), keys.len(), "{tag}: keys len");
+                }
+                // Weight conservation across the migration.
+                let sum: f64 = outs.iter().map(|(_, _, l)| *l).sum();
+                assert!(
+                    (sum - total_w).abs() <= 1e-6 * total_w.max(1.0),
+                    "{tag}: weight {sum} != {total_w}"
+                );
+                // Threads-per-rank invariance is bitwise.
+                assert_eq!(outs, run(2), "{tag}: output diverged at 2 threads/rank");
+            }
+        }
+    }
+}
+
+/// The refactor's non-negotiable: `SfcKnapsack` behind the trait is
+/// bit-identical to calling `Partitioner` / `distributed_partition`
+/// directly, so moving callers onto the trait changed nothing.
+#[test]
+fn sfc_backend_is_bit_identical_to_direct_pipeline() {
+    let backend = make_backend(BackendKind::Sfc);
+    for (dname, ps) in datasets() {
+        for &parts in &rank_sweep() {
+            let cfg = PartitionConfig { parts, ..Default::default() };
+            let via_trait = backend.partition(&ps, &cfg);
+            let direct = Partitioner::new(cfg.clone()).partition(&ps);
+            assert_eq!(via_trait.perm, direct.perm, "{dname}/p={parts}: perm");
+            assert_eq!(via_trait.part_of, direct.part_of, "{dname}/p={parts}: part_of");
+            assert_eq!(via_trait.loads, direct.loads, "{dname}/p={parts}: loads");
+            assert_eq!(via_trait.ids_in_order, direct.ids_in_order, "{dname}/p={parts}: ids");
+        }
+    }
+    let ps = PointSet::clustered(1200, 3, 0.5, 39);
+    for &p in &rank_sweep() {
+        let backend = &*backend;
+        let both = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+            let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+            let cfg = PartitionConfig::default();
+            let via = backend.partition_dist(ctx, &local, &cfg, 4 * p);
+            let direct = distributed_partition(ctx, &local, &cfg, 4 * p);
+            (
+                via.local.ids == direct.local.ids
+                    && via.keys == direct.keys
+                    && via.owned_leaves == direct.owned_leaves,
+                via.local.len(),
+            )
+        })
+        .0;
+        assert!(both.iter().all(|(same, _)| *same), "p={p}: trait != direct distributed");
+        let n: usize = both.iter().map(|(_, n)| *n).sum();
+        assert_eq!(n, ps.len(), "p={p}: points lost");
+    }
+}

@@ -17,12 +17,10 @@
 //! `SFC_TEST_RANKS` narrows the rank sweep; CI partitions it exactly as
 //! it does for the `properties` suite.
 
-use std::sync::Mutex;
-
 use sfc_part::geom::point::PointSet;
 use sfc_part::kdtree::splitter::{SplitterConfig, SplitterKind};
 use sfc_part::partition::distributed::{
-    distributed_partition, rebuild_step, DistSession, SessionConfig,
+    distributed_partition, rebuild_step, step_ranks, DistSession, SessionConfig,
 };
 use sfc_part::partition::partitioner::PartitionConfig;
 use sfc_part::partition::scenario::{Scenario, ScenarioKind};
@@ -60,18 +58,16 @@ fn run_session(
     let mut sessions = created;
     let mut out: Vec<Vec<Snap>> = Vec::with_capacity(steps);
     for step in 0..steps {
-        let slots: Vec<Mutex<Option<DistSession>>> =
-            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
-        let (outs, _) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
-            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
-            let batch = scenario.update_for(sess.local(), step);
-            sess.repartition(ctx, &batch);
-            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
-            let snap: Snap = (sess.local().ids.clone(), sess.keys().to_vec(), load);
-            (sess, snap)
-        });
-        out.push(outs.iter().map(|(_, s)| s.clone()).collect());
-        sessions = outs.into_iter().map(|(s, _)| s).collect();
+        let (next, snaps, _) =
+            step_ranks(p, tpr, CostModel::default(), sessions, |ctx, mut sess| {
+                let batch = scenario.update_for(sess.local(), step);
+                sess.repartition(ctx, &batch);
+                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                let snap: Snap = (sess.local().ids.clone(), sess.keys().to_vec(), load);
+                (sess, snap)
+            });
+        sessions = next;
+        out.push(snaps);
     }
     out
 }
@@ -221,22 +217,20 @@ fn prop_session_hotspot_cheaper_than_rebuild() {
     let mut sess_total = 0u64;
     let mut sess_final_imb = 0.0f64;
     for step in 0..steps {
-        let slots: Vec<Mutex<Option<DistSession>>> =
-            sessions.into_iter().map(|s| Mutex::new(Some(s))).collect();
         let scen = &scenario;
-        let (outs, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
-            let mut sess = slots[ctx.rank].lock().unwrap().take().unwrap();
-            let batch = scen.update_for(sess.local(), step);
-            let stats = sess.repartition(ctx, &batch);
-            let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
-            (sess, stats, load)
-        });
-        sess_rounds += outs.first().map(|(_, s, _)| s.collective_rounds).unwrap_or(0);
-        sess_migrated += outs.iter().map(|(_, s, _)| s.migrated_out).sum::<u64>();
-        sess_total += outs.iter().map(|(_, s, _)| s.local_points).sum::<u64>();
-        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
+        let (next, outs, _) =
+            step_ranks(p, 1, CostModel::default(), sessions, |ctx, mut sess| {
+                let batch = scen.update_for(sess.local(), step);
+                let stats = sess.repartition(ctx, &batch);
+                let load: f64 = sess.local().weights.iter().map(|&w| w as f64).sum();
+                (sess, (stats, load))
+            });
+        sessions = next;
+        sess_rounds += outs.first().map(|(s, _)| s.collective_rounds).unwrap_or(0);
+        sess_migrated += outs.iter().map(|(s, _)| s.migrated_out).sum::<u64>();
+        sess_total += outs.iter().map(|(s, _)| s.local_points).sum::<u64>();
+        let loads: Vec<f64> = outs.iter().map(|(_, l)| *l).collect();
         sess_final_imb = imbalance(&loads);
-        sessions = outs.into_iter().map(|(s, _, _)| s).collect();
     }
 
     // Rebuild lane on the same evolution.
@@ -245,22 +239,19 @@ fn prop_session_hotspot_cheaper_than_rebuild() {
     let mut base_migrated = 0u64;
     let mut base_final_imb = 0.0f64;
     for step in 0..steps {
-        let slots: Vec<Mutex<Option<PointSet>>> =
-            locals.into_iter().map(|l| Mutex::new(Some(l))).collect();
         let scen = &scenario;
         let cfgb = &cfg;
-        let (outs, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
-            let local = slots[ctx.rank].lock().unwrap().take().unwrap();
+        let (next, outs, _) = step_ranks(p, 1, CostModel::default(), locals, |ctx, local| {
             let batch = scen.update_for(&local, step);
             let (shard, rounds, migrated) = rebuild_step(ctx, local, &batch, cfgb, 4 * p);
             let load: f64 = shard.weights.iter().map(|&w| w as f64).sum();
-            (shard, rounds, migrated, load)
+            (shard, (rounds, migrated, load))
         });
-        base_rounds += outs.first().map(|(_, r, _, _)| *r).unwrap_or(0);
-        base_migrated += outs.iter().map(|(_, _, m, _)| *m).sum::<u64>();
-        let loads: Vec<f64> = outs.iter().map(|(_, _, _, l)| *l).collect();
+        locals = next;
+        base_rounds += outs.first().map(|(r, _, _)| *r).unwrap_or(0);
+        base_migrated += outs.iter().map(|(_, m, _)| *m).sum::<u64>();
+        let loads: Vec<f64> = outs.iter().map(|(_, _, l)| *l).collect();
         base_final_imb = imbalance(&loads);
-        locals = outs.into_iter().map(|(l, _, _, _)| l).collect();
     }
 
     // Acceptance direction: rounds strictly under half the rebuild cost.
