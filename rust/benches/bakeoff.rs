@@ -28,7 +28,7 @@ use sfc_part::partition::kmeans::BalancedKMeans;
 use sfc_part::partition::partitioner::PartitionConfig;
 use sfc_part::partition::quality::{quality_summary, sampled_neighbor_edges};
 use sfc_part::partition::scenario::{Scenario, ScenarioKind};
-use sfc_part::partition::{make_backend, BackendKind};
+use sfc_part::partition::{make_backend_with, BackendKind};
 use sfc_part::runtime_sim::CostModel;
 
 /// One (scenario, backend) cell: wire + migration totals over the
@@ -72,6 +72,7 @@ fn assemble(locals: &[PointSet]) -> (PointSet, Vec<u32>, Vec<f64>) {
 #[allow(clippy::too_many_arguments)]
 fn run_cell(
     kind: BackendKind,
+    km: BalancedKMeans,
     scen: Option<&Scenario>,
     mut locals: Vec<PointSet>,
     cfg: &PartitionConfig,
@@ -81,7 +82,7 @@ fn run_cell(
     measured: usize,
     first_step: usize,
 ) -> Cell {
-    let backend = make_backend(kind);
+    let backend = make_backend_with(kind, km);
     let backend = &*backend;
     let mut cell =
         Cell { rounds: 0, bytes: 0, migrated: 0, total: 0, locals: Vec::new(), steps: 0 };
@@ -124,6 +125,11 @@ fn main() {
     let tol = args.f64("imb-tol", BalancedKMeans::default().tol);
     let sample = args.usize("edge-sample", 512);
     let cfg = PartitionConfig::default();
+    let mut km = BalancedKMeans { tol, ..BalancedKMeans::default() };
+    km.max_iters = args.usize("km-max-iters", km.max_iters);
+    km.balance_iters = args.usize("km-balance-iters", km.balance_iters);
+    km.beta = args.f64("km-beta", km.beta);
+    km.tol = args.f64("km-tol", km.tol);
 
     let backends = [BackendKind::Sfc, BackendKind::KMeans, BackendKind::Rectilinear];
     // (name, base distribution, scenario kind or None for one-shot)
@@ -150,14 +156,14 @@ fn main() {
         for kind in backends {
             let shards: Vec<PointSet> = (0..p).map(|r| base.mod_shard(r, p)).collect();
             let cell = match skind {
-                None => run_cell(kind, None, shards, &cfg, p, tpr, k1, 1, 0),
+                None => run_cell(kind, km, None, shards, &cfg, p, tpr, k1, 1, 0),
                 Some(k) => {
                     let scen = Scenario::new(k);
                     // Unmeasured initial build (step 0 state), then the
                     // measured evolution.
                     let built =
-                        run_cell(kind, None, shards, &cfg, p, tpr, k1, 1, 0).locals;
-                    run_cell(kind, Some(&scen), built, &cfg, p, tpr, k1, steps, 1)
+                        run_cell(kind, km, None, shards, &cfg, p, tpr, k1, 1, 0).locals;
+                    run_cell(kind, km, Some(&scen), built, &cfg, p, tpr, k1, steps, 1)
                 }
             };
             let (global, part_of, loads) = assemble(&cell.locals);

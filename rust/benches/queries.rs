@@ -17,6 +17,7 @@ use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
 use sfc_part::query::knn::{knn_exact, knn_sfc, recall};
 use sfc_part::query::point_location::{BucketIndex, TreeLocator};
 use sfc_part::query::router::{Query, QueryRouter};
+use sfc_part::sfc::kernel::morton_keys_batch;
 use sfc_part::sfc::traverse::assign_sfc;
 use sfc_part::sfc::Curve;
 use sfc_part::util::rng::{Rng, SplitMix64};
@@ -43,14 +44,29 @@ fn main() {
     // ---- Fig 12: exact point location ----
     let mut t = Table::new(
         "fig12 exact point location",
-        &["points", "threads", "path", "queries", "total", "qps"],
+        &["points", "threads", "path", "queries", "keygen", "total", "qps"],
     );
     for &n in &sizes {
         let ps = PointSet::uniform(n, 3, 42);
         let (tree, idx) = build_index(&ps, *threads.last().unwrap());
         let mut rng = SplitMix64::new(5);
         let probes: Vec<u32> = (0..nq).map(|_| rng.below(n as u64) as u32).collect();
+        // Flat probe coordinates for the key-compute column: how much of
+        // each row's total goes to the batched SFC key kernel alone.
+        let mut probe_coords = Vec::with_capacity(3 * probes.len());
+        for &pi in &probes {
+            probe_coords.extend_from_slice(ps.point(pi as usize));
+        }
         for &th in &threads {
+            let sw = Stopwatch::start();
+            std::hint::black_box(morton_keys_batch(
+                &probe_coords,
+                3,
+                &BoundingBox::unit(3),
+                idx.depth,
+                th,
+            ));
+            let key_secs = sw.secs();
             // Fast path through the router (presort + bin + parallel).
             let sw = Stopwatch::start();
             let mut router = QueryRouter::new(&ps, &idx, th);
@@ -65,6 +81,7 @@ fn main() {
                 th.to_string(),
                 "bucket-binsearch".into(),
                 nq.to_string(),
+                fmt_secs(key_secs),
                 fmt_secs(secs),
                 format!("{:.0}", nq as f64 / secs),
             ]);
@@ -81,6 +98,7 @@ fn main() {
             "1".into(),
             "tree-descent".into(),
             nq.to_string(),
+            "-".into(),
             fmt_secs(secs),
             format!("{:.0}", nq as f64 / secs),
         ]);

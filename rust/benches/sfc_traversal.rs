@@ -10,16 +10,106 @@
 //! Reported times include tree building + traversal, as in the paper
 //! ("All measurements reported in this section are the total times which
 //! includes both tree building and Hilbert-like SFC traversals").
+//!
+//! The kernel table (always printed; `--keys-only` skips the figures)
+//! bakes off raw key throughput: scalar cycling vs scalar quantized vs
+//! the pool-parallel SWAR batch, asserting bit-identical output along
+//! the way.
+
+use std::time::Instant;
 
 use sfc_part::bench_util::{fmt_secs, Table};
 use sfc_part::cli::{Args, Scale};
+use sfc_part::geom::bbox::BoundingBox;
 use sfc_part::geom::dist::regular_mesh;
 use sfc_part::geom::point::PointSet;
 use sfc_part::kdtree::builder::KdTreeBuilder;
 use sfc_part::partition::partitioner::PartitionConfig;
 use sfc_part::runtime_sim::{run_ranks, CostModel};
+use sfc_part::sfc::kernel::{morton_key_quantized, morton_keys_batch};
+use sfc_part::sfc::morton::{bits_per_dim, morton_key_cycling};
 use sfc_part::sfc::traverse::assign_sfc_parallel;
 use sfc_part::sfc::Curve;
+
+/// Keys/sec bakeoff for the batched SFC key layer: scalar cycling (the
+/// interval-halving oracle) vs scalar quantized (the kernel's reference
+/// semantics) vs the pool-parallel SWAR batch, on the unit cube at full
+/// interleave depth. Every batch run is checked bit-for-bit against the
+/// single-thread batch, and the scalar-quantized pass against the same
+/// reference, so the table doubles as a determinism test.
+fn kernel_rows(args: &Args, scale: Scale, threads: &[usize], reps: usize) {
+    let n = args.usize("kernel-points", scale.pick(1_000_000, 10_000_000));
+    let dims = args.usize_list("kernel-dims", &[2, 3, 5]);
+    let reps = reps.max(1);
+    let mut t = Table::new(
+        "SFC key kernels: keys/sec on the unit cube at full depth",
+        &["dim", "points", "kernel", "threads", "time", "Mkeys/s"],
+    );
+    let mut speedup_3d = None;
+    for &d in &dims {
+        let depth = (d as u32 * bits_per_dim(d)) as u16;
+        let ps = PointSet::uniform(n, d, 7);
+        let domain = BoundingBox::unit(d);
+        let reference = morton_keys_batch(&ps.coords, d, &domain, depth, 1);
+
+        let mut cyc = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let keys: Vec<u128> = ps
+                .coords
+                .chunks_exact(d)
+                .map(|q| morton_key_cycling(q, &domain, depth))
+                .collect();
+            cyc = cyc.min(t0.elapsed().as_secs_f64());
+            assert_eq!(keys.len(), n);
+        }
+
+        let mut quant = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let keys: Vec<u128> = ps
+                .coords
+                .chunks_exact(d)
+                .map(|q| morton_key_quantized(q, &domain, depth))
+                .collect();
+            quant = quant.min(t0.elapsed().as_secs_f64());
+            assert!(keys == reference, "scalar quantized must match the batch kernel");
+        }
+
+        let mut row = |kernel: &str, th: usize, secs: f64| {
+            t.row(vec![
+                d.to_string(),
+                n.to_string(),
+                kernel.into(),
+                th.to_string(),
+                fmt_secs(secs),
+                format!("{:.1}", n as f64 / secs / 1e6),
+            ]);
+        };
+        row("scalar-cycling", 1, cyc);
+        row("scalar-quantized", 1, quant);
+        for &th in threads {
+            let mut swar = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let keys = morton_keys_batch(&ps.coords, d, &domain, depth, th);
+                swar = swar.min(t0.elapsed().as_secs_f64());
+                assert!(keys == reference, "batch kernel must be thread-invariant");
+            }
+            row("batched-swar", th, swar);
+            if d == 3 && th == 1 {
+                speedup_3d = Some(cyc / swar);
+            }
+        }
+    }
+    t.print();
+    if let Some(s) = speedup_3d {
+        println!(
+            "\nbatched SWAR vs scalar cycling, 3-D single thread: {s:.1}x — {} (target ≥5x)",
+            if s >= 5.0 { "PASS" } else { "FAIL" }
+        );
+    }
+}
 
 fn traversal_rows(table: &mut Table, fig: &str, name: &str, ps: &PointSet, threads: &[usize], reps: usize) {
     for &th in threads {
@@ -56,6 +146,12 @@ fn main() {
     let scale = Scale::detect(&args);
     let threads = args.usize_list("threads", &[1, 2, 4, 8]);
     let reps = args.usize("reps", scale.pick(3, 1));
+
+    kernel_rows(&args, scale, &threads, reps);
+    if args.flag("keys-only") {
+        return;
+    }
+
     let cols = ["fig", "workload", "points", "threads", "curve", "build", "traverse", "total", "sim_span"];
 
     // Fig 8: regular mesh + random points.

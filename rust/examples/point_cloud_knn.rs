@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
             // query's window is truncated.
             let mut sorted_queries = queries.clone();
             sorted_queries.sort_by_key(|q| {
-                sfc_part::sfc::morton::morton_key_cycling(q, &BoundingBox::unit(3), 30)
+                sfc_part::sfc::kernel::morton_key_quantized(q, &BoundingBox::unit(3), 30)
             });
             let mut batches: Vec<(Vec<&Vec<f64>>, Vec<u32>)> = Vec::new();
             {

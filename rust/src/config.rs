@@ -255,18 +255,24 @@ pub fn dynamic_config(cfg: &ConfigFile) -> Result<DynamicConfig> {
     Ok(out)
 }
 
-/// Which partitioner backend to run (section `[backend]`, key `kind`):
-/// `"sfc"` (the paper's pipeline, default), `"kmeans"` (distributed
-/// balanced k-means), or `"rectilinear"` (the SGORP-style grid
-/// yardstick). The CLI `--backend` flag overrides the file value.
-pub fn backend_config(cfg: &ConfigFile) -> Result<crate::partition::backend::BackendKind> {
-    let mut out = crate::partition::backend::BackendKind::Sfc;
+/// Which partitioner backend to run and its knobs (section `[backend]`):
+/// key `kind` is `"sfc"` (the paper's pipeline, default), `"kmeans"`
+/// (distributed balanced k-means), or `"rectilinear"` (the SGORP-style
+/// grid yardstick); `kmeans_max_iters` / `kmeans_balance_iters` /
+/// `kmeans_beta` / `kmeans_tol` tune the Lloyd + influence loop. The
+/// CLI `--backend` and `--km-*` flags override file values.
+pub fn backend_config(cfg: &ConfigFile) -> Result<crate::partition::backend::BackendConfig> {
+    let mut out = crate::partition::backend::BackendConfig::default();
     for (key, val) in &cfg.values {
         let Some(name) = key.strip_prefix("backend.") else { continue };
         match name {
             "kind" => {
-                out = val.as_str()?.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+                out.kind = val.as_str()?.parse().map_err(|e: String| anyhow::anyhow!(e))?;
             }
+            "kmeans_max_iters" => out.kmeans.max_iters = val.as_usize()?,
+            "kmeans_balance_iters" => out.kmeans.balance_iters = val.as_usize()?,
+            "kmeans_beta" => out.kmeans.beta = val.as_f64()?,
+            "kmeans_tol" => out.kmeans.tol = val.as_f64()?,
             other => bail!("unknown key backend.{other}"),
         }
     }
@@ -341,14 +347,36 @@ mod tests {
     fn backend_config_from_file() {
         use crate::partition::backend::BackendKind;
         let cfg = ConfigFile::parse("[backend]\nkind = \"kmeans\"\n").unwrap();
-        assert_eq!(backend_config(&cfg).unwrap(), BackendKind::KMeans);
+        assert_eq!(backend_config(&cfg).unwrap().kind, BackendKind::KMeans);
         // Absent section → default sfc.
         let cfg = ConfigFile::parse("[partition]\nparts = 4\n").unwrap();
-        assert_eq!(backend_config(&cfg).unwrap(), BackendKind::Sfc);
+        assert_eq!(backend_config(&cfg).unwrap().kind, BackendKind::Sfc);
         // Bad names and unknown keys are rejected.
         let bad = ConfigFile::parse("[backend]\nkind = \"voronoi\"\n").unwrap();
         assert!(backend_config(&bad).is_err());
         let bad = ConfigFile::parse("[backend]\nname = \"sfc\"\n").unwrap();
+        assert!(backend_config(&bad).is_err());
+    }
+
+    #[test]
+    fn backend_kmeans_knobs_from_file() {
+        use crate::partition::kmeans::BalancedKMeans;
+        let cfg = ConfigFile::parse(
+            "[backend]\nkind = \"kmeans\"\nkmeans_max_iters = 7\nkmeans_balance_iters = 11\nkmeans_beta = 0.25\nkmeans_tol = 0.05\n",
+        )
+        .unwrap();
+        let bc = backend_config(&cfg).unwrap();
+        assert_eq!(bc.kmeans.max_iters, 7);
+        assert_eq!(bc.kmeans.balance_iters, 11);
+        assert_eq!(bc.kmeans.beta, 0.25);
+        assert_eq!(bc.kmeans.tol, 0.05);
+        // Untouched knobs keep the compiled-in defaults.
+        let bc = backend_config(&ConfigFile::parse("[backend]\nkmeans_beta = 1.0\n").unwrap())
+            .unwrap();
+        assert_eq!(bc.kmeans.beta, 1.0);
+        assert_eq!(bc.kmeans.max_iters, BalancedKMeans::default().max_iters);
+        // Integer-typed knobs reject floats.
+        let bad = ConfigFile::parse("[backend]\nkmeans_max_iters = 1.5\n").unwrap();
         assert!(backend_config(&bad).is_err());
     }
 

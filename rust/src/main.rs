@@ -19,7 +19,7 @@ use sfc_part::cli::Args;
 use sfc_part::config::{curve_from_name, splitter_from_name, ConfigFile};
 use sfc_part::geom::point::PointSet;
 use sfc_part::partition::partitioner::PartitionConfig;
-use sfc_part::partition::{make_backend, BackendKind};
+use sfc_part::partition::BackendConfig;
 
 fn main() {
     let args = Args::parse();
@@ -59,6 +59,8 @@ fn print_help() {
          --dist uniform|clustered --seed S --config FILE\n\
          --backend sfc|kmeans|rectilinear (partition/distributed; default sfc,\n\
                    or `[backend] kind` from --config)\n\
+         --km-max-iters N --km-balance-iters N --km-beta F --km-tol F\n\
+                   (k-means convergence knobs; also `[backend] kmeans_*` config keys)\n\
          distributed-dynamic: --ranks P --steps N --scenario hotspot|wave|churn\n\
          --drift-lo F --drift-hi F --imb-tol F --amplitude F --speed F --churn-frac F\n\
          --adaptive=true (EMA drift controller widens the band under static load)\n\
@@ -94,17 +96,23 @@ fn partition_cfg(args: &Args) -> Result<PartitionConfig> {
 }
 
 /// Backend selection: `--backend` wins over the config file's
-/// `[backend] kind`, which defaults to the SFC+knapsack pipeline.
-fn backend_choice(args: &Args) -> Result<BackendKind> {
-    if let Some(b) = args.get("backend") {
-        return b.parse().map_err(|e: String| anyhow::anyhow!(e));
-    }
-    match args.get("config") {
+/// `[backend] kind` (default: the SFC+knapsack pipeline), and the
+/// `--km-*` flags override the file's k-means convergence knobs.
+fn backend_choice(args: &Args) -> Result<BackendConfig> {
+    let mut bc = match args.get("config") {
         Some(path) => {
-            sfc_part::config::backend_config(&ConfigFile::load(std::path::Path::new(path))?)
+            sfc_part::config::backend_config(&ConfigFile::load(std::path::Path::new(path))?)?
         }
-        None => Ok(BackendKind::Sfc),
+        None => BackendConfig::default(),
+    };
+    if let Some(b) = args.get("backend") {
+        bc.kind = b.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     }
+    bc.kmeans.max_iters = args.usize("km-max-iters", bc.kmeans.max_iters);
+    bc.kmeans.balance_iters = args.usize("km-balance-iters", bc.kmeans.balance_iters);
+    bc.kmeans.beta = args.f64("km-beta", bc.kmeans.beta);
+    bc.kmeans.tol = args.f64("km-tol", bc.kmeans.tol);
+    Ok(bc)
 }
 
 fn workload(args: &Args) -> PointSet {
@@ -119,7 +127,7 @@ fn workload(args: &Args) -> PointSet {
 
 fn cmd_partition(args: &Args) -> Result<()> {
     let cfg = partition_cfg(args)?;
-    let backend = make_backend(backend_choice(args)?);
+    let backend = backend_choice(args)?.build();
     let ps = workload(args);
     let plan = backend.partition(&ps, &cfg);
     println!(
@@ -147,7 +155,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 fn cmd_distributed(args: &Args) -> Result<()> {
     let cfg = partition_cfg(args)?;
-    let backend = make_backend(backend_choice(args)?);
+    let backend = backend_choice(args)?.build();
     let ps = workload(args);
     let ranks = args.usize("ranks", 4);
     let k1 = args.usize("k1", 4 * ranks);

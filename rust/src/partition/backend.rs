@@ -35,6 +35,7 @@ use std::str::FromStr;
 
 use crate::geom::point::PointSet;
 use crate::partition::distributed::{distributed_partition, migrate_delta, DistPartition};
+use crate::partition::kmeans::BalancedKMeans;
 use crate::partition::partitioner::{PartitionConfig, PartitionPlan, Partitioner};
 use crate::runtime_sim::rank::RankCtx;
 use crate::util::timer::Stopwatch;
@@ -278,11 +279,40 @@ impl BackendKind {
     }
 }
 
+/// A backend choice plus the per-backend tuning it carries — what the
+/// `[backend]` config section and the `--backend`/`--km-*` CLI flags
+/// resolve to. Only k-means has knobs today; the SFC and rectilinear
+/// backends ignore the `kmeans` field.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendConfig {
+    pub kind: BackendKind,
+    pub kmeans: BalancedKMeans,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig { kind: BackendKind::Sfc, kmeans: BalancedKMeans::default() }
+    }
+}
+
+impl BackendConfig {
+    /// Instantiate the configured backend.
+    pub fn build(&self) -> Box<dyn PartitionBackend> {
+        make_backend_with(self.kind, self.kmeans)
+    }
+}
+
 /// Instantiate a backend with its default knobs.
 pub fn make_backend(kind: BackendKind) -> Box<dyn PartitionBackend> {
+    make_backend_with(kind, BalancedKMeans::default())
+}
+
+/// Instantiate a backend with explicit k-means knobs (ignored by the
+/// SFC and rectilinear backends, which have none).
+pub fn make_backend_with(kind: BackendKind, kmeans: BalancedKMeans) -> Box<dyn PartitionBackend> {
     match kind {
         BackendKind::Sfc => Box::new(SfcKnapsack),
-        BackendKind::KMeans => Box::new(crate::partition::kmeans::BalancedKMeans::default()),
+        BackendKind::KMeans => Box::new(kmeans),
         BackendKind::Rectilinear => Box::new(RectilinearGrid),
     }
 }

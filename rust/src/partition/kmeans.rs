@@ -42,7 +42,8 @@ use crate::partition::partitioner::{PartitionConfig, PartitionPlan};
 use crate::runtime_sim::collectives::{ReduceOp, Section};
 use crate::runtime_sim::rank::RankCtx;
 use crate::runtime_sim::threadpool::parallel_map_blocks;
-use crate::sfc::morton::{bits_per_dim, morton_key_cycling};
+use crate::sfc::kernel::morton_keys_batch;
+use crate::sfc::morton::bits_per_dim;
 use crate::util::timer::Stopwatch;
 
 /// Fixed accumulation block for the assignment pass; like `TOP_BLOCK`,
@@ -195,10 +196,16 @@ fn seed_positions(n: usize, k: usize) -> Vec<usize> {
     (0..k).map(|j| (((2 * j + 1) * n) / (2 * k)).min(n.saturating_sub(1))).collect()
 }
 
-/// Morton key of every point over `domain`, full interleave depth.
-fn morton_keys(ps: &PointSet, domain: &crate::geom::bbox::BoundingBox) -> Vec<u128> {
-    let depth = (ps.dim.max(1) as u32 * bits_per_dim(ps.dim.max(1))) as u16;
-    (0..ps.len()).map(|i| morton_key_cycling(ps.point(i), domain, depth)).collect()
+/// Morton key of every point over `domain`, full interleave depth, via
+/// the batched SWAR kernel (bit-identical for any thread count).
+fn morton_keys(
+    ps: &PointSet,
+    domain: &crate::geom::bbox::BoundingBox,
+    threads: usize,
+) -> Vec<u128> {
+    let d = ps.dim.max(1);
+    let depth = (d as u32 * bits_per_dim(d)) as u16;
+    morton_keys_batch(&ps.coords, d, domain, depth, threads)
 }
 
 impl BalancedKMeans {
@@ -230,6 +237,7 @@ impl BalancedKMeans {
             let move_centroids = iter < self.max_iters;
             // Ramp the influence pressure once centroids freeze.
             let beta = if move_centroids { self.beta } else { 2.0 * self.beta };
+            let infl_before = infl.clone();
             let imb = update_state(
                 &mut centroids,
                 &mut infl,
@@ -246,9 +254,17 @@ impl BalancedKMeans {
                 best_assign = assign.clone();
                 best_loads = wsums;
             }
-            // All inputs to this branch are globally reduced values, so
-            // every rank takes it on the same iteration.
+            // All inputs to these branches are globally reduced values,
+            // so every rank takes them on the same iteration.
             if changed == 0 && imb <= self.tol {
+                break;
+            }
+            // Fixed-point exit: no assignment changed, centroids are
+            // frozen, and the influence update was a no-op — every
+            // remaining round would reproduce this exact state, so
+            // leaving early is bit-identical to running the loop out
+            // and just saves the collective rounds.
+            if changed == 0 && !move_centroids && infl == infl_before {
                 break;
             }
         }
@@ -283,7 +299,7 @@ impl PartitionBackend for BalancedKMeans {
             };
         }
         let domain = ps.bounding_box();
-        let keys = morton_keys(ps, &domain);
+        let keys = morton_keys(ps, &domain, threads);
         let mut order: Vec<u32> = (0..ps.len() as u32).collect();
         order.sort_by_key(|&i| (keys[i as usize], ps.ids[i as usize], i));
         let mut centroids = vec![0.0f64; k * dim];
@@ -353,7 +369,7 @@ impl PartitionBackend for BalancedKMeans {
             };
         }
 
-        let keys = morton_keys(shard, &domain);
+        let keys = morton_keys(shard, &domain, threads);
         let mut order: Vec<u32> = (0..shard.len() as u32).collect();
         order.sort_by_key(|&i| (keys[i as usize], shard.ids[i as usize], i));
 

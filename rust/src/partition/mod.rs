@@ -16,5 +16,8 @@ pub mod partitioner;
 pub mod quality;
 pub mod scenario;
 
-pub use backend::{make_backend, BackendKind, PartitionBackend, RectilinearGrid, SfcKnapsack};
+pub use backend::{
+    make_backend, make_backend_with, BackendConfig, BackendKind, PartitionBackend,
+    RectilinearGrid, SfcKnapsack,
+};
 pub use kmeans::BalancedKMeans;

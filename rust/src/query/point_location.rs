@@ -18,7 +18,8 @@
 use crate::geom::bbox::BoundingBox;
 use crate::geom::point::PointSet;
 use crate::kdtree::node::KdTree;
-use crate::sfc::morton::morton_key_cycling;
+use crate::runtime_sim::threadpool::default_threads;
+use crate::sfc::kernel::{morton_key_quantized, morton_keys_batch};
 
 /// The buckets-only index (Fig 1's linearized leaf table): per bucket its
 /// SFC key, its point range in curve order, and the point data.
@@ -61,9 +62,11 @@ impl BucketIndex {
     /// Bucket containing `q`: generate the query's Morton key and binary
     /// search for the last bucket key ≤ it (bucket keys are zero-padded
     /// path prefixes, so the containing bucket's key is the greatest one
-    /// not exceeding the point key).
+    /// not exceeding the point key). Single queries take the scalar
+    /// quantized kernel — one `quantize` + interleave per dimension
+    /// instead of a per-bit midpoint walk.
     pub fn locate_bucket(&self, q: &[f64]) -> usize {
-        let key = morton_key_cycling(q, &self.domain, self.depth);
+        let key = morton_key_quantized(q, &self.domain, self.depth);
         match self.keys.binary_search(&key) {
             Ok(i) => i,
             Err(0) => 0,
@@ -85,12 +88,26 @@ impl BucketIndex {
 
     /// Batched location with query presorting (the paper presorts queries
     /// into bins before the parallel walk). Returns per-query results.
+    /// Key generation runs on the batched SWAR kernel with the default
+    /// worker count; the result is identical for any thread count.
     pub fn locate_batch(&self, ps: &PointSet, queries: &PointSet, eps: f64) -> Vec<Option<u32>> {
-        // Presort query indices by their Morton keys (bin = bucket).
+        self.locate_batch_threaded(ps, queries, eps, default_threads())
+    }
+
+    /// [`BucketIndex::locate_batch`] with an explicit worker count for
+    /// the key-generation phase (the pool the caller is already on).
+    pub fn locate_batch_threaded(
+        &self,
+        ps: &PointSet,
+        queries: &PointSet,
+        eps: f64,
+        threads: usize,
+    ) -> Vec<Option<u32>> {
+        // Presort query indices by their Morton keys (bin = bucket);
+        // the keys come from one pool-parallel batch kernel pass.
+        let keys =
+            morton_keys_batch(&queries.coords, queries.dim, &self.domain, self.depth, threads);
         let mut order: Vec<u32> = (0..queries.len() as u32).collect();
-        let keys: Vec<u128> = (0..queries.len())
-            .map(|i| morton_key_cycling(queries.point(i), &self.domain, self.depth))
-            .collect();
         order.sort_unstable_by_key(|&i| keys[i as usize]);
         let mut out = vec![None; queries.len()];
         for &qi in &order {
@@ -173,6 +190,23 @@ mod tests {
                 (idx.offsets[b], idx.offsets[b + 1]),
                 (n.start, n.end),
                 "bucket mismatch for {q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_is_thread_invariant() {
+        let ps = PointSet::uniform(1500, 3, 83);
+        let (_, idx) = morton_index(&ps, 16);
+        let sel: Vec<u32> = (0..1500u32).step_by(7).collect();
+        let queries = ps.gather(&sel);
+        let base = idx.locate_batch_threaded(&ps, &queries, 1e-12, 1);
+        assert_eq!(base.len(), sel.len());
+        for th in [2usize, 4, 8] {
+            assert_eq!(
+                idx.locate_batch_threaded(&ps, &queries, 1e-12, th),
+                base,
+                "diverged at {th} threads"
             );
         }
     }

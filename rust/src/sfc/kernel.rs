@@ -1,0 +1,405 @@
+//! Batched SFC key kernels — the hot-path entry point for Morton key
+//! generation.
+//!
+//! Key computation sits on every hot path of the system: tree build
+//! ordering, sample-sort routing, the point-location fast path (§V-A),
+//! query presorting, and the balanced-k-means seeding all reduce to
+//! "Morton key per point". This module turns that per-point cost into a
+//! batched, allocation-free, pool-parallel kernel:
+//!
+//! * [`morton_key_quantized`] — the **scalar reference** defining the
+//!   exact semantics: quantize each coordinate once onto a `2^b` grid
+//!   (affine domain transform via [`quantize`], floor rounding, closed
+//!   upper bound) and interleave MSB-first cycling dimensions. It equals
+//!   [`morton_key_cycling`] everywhere except *exactly on* a cell
+//!   boundary, where the per-bit midpoint walk sends `v == mid` to the
+//!   lower half while the floor quantization sends it to the upper cell
+//!   — the same contract `morton_key_unit` has always documented.
+//! * [`morton_keys_batch`] — the batched kernel: one `quantize` per
+//!   coordinate, then the SWAR magic-mask spreads of [`crate::util::bits`]
+//!   on dedicated 2-D/3-D lanes (widened to `u128` by composing two
+//!   64-bit spreads per dimension, so the full `bits_per_dim(d) * d`
+//!   depth is covered) with the bit-loop [`morton_interleave`] as the
+//!   general-d fallback. Points are processed in fixed [`KEY_BLOCK`]
+//!   blocks dispatched on the `runtime_sim::threadpool` pool — the
+//!   fixed-block idiom every other hot path uses, so the output is
+//!   bit-identical for any thread count.
+//! * [`SfcKeyKernel`] — the pluggable seam. `SwarKernel` is the default;
+//!   `CyclingKernel` keeps the original per-bit midpoint walk behind the
+//!   same interface (the oracle and the bench baseline); a PJRT-compiled
+//!   kernel (`python/compile/kernels/morton.py` already sketches the XLA
+//!   interleave) can drop in here without touching any call site.
+//!
+//! `benches/sfc_traversal.rs` races the three paths in a keys/sec table.
+
+use crate::geom::bbox::BoundingBox;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::sfc::key::SfcKey;
+use crate::sfc::morton::morton_key_cycling;
+use crate::util::bits::{morton2d_spread, morton3d_spread, morton_interleave, quantize};
+
+/// Fixed batch block: like `KM_BLOCK`/`TOP_BLOCK`, the block structure
+/// depends only on the input length, never the thread count. 4096
+/// points × 3 dims × 8 B ≈ 96 KiB of coordinate reads per block — a
+/// comfortable L2-resident unit of work.
+pub const KEY_BLOCK: usize = 4096;
+
+/// Quantization bits per dimension covering `depth` interleave levels
+/// of a `d`-dimensional key: `ceil(depth / d)`, capped at 63 (the grid
+/// is a `u64`) and at `128 / d` (the interleave is a `u128`). For every
+/// standard depth (`bits_per_dim(d) * d`, or the point-location
+/// `2 + max_depth ≤ 102`) the cap never binds for d ≥ 2.
+#[inline]
+pub fn quant_bits(dim: usize, depth: u16) -> u32 {
+    let d = dim.max(1) as u32;
+    (depth as u32).div_ceil(d).min(63).min(128 / d)
+}
+
+/// Scalar quantized Morton key — the reference semantics of the batch
+/// kernel. Quantizes coordinate `k` to [`quant_bits`] bits over
+/// `[domain.lo[k], domain.hi[k]]` and places its level-`l` bit (MSB
+/// first) at key position `127 − (l·d + k)`, for every level with
+/// `l·d + k < depth`. Left-aligned, like every path key.
+pub fn morton_key_quantized(q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey {
+    debug_assert!(depth as usize <= 128);
+    let d = q.len().max(1);
+    let b = quant_bits(d, depth);
+    let mut key: SfcKey = 0;
+    for (k, &v) in q.iter().enumerate() {
+        let qv = quantize(v, domain.lo[k], domain.hi[k], b);
+        for bit in 0..b {
+            let t = bit as usize * d + k;
+            if t >= depth as usize {
+                break;
+            }
+            if qv & (1u64 << (b - 1 - bit)) != 0 {
+                key |= 1u128 << (127 - t as u32);
+            }
+        }
+    }
+    key
+}
+
+/// 2-D interleave of two `b ≤ 63`-bit values into a `u128`, dimension 0
+/// in the more significant lane (cycling order: dim 0 splits first).
+/// Composes two 64-bit magic-mask spreads: interleaving distributes
+/// over the 32-bit halves, `I(x, y) = I(x»32, y»32)·2^64 + I(x∧m, y∧m)`.
+#[inline]
+fn interleave2(c0: u64, c1: u64, b: u32) -> u128 {
+    // morton2d_spread puts its FIRST argument in the low lane.
+    let lo = morton2d_spread(c1, c0) as u128;
+    if b <= 32 {
+        lo
+    } else {
+        let hi = morton2d_spread(c1 >> 32, c0 >> 32) as u128;
+        (hi << 64) | lo
+    }
+}
+
+/// 3-D interleave of three `b ≤ 42`-bit values into a `u128`,
+/// dimension 0 most significant within each level. Same composition as
+/// [`interleave2`] split at the spread's native 21 bits (3·21 = 63).
+#[inline]
+fn interleave3(c0: u64, c1: u64, c2: u64, b: u32) -> u128 {
+    let lo = morton3d_spread(c2, c1, c0) as u128;
+    if b <= 21 {
+        lo
+    } else {
+        let hi = morton3d_spread(c2 >> 21, c1 >> 21, c0 >> 21) as u128;
+        (hi << 63) | lo
+    }
+}
+
+/// Keep only the top `depth` key bits (the interleave may cover up to
+/// `d − 1` levels past `depth` when `depth % d != 0`).
+#[inline]
+fn depth_mask(depth: u16) -> u128 {
+    match depth {
+        0 => 0,
+        d if d as u32 >= 128 => !0u128,
+        d => !((1u128 << (128 - d as u32)) - 1),
+    }
+}
+
+/// The batched SFC key kernel: Morton keys of `n = coords.len() / dim`
+/// points stored flat (`coords[i*dim + k]`), bit-identical to mapping
+/// [`morton_key_quantized`] over the points, computed in fixed
+/// [`KEY_BLOCK`] blocks on the worker pool. No per-point allocation:
+/// the affine quantization reads the domain box directly and the
+/// interleave is pure register arithmetic (SWAR lanes for 2-D/3-D, the
+/// bit loop for general d).
+pub fn morton_keys_batch(
+    coords: &[f64],
+    dim: usize,
+    domain: &BoundingBox,
+    depth: u16,
+    threads: usize,
+) -> Vec<SfcKey> {
+    debug_assert!(depth as usize <= 128);
+    let d = dim.max(1);
+    let n = coords.len() / d;
+    let b = quant_bits(d, depth);
+    if depth == 0 || b == 0 || n == 0 {
+        return vec![0; n];
+    }
+    let mask = depth_mask(depth);
+    let shift = 128 - (b as usize * d) as u32; // b*d ≥ 1, ≤ 128
+    let blocks = parallel_map_blocks(threads.max(1), n, KEY_BLOCK, |lo, hi| {
+        let mut out: Vec<SfcKey> = Vec::with_capacity(hi - lo);
+        match d {
+            2 => {
+                let (l0, h0) = (domain.lo[0], domain.hi[0]);
+                let (l1, h1) = (domain.lo[1], domain.hi[1]);
+                for i in lo..hi {
+                    let c0 = quantize(coords[i * 2], l0, h0, b);
+                    let c1 = quantize(coords[i * 2 + 1], l1, h1, b);
+                    out.push((interleave2(c0, c1, b) << shift) & mask);
+                }
+            }
+            3 => {
+                let (l0, h0) = (domain.lo[0], domain.hi[0]);
+                let (l1, h1) = (domain.lo[1], domain.hi[1]);
+                let (l2, h2) = (domain.lo[2], domain.hi[2]);
+                for i in lo..hi {
+                    let c0 = quantize(coords[i * 3], l0, h0, b);
+                    let c1 = quantize(coords[i * 3 + 1], l1, h1, b);
+                    let c2 = quantize(coords[i * 3 + 2], l2, h2, b);
+                    out.push((interleave3(c0, c1, c2, b) << shift) & mask);
+                }
+            }
+            _ => {
+                // One scratch per block, reused across its points.
+                let mut qs = vec![0u64; d];
+                for i in lo..hi {
+                    for (k, q) in qs.iter_mut().enumerate() {
+                        *q = quantize(coords[i * d + k], domain.lo[k], domain.hi[k], b);
+                    }
+                    out.push((morton_interleave(&qs, b) << shift) & mask);
+                }
+            }
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(n);
+    for blk in blocks {
+        out.extend_from_slice(&blk);
+    }
+    out
+}
+
+/// The pluggable key-kernel seam: every key-hungry call site goes
+/// through one of these two entry points, so a faster implementation
+/// (e.g. the PJRT-compiled interleave) replaces all of them at once.
+pub trait SfcKeyKernel: Sync {
+    /// Short stable name ("swar", "cycling", …) for benches and tables.
+    fn name(&self) -> &'static str;
+
+    /// One key — the single-query fast path.
+    fn key(&self, q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey;
+
+    /// Keys for `coords.len() / dim` flat strided points, bit-identical
+    /// to mapping [`SfcKeyKernel::key`] and to every thread count.
+    fn keys_batch(
+        &self,
+        coords: &[f64],
+        dim: usize,
+        domain: &BoundingBox,
+        depth: u16,
+        threads: usize,
+    ) -> Vec<SfcKey>;
+}
+
+/// The default kernel: scalar quantized reference for single keys, SWAR
+/// interleave lanes for batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwarKernel;
+
+impl SfcKeyKernel for SwarKernel {
+    fn name(&self) -> &'static str {
+        "swar"
+    }
+
+    fn key(&self, q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey {
+        morton_key_quantized(q, domain, depth)
+    }
+
+    fn keys_batch(
+        &self,
+        coords: &[f64],
+        dim: usize,
+        domain: &BoundingBox,
+        depth: u16,
+        threads: usize,
+    ) -> Vec<SfcKey> {
+        morton_keys_batch(coords, dim, domain, depth, threads)
+    }
+}
+
+/// The original per-bit midpoint walk behind the same seam — the oracle
+/// the property suite compares against and the bench baseline. Its
+/// batch path runs the same fixed-block pool dispatch, so the scalar
+/// vs SWAR comparison isolates the per-key cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CyclingKernel;
+
+impl SfcKeyKernel for CyclingKernel {
+    fn name(&self) -> &'static str {
+        "cycling"
+    }
+
+    fn key(&self, q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey {
+        morton_key_cycling(q, domain, depth)
+    }
+
+    fn keys_batch(
+        &self,
+        coords: &[f64],
+        dim: usize,
+        domain: &BoundingBox,
+        depth: u16,
+        threads: usize,
+    ) -> Vec<SfcKey> {
+        let d = dim.max(1);
+        let n = coords.len() / d;
+        let blocks = parallel_map_blocks(threads.max(1), n, KEY_BLOCK, |lo, hi| {
+            (lo..hi)
+                .map(|i| morton_key_cycling(&coords[i * d..(i + 1) * d], domain, depth))
+                .collect::<Vec<SfcKey>>()
+        });
+        let mut out = Vec::with_capacity(n);
+        for blk in blocks {
+            out.extend_from_slice(&blk);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfc::morton::bits_per_dim;
+    use crate::util::rng::{Rng, SplitMix64};
+
+    fn full_depth(d: usize) -> u16 {
+        (d as u32 * bits_per_dim(d)) as u16
+    }
+
+    #[test]
+    fn swar_lanes_match_general_interleave_at_full_width() {
+        let mut s = SplitMix64::new(41);
+        for _ in 0..400 {
+            for b in [7u32, 21, 32, 33, 40, 42] {
+                let m = if b >= 64 { !0u64 } else { (1u64 << b) - 1 };
+                let (x, y, z) = (s.next_u64() & m, s.next_u64() & m, s.next_u64() & m);
+                if b <= 42 {
+                    assert_eq!(
+                        interleave3(x, y, z, b),
+                        morton_interleave(&[x, y, z], b),
+                        "3d b={b}"
+                    );
+                }
+            }
+            for b in [7u32, 31, 32, 33, 48, 63] {
+                let m = (1u64 << b) - 1;
+                let (x, y) = (s.next_u64() & m, s.next_u64() & m);
+                assert_eq!(interleave2(x, y, b), morton_interleave(&[x, y], b), "2d b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_unit_and_general_boxes() {
+        let mut s = SplitMix64::new(43);
+        for d in [1usize, 2, 3, 4, 6] {
+            let n = 500;
+            let coords: Vec<f64> = (0..n * d).map(|_| 3.0 * s.next_f64() - 1.0).collect();
+            for domain in [
+                BoundingBox::unit(d),
+                BoundingBox { lo: vec![-1.5; d], hi: vec![2.25; d] },
+            ] {
+                for depth in [full_depth(d), 1, 7, 37.min(full_depth(d))] {
+                    let batch = morton_keys_batch(&coords, d, &domain, depth, 1);
+                    for i in 0..n {
+                        let scalar =
+                            morton_key_quantized(&coords[i * d..(i + 1) * d], &domain, depth);
+                        assert_eq!(batch[i], scalar, "d={d} depth={depth} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_thread_invariant() {
+        let mut s = SplitMix64::new(47);
+        let d = 3;
+        let coords: Vec<f64> = (0..20_000 * d).map(|_| s.next_f64()).collect();
+        let domain = BoundingBox::unit(d);
+        let base = morton_keys_batch(&coords, d, &domain, full_depth(d), 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                morton_keys_batch(&coords, d, &domain, full_depth(d), threads),
+                base,
+                "diverged at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_matches_cycling_on_unit_cube() {
+        // The same contract `cycling_and_unit_agree_on_unit_cube`
+        // documents: exact agreement off cell boundaries.
+        let mut s = SplitMix64::new(53);
+        let domain = BoundingBox::unit(3);
+        for _ in 0..300 {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            assert_eq!(
+                morton_key_quantized(&q, &domain, 36),
+                morton_key_cycling(&q, &domain, 36),
+                "q={q:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_cases_zero_depth_empty_input_degenerate_box() {
+        let domain = BoundingBox::unit(2);
+        assert_eq!(morton_keys_batch(&[0.5, 0.5], 2, &domain, 0, 1), vec![0]);
+        assert!(morton_keys_batch(&[], 2, &domain, 16, 1).is_empty());
+        assert_eq!(morton_key_quantized(&[0.5, 0.5], &domain, 0), 0);
+        // A degenerate (hi ≤ lo) dimension contributes zero bits.
+        let flat = BoundingBox { lo: vec![0.0, 1.0], hi: vec![1.0, 1.0] };
+        let a = morton_key_quantized(&[0.75, 1.0], &flat, 16);
+        let b = morton_key_quantized(&[0.75, 0.3], &flat, 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kernels_agree_through_the_trait() {
+        let mut s = SplitMix64::new(59);
+        let d = 2;
+        let coords: Vec<f64> = (0..600 * d).map(|_| s.next_f64()).collect();
+        let domain = BoundingBox::unit(d);
+        let depth = full_depth(d);
+        let swar = SwarKernel.keys_batch(&coords, d, &domain, depth, 2);
+        let cyc = CyclingKernel.keys_batch(&coords, d, &domain, depth, 2);
+        // Random points sit off every cell boundary, so the two kernels
+        // agree exactly on the unit cube.
+        assert_eq!(swar, cyc);
+        for i in (0..600).step_by(37) {
+            assert_eq!(swar[i], SwarKernel.key(&coords[i * d..(i + 1) * d], &domain, depth));
+        }
+        assert_eq!(SwarKernel.name(), "swar");
+        assert_eq!(CyclingKernel.name(), "cycling");
+    }
+
+    #[test]
+    fn left_aligned_keys_order_like_cycling_depth_two() {
+        let domain = BoundingBox::unit(2);
+        let bl = morton_key_quantized(&[0.2, 0.2], &domain, 2);
+        let tl = morton_key_quantized(&[0.2, 0.8], &domain, 2);
+        let br = morton_key_quantized(&[0.8, 0.2], &domain, 2);
+        let tr = morton_key_quantized(&[0.8, 0.8], &domain, 2);
+        assert!(bl < tl && tl < br && br < tr);
+    }
+}

@@ -16,6 +16,7 @@
 //!   Fig 8–10 quantify.
 
 pub mod hilbert;
+pub mod kernel;
 pub mod key;
 pub mod morton;
 pub mod traverse;

@@ -22,18 +22,26 @@ pub fn bits_per_dim(dim: usize) -> u32 {
 /// of `domain`: depth-`t` split halves dimension `t % d`, and the path
 /// bit is 1 iff the point lies in the upper half. Left-aligned.
 pub fn morton_key_cycling(q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey {
+    // Allocation-free: each dimension's interval-halving walk is
+    // independent of the others, so instead of cloning the domain box
+    // and cycling t = 0, 1, 2, …, walk one dimension at a time with its
+    // active interval in two registers. Per dimension the visited
+    // depths (k, k+d, k+2d, …) and midpoint sequence are exactly those
+    // of the cycling order — bit-identical output.
     let d = q.len();
-    let mut lo: Vec<f64> = domain.lo.clone();
-    let mut hi: Vec<f64> = domain.hi.clone();
     let mut key: SfcKey = 0;
-    for t in 0..depth {
-        let k = t as usize % d;
-        let mid = 0.5 * (lo[k] + hi[k]);
-        if q[k] > mid {
-            key |= 1u128 << (127 - t as u32);
-            lo[k] = mid;
-        } else {
-            hi[k] = mid;
+    for (k, &v) in q.iter().enumerate() {
+        let (mut lo, mut hi) = (domain.lo[k], domain.hi[k]);
+        let mut t = k;
+        while t < depth as usize {
+            let mid = 0.5 * (lo + hi);
+            if v > mid {
+                key |= 1u128 << (127 - t as u32);
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            t += d;
         }
     }
     key
@@ -42,20 +50,12 @@ pub fn morton_key_cycling(q: &[f64], domain: &BoundingBox, depth: u16) -> SfcKey
 /// Fast bit-interleave variant for the unit-cube domain: quantize each
 /// coordinate to `b` bits and interleave MSB-first cycling dimensions.
 /// Equals [`morton_key_cycling`] with `depth = d*b` on `[0,1]^d` up to
-/// floating-point quantization at cell boundaries.
+/// floating-point quantization at cell boundaries. This is
+/// [`crate::sfc::kernel::morton_key_quantized`] on the unit cube; the
+/// kernel module defines the exact semantics.
 pub fn morton_key_unit(q: &[f64], b: u32) -> SfcKey {
-    let d = q.len();
-    let mut key: SfcKey = 0;
-    for (k, &v) in q.iter().enumerate() {
-        let qv = crate::util::bits::quantize(v, 0.0, 1.0, b);
-        for bit in 0..b {
-            if qv & (1 << (b - 1 - bit)) != 0 {
-                let t = bit as usize * d + k;
-                key |= 1u128 << (127 - t as u32);
-            }
-        }
-    }
-    key
+    let d = q.len() as u32;
+    crate::sfc::kernel::morton_key_quantized(q, &BoundingBox::unit(q.len()), (d * b) as u16)
 }
 
 #[cfg(test)]

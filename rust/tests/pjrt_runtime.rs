@@ -107,15 +107,19 @@ fn morton_artifact_matches_rust_bits() {
     let coords: Vec<f32> = (0..MORTON_N * MORTON_D).map(|_| rng.next_f64() as f32).collect();
     let keys = engine.morton_keys(&coords).unwrap();
     assert_eq!(keys.len(), MORTON_N);
-    // Rust oracle: morton_key_unit truncated to D*bits bits, compared as
-    // the top 30 bits of the u128 path key.
+    // Rust oracle: the quantized kernel key truncated to D*bits bits,
+    // compared as the top 30 bits of the u128 path key.
     for i in (0..MORTON_N).step_by(37) {
         let p = [
             coords[i * MORTON_D] as f64,
             coords[i * MORTON_D + 1] as f64,
             coords[i * MORTON_D + 2] as f64,
         ];
-        let full = sfc_part::sfc::morton::morton_key_unit(&p, MORTON_BITS);
+        let full = sfc_part::sfc::kernel::morton_key_quantized(
+            &p,
+            &sfc_part::geom::bbox::BoundingBox::unit(MORTON_D),
+            (MORTON_D as u32 * MORTON_BITS) as u16,
+        );
         let top = (full >> (128 - (MORTON_D as u32 * MORTON_BITS))) as u32;
         assert_eq!(keys[i], top, "point {i}: {:?}", p);
     }

@@ -1,0 +1,193 @@
+//! Property suite for the batched SFC key kernels (`sfc::kernel`).
+//!
+//! The contract under test: `morton_keys_batch` is bit-identical to
+//! mapping the scalar `morton_key_quantized` over the points — for
+//! every dimension, every input shape (uniform, clustered,
+//! duplicate-heavy, points sitting exactly on cell boundaries), every
+//! domain (unit cube, shifted/scaled boxes with negative corners,
+//! boxes with a degenerate dimension), and every thread count.
+//! `SFC_TEST_RANKS` narrows the thread sweep the same way it narrows
+//! the rank sweep of the distributed suites, so CI exercises the
+//! kernels at 2 and 8 pool threads in its partitioned steps.
+
+use sfc_part::geom::bbox::BoundingBox;
+use sfc_part::sfc::kernel::{
+    morton_key_quantized, morton_keys_batch, quant_bits, CyclingKernel, SfcKeyKernel, SwarKernel,
+};
+use sfc_part::sfc::morton::{bits_per_dim, morton_key_cycling};
+use sfc_part::util::bits::quantize;
+use sfc_part::util::rng::{Rng, SplitMix64};
+
+/// Thread counts to sweep (`SFC_TEST_RANKS=2` or a comma list narrows
+/// it; the kernels are thread-count-invariant, so reusing the rank
+/// knob is exactly the partitioning CI wants).
+fn thread_sweep() -> Vec<usize> {
+    match std::env::var("SFC_TEST_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SFC_TEST_RANKS wants integers"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+fn full_depth(d: usize) -> u16 {
+    (d as u32 * bits_per_dim(d)) as u16
+}
+
+/// The four input shapes, as flat `n × d` coordinate buffers.
+fn datasets(n: usize, d: usize, seed: u64) -> Vec<(&'static str, Vec<f64>)> {
+    let mut s = SplitMix64::new(seed);
+    let uniform: Vec<f64> = (0..n * d).map(|_| s.next_f64()).collect();
+    let centers: Vec<f64> = (0..4 * d).map(|_| s.next_f64()).collect();
+    let clustered: Vec<f64> = (0..n)
+        .flat_map(|i| {
+            let c = (i % 4) * d;
+            (0..d).map(|k| centers[c + k] + s.normal(0.0, 0.03)).collect::<Vec<f64>>()
+        })
+        .collect();
+    let distinct: Vec<f64> = (0..8 * d).map(|_| s.next_f64()).collect();
+    let dups: Vec<f64> = (0..n)
+        .flat_map(|i| distinct[(i % 8) * d..(i % 8 + 1) * d].to_vec())
+        .collect();
+    // Every coordinate an exact dyadic cell corner: the quantized and
+    // cycling walks disagree here, but batch vs scalar-quantized must
+    // still match bit for bit.
+    let boundary: Vec<f64> = (0..n * d).map(|_| s.below(17) as f64 / 16.0).collect();
+    vec![
+        ("uniform", uniform),
+        ("clustered", clustered),
+        ("duplicate-heavy", dups),
+        ("boundary-cell", boundary),
+    ]
+}
+
+/// The domains each dataset runs under: the unit cube, a shifted and
+/// anisotropically scaled box with negative corners, and a box with one
+/// degenerate (`hi == lo`) dimension.
+fn domains(d: usize) -> Vec<(&'static str, BoundingBox)> {
+    let mut degenerate =
+        BoundingBox { lo: vec![-0.25; d], hi: (0..d).map(|k| 1.0 + 0.5 * k as f64).collect() };
+    degenerate.hi[d - 1] = degenerate.lo[d - 1];
+    vec![
+        ("unit", BoundingBox::unit(d)),
+        (
+            "general",
+            BoundingBox {
+                lo: (0..d).map(|k| -2.0 - 0.3 * k as f64).collect(),
+                hi: (0..d).map(|k| 1.5 + 0.7 * k as f64).collect(),
+            },
+        ),
+        ("degenerate-dim", degenerate),
+    ]
+}
+
+#[test]
+fn batch_matches_scalar_bit_for_bit() {
+    let threads = thread_sweep();
+    for d in [2usize, 3, 5, 10] {
+        let n = 3000;
+        for (dname, coords) in datasets(n, d, 100 + d as u64) {
+            for (bname, domain) in domains(d) {
+                for depth in [full_depth(d), 9, 1] {
+                    let scalar: Vec<u128> = coords
+                        .chunks_exact(d)
+                        .map(|q| morton_key_quantized(q, &domain, depth))
+                        .collect();
+                    for &th in &threads {
+                        let batch = morton_keys_batch(&coords, d, &domain, depth, th);
+                        assert!(
+                            batch == scalar,
+                            "batch != scalar: d={d} data={dname} domain={bname} \
+                             depth={depth} threads={th}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_edge_cases() {
+    // Degenerate interval: everything collapses to cell 0.
+    assert_eq!(quantize(0.7, 1.0, 0.0, 8), 0);
+    assert_eq!(quantize(0.7, 0.5, 0.5, 8), 0);
+    // Out-of-domain values clamp to the end cells.
+    assert_eq!(quantize(-3.0, 0.0, 1.0, 8), 0);
+    assert_eq!(quantize(42.0, 0.0, 1.0, 8), 255);
+    // The closed upper bound maps v == hi into the top cell.
+    assert_eq!(quantize(1.0, 0.0, 1.0, 8), 255);
+    assert_eq!(quantize(2.5, -2.5, 2.5, 1), 1);
+    // Zero-bit grids have a single cell.
+    assert_eq!(quantize(0.7, 0.0, 1.0, 0), 0);
+    // quant_bits: ceil(depth/d) capped by the u64 grid and u128 key.
+    assert_eq!(quant_bits(3, 9), 3);
+    assert_eq!(quant_bits(3, 10), 4);
+    assert_eq!(quant_bits(1, 128), 63);
+    assert_eq!(quant_bits(2, 128), 63);
+    assert_eq!(quant_bits(4, 128), 32);
+}
+
+#[test]
+fn batched_keys_monotone_along_each_axis() {
+    // With every other coordinate fixed, the Morton key is a
+    // non-decreasing function of any single coordinate: quantization is
+    // monotone and each dimension's bits occupy a fixed disjoint set of
+    // key positions.
+    let mut s = SplitMix64::new(7);
+    for d in [2usize, 3, 5] {
+        let depth = full_depth(d);
+        let domain = BoundingBox::unit(d);
+        for axis in 0..d {
+            let base: Vec<f64> = (0..d).map(|_| s.next_f64()).collect();
+            let steps = 257;
+            let mut coords = Vec::with_capacity(steps * d);
+            for i in 0..steps {
+                let mut p = base.clone();
+                p[axis] = i as f64 / (steps - 1) as f64;
+                coords.extend_from_slice(&p);
+            }
+            let keys = morton_keys_batch(&coords, d, &domain, depth, 4);
+            for w in keys.windows(2) {
+                assert!(w[0] <= w[1], "keys decreased along axis {axis} in {d}-D");
+            }
+            assert!(keys[0] < keys[steps - 1], "axis {axis} in {d}-D never moved the key");
+        }
+    }
+}
+
+#[test]
+fn cycling_kernel_batch_matches_scalar_and_is_thread_invariant() {
+    let threads = thread_sweep();
+    let d = 3;
+    let depth = full_depth(d);
+    let domain = BoundingBox { lo: vec![-1.0; d], hi: vec![3.5; d] };
+    let mut s = SplitMix64::new(23);
+    let coords: Vec<f64> = (0..9000 * d).map(|_| 4.5 * s.next_f64() - 1.0).collect();
+    let scalar: Vec<u128> =
+        coords.chunks_exact(d).map(|q| morton_key_cycling(q, &domain, depth)).collect();
+    for &th in &threads {
+        let batch = CyclingKernel.keys_batch(&coords, d, &domain, depth, th);
+        assert!(batch == scalar, "cycling batch diverged at {th} threads");
+    }
+}
+
+#[test]
+fn swar_agrees_with_cycling_off_cell_boundaries() {
+    // Random 53-bit-mantissa points never sit exactly on a dyadic cell
+    // boundary at these depths, so the two kernels must agree exactly
+    // on the unit cube — the oracle relation the quantized semantics
+    // are allowed to break only *on* boundaries.
+    let threads = thread_sweep();
+    let mut s = SplitMix64::new(31);
+    for d in [2usize, 3] {
+        let depth = full_depth(d);
+        let domain = BoundingBox::unit(d);
+        let coords: Vec<f64> = (0..5000 * d).map(|_| s.next_f64()).collect();
+        let th = *threads.last().unwrap_or(&1);
+        let swar = SwarKernel.keys_batch(&coords, d, &domain, depth, th);
+        let cyc = CyclingKernel.keys_batch(&coords, d, &domain, depth, th);
+        assert!(swar == cyc, "kernels disagreed on random unit-cube points in {d}-D");
+    }
+}
