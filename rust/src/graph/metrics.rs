@@ -49,8 +49,8 @@ pub fn spmv_metrics(coo: &Coo, nnz_part: &[u32], parts: usize) -> SpmvMetrics {
 
     let mut recv_vol = vec![0u64; parts]; // non-owned x columns needed
     let mut send_vol = vec![0u64; parts]; // non-owned y rows contributed
-    let mut peers: Vec<std::collections::HashSet<u32>> =
-        vec![std::collections::HashSet::new(); parts];
+    let mut peers: Vec<std::collections::BTreeSet<u32>> =
+        vec![std::collections::BTreeSet::new(); parts];
     // Degree counts a process's *dependencies* (x owners it reads from +
     // y owners it reduces into), matching the paper's row-wise shape of
     // exactly P−1 (a row block's columns touch every owner) while SFC

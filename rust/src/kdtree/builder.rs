@@ -167,7 +167,7 @@ impl KdTreeBuilder {
                 .max_by(|a, b| {
                     let wa = nodes[*a.1 as usize].weight;
                     let wb = nodes[*b.1 as usize].weight;
-                    wa.partial_cmp(&wb).unwrap()
+                    wa.total_cmp(&wb)
                 })
                 .map(|(i, _)| i)
             else {
@@ -232,6 +232,9 @@ impl KdTreeBuilder {
                 self.threads.max(1),
                 regions,
                 |_i, (task, mut region): (i32, WorkSet<'_>)| {
+                    // detlint: allow(timing-in-compute) -- per-subtree
+                    // busy time feeds the build report; the tree shape
+                    // is fixed by the splitter, not by the clock.
                     let t0 = crate::util::timer::thread_cpu_time();
                     let node = &nodes_ref[task as usize];
                     let mut rng = SplitMix64::new(seed ^ (task as u64).wrapping_mul(0x9e37));
@@ -245,6 +248,7 @@ impl KdTreeBuilder {
                         geometric,
                         &mut rng,
                     );
+                    // detlint: allow(timing-in-compute) -- see above.
                     let busy = crate::util::timer::thread_cpu_time() - t0;
                     (task, local, busy)
                 },

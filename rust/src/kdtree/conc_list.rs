@@ -126,8 +126,13 @@ impl<'a, T> Iterator for ConcListIter<'a, T> {
     }
 }
 
-// SAFETY: the list only hands out shared references to published items.
+// SAFETY: sending the list moves ownership of every block it reaches
+// through raw pointers, so `T: Send` suffices; no thread retains an
+// alias after the move.
 unsafe impl<T: Send> Send for ConcList<T> {}
+// SAFETY: concurrent `push` publishes blocks with a release CAS and
+// readers acquire the head, so shared access only ever observes fully
+// initialized items; `T: Sync` makes the handed-out `&T`s sound.
 unsafe impl<T: Send + Sync> Sync for ConcList<T> {}
 
 #[cfg(test)]

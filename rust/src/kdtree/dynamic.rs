@@ -417,7 +417,7 @@ impl DynKdTree {
         let mut split = None;
         // Try configured dim, then all dims by spread (duplicate guard).
         let mut dims: Vec<usize> = (0..self.dim).collect();
-        dims.sort_by(|&a, &b| bbox.width(b).partial_cmp(&bbox.width(a)).unwrap());
+        dims.sort_by(|&a, &b| bbox.width(b).total_cmp(&bbox.width(a)));
         dims.retain(|&dd| dd != d);
         dims.insert(0, d);
         for &dd in &dims {
@@ -602,7 +602,7 @@ pub struct DynForest {
     /// Routing structure: split hyperplanes of the top tree.
     pub top: crate::kdtree::node::KdTree,
     /// Map from top-tree leaf arena index to subtree slot.
-    pub leaf_slot: std::collections::HashMap<u32, usize>,
+    pub leaf_slot: std::collections::BTreeMap<u32, usize>,
     /// Independent subtrees, one per top leaf, in top-leaf DFS order.
     pub subtrees: Vec<DynKdTree>,
 }
@@ -618,7 +618,7 @@ impl DynForest {
             .splitter(SplitterConfig::uniform(SplitterKind::MedianSort))
             .build(ps);
         let leaves = top.leaves_dfs();
-        let mut leaf_slot = std::collections::HashMap::new();
+        let mut leaf_slot = std::collections::BTreeMap::new();
         let mut subtrees = Vec::with_capacity(leaves.len());
         for (slot, &l) in leaves.iter().enumerate() {
             leaf_slot.insert(l, slot);

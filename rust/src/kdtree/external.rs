@@ -307,7 +307,7 @@ impl ExternalTree {
                 hi[k] = hi[k].max(c[k]);
             }
         }
-        let d = (0..dim).max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap()).unwrap();
+        let d = (0..dim).max_by(|&a, &b| (hi[a] - lo[a]).total_cmp(&(hi[b] - lo[b]))).unwrap();
         let mut vals: Vec<f64> = coords.chunks_exact(dim).map(|c| c[d]).collect();
         let mid = vals.len() / 2;
         crate::util::sort::quickselect(&mut vals, mid, |v| *v);

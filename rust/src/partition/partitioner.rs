@@ -134,6 +134,9 @@ fn scatter_by_perm(threads: usize, perm: &[u32], vals: &[u32], out: &mut [u32]) 
         return;
     }
     struct OutPtr(*mut u32);
+    // SAFETY: the wrapped pointer targets `out`, which outlives the
+    // dispatch below, and `perm` guarantees disjoint target indices
+    // per position — no two workers ever write the same element.
     unsafe impl Sync for OutPtr {}
     let ptr = OutPtr(out.as_mut_ptr());
     let ptr = &ptr;

@@ -77,8 +77,8 @@ pub fn edge_cut_metrics(
     parts: usize,
 ) -> (u64, u64, usize) {
     let mut cut_per_part = vec![0u64; parts];
-    let mut neighbor_sets: Vec<std::collections::HashSet<u32>> =
-        vec![std::collections::HashSet::new(); parts];
+    let mut neighbor_sets: Vec<std::collections::BTreeSet<u32>> =
+        vec![std::collections::BTreeSet::new(); parts];
     let mut total = 0u64;
     for &(a, b) in edges {
         let (pa, pb) = (part_of[a as usize], part_of[b as usize]);

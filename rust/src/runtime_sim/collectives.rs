@@ -6,8 +6,25 @@
 //! as the paper's `transfer_t_l_t` does (§III-C). Every rank must call
 //! each collective in the same order (SPMD), like MPI.
 
+// Guard the reduction lanes: float equality and silent int→float
+// precision loss are exactly the bugs the u64 sections exist to avoid.
+#![warn(clippy::float_cmp, clippy::cast_precision_loss)]
+
 use crate::runtime_sim::fabric::{dec_f64, dec_u64, enc_f64, enc_u64};
 use crate::runtime_sim::rank::RankCtx;
+
+/// Report this collective's call signature to the debug-build
+/// congruence checker (see [`crate::runtime_sim::fabric::Fabric`]);
+/// compiles to nothing in release builds so the hot path never pays
+/// for the `format!`.
+macro_rules! coll_sig {
+    ($ctx:expr, $($fmt:tt)*) => {{
+        #[cfg(debug_assertions)]
+        {
+            $ctx.check_collective(format!($($fmt)*));
+        }
+    }};
+}
 
 /// Default cap on a single message, in bytes (the paper's
 /// `MAX_MSG_SIZE`). Benches sweep this.
@@ -130,6 +147,7 @@ impl SectionOut {
 impl<'f> RankCtx<'f> {
     /// Barrier: a 1-element allreduce (binomial reduce + broadcast).
     pub fn barrier(&mut self) {
+        coll_sig!(self, "barrier");
         self.allreduce_u64(ReduceOp::Sum, &[1]);
     }
 
@@ -159,8 +177,11 @@ impl<'f> RankCtx<'f> {
         data
     }
 
-    /// Broadcast raw bytes from `root` to every rank.
+    /// Broadcast raw bytes from `root` to every rank. The congruence
+    /// signature deliberately omits the payload size — per-rank sizes
+    /// are legitimate (only root's buffer matters).
     pub fn broadcast_bytes(&mut self, root: usize, data: Vec<u8>) -> Vec<u8> {
+        coll_sig!(self, "broadcast_bytes(root={root})");
         let tag = self.next_epoch();
         self.broadcast_bytes_with_tag(root, data, tag)
     }
@@ -172,6 +193,7 @@ impl<'f> RankCtx<'f> {
 
     /// Element-wise reduce of an `f64` vector to rank 0 (binomial tree).
     pub fn reduce_f64(&mut self, op: ReduceOp, vals: &[f64]) -> Option<Vec<f64>> {
+        coll_sig!(self, "reduce_f64(op={op:?}, lanes={})", vals.len());
         let tag = self.next_epoch();
         let (r, p) = (self.rank, self.n_ranks);
         let mut acc = vals.to_vec();
@@ -194,6 +216,7 @@ impl<'f> RankCtx<'f> {
 
     /// Reduce + broadcast (the paper's `ReduceBcast`).
     pub fn allreduce_f64(&mut self, op: ReduceOp, vals: &[f64]) -> Vec<f64> {
+        coll_sig!(self, "allreduce_f64(op={op:?}, lanes={})", vals.len());
         let root_val = self.reduce_f64(op, vals);
         let tag = self.next_epoch();
         let data = root_val.map(|v| enc_f64(&v)).unwrap_or_default();
@@ -209,6 +232,17 @@ impl<'f> RankCtx<'f> {
     /// collectives into one, cutting the latency term from `6·α·log p`
     /// to `α·log p`.
     pub fn allreduce_multi(&mut self, sections: &[Section]) -> Vec<SectionOut> {
+        #[cfg(debug_assertions)]
+        {
+            let layout: Vec<String> = sections
+                .iter()
+                .map(|s| match s {
+                    Section::F64(op, v) => format!("f64[{}]{op:?}", v.len()),
+                    Section::U64(op, v) => format!("u64[{}]{op:?}", v.len()),
+                })
+                .collect();
+            self.check_collective(format!("allreduce_multi({})", layout.join(",")));
+        }
         let mut acc: Vec<u8> = Vec::with_capacity(sections.iter().map(|s| s.len() * 8).sum());
         for s in sections {
             s.encode_into(&mut acc);
@@ -267,6 +301,7 @@ impl<'f> RankCtx<'f> {
 
     /// Element-wise allreduce of `u64` values.
     pub fn allreduce_u64(&mut self, op: ReduceOp, vals: &[u64]) -> Vec<u64> {
+        coll_sig!(self, "allreduce_u64(op={op:?}, lanes={})", vals.len());
         let tag = self.next_epoch();
         let (r, p) = (self.rank, self.n_ranks);
         let mut acc = vals.to_vec();
@@ -301,6 +336,7 @@ impl<'f> RankCtx<'f> {
     /// O(log p), replacing the old gather-through-root scan whose root
     /// serialized O(p) receives.
     pub fn exscan_f64(&mut self, x: f64) -> f64 {
+        coll_sig!(self, "exscan_f64");
         let (r, p) = (self.rank, self.n_ranks);
         if p == 1 {
             return 0.0;
@@ -346,6 +382,7 @@ impl<'f> RankCtx<'f> {
     /// one. The sample sort uses this to learn each rank's global offset
     /// inside every splitter-duplicate run in a single collective.
     pub fn exscan_u64_many(&mut self, xs: &[u64]) -> Vec<u64> {
+        coll_sig!(self, "exscan_u64_many(lanes={})", xs.len());
         let (r, p) = (self.rank, self.n_ranks);
         if p == 1 || xs.is_empty() {
             return vec![0; xs.len()];
@@ -383,6 +420,7 @@ impl<'f> RankCtx<'f> {
     /// Gather variable-size byte buffers to root; returns per-rank buffers
     /// on root, `None` elsewhere.
     pub fn gather_bytes(&mut self, root: usize, data: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        coll_sig!(self, "gather_bytes(root={root})");
         let tag = self.next_epoch();
         let (r, p) = (self.rank, self.n_ranks);
         if r == root {
@@ -402,6 +440,7 @@ impl<'f> RankCtx<'f> {
     /// All-gather of variable-size buffers (gather + broadcast of the
     /// concatenation with a length header).
     pub fn allgather_bytes(&mut self, data: Vec<u8>) -> Vec<Vec<u8>> {
+        coll_sig!(self, "allgather_bytes");
         let p = self.n_ranks;
         let gathered = self.gather_bytes(0, data);
         // Serialize: p lengths then payloads.
@@ -440,6 +479,7 @@ impl<'f> RankCtx<'f> {
         assert_eq!(bufs.len(), self.n_ranks);
         let (r, p) = (self.rank, self.n_ranks);
         let max_msg = max_msg.max(1);
+        coll_sig!(self, "alltoallv_rounds(max_msg={max_msg})");
         // Agree on the number of rounds.
         let local_rounds =
             bufs.iter().map(|b| b.len().div_ceil(max_msg)).max().unwrap_or(0) as u64;
@@ -480,6 +520,7 @@ impl<'f> RankCtx<'f> {
     /// shifted segment exchanges (ring), the same communication pattern
     /// MPI_Reduce_scatter uses.
     pub fn reduce_scatter_f64(&mut self, data: &[f64], counts: &[usize]) -> Vec<f64> {
+        coll_sig!(self, "reduce_scatter_f64(counts={counts:?})");
         let (r, p) = (self.rank, self.n_ranks);
         let tag = self.alloc_tags(p as u32 + 1);
         assert_eq!(counts.len(), p);
@@ -508,6 +549,8 @@ impl<'f> RankCtx<'f> {
 }
 
 #[cfg(test)]
+// Tests compare exact collective results and cast small ranks to f64.
+#[allow(clippy::float_cmp, clippy::cast_precision_loss)]
 mod tests {
     use crate::runtime_sim::{run_ranks, CostModel};
     use super::*;

@@ -43,6 +43,17 @@ pub struct Fabric {
     /// Set when a rank panics: blocked receivers abort instead of
     /// deadlocking the whole simulation.
     poisoned: std::sync::atomic::AtomicBool,
+    /// Debug-build collective-congruence table: slot `i` records the
+    /// first-arriving rank's signature for the `i`-th collective. Every
+    /// later arrival must present an identical signature (SPMD
+    /// discipline); a mismatch panics with both sides' calls instead of
+    /// letting the run deadlock on mismatched tags.
+    #[cfg(debug_assertions)]
+    congruence: Mutex<Vec<Option<(usize, String)>>>,
+    /// First congruence diagnostic, kept so poisoned receivers can name
+    /// the root cause in their own panic.
+    #[cfg(debug_assertions)]
+    divergence: Mutex<Option<String>>,
     p: usize,
 }
 
@@ -54,8 +65,61 @@ impl Fabric {
             traffic: (0..p).map(|_| RankTraffic::default()).collect(),
             links: (0..words).map(|_| AtomicU64::new(0)).collect(),
             poisoned: std::sync::atomic::AtomicBool::new(false),
+            #[cfg(debug_assertions)]
+            congruence: Mutex::new(Vec::new()),
+            #[cfg(debug_assertions)]
+            divergence: Mutex::new(None),
             p,
         }
+    }
+
+    /// Debug-build congruence check: rank `rank` is entering its
+    /// `seq`-th collective with call signature `sig`. The first rank to
+    /// reach a slot publishes its signature; every later rank must
+    /// match it exactly. On mismatch the fabric is poisoned (so blocked
+    /// peers abort too) and this rank panics with both signatures.
+    #[cfg(debug_assertions)]
+    pub(crate) fn check_collective(&self, rank: usize, seq: u64, sig: &str) {
+        let mut table = self.congruence.lock().unwrap();
+        let idx = seq as usize;
+        if table.len() <= idx {
+            table.resize_with(idx + 1, || None);
+        }
+        let mismatch = match table[idx].as_ref() {
+            None => {
+                table[idx] = Some((rank, sig.to_string()));
+                None
+            }
+            Some((first, first_sig)) => {
+                if first_sig.as_str() == sig {
+                    None
+                } else {
+                    Some((*first, first_sig.clone()))
+                }
+            }
+        };
+        drop(table);
+        if let Some((first, first_sig)) = mismatch {
+            let msg = format!(
+                "collective congruence violation at collective #{seq}: \
+                 rank {first} called `{first_sig}` but rank {rank} called `{sig}`"
+            );
+            *self.divergence.lock().unwrap() = Some(msg.clone());
+            self.poison();
+            panic!("{msg}");
+        }
+    }
+
+    /// The first recorded congruence diagnostic, if any rank diverged.
+    #[cfg(debug_assertions)]
+    pub fn divergence(&self) -> Option<String> {
+        self.divergence.lock().unwrap().clone()
+    }
+
+    /// Release builds do not track congruence.
+    #[cfg(not(debug_assertions))]
+    pub fn divergence(&self) -> Option<String> {
+        None
     }
 
     /// Mark the fabric dead (a rank panicked) and wake all receivers.
@@ -104,6 +168,18 @@ impl Fabric {
                 return q.remove(pos).unwrap();
             }
             if self.poisoned.load(Ordering::Acquire) {
+                #[cfg(debug_assertions)]
+                {
+                    // Clone the cause out before panicking so the panic
+                    // does not poison the diagnostic mutex for peers.
+                    let cause = self.divergence.lock().unwrap().clone();
+                    if let Some(cause) = cause {
+                        panic!(
+                            "fabric poisoned: a peer rank panicked (rank {rank} waiting on \
+                             tag {tag}); cause: {cause}"
+                        );
+                    }
+                }
                 panic!("fabric poisoned: a peer rank panicked (rank {rank} waiting on tag {tag})");
             }
             q = mb.signal.wait(q).unwrap();

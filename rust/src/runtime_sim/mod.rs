@@ -90,8 +90,12 @@ where
                     // without the second term every hybrid parallel
                     // section is charged to nobody and `max_busy` lies.
                     let _ = threadpool::take_dispatched_cpu();
+                    // detlint: allow(timing-in-compute) -- rank busy-time
+                    // accounting for the cost report; the rank's outputs
+                    // never branch on the measurement.
                     let t0 = crate::util::timer::thread_cpu_time();
                     let out = body(&mut ctx);
+                    // detlint: allow(timing-in-compute) -- see above.
                     let busy = crate::util::timer::thread_cpu_time() - t0
                         + threadpool::take_dispatched_cpu();
                     fabric.record_busy(r, busy);

@@ -19,6 +19,10 @@ pub struct RankCtx<'f> {
     pub fabric: &'f Fabric,
     pub rng: SplitMix64,
     pub(crate) epoch: u32,
+    /// Debug builds: how many collectives this rank has entered, the
+    /// index into the fabric's congruence table.
+    #[cfg(debug_assertions)]
+    pub(crate) coll_seq: u64,
 }
 
 impl<'f> RankCtx<'f> {
@@ -29,7 +33,28 @@ impl<'f> RankCtx<'f> {
         for _ in 0..rank {
             rng = base.split();
         }
-        RankCtx { rank, n_ranks, threads: threads.max(1), fabric, rng, epoch: 0 }
+        RankCtx {
+            rank,
+            n_ranks,
+            threads: threads.max(1),
+            fabric,
+            rng,
+            epoch: 0,
+            #[cfg(debug_assertions)]
+            coll_seq: 0,
+        }
+    }
+
+    /// Debug-build collective-congruence hook: every collective reports
+    /// its call signature on entry, and the fabric cross-checks it
+    /// against what the other ranks called at the same position. A
+    /// mismatched rank panics with a both-sides diagnostic (instead of
+    /// the tag-mismatch deadlock release builds would hit).
+    #[cfg(debug_assertions)]
+    pub(crate) fn check_collective(&mut self, sig: String) {
+        let seq = self.coll_seq;
+        self.coll_seq += 1;
+        self.fabric.check_collective(self.rank, seq, &sig);
     }
 
     /// Fresh tag namespace for one collective call. Point-to-point user

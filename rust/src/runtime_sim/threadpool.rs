@@ -41,6 +41,9 @@ use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Worker-thread default: every available hardware thread.
 pub fn default_threads() -> usize {
+    // detlint: allow(timing-in-compute) -- configuration-time default
+    // only; results are bit-identical for any thread count, so the
+    // hardware probe never reaches an output lane.
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -182,8 +185,12 @@ impl Pool {
                 st.jobs[j].next += 1;
                 drop(st);
                 IN_POOL.with(|c| c.set(true));
+                // detlint: allow(timing-in-compute) -- per-job CPU
+                // accounting feeds the busy-time report only; no job
+                // result depends on the measured duration.
                 let t0 = crate::util::timer::thread_cpu_time();
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+                // detlint: allow(timing-in-compute) -- see above.
                 let dt = crate::util::timer::thread_cpu_time() - t0;
                 IN_POOL.with(|c| c.set(false));
                 st = self.state();

@@ -133,6 +133,9 @@ pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> T
         threads.max(1),
         items,
         |_ti, (i, out): (usize, &mut [u32])| {
+            // detlint: allow(timing-in-compute) -- per-task busy time is
+            // smuggled out in a sentinel Rewrite for the report; the
+            // traversal order itself never depends on it.
             let t0 = crate::util::timer::thread_cpu_time();
             let mut rewrites = Vec::new();
             let it = &frontier_ref[i];
@@ -141,6 +144,7 @@ pub fn assign_sfc_parallel(tree: &mut KdTree, curve: Curve, threads: usize) -> T
                 nodes_ref, perm_ref, dim, curve, it.node, it.state, it.key, base, out,
                 &mut rewrites,
             );
+            // detlint: allow(timing-in-compute) -- see above.
             let busy = crate::util::timer::thread_cpu_time() - t0;
             rewrites.push(Rewrite {
                 node: NONE,

@@ -10,5 +10,6 @@
 pub mod bits;
 pub mod prop;
 pub mod rng;
+pub mod sched;
 pub mod sort;
 pub mod timer;

@@ -1,0 +1,207 @@
+//! Bounded exhaustive interleaving explorer — a dependency-free,
+//! loom-style model checker for the crate's lock-free protocols.
+//!
+//! A [`Model`] describes a small concurrent system as a set of threads,
+//! each advanced by atomic [`Model::step`]s over cloneable shared
+//! state. [`Explorer::explore`] enumerates **every** reachable
+//! interleaving by depth-first search over the state graph with
+//! visited-state deduplication, so each distinct global state is
+//! expanded once no matter how many schedules reach it. Along the way
+//! it detects deadlocks (some thread live, none runnable) and runs
+//! [`Model::check_final`] on every distinct terminal state.
+//!
+//! This is how the test suite model-checks the threadpool's job-slot
+//! protocol and `ConcList`'s publish/snapshot protocol
+//! (`rust/tests/loom_models.rs`) without a `loom` dependency: steps are
+//! chosen at mutex/CAS granularity, which is exactly the set of points
+//! where those protocols release exclusivity. Test runs built with
+//! `RUSTFLAGS="--cfg loom"` use larger model configurations; default
+//! runs keep the state spaces small enough for `cargo test`.
+
+use std::collections::HashSet;
+use std::hash::Hash;
+
+/// Schedulability of one model thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Has an enabled atomic step.
+    Runnable,
+    /// Alive but waiting on a condition another thread must establish
+    /// (a condvar wait, a full job slot, ...).
+    Blocked,
+    /// Finished; takes no further steps.
+    Done,
+}
+
+/// A small concurrent system under test.
+///
+/// `Eq + Hash` must cover the *entire* mutable state (shared state and
+/// every thread's local state/program counter) — the explorer prunes
+/// states it has already expanded, so missing state in the hash would
+/// silently skip interleavings.
+pub trait Model: Clone + Eq + Hash {
+    /// Number of threads, addressed `0..threads()`.
+    fn threads(&self) -> usize;
+    /// Current schedulability of thread `t`.
+    fn status(&self, t: usize) -> Status;
+    /// Execute one atomic step of thread `t` (must be `Runnable`).
+    /// Panics to report an invariant violation mid-schedule.
+    fn step(&mut self, t: usize);
+    /// Invariants of a terminal state (every thread `Done`).
+    fn check_final(&self);
+}
+
+/// Exploration statistics returned by [`Explorer::explore`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    /// Distinct global states expanded.
+    pub states: usize,
+    /// Distinct terminal states checked.
+    pub terminals: usize,
+    /// True if the search hit `max_states` before exhausting the space
+    /// (assert `!truncated` for a sound model check).
+    pub truncated: bool,
+}
+
+/// Exhaustive bounded scheduler.
+pub struct Explorer {
+    /// Hard cap on distinct states (memory and time bound).
+    pub max_states: usize,
+}
+
+impl Explorer {
+    /// Explore every interleaving of `init`. Panics on deadlock or on
+    /// any invariant violation in `step`/`check_final`.
+    pub fn explore<M: Model>(&self, init: M) -> Stats {
+        let mut seen: HashSet<M> = HashSet::new();
+        let mut stats = Stats::default();
+        self.visit(init, 0, &mut seen, &mut stats);
+        stats.states = seen.len();
+        stats
+    }
+
+    fn visit<M: Model>(&self, m: M, depth: usize, seen: &mut HashSet<M>, stats: &mut Stats) {
+        if seen.len() >= self.max_states {
+            stats.truncated = true;
+            return;
+        }
+        if !seen.insert(m.clone()) {
+            return;
+        }
+        let mut any_runnable = false;
+        let mut all_done = true;
+        for t in 0..m.threads() {
+            match m.status(t) {
+                Status::Runnable => {
+                    any_runnable = true;
+                    all_done = false;
+                    let mut next = m.clone();
+                    next.step(t);
+                    self.visit(next, depth + 1, seen, stats);
+                }
+                Status::Blocked => {
+                    all_done = false;
+                }
+                Status::Done => {}
+            }
+        }
+        if all_done {
+            m.check_final();
+            stats.terminals += 1;
+        } else if !any_runnable {
+            panic!("deadlock: every live thread is blocked after {depth} steps");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads increment a "non-atomic" counter via read/write
+    /// steps: the classic lost-update race the explorer must find.
+    #[derive(Clone, PartialEq, Eq, Hash)]
+    struct RaceyIncrement {
+        value: u8,
+        pc: [u8; 2],
+        tmp: [u8; 2],
+        expect_lost_update: bool,
+    }
+
+    impl Model for RaceyIncrement {
+        fn threads(&self) -> usize {
+            2
+        }
+
+        fn status(&self, t: usize) -> Status {
+            if self.pc[t] < 2 {
+                Status::Runnable
+            } else {
+                Status::Done
+            }
+        }
+
+        fn step(&mut self, t: usize) {
+            match self.pc[t] {
+                0 => self.tmp[t] = self.value, // read
+                1 => self.value = self.tmp[t] + 1, // write
+                _ => unreachable!(),
+            }
+            self.pc[t] += 1;
+        }
+
+        fn check_final(&self) {
+            if !self.expect_lost_update {
+                assert_eq!(self.value, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn explorer_finds_the_lost_update() {
+        let init = RaceyIncrement {
+            value: 0,
+            pc: [0; 2],
+            tmp: [0; 2],
+            expect_lost_update: true,
+        };
+        let stats = Explorer { max_states: 10_000 }.explore(init.clone());
+        assert!(!stats.truncated);
+        assert!(stats.terminals >= 2, "should reach value=1 and value=2 endings");
+        // And the strict model (asserting no lost update) must fail.
+        let strict = RaceyIncrement { expect_lost_update: false, ..init };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Explorer { max_states: 10_000 }.explore(strict)
+        }));
+        assert!(r.is_err(), "lost update must be detected");
+    }
+
+    /// A blocked thread whose wake condition never comes is a deadlock.
+    #[derive(Clone, PartialEq, Eq, Hash)]
+    struct Stuck {
+        pc: u8,
+    }
+
+    impl Model for Stuck {
+        fn threads(&self) -> usize {
+            1
+        }
+
+        fn status(&self, _t: usize) -> Status {
+            Status::Blocked
+        }
+
+        fn step(&mut self, _t: usize) {
+            unreachable!()
+        }
+
+        fn check_final(&self) {}
+    }
+
+    #[test]
+    fn explorer_reports_deadlock() {
+        let r = std::panic::catch_unwind(|| Explorer { max_states: 100 }.explore(Stuck { pc: 0 }));
+        let msg = format!("{:?}", r.expect_err("deadlock must panic"));
+        assert!(msg.contains("deadlock"), "{msg}");
+    }
+}

@@ -50,6 +50,9 @@ pub fn thread_cpu_time() -> f64 {
 /// Process CPU time in seconds (all threads).
 pub fn process_cpu_time() -> f64 {
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: `ts` is a valid, exclusively borrowed timespec for the
+    // duration of the call; CLOCK_PROCESS_CPUTIME_ID is a supported
+    // clock id, so clock_gettime only writes through the pointer.
     let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
     debug_assert_eq!(rc, 0);
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9

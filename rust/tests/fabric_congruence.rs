@@ -1,0 +1,172 @@
+//! Negative tests for the debug-build collective-congruence checker:
+//! a rank calling the *wrong* collective (wrong op, wrong lane layout,
+//! or skipping a barrier) must abort the whole run with a panic naming
+//! both sides' signatures — not deadlock on mismatched tags.
+//!
+//! The checker only exists under `debug_assertions`, so the whole
+//! module is gated; release test runs compile this file to nothing.
+
+#![cfg(debug_assertions)]
+
+use sfc_part::runtime_sim::collectives::ReduceOp;
+use sfc_part::runtime_sim::{Fabric, RankCtx};
+
+/// Render a panic payload as text.
+fn payload_str(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Run two rank bodies on a 2-rank fabric with hand-spawned threads
+/// (not `run_ranks`, whose scope would swallow the panic payloads) and
+/// return each rank's panic message, `None` if it completed.
+fn run_two(
+    f: impl FnOnce(&mut RankCtx) + Send,
+    g: impl FnOnce(&mut RankCtx) + Send,
+) -> [Option<String>; 2] {
+    let fabric = Fabric::new(2);
+    let fab = &fabric;
+    std::thread::scope(|s| {
+        let h0 = s.spawn(move || {
+            let mut ctx = RankCtx::new(0, 2, 1, fab);
+            f(&mut ctx);
+        });
+        let h1 = s.spawn(move || {
+            let mut ctx = RankCtx::new(1, 2, 1, fab);
+            g(&mut ctx);
+        });
+        [h0.join().err().map(payload_str), h1.join().err().map(payload_str)]
+    })
+}
+
+fn assert_divergence_names_both(msgs: &[Option<String>; 2], a: &str, b: &str) {
+    // Every rank must die (no hang, no silent completion)...
+    assert!(msgs.iter().all(|m| m.is_some()), "both ranks should panic: {msgs:?}");
+    // ...and at least one panic carries the both-sides diagnostic.
+    let diagnosed = msgs.iter().flatten().any(|m| {
+        m.contains("collective congruence violation") && m.contains(a) && m.contains(b)
+    });
+    assert!(diagnosed, "no diagnostic naming `{a}` and `{b}`: {msgs:?}");
+}
+
+#[test]
+fn congruent_sequence_completes() {
+    let body = |ctx: &mut RankCtx| {
+        ctx.barrier();
+        let s = ctx.allreduce_f64(ReduceOp::Sum, &[1.5])[0];
+        assert_eq!(s, 3.0);
+        let e = ctx.exscan_u64(ctx.rank as u64 + 1);
+        assert_eq!(e, ctx.rank as u64); // exscan of [1, 1+...]
+    };
+    let msgs = run_two(body, body);
+    assert_eq!(msgs, [None, None], "congruent ranks must not panic");
+}
+
+#[test]
+fn wrong_reduce_op_panics_with_both_signatures() {
+    let msgs = run_two(
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+        },
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Max, &[1.0]);
+        },
+    );
+    assert_divergence_names_both(&msgs, "op=Sum", "op=Max");
+}
+
+#[test]
+fn wrong_lane_layout_panics_with_both_signatures() {
+    let msgs = run_two(
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+        },
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Sum, &[1.0, 2.0]);
+        },
+    );
+    assert_divergence_names_both(&msgs, "lanes=1", "lanes=2");
+}
+
+#[test]
+fn mixed_section_layout_panics_with_both_signatures() {
+    let msgs = run_two(
+        |ctx| {
+            ctx.allreduce_multi(&[sfc_part::runtime_sim::collectives::Section::U64(
+                ReduceOp::Sum,
+                &[1],
+            )]);
+        },
+        |ctx| {
+            ctx.allreduce_multi(&[sfc_part::runtime_sim::collectives::Section::F64(
+                ReduceOp::Sum,
+                &[1.0],
+            )]);
+        },
+    );
+    assert_divergence_names_both(&msgs, "u64[1]", "f64[1]");
+}
+
+#[test]
+fn skipped_barrier_panics_instead_of_hanging() {
+    // Without the checker this is a *deadlock*: rank 0's barrier
+    // consumes rank 1's allreduce traffic (tag epochs alias), and
+    // rank 0 then blocks forever in its own allreduce. The checker
+    // turns it into an immediate two-sided diagnostic.
+    let msgs = run_two(
+        |ctx| {
+            ctx.barrier();
+            ctx.allreduce_f64(ReduceOp::Sum, &[0.5]);
+        },
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Sum, &[0.5]);
+        },
+    );
+    assert_divergence_names_both(&msgs, "barrier", "allreduce_f64");
+}
+
+#[test]
+fn peer_panic_message_names_root_cause() {
+    // The rank that dies while *blocked* (fabric poisoned by the
+    // diverging rank) must still see the congruence diagnostic.
+    let msgs = run_two(
+        |ctx| {
+            ctx.barrier();
+            ctx.allreduce_f64(ReduceOp::Sum, &[0.5]);
+        },
+        |ctx| {
+            ctx.allreduce_f64(ReduceOp::Sum, &[0.5]);
+        },
+    );
+    for m in msgs.iter().flatten() {
+        assert!(
+            m.contains("collective congruence violation"),
+            "every rank's panic should name the cause: {m}"
+        );
+    }
+}
+
+#[test]
+fn divergence_is_recorded_on_the_fabric() {
+    let fabric = Fabric::new(2);
+    let fab = &fabric;
+    std::thread::scope(|s| {
+        let h0 = s.spawn(move || {
+            let mut ctx = RankCtx::new(0, 2, 1, fab);
+            ctx.barrier();
+        });
+        let h1 = s.spawn(move || {
+            let mut ctx = RankCtx::new(1, 2, 1, fab);
+            ctx.exscan_f64(1.0);
+        });
+        let _ = h0.join();
+        let _ = h1.join();
+    });
+    let d = fabric.divergence().expect("divergence should be recorded");
+    assert!(d.contains("barrier") && d.contains("exscan_f64"), "{d}");
+}

@@ -1,0 +1,366 @@
+//! Model checks of the two lock-free protocols in the unsafe core,
+//! run through the bounded exhaustive interleaving explorer
+//! (`sfc_part::util::sched`) — loom-style, without the dependency.
+//!
+//! * the multi-job thread pool's **job-slot protocol**
+//!   (`runtime_sim::threadpool::Pool::run` + `worker_loop`): publish →
+//!   claim/execute under a round-robin worker cap → drain-wait → clear;
+//! * `kdtree::conc_list::ConcList`'s **publish/snapshot protocol**:
+//!   CAS-retry block prepend with a lagging length counter and
+//!   prefix-stable reader snapshots.
+//!
+//! Steps are modeled at mutex/CAS granularity — each step is one
+//! lock-held region or one atomic — so the explorer's interleavings
+//! cover every point where the real code yields exclusivity.
+//!
+//! Default runs use small configurations; `RUSTFLAGS="--cfg loom"`
+//! (the CI loom lane) switches to larger ones.
+
+use sfc_part::util::sched::{Explorer, Model, Status};
+
+fn max_states() -> usize {
+    if cfg!(loom) {
+        5_000_000
+    } else {
+        500_000
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job-slot protocol (threadpool.rs)
+// ---------------------------------------------------------------------
+
+/// Thread 0 is the caller (`Pool::run`); threads 1.. are pool workers
+/// (`worker_loop`). Shared state mirrors one `JobSlot` plus the
+/// per-work-item execution counts the SAFETY argument rests on.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct JobSlotModel {
+    ids: usize,
+    /// `concurrency - 1`: max workers engaged at once.
+    limit: usize,
+    // --- shared slot (mutations happen under the pool mutex) ---
+    published: bool,
+    cleared: bool,
+    next: usize,
+    running: usize,
+    exec_count: Vec<u8>,
+    // --- caller: 0 publish, 1 claim, 2 exec, 3 drain+clear, 4 done ---
+    caller_pc: u8,
+    caller_id: usize,
+    // --- workers: 0 scan/engage, 1 claim, 2 exec, 3 exited ---
+    worker_pc: Vec<u8>,
+    worker_id: Vec<usize>,
+}
+
+impl JobSlotModel {
+    fn new(ids: usize, workers: usize, limit: usize) -> Self {
+        JobSlotModel {
+            ids,
+            limit,
+            published: false,
+            cleared: false,
+            next: 0,
+            running: 0,
+            exec_count: vec![0; ids],
+            caller_pc: 0,
+            caller_id: 0,
+            worker_pc: vec![0; workers],
+            worker_id: vec![0; workers],
+        }
+    }
+
+    /// `JobSlot::claimable` from the worker's point of view.
+    fn claimable(&self) -> bool {
+        self.published && !self.cleared && self.next < self.ids && self.running < self.limit
+    }
+
+    fn exec(&mut self, id: usize) {
+        self.exec_count[id] += 1;
+        assert_eq!(self.exec_count[id], 1, "work id {id} executed twice");
+        assert!(!self.cleared, "execution after the slot was cleared");
+    }
+}
+
+impl Model for JobSlotModel {
+    fn threads(&self) -> usize {
+        1 + self.worker_pc.len()
+    }
+
+    fn status(&self, t: usize) -> Status {
+        if t == 0 {
+            return match self.caller_pc {
+                0 | 1 | 2 => Status::Runnable,
+                // done_cv wait: runnable only once every worker left.
+                3 => {
+                    if self.running == 0 {
+                        Status::Runnable
+                    } else {
+                        Status::Blocked
+                    }
+                }
+                _ => Status::Done,
+            };
+        }
+        let w = t - 1;
+        match self.worker_pc[w] {
+            // work_cv wait: wakes for a claimable slot, or exits once
+            // the job is gone (parked workers take no more steps).
+            0 => {
+                if self.claimable() || self.cleared {
+                    Status::Runnable
+                } else {
+                    Status::Blocked
+                }
+            }
+            1 | 2 => Status::Runnable,
+            _ => Status::Done,
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        if t == 0 {
+            match self.caller_pc {
+                // Publish the job (slot setup + work_cv notify).
+                0 => {
+                    self.published = true;
+                    self.caller_pc = 1;
+                }
+                // Claim the next id under the lock, or move to drain.
+                1 => {
+                    if self.next < self.ids {
+                        self.caller_id = self.next;
+                        self.next += 1;
+                        self.caller_pc = 2;
+                    } else {
+                        self.caller_pc = 3;
+                    }
+                }
+                // Execute outside the lock.
+                2 => {
+                    let id = self.caller_id;
+                    self.exec(id);
+                    self.caller_pc = 1;
+                }
+                // running == 0 (checked by status): clear the slot.
+                3 => {
+                    assert_eq!(self.running, 0);
+                    assert!(self.next >= self.ids, "cleared with unclaimed work");
+                    assert!(
+                        self.exec_count.iter().all(|&c| c == 1),
+                        "cleared before every id executed"
+                    );
+                    self.cleared = true;
+                    self.published = false;
+                    self.caller_pc = 4;
+                }
+                _ => unreachable!(),
+            }
+            return;
+        }
+        let w = t - 1;
+        match self.worker_pc[w] {
+            // Scan found the slot claimable (engage), or the job is gone.
+            0 => {
+                if self.cleared {
+                    self.worker_pc[w] = 3;
+                } else {
+                    assert!(self.claimable());
+                    self.running += 1;
+                    self.worker_pc[w] = 1;
+                }
+            }
+            // Claim under the lock, or disengage once drained.
+            1 => {
+                if self.next < self.ids {
+                    self.worker_id[w] = self.next;
+                    self.next += 1;
+                    self.worker_pc[w] = 2;
+                } else {
+                    self.running -= 1;
+                    self.worker_pc[w] = 3;
+                }
+            }
+            // Execute outside the lock.
+            2 => {
+                let id = self.worker_id[w];
+                self.exec(id);
+                self.worker_pc[w] = 1;
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn check_final(&self) {
+        assert!(self.cleared, "caller never cleared the slot");
+        assert_eq!(self.running, 0, "worker still engaged at exit");
+        assert!(
+            self.exec_count.iter().all(|&c| c == 1),
+            "some work id did not execute exactly once: {:?}",
+            self.exec_count
+        );
+    }
+}
+
+#[test]
+fn job_slot_protocol_every_id_runs_exactly_once() {
+    let (ids, workers, limit) = if cfg!(loom) { (4, 3, 2) } else { (3, 2, 2) };
+    let stats =
+        Explorer { max_states: max_states() }.explore(JobSlotModel::new(ids, workers, limit));
+    assert!(!stats.truncated, "state space truncated: {stats:?}");
+    assert!(stats.terminals >= 1);
+}
+
+#[test]
+fn job_slot_protocol_respects_worker_limit() {
+    // limit = 1: at most one worker engaged; the explorer visits every
+    // schedule, so any state with running > limit would assert in
+    // claimable()'s engage path.
+    #[derive(Clone, PartialEq, Eq, Hash)]
+    struct LimitObserved(JobSlotModel);
+    impl Model for LimitObserved {
+        fn threads(&self) -> usize {
+            self.0.threads()
+        }
+        fn status(&self, t: usize) -> Status {
+            self.0.status(t)
+        }
+        fn step(&mut self, t: usize) {
+            self.0.step(t);
+            assert!(self.0.running <= self.0.limit, "worker cap exceeded");
+        }
+        fn check_final(&self) {
+            self.0.check_final();
+        }
+    }
+    let stats = Explorer { max_states: max_states() }
+        .explore(LimitObserved(JobSlotModel::new(3, 2, 1)));
+    assert!(!stats.truncated, "state space truncated: {stats:?}");
+}
+
+// ---------------------------------------------------------------------
+// ConcList publish/snapshot protocol (conc_list.rs)
+// ---------------------------------------------------------------------
+
+/// Block sizes pushed by each pusher thread; the last thread is a
+/// reader taking a `len()` + `iter()` snapshot.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ConcListModel {
+    sizes: Vec<usize>,
+    /// Chain of pushed block ids, newest first (the `head` pointer walk).
+    head: Vec<u8>,
+    /// The lagging `len` counter (fetch_add *after* the CAS publishes).
+    len: usize,
+    // --- pushers: 0 load head, 1 CAS, 2 len+=, 3 done ---
+    pusher_pc: Vec<u8>,
+    pusher_snap: Vec<Vec<u8>>,
+    // --- reader: 0 read len, 1 snapshot head, 2 re-read head, 3 done ---
+    reader_pc: u8,
+    reader_len: usize,
+    reader_snap: Vec<u8>,
+}
+
+impl ConcListModel {
+    fn new(sizes: &[usize]) -> Self {
+        ConcListModel {
+            sizes: sizes.to_vec(),
+            head: Vec::new(),
+            len: 0,
+            pusher_pc: vec![0; sizes.len()],
+            pusher_snap: vec![Vec::new(); sizes.len()],
+            reader_pc: 0,
+            reader_len: 0,
+            reader_snap: Vec::new(),
+        }
+    }
+
+    fn items(&self, chain: &[u8]) -> usize {
+        chain.iter().map(|&b| self.sizes[b as usize]).sum()
+    }
+}
+
+impl Model for ConcListModel {
+    fn threads(&self) -> usize {
+        self.sizes.len() + 1
+    }
+
+    fn status(&self, t: usize) -> Status {
+        let pc = if t < self.sizes.len() { self.pusher_pc[t] } else { self.reader_pc };
+        if pc < 3 {
+            Status::Runnable
+        } else {
+            Status::Done
+        }
+    }
+
+    fn step(&mut self, t: usize) {
+        if t < self.sizes.len() {
+            match self.pusher_pc[t] {
+                // head.load(Acquire)
+                0 => {
+                    self.pusher_snap[t] = self.head.clone();
+                    self.pusher_pc[t] = 1;
+                }
+                // compare_exchange(head, block); Err re-reads and retries
+                1 => {
+                    if self.head == self.pusher_snap[t] {
+                        self.head.insert(0, t as u8);
+                        self.pusher_pc[t] = 2;
+                    } else {
+                        self.pusher_snap[t] = self.head.clone();
+                    }
+                }
+                // len.fetch_add(n) — after publication
+                2 => {
+                    self.len += self.sizes[t];
+                    self.pusher_pc[t] = 3;
+                }
+                _ => unreachable!(),
+            }
+            return;
+        }
+        match self.reader_pc {
+            0 => {
+                self.reader_len = self.len;
+                self.reader_pc = 1;
+            }
+            1 => {
+                self.reader_snap = self.head.clone();
+                // len lags publication, so a snapshot taken after the
+                // len read can never show fewer items than it.
+                assert!(
+                    self.items(&self.reader_snap) >= self.reader_len,
+                    "len counter ran ahead of published blocks"
+                );
+                self.reader_pc = 2;
+            }
+            2 => {
+                // Prepend-only: an earlier snapshot stays a suffix of
+                // every later head (no lost or reordered blocks).
+                assert!(
+                    self.head.ends_with(&self.reader_snap),
+                    "snapshot is not a stable suffix of the list"
+                );
+                self.reader_pc = 3;
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn check_final(&self) {
+        let mut blocks: Vec<u8> = self.head.clone();
+        blocks.sort_unstable();
+        let expect: Vec<u8> = (0..self.sizes.len() as u8).collect();
+        assert_eq!(blocks, expect, "every pushed block exactly once");
+        assert_eq!(self.len, self.sizes.iter().sum::<usize>(), "len counts every item");
+    }
+}
+
+#[test]
+fn conc_list_no_lost_blocks_and_exact_len() {
+    let sizes: &[usize] = if cfg!(loom) { &[1, 2, 3, 4] } else { &[1, 2, 3] };
+    let stats = Explorer { max_states: max_states() }.explore(ConcListModel::new(sizes));
+    assert!(!stats.truncated, "state space truncated: {stats:?}");
+    // Contended CAS retries mean different publication orders: with k
+    // pushers every permutation of the chain must appear somewhere.
+    assert!(stats.terminals > 1, "expected multiple distinct final orders: {stats:?}");
+}

@@ -1,0 +1,80 @@
+//! detlint CLI — scan Rust sources for SPMD determinism and
+//! collective-discipline violations.
+//!
+//! Usage: `cargo run -p detlint -- [PATH ...]` (default `rust/src`).
+//! Exits non-zero when any finding is reported, so CI can gate on it.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use detlint::{hint_for, scan_source, Finding};
+
+/// Collect `.rs` files under `root`, sorted for deterministic output.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return;
+    }
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut children: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    children.sort();
+    for child in children {
+        if child.is_dir() {
+            collect_rs(&child, out);
+        } else if child.extension().is_some_and(|e| e == "rs") {
+            out.push(child);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = std::env::args().skip(1).map(PathBuf::from).collect();
+    if roots.is_empty() {
+        roots.push(PathBuf::from("rust/src"));
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut scanned = 0usize;
+    for root in &roots {
+        if !root.exists() {
+            eprintln!("detlint: path not found: {}", root.display());
+            return ExitCode::from(2);
+        }
+        let mut files = Vec::new();
+        collect_rs(root, &mut files);
+        for file in &files {
+            let src = match std::fs::read_to_string(file) {
+                Ok(s) => s,
+                Err(err) => {
+                    eprintln!("detlint: cannot read {}: {err}", file.display());
+                    return ExitCode::from(2);
+                }
+            };
+            // Report paths relative to the scan root when possible.
+            let rel = match file.strip_prefix(root) {
+                Ok(r) if !r.as_os_str().is_empty() => r.display().to_string(),
+                _ => file.display().to_string(),
+            };
+            scanned += 1;
+            findings.extend(scan_source(&rel, &src));
+        }
+    }
+
+    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    for f in &findings {
+        println!("{}:{} [{}] {}", f.file, f.line, f.rule, f.msg);
+        println!("  hint: {}", hint_for(f.rule));
+    }
+    if findings.is_empty() {
+        println!("detlint: {scanned} files scanned, 0 findings");
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {scanned} files scanned, {} finding(s)", findings.len());
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,22 @@
+//! Fixture: allow annotations — each finding here is suppressed by a
+//! justified `detlint: allow`, except the last one whose allow has no
+//! justification (which must itself be reported).
+
+use std::time::Instant;
+
+pub fn timed_build(xs: &[f64]) -> f64 {
+    // detlint: allow(timing-in-compute) -- wall-clock feeds the report row
+    // only; the partition result never branches on it.
+    let t0 = Instant::now();
+    let s: f64 = xs.iter().sum();
+    let _elapsed = t0.elapsed();
+    s
+}
+
+pub fn unjustified(xs: &[f64]) -> f64 {
+    // detlint: allow(timing-in-compute)
+    let t0 = Instant::now();
+    let s: f64 = xs.iter().sum();
+    let _elapsed = t0.elapsed();
+    s
+}

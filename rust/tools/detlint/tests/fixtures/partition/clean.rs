@@ -1,0 +1,42 @@
+//! Fixture: clean determinism-critical code — zero findings expected.
+//! Exercises the idioms the rules must NOT flag: uniform conditionals,
+//! u64 count lanes, BTreeMap iteration, seeded RNG, total_cmp sorts,
+//! documented unsafe.
+
+use std::collections::BTreeMap;
+
+pub fn balanced(ctx: &mut RankCtx, local: &[f64], n_ranks: usize) -> f64 {
+    // uniform condition: every rank sees the same n_ranks
+    if n_ranks == 1 {
+        return local.iter().sum();
+    }
+    let s: f64 = local.iter().sum();
+    // counts ride the exact u64 lane, weights the f64 lane
+    let total = ctx.allreduce_multi(&mut [
+        Section::F64(ReduceOp::Sum, &mut [s]),
+        Section::U64(ReduceOp::Sum, &mut [local.len() as u64]),
+    ]);
+    total
+}
+
+pub fn ordered_output(acc: &BTreeMap<u32, f64>) -> Vec<(u32, f64)> {
+    // BTreeMap iteration is key-ordered: deterministic
+    acc.iter().map(|(k, v)| (*k, *v)).collect()
+}
+
+pub fn det_sort(ws: &mut Vec<(u32, f64)>) {
+    ws.sort_by(|a, b| a.1.total_cmp(&b.1));
+}
+
+pub fn seeded(seed: u64, xs: &mut [f64]) {
+    let mut rng = SplitMix64::new(seed);
+    for x in xs.iter_mut() {
+        *x = rng.next_f64();
+    }
+}
+
+pub fn documented(xs: &[u64]) -> u64 {
+    // SAFETY: `xs` is non-empty by the caller contract; reading the
+    // first element of a valid slice is in-bounds.
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,11 @@
+//! Fixture: R1 collective-divergence — a collective under a rank-local
+//! conditional. Must fire exactly once.
+
+pub fn divergent(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    if ctx.rank == 0 {
+        // only rank 0 issues the collective: the fabric deadlocks
+        acc = ctx.allreduce_f64(ReduceOp::Sum, &[local.iter().sum()])[0];
+    }
+    acc
+}

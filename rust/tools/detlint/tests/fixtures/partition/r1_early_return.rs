@@ -1,0 +1,10 @@
+//! Fixture: R1 collective-divergence — a rank-local early return followed
+//! by a collective later in the same function. Must fire exactly once.
+
+pub fn early_out(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    if local.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = local.iter().sum();
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}

@@ -1,0 +1,6 @@
+//! Fixture: R2 count-lane-f64 — a count cast `as f64` feeding an f64
+//! collective lane. Must fire exactly once.
+
+pub fn lossy_count(ctx: &mut RankCtx, local: &[u32]) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[local.len() as f64])[0]
+}

@@ -1,0 +1,6 @@
+//! Fixture: R3 float-sort-order — a float sort via `partial_cmp`. Must
+//! fire exactly once.
+
+pub fn order_by_weight(ws: &mut Vec<(u32, f64)>) {
+    ws.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+}

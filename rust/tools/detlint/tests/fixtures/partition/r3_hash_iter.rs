@@ -1,0 +1,16 @@
+//! Fixture: R3 hash-iteration — iterating a HashMap in a
+//! determinism-critical module. Must fire exactly once.
+
+use std::collections::HashMap;
+
+pub fn unstable_order(weights: &[f64]) -> Vec<(u32, f64)> {
+    let mut acc: HashMap<u32, f64> = HashMap::new();
+    for (i, w) in weights.iter().enumerate() {
+        *acc.entry(i as u32 % 16).or_insert(0.0) += w;
+    }
+    let mut out = Vec::new();
+    for (k, v) in acc.iter() {
+        out.push((*k, *v));
+    }
+    out
+}

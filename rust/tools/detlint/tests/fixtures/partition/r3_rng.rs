@@ -1,0 +1,9 @@
+//! Fixture: R3 unseeded-rng — entropy-seeded RNG in a
+//! determinism-critical module. Must fire exactly once.
+
+pub fn jitter(xs: &mut [f64]) {
+    let mut rng = rand::thread_rng();
+    for x in xs.iter_mut() {
+        *x += rng.gen::<f64>() * 1e-9;
+    }
+}

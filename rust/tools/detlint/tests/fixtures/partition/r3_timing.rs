@@ -1,0 +1,17 @@
+//! Fixture: R3 timing-in-compute — a clock read inside compute in a
+//! determinism-critical module. Must fire exactly once.
+
+use std::time::Instant;
+
+pub fn adaptive_block(xs: &[f64]) -> usize {
+    let t0 = Instant::now();
+    let mut s = 0.0;
+    for x in xs {
+        s += x;
+    }
+    if t0.elapsed().as_micros() > 100 {
+        512
+    } else {
+        4096
+    }
+}

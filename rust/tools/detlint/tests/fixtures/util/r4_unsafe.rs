@@ -1,0 +1,7 @@
+//! Fixture: R4 unsafe-missing-safety — an `unsafe` block without a
+//! `// SAFETY:` comment. Must fire exactly once (not a determinism-
+//! critical path: R4 applies everywhere).
+
+pub fn read_first(xs: &[u64]) -> u64 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,90 @@
+//! Fixture tests: every rule fires exactly once on its fixture (at the
+//! expected line), the clean fixture yields nothing, and `allow`
+//! annotations suppress findings only when justified.
+
+use detlint::{scan_source, Finding};
+
+fn scan_fixture(rel: &str) -> Vec<Finding> {
+    let path = format!("{}/tests/fixtures/{rel}", env!("CARGO_MANIFEST_DIR"));
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    scan_source(rel, &src)
+}
+
+fn assert_single(rel: &str, rule: &str, line: usize) {
+    let fs = scan_fixture(rel);
+    assert_eq!(fs.len(), 1, "{rel}: expected exactly one finding, got {fs:?}");
+    assert_eq!(fs[0].rule, rule, "{rel}: wrong rule: {fs:?}");
+    assert_eq!(fs[0].line, line, "{rel}: wrong line: {fs:?}");
+}
+
+#[test]
+fn r1_collective_under_rank_conditional() {
+    assert_single("partition/r1_bad.rs", "collective-divergence", 8);
+}
+
+#[test]
+fn r1_collective_after_rank_local_early_return() {
+    assert_single("partition/r1_early_return.rs", "collective-divergence", 9);
+}
+
+#[test]
+fn r2_count_cast_feeding_f64_lane() {
+    assert_single("partition/r2_bad.rs", "count-lane-f64", 5);
+}
+
+#[test]
+fn r3_hash_map_iteration() {
+    assert_single("partition/r3_hash_iter.rs", "hash-iteration", 12);
+}
+
+#[test]
+fn r3_unseeded_rng() {
+    assert_single("partition/r3_rng.rs", "unseeded-rng", 5);
+}
+
+#[test]
+fn r3_wall_clock_in_compute() {
+    assert_single("partition/r3_timing.rs", "timing-in-compute", 7);
+}
+
+#[test]
+fn r3_partial_cmp_in_sort() {
+    assert_single("partition/r3_float_sort.rs", "float-sort-order", 5);
+}
+
+#[test]
+fn r4_undocumented_unsafe_outside_det_dirs() {
+    // util/ is not determinism-critical, but R4 applies everywhere.
+    assert_single("util/r4_unsafe.rs", "unsafe-missing-safety", 6);
+}
+
+#[test]
+fn clean_fixture_has_no_findings() {
+    let fs = scan_fixture("partition/clean.rs");
+    assert!(fs.is_empty(), "clean fixture should be clean: {fs:?}");
+}
+
+#[test]
+fn justified_allow_suppresses_unjustified_is_reported() {
+    let fs = scan_fixture("partition/allowed.rs");
+    assert_eq!(fs.len(), 1, "only the unjustified allow should surface: {fs:?}");
+    assert_eq!(fs[0].rule, "allow-missing-justification", "{fs:?}");
+    assert_eq!(fs[0].line, 18, "{fs:?}");
+}
+
+#[test]
+fn findings_carry_fix_hints() {
+    for f in scan_fixture("partition/r1_bad.rs") {
+        assert!(!detlint::hint_for(f.rule).is_empty());
+    }
+    assert!(!detlint::hint_for("count-lane-f64").is_empty());
+    assert!(!detlint::hint_for("no-such-rule").is_empty()); // falls back to generic advice
+}
+
+#[test]
+fn test_modules_are_exempt_from_r1_to_r3_but_not_r4() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f(ctx: &RankCtx) {\n        if ctx.rank == 0 {\n            ctx.barrier();\n        }\n        let p = unsafe { core::ptr::null::<u8>() };\n        let _ = p;\n    }\n}\n";
+    let fs = scan_source("partition/x.rs", src);
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, "unsafe-missing-safety", "{fs:?}");
+}
