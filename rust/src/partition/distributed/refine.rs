@@ -178,6 +178,11 @@ pub(crate) fn refine(
                 break;
             }
             let list = lists[node as usize].take().expect("refine candidate lost its list");
+            // detlint: allow(branch-congruence) -- `cand` and the split heap
+            // derive from the replicated top-tree leaf metadata (weights are
+            // collective-agreed), so every rank pops the same leaves in the
+            // same order: the enclosing `!cand.is_empty()` branch is
+            // SPMD-uniform, not rank-local.
             match split_leaf(ctx, local, nodes, node, list, use_median, threads, &mut out.stats) {
                 SplitOutcome::Retire(_list) => {
                     // Degenerate or one-sided: suspend split attempts on

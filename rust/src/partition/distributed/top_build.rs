@@ -279,6 +279,10 @@ pub(crate) fn top_build(
         done.push((0, root_list, false));
     }
 
+    // detlint: allow(loop-divergence) -- the heap and `done` hold replicated
+    // top-tree leaves whose weights come from fused allreduces, so every rank
+    // observes the same sizes and runs the same number of split iterations:
+    // the bound is SPMD-uniform despite the `len()` reads.
     while heap.len() + done.len() < k1 {
         let Some(HeapLeaf { node: leaf, .. }) = heap.pop() else { break };
         let list = lists[leaf as usize].take().expect("heap leaf lost its index list");

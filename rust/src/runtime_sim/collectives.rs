@@ -522,6 +522,8 @@ impl<'f> RankCtx<'f> {
     pub fn reduce_scatter_f64(&mut self, data: &[f64], counts: &[usize]) -> Vec<f64> {
         coll_sig!(self, "reduce_scatter_f64(counts={counts:?})");
         let (r, p) = (self.rank, self.n_ranks);
+        // One block covers every ring round (`tag + s`, s in 1..p); the
+        // allocation alone advances the epoch — no manual arithmetic.
         let tag = self.alloc_tags(p as u32 + 1);
         assert_eq!(counts.len(), p);
         let total: usize = counts.iter().sum();
@@ -543,7 +545,6 @@ impl<'f> RankCtx<'f> {
                 *a += b;
             }
         }
-        self.epoch += p as u32;
         acc
     }
 }

@@ -122,6 +122,24 @@ impl Fabric {
         None
     }
 
+    /// The recorded collective signatures in sequence order (the
+    /// first-arriving rank's string per slot). This is the dynamic half
+    /// of the static/dynamic cross-check: `tests/trace_congruence.rs`
+    /// asserts this sequence concretizes detlint's statically inferred
+    /// entry-point trace. Empty slots (a rank died mid-collective) are
+    /// skipped.
+    #[cfg(debug_assertions)]
+    pub fn coll_signatures(&self) -> Vec<String> {
+        let table = self.congruence.lock().unwrap();
+        table.iter().filter_map(|s| s.as_ref().map(|(_, sig)| sig.clone())).collect()
+    }
+
+    /// Release builds do not record signatures.
+    #[cfg(not(debug_assertions))]
+    pub fn coll_signatures(&self) -> Vec<String> {
+        Vec::new()
+    }
+
     /// Mark the fabric dead (a rank panicked) and wake all receivers.
     pub fn poison(&self) {
         self.poisoned.store(true, Ordering::Release);

@@ -97,6 +97,22 @@ impl<'f> RankCtx<'f> {
     pub fn epochs_used(&self) -> u32 {
         self.epoch
     }
+
+    /// Debug builds: how many sig-emitting collectives this rank has
+    /// entered — the index into the fabric's congruence table. Reading
+    /// it before and after a phase brackets that phase's span of
+    /// [`Fabric::coll_signatures`] for the static/dynamic trace
+    /// cross-check.
+    #[cfg(debug_assertions)]
+    pub fn collectives_entered(&self) -> u64 {
+        self.coll_seq
+    }
+
+    /// Release builds do not track collective entries.
+    #[cfg(not(debug_assertions))]
+    pub fn collectives_entered(&self) -> u64 {
+        0
+    }
 }
 
 /// Tags `0..TAG_USER_MAX` are free for application point-to-point traffic;

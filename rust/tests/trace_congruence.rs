@@ -1,0 +1,125 @@
+//! Static/dynamic collective-trace cross-check (detlint v2 ↔ fabric).
+//!
+//! detlint's interprocedural layer infers, per public `ctx`-taking entry
+//! point, the symbolic sequence of collectives it issues (with `loop{…}`
+//! and `alt{a|b}` nodes for data-dependent control flow). The
+//! debug-build fabric records the *actual* signature every rank
+//! presented at every collective slot. This test closes the loop: it
+//! replays a p=2 session (create + drifting repartition steps), brackets
+//! each phase with [`RankCtx::collectives_entered`], and asserts the
+//! recorded [`Fabric::coll_signatures`] span of every phase is a
+//! concretization of the statically inferred trace via
+//! [`detlint::trace_matches`].
+//!
+//! The two verifiers check each other: a collective added to
+//! `repartition` without detlint seeing it (a macro, an unresolvable
+//! call) fails here, and a detlint parser regression that drops part of
+//! a trace fails here too.
+
+use std::path::Path;
+
+use sfc_part::geom::point::PointSet;
+use sfc_part::partition::distributed::{DistSession, SessionConfig};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+
+use detlint::{analyze_files, read_tree, trace_matches, CrateAnalysis};
+
+const P: usize = 2;
+const STEPS: usize = 4;
+
+fn static_analysis() -> CrateAnalysis {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let files = read_tree(&src).expect("read rust/src");
+    analyze_files(&files)
+}
+
+/// Per-rank record: collective-seq spans for create + each step, plus
+/// the fabric's recorded signature table (identical across ranks — the
+/// table is shared, snapshotted after the last step).
+type RankLog = (Vec<(u64, u64)>, Vec<String>);
+
+#[test]
+fn runtime_coll_seq_concretizes_static_trace() {
+    if !cfg!(debug_assertions) {
+        // Release builds record no signatures; the cross-check is a
+        // debug-build contract (tier-1 `cargo test` runs debug).
+        return;
+    }
+    let analysis = static_analysis();
+    let create_trace = &analysis
+        .entry_trace("DistSession::create")
+        .expect("static trace for DistSession::create")
+        .trace;
+    let repart_trace = &analysis
+        .entry_trace("DistSession::repartition")
+        .expect("static trace for DistSession::repartition")
+        .trace;
+
+    let global = PointSet::uniform(2000, 3, 97);
+    let cfg = PartitionConfig::default();
+    let scenario = Scenario::new(ScenarioKind::Hotspot);
+
+    let (logs, _) = run_ranks_threaded(P, 1, CostModel::default(), |ctx| -> RankLog {
+        let local = global.mod_shard(ctx.rank, ctx.n_ranks);
+        let mut spans = Vec::with_capacity(STEPS + 1);
+        let b = ctx.collectives_entered();
+        let mut sess = DistSession::create(ctx, &local, &cfg, 4 * P, SessionConfig::default());
+        spans.push((b, ctx.collectives_entered()));
+        for step in 0..STEPS {
+            let batch = scenario.update_for(sess.local(), step);
+            let b = ctx.collectives_entered();
+            sess.repartition(ctx, &batch);
+            spans.push((b, ctx.collectives_entered()));
+        }
+        (spans, ctx.fabric.coll_signatures())
+    });
+
+    // Both ranks issued identical spans (SPMD discipline), and every
+    // recorded slot was entered by both (table length == per-rank seq).
+    let (spans0, sigs) = &logs[0];
+    for (r, (spans, sigs_r)) in logs.iter().enumerate() {
+        assert_eq!(spans, spans0, "rank {r} diverged in collective spans");
+        assert_eq!(sigs_r, sigs, "rank {r} snapshotted a different table");
+    }
+    let last = spans0.last().expect("at least one span").1;
+    assert_eq!(sigs.len() as u64, last, "congruence table has holes");
+
+    // Each phase's recorded signature span concretizes its static trace.
+    let phase = |i: usize| &sigs[spans0[i].0 as usize..spans0[i].1 as usize];
+    assert!(
+        trace_matches(create_trace, phase(0)),
+        "create: runtime {:?} does not concretize static {:?}",
+        phase(0),
+        create_trace,
+    );
+    for step in 0..STEPS {
+        let seq = phase(step + 1);
+        assert!(
+            trace_matches(repart_trace, seq),
+            "repartition step {step}: runtime {seq:?} does not concretize static {repart_trace:?}",
+        );
+        // The trace must also be non-vacuous: every step issues at least
+        // the fused refresh + migration collectives.
+        assert!(seq.len() >= 3, "repartition step {step} issued only {} collectives", seq.len());
+    }
+}
+
+/// The static analyzer itself must hold the shipped tree finding-free —
+/// the same gate `cargo run -p detlint -- rust/src` enforces in CI, kept
+/// here so `cargo test` alone catches a drift.
+#[test]
+fn shipped_tree_has_no_interproc_findings() {
+    let analysis = static_analysis();
+    let findings = analysis.findings();
+    assert!(
+        findings.is_empty(),
+        "interprocedural findings on the shipped tree:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n"),
+    );
+}

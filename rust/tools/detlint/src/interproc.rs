@@ -1,0 +1,1781 @@
+//! Interprocedural collective-trace inference (detlint v2).
+//!
+//! Built on the same hand-rolled lexer as the per-file rules: every file
+//! is tokenized, every `fn` item is extracted with its impl/trait
+//! qualification, and each body is parsed into a small *effect tree* —
+//! the ordered sequence of calls, sig-emitting collective markers,
+//! early returns, and symbolic `loop{…}` / `branch{a|b}` nodes. Call
+//! sites resolve through a crate-wide name index (dotted calls to
+//! `&self` methods, free calls to free fns, `Type::`-qualified calls to
+//! that impl), and per-function *collective effect signatures* flatten
+//! bottom-up through the call graph into [`TraceNode`] sequences.
+//!
+//! The traces power three rule families:
+//!
+//! - **R5 `branch-congruence`** — a call that transitively issues
+//!   collectives inside a rank-local branch (or after a rank-local
+//!   early return) diverges exactly like a direct collective would (R1
+//!   only sees direct calls); arms of a *non*-rank-local conditional
+//!   must agree on their collective effect (one-sided conditionals are
+//!   presumed SPMD-uniform and pass).
+//! - **R6 `loop-divergence`** — a loop whose bound reads rank-local
+//!   data (`rank`, `is_root`, dotted `len`/`is_empty`) must have an
+//!   empty transitive collective effect, or every rank may run a
+//!   different number of collective-bearing iterations.
+//! - **R7 `epoch-arithmetic`** — raw `fabric.send`/`fabric.recv` tags
+//!   must derive from `next_epoch()`/`alloc_tags(n)` (a forward
+//!   dataflow over `let` bindings); manual `.epoch` arithmetic outside
+//!   `rank.rs` is flagged; and each sig-emitting collective's direct
+//!   tag-allocation-site count must match the [`EPOCH_SITES`] table, so
+//!   a round-structure change cannot silently drift the tag namespace.
+//!
+//! `detlint --trace` serializes every public `ctx`-taking entry point's
+//! flattened trace as JSON ([`CrateAnalysis::traces_json`]); the
+//! runtime test `rust/tests/trace_congruence.rs` replays session steps
+//! and asserts the fabric's recorded signature sequence is a
+//! concretization of the static trace via [`trace_matches`].
+//!
+//! Known approximations (all conservative for the shipped tree): macro
+//! bodies other than `coll_sig!` are skipped, nested `fn` items inside
+//! bodies are opaque, trait-object / ambiguous calls flatten to the
+//! empty effect, and closure bodies are treated as executing inline at
+//! their definition site.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::{lex, push_checked, Finding, Tok, COLLECTIVES, R1_EXEMPT_SUFFIX};
+
+/// Cap on trace variants kept per effect-list flattening: branches with
+/// equal arms dedupe to one variant, so only genuinely divergent code
+/// (an R5 finding anyway) approaches this.
+const MAX_VARIANTS: usize = 16;
+
+/// Expected direct `next_epoch`/`alloc_tags` call sites per sig-emitting
+/// collective in `runtime_sim/collectives.rs` — the documented tag
+/// consumption R7 cross-checks against each body. A collective whose
+/// round structure changes must update this table in the same commit.
+pub const EPOCH_SITES: &[(&str, usize)] = &[
+    ("barrier", 0),
+    ("broadcast_bytes", 1),
+    ("reduce_f64", 1),
+    ("allreduce_f64", 1),
+    ("allreduce_multi", 2),
+    ("allreduce_u64", 2),
+    ("exscan_f64", 1),
+    ("exscan_u64_many", 1),
+    ("gather_bytes", 1),
+    ("allgather_bytes", 0),
+    ("alltoallv_rounds", 1),
+    ("reduce_scatter_f64", 1),
+];
+
+/// One node of a flattened collective trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceNode {
+    /// A collective issued here, named after the sig-emitting
+    /// collective fn (`barrier`, `allreduce_u64`, …).
+    Coll(String),
+    /// Zero or more repetitions of the body.
+    Loop(Vec<TraceNode>),
+    /// Exactly one of the alternative sequences.
+    Alt(Vec<Vec<TraceNode>>),
+}
+
+/// A public `ctx`-taking entry point and its flattened trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryTrace {
+    pub file: String,
+    pub line: usize,
+    /// `Type::name` for methods, bare `name` for free fns.
+    pub name: String,
+    pub trace: Vec<TraceNode>,
+}
+
+/// Crate-wide analysis result: R5–R7 findings plus per-entry traces.
+pub struct CrateAnalysis {
+    findings: Vec<Finding>,
+    entries: Vec<EntryTrace>,
+}
+
+impl CrateAnalysis {
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    pub fn into_findings(self) -> Vec<Finding> {
+        self.findings
+    }
+
+    pub fn entry_traces(&self) -> &[EntryTrace] {
+        &self.entries
+    }
+
+    /// Look up an entry trace by qualified name (`DistSession::repartition`).
+    pub fn entry_trace(&self, name: &str) -> Option<&EntryTrace> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Deterministic JSON for `--trace` / `traces.lock`. Line numbers
+    /// are deliberately omitted so unrelated edits don't churn the lock
+    /// file — only a *trace* change fails the CI diff.
+    pub fn traces_json(&self) -> String {
+        let mut out = String::from("{\n  \"entries\": [");
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"file\": {}, \"trace\": {}}}",
+                crate::json_str(&e.name),
+                crate::json_str(&e.file),
+                trace_json(&e.trace),
+            ));
+        }
+        if !self.entries.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+fn trace_json(trace: &[TraceNode]) -> String {
+    let parts: Vec<String> = trace.iter().map(node_json).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+fn node_json(n: &TraceNode) -> String {
+    match n {
+        TraceNode::Coll(s) => crate::json_str(s),
+        TraceNode::Loop(b) => format!("{{\"loop\": {}}}", trace_json(b)),
+        TraceNode::Alt(arms) => {
+            let parts: Vec<String> = arms.iter().map(|a| trace_json(a)).collect();
+            format!("{{\"alt\": [{}]}}", parts.join(", "))
+        }
+    }
+}
+
+/// Compact human rendering of a trace, for findings and diagnostics.
+pub fn trace_str(trace: &[TraceNode]) -> String {
+    let parts: Vec<String> = trace.iter().map(node_str).collect();
+    parts.join(", ")
+}
+
+fn node_str(n: &TraceNode) -> String {
+    match n {
+        TraceNode::Coll(s) => s.clone(),
+        TraceNode::Loop(b) => format!("loop{{{}}}", trace_str(b)),
+        TraceNode::Alt(arms) => {
+            let parts: Vec<String> = arms.iter().map(|a| trace_str(a)).collect();
+            format!("alt{{{}}}", parts.join(" | "))
+        }
+    }
+}
+
+/// The collective name of a runtime signature: the prefix before the
+/// first `(` (`"allreduce_u64(op=Sum, lanes=3)"` → `"allreduce_u64"`).
+pub fn sig_name(sig: &str) -> &str {
+    sig.split('(').next().unwrap_or(sig)
+}
+
+/// Does the runtime signature sequence `seq` concretize the symbolic
+/// trace? Position-set (NFA) simulation: `Loop` closes under repeated
+/// body matches, `Alt` unions its arms; polynomial and total.
+pub fn trace_matches(trace: &[TraceNode], seq: &[String]) -> bool {
+    let mut start = BTreeSet::new();
+    start.insert(0usize);
+    let end = match_from(trace, seq, &start);
+    end.contains(&seq.len())
+}
+
+fn match_from(nodes: &[TraceNode], seq: &[String], pos: &BTreeSet<usize>) -> BTreeSet<usize> {
+    let mut cur = pos.clone();
+    for node in nodes {
+        if cur.is_empty() {
+            break;
+        }
+        cur = match_step(node, seq, &cur);
+    }
+    cur
+}
+
+fn match_step(node: &TraceNode, seq: &[String], pos: &BTreeSet<usize>) -> BTreeSet<usize> {
+    match node {
+        TraceNode::Coll(name) => pos
+            .iter()
+            .filter(|&&p| p < seq.len() && sig_name(&seq[p]) == name)
+            .map(|&p| p + 1)
+            .collect(),
+        TraceNode::Alt(arms) => {
+            let mut out = BTreeSet::new();
+            for arm in arms {
+                out.extend(match_from(arm, seq, pos));
+            }
+            out
+        }
+        TraceNode::Loop(body) => {
+            // zero-or-more: monotone fixpoint over reachable positions
+            let mut acc = pos.clone();
+            let mut frontier = pos.clone();
+            loop {
+                let next = match_from(body, seq, &frontier);
+                let fresh: BTreeSet<usize> = next.difference(&acc).copied().collect();
+                if fresh.is_empty() {
+                    break;
+                }
+                acc.extend(fresh.iter().copied());
+                frontier = fresh;
+            }
+            acc
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Effect extraction
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CallKind {
+    /// `.name(` — resolves to `&self` methods.
+    Dotted,
+    /// `name(` — resolves to free fns.
+    Free,
+    /// `Qual::name(` — resolves within `Qual`'s impl (or falls back to
+    /// free fns for module-path calls).
+    Qualified,
+}
+
+#[derive(Debug, Clone)]
+enum Effect {
+    /// A `coll_sig!` / `check_collective` marker: the enclosing fn *is*
+    /// a sig-emitting collective named after itself.
+    SigSelf { line: usize },
+    Call { name: String, qual: Option<String>, kind: CallKind, line: usize },
+    Return { line: usize },
+    Loop { why: Option<String>, line: usize, body: Vec<Effect> },
+    Branch { why: Option<String>, line: usize, arms: Vec<Vec<Effect>> },
+}
+
+struct FnInfo {
+    rel: String,
+    name: String,
+    /// Impl/trait type this fn is defined on, if any.
+    qual: Option<String>,
+    line: usize,
+    is_pub: bool,
+    has_self: bool,
+    has_ctx: bool,
+    in_test: bool,
+    body: Vec<Effect>,
+    /// Token range of the body, for the R7 token-level scans.
+    body_span: (usize, usize),
+    /// Pattern idents bound in the signature (tag-derivation seeds).
+    params: Vec<String>,
+}
+
+struct FileData {
+    rel: String,
+    toks: Vec<Tok>,
+    comments: BTreeMap<usize, String>,
+    code_lines: BTreeSet<usize>,
+    /// Indices into the crate-wide fn table.
+    fn_ids: Vec<usize>,
+}
+
+/// Skip an attribute starting at the `[` at `k`; returns the index just
+/// past the closing `]` and whether the attribute mentions `test`.
+fn skip_attr(toks: &[Tok], k: usize) -> (usize, bool) {
+    let mut d = 0i64;
+    let mut j = k;
+    let mut has_test = false;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.text == "[" {
+            d += 1;
+        } else if t.text == "]" {
+            d -= 1;
+            if d == 0 {
+                return (j + 1, has_test);
+            }
+        } else if t.is_ident && t.text == "test" {
+            has_test = true;
+        }
+        j += 1;
+    }
+    (j, has_test)
+}
+
+/// Rank-local markers in a captured condition/bound: `rank`, `is_root`,
+/// or a dotted `len()`/`is_empty()` read (same markers as R1).
+fn rank_local(toks: &[Tok], idxs: &[usize]) -> Option<String> {
+    for &i in idxs {
+        let t = &toks[i];
+        if !t.is_ident {
+            continue;
+        }
+        match t.text.as_str() {
+            "rank" => return Some("reads `rank`".to_string()),
+            "is_root" => return Some("calls `is_root()`".to_string()),
+            "len" | "is_empty" if i > 0 && toks[i - 1].text == "." => {
+                return Some(format!("reads a rank-local `{}()`", t.text));
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+const NOT_CALLS: &[&str] = &[
+    "if", "else", "while", "for", "match", "return", "loop", "fn", "in", "as", "move", "let",
+    "break", "continue", "where", "impl", "dyn", "unsafe",
+];
+
+fn call_at(toks: &[Tok], i: usize) -> Effect {
+    let name = toks[i].text.clone();
+    let line = toks[i].line;
+    let (kind, qual) = if i >= 1 && toks[i - 1].text == "." {
+        (CallKind::Dotted, None)
+    } else if i >= 2 && toks[i - 1].text == ":" && toks[i - 2].text == ":" {
+        let q = if i >= 3 && toks[i - 3].is_ident { Some(toks[i - 3].text.clone()) } else { None };
+        (CallKind::Qualified, q)
+    } else {
+        (CallKind::Free, None)
+    };
+    Effect::Call { name, qual, kind, line }
+}
+
+/// Flat effect scan over captured tokens (condition headers, expression
+/// match arms): calls and sig markers in order, `return` appended last.
+fn scan_flat(toks: &[Tok], idxs: &[usize], with_return: bool) -> Vec<Effect> {
+    let mut out = Vec::new();
+    let mut ret: Option<usize> = None;
+    for &i in idxs {
+        let t = &toks[i];
+        if !t.is_ident {
+            continue;
+        }
+        let next = toks.get(i + 1).map_or("", |t| t.text.as_str());
+        if t.text == "coll_sig" && next == "!" {
+            out.push(Effect::SigSelf { line: t.line });
+            continue;
+        }
+        if t.text == "check_collective" && next == "(" {
+            out.push(Effect::SigSelf { line: t.line });
+            continue;
+        }
+        if t.text == "return" {
+            ret = Some(t.line);
+            continue;
+        }
+        if next == "(" && !NOT_CALLS.contains(&t.text.as_str()) {
+            out.push(call_at(toks, i));
+        }
+    }
+    if with_return {
+        if let Some(line) = ret {
+            out.push(Effect::Return { line });
+        }
+    }
+    out
+}
+
+/// Recursive-descent effect parser over a fn body's token stream.
+struct BodyParser<'a> {
+    toks: &'a [Tok],
+    k: usize,
+}
+
+impl BodyParser<'_> {
+    fn text(&self, i: usize) -> &str {
+        self.toks.get(i).map_or("", |t| t.text.as_str())
+    }
+
+    fn line(&self, i: usize) -> usize {
+        self.toks.get(i).map_or(0, |t| t.line)
+    }
+
+    fn is_ident(&self, i: usize) -> bool {
+        self.toks.get(i).is_some_and(|t| t.is_ident)
+    }
+
+    /// Parse from just past a `{` through its matching `}`.
+    fn parse_block(&mut self) -> Vec<Effect> {
+        let mut out = Vec::new();
+        let mut pending_return: Option<usize> = None;
+        while self.k < self.toks.len() {
+            let txt = self.text(self.k).to_string();
+            let isid = self.is_ident(self.k);
+            match txt.as_str() {
+                "}" => {
+                    if let Some(l) = pending_return.take() {
+                        out.push(Effect::Return { line: l });
+                    }
+                    self.k += 1;
+                    return out;
+                }
+                "{" => {
+                    self.k += 1;
+                    out.extend(self.parse_block());
+                }
+                ";" => {
+                    if let Some(l) = pending_return.take() {
+                        out.push(Effect::Return { line: l });
+                    }
+                    self.k += 1;
+                }
+                "#" if self.text(self.k + 1) == "[" => {
+                    self.k = skip_attr(self.toks, self.k + 1).0;
+                }
+                "if" if isid => {
+                    let effs = self.parse_if();
+                    out.extend(effs);
+                }
+                "while" if isid => {
+                    let e = self.parse_while();
+                    out.push(e);
+                }
+                "for" if isid => {
+                    let effs = self.parse_for();
+                    out.extend(effs);
+                }
+                "loop" if isid => {
+                    let e = self.parse_loop();
+                    out.push(e);
+                }
+                "match" if isid => {
+                    let effs = self.parse_match();
+                    out.extend(effs);
+                }
+                "return" if isid => {
+                    pending_return = Some(self.line(self.k));
+                    self.k += 1;
+                }
+                "fn" if isid && self.is_ident(self.k + 1) => {
+                    self.skip_nested_fn();
+                }
+                _ => {
+                    if isid && self.text(self.k + 1) == "!" && txt != "coll_sig" {
+                        // macro invocation: opaque
+                        self.k += 2;
+                        self.skip_balanced_if_delim();
+                    } else if isid && (txt == "coll_sig" || txt == "check_collective") {
+                        out.push(Effect::SigSelf { line: self.line(self.k) });
+                        self.k += 1;
+                        if self.text(self.k) == "!" {
+                            self.k += 1;
+                            self.skip_balanced_if_delim();
+                        }
+                    } else if isid
+                        && self.text(self.k + 1) == "("
+                        && !NOT_CALLS.contains(&txt.as_str())
+                    {
+                        out.push(call_at(self.toks, self.k));
+                        self.k += 1;
+                    } else {
+                        self.k += 1;
+                    }
+                }
+            }
+        }
+        if let Some(l) = pending_return.take() {
+            out.push(Effect::Return { line: l });
+        }
+        out
+    }
+
+    /// Capture condition tokens up to the block `{`, consuming it. An
+    /// `if let`/`while let` pattern (which may contain `{`) is skipped
+    /// up to its depth-0 `=` first.
+    fn capture_cond_header(&mut self) -> Vec<usize> {
+        let mut hdr = Vec::new();
+        if self.text(self.k) == "let" && self.is_ident(self.k) {
+            self.k += 1;
+            let mut d = 0i64;
+            while self.k < self.toks.len() {
+                match self.text(self.k) {
+                    "(" | "[" | "{" => d += 1,
+                    ")" | "]" | "}" => d -= 1,
+                    "=" if d == 0 && self.text(self.k + 1) != "=" => {
+                        self.k += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+                self.k += 1;
+            }
+        }
+        let mut d = 0i64;
+        while self.k < self.toks.len() {
+            match self.text(self.k) {
+                "(" | "[" => d += 1,
+                ")" | "]" => d -= 1,
+                "{" => {
+                    if d <= 0 {
+                        self.k += 1;
+                        return hdr;
+                    }
+                    d += 1;
+                }
+                "}" => d -= 1,
+                _ => {}
+            }
+            hdr.push(self.k);
+            self.k += 1;
+        }
+        hdr
+    }
+
+    fn parse_if(&mut self) -> Vec<Effect> {
+        let line = self.line(self.k);
+        self.k += 1;
+        let hdr = self.capture_cond_header();
+        let why = rank_local(self.toks, &hdr);
+        // the condition is evaluated by every rank before the split
+        let mut out = scan_flat(self.toks, &hdr, false);
+        let arm1 = self.parse_block();
+        let mut arms = vec![arm1];
+        if self.text(self.k) == "else" && self.is_ident(self.k) {
+            self.k += 1;
+            if self.text(self.k) == "if" && self.is_ident(self.k) {
+                arms.push(self.parse_if());
+            } else if self.text(self.k) == "{" {
+                self.k += 1;
+                arms.push(self.parse_block());
+            } else {
+                arms.push(Vec::new());
+            }
+        } else {
+            arms.push(Vec::new());
+        }
+        out.push(Effect::Branch { why, line, arms });
+        out
+    }
+
+    fn parse_while(&mut self) -> Effect {
+        let line = self.line(self.k);
+        self.k += 1;
+        let hdr = self.capture_cond_header();
+        let why = rank_local(self.toks, &hdr);
+        // the bound is re-evaluated each iteration: header effects live
+        // inside the loop
+        let mut body = scan_flat(self.toks, &hdr, false);
+        body.extend(self.parse_block());
+        Effect::Loop { why, line, body }
+    }
+
+    fn parse_for(&mut self) -> Vec<Effect> {
+        let line = self.line(self.k);
+        self.k += 1;
+        let hdr = self.capture_cond_header();
+        let mut iter_part: &[usize] = &hdr;
+        for (w, &i) in hdr.iter().enumerate() {
+            if self.toks[i].is_ident && self.toks[i].text == "in" {
+                iter_part = &hdr[w + 1..];
+                break;
+            }
+        }
+        let why = rank_local(self.toks, iter_part);
+        // the iterator expression is evaluated once, before the loop
+        let mut out = scan_flat(self.toks, iter_part, false);
+        let body = self.parse_block();
+        out.push(Effect::Loop { why, line, body });
+        out
+    }
+
+    fn parse_loop(&mut self) -> Effect {
+        let line = self.line(self.k);
+        self.k += 1;
+        while self.k < self.toks.len() && self.text(self.k) != "{" {
+            self.k += 1;
+        }
+        self.k += 1;
+        Effect::Loop { why: None, line, body: self.parse_block() }
+    }
+
+    fn parse_match(&mut self) -> Vec<Effect> {
+        let line = self.line(self.k);
+        self.k += 1;
+        let hdr = self.capture_cond_header();
+        let why = rank_local(self.toks, &hdr);
+        let mut out = scan_flat(self.toks, &hdr, false);
+        let mut arms: Vec<Vec<Effect>> = Vec::new();
+        loop {
+            while self.text(self.k) == "#" && self.text(self.k + 1) == "[" {
+                self.k = skip_attr(self.toks, self.k + 1).0;
+            }
+            if self.k >= self.toks.len() || self.text(self.k) == "}" {
+                self.k += 1;
+                break;
+            }
+            // pattern (and guard) up to the depth-0 `=>`
+            let mut d = 0i64;
+            let mut found_arrow = false;
+            while self.k < self.toks.len() {
+                let t = self.text(self.k);
+                if d == 0 && t == "=" && self.text(self.k + 1) == ">" {
+                    self.k += 2;
+                    found_arrow = true;
+                    break;
+                }
+                if d == 0 && t == "}" {
+                    break;
+                }
+                match t {
+                    "(" | "[" | "{" => d += 1,
+                    ")" | "]" | "}" => d -= 1,
+                    _ => {}
+                }
+                self.k += 1;
+            }
+            if !found_arrow {
+                continue;
+            }
+            if self.text(self.k) == "{" {
+                self.k += 1;
+                arms.push(self.parse_block());
+                if self.text(self.k) == "," {
+                    self.k += 1;
+                }
+            } else {
+                // expression arm: flat scan up to the depth-0 `,` / `}`
+                let mut d2 = 0i64;
+                let mut expr: Vec<usize> = Vec::new();
+                while self.k < self.toks.len() {
+                    let t = self.text(self.k);
+                    if d2 == 0 && t == "," {
+                        self.k += 1;
+                        break;
+                    }
+                    if d2 == 0 && t == "}" {
+                        break;
+                    }
+                    match t {
+                        "(" | "[" | "{" => d2 += 1,
+                        ")" | "]" | "}" => d2 -= 1,
+                        _ => {}
+                    }
+                    expr.push(self.k);
+                    self.k += 1;
+                }
+                arms.push(scan_flat(self.toks, &expr, true));
+            }
+        }
+        out.push(Effect::Branch { why, line, arms });
+        out
+    }
+
+    /// Nested `fn` items are opaque: skip the signature and body.
+    fn skip_nested_fn(&mut self) {
+        self.k += 1;
+        let mut d = 0i64;
+        while self.k < self.toks.len() {
+            match self.text(self.k) {
+                "(" | "[" => d += 1,
+                ")" | "]" => d -= 1,
+                ";" if d == 0 => {
+                    self.k += 1;
+                    return;
+                }
+                "{" if d == 0 => break,
+                _ => {}
+            }
+            self.k += 1;
+        }
+        let mut bd = 0i64;
+        while self.k < self.toks.len() {
+            match self.text(self.k) {
+                "{" => bd += 1,
+                "}" => {
+                    bd -= 1;
+                    if bd == 0 {
+                        self.k += 1;
+                        return;
+                    }
+                }
+                _ => {}
+            }
+            self.k += 1;
+        }
+    }
+
+    fn skip_balanced_if_delim(&mut self) {
+        if !matches!(self.text(self.k), "(" | "[" | "{") {
+            return;
+        }
+        let mut d = 0i64;
+        while self.k < self.toks.len() {
+            match self.text(self.k) {
+                "(" | "[" | "{" => d += 1,
+                ")" | "]" | "}" => {
+                    d -= 1;
+                    if d == 0 {
+                        self.k += 1;
+                        return;
+                    }
+                }
+                _ => {}
+            }
+            self.k += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Item extraction
+// ---------------------------------------------------------------------------
+
+struct ScopeEntry {
+    open_depth: i64,
+    qual: Option<String>,
+    test: bool,
+}
+
+/// Extract every bodied `fn` item in one file.
+fn extract_fns(rel: &str, toks: &[Tok]) -> Vec<FnInfo> {
+    let mut fns = Vec::new();
+    let mut depth = 0i64;
+    let mut scopes: Vec<ScopeEntry> = Vec::new();
+    let mut pending_pub = false;
+    let mut pending_test = false;
+    let n = toks.len();
+    let mut k = 0usize;
+    while k < n {
+        let t = &toks[k];
+        let txt = t.text.as_str();
+        match txt {
+            "#" if k + 1 < n && toks[k + 1].text == "[" => {
+                let (j, has_test) = skip_attr(toks, k + 1);
+                if has_test {
+                    pending_test = true;
+                }
+                k = j;
+            }
+            "{" => {
+                depth += 1;
+                pending_pub = false;
+                k += 1;
+            }
+            "}" => {
+                depth -= 1;
+                while scopes.last().is_some_and(|s| s.open_depth > depth) {
+                    scopes.pop();
+                }
+                pending_pub = false;
+                pending_test = false;
+                k += 1;
+            }
+            ";" => {
+                pending_pub = false;
+                pending_test = false;
+                k += 1;
+            }
+            "pub" if t.is_ident => {
+                pending_pub = true;
+                k += 1;
+            }
+            "impl" | "trait" if t.is_ident => {
+                let (qual, next) = parse_impl_header(toks, k + 1, txt == "trait");
+                depth += 1;
+                scopes.push(ScopeEntry { open_depth: depth, qual, test: false });
+                pending_pub = false;
+                pending_test = false;
+                k = next;
+            }
+            "mod" if t.is_ident => {
+                if k + 2 < n && toks[k + 2].text == "{" {
+                    depth += 1;
+                    let inherited = scopes.iter().any(|s| s.test);
+                    scopes.push(ScopeEntry {
+                        open_depth: depth,
+                        qual: None,
+                        test: pending_test || inherited,
+                    });
+                    k += 3;
+                } else {
+                    k += 2;
+                }
+                pending_pub = false;
+                pending_test = false;
+            }
+            "fn" if t.is_ident && k + 1 < n && toks[k + 1].is_ident => {
+                let in_test = pending_test || scopes.iter().any(|s| s.test);
+                let qual = scopes.iter().rev().find_map(|s| s.qual.clone());
+                if let Some((info, next)) =
+                    parse_fn(rel, toks, k, pending_pub, in_test, qual)
+                {
+                    fns.push(info);
+                    k = next;
+                } else {
+                    k += 1;
+                }
+                pending_pub = false;
+                pending_test = false;
+            }
+            _ => {
+                k += 1;
+            }
+        }
+    }
+    fns
+}
+
+/// Parse an `impl`/`trait` header starting just past the keyword:
+/// returns the impl type (the last angle-depth-0 path ident, after
+/// `for` if present) and the index just past the opening `{`.
+fn parse_impl_header(toks: &[Tok], mut k: usize, is_trait: bool) -> (Option<String>, usize) {
+    let mut angle = 0i64;
+    let mut best: Option<String> = None;
+    let mut stopped = false;
+    while k < toks.len() && toks[k].text != "{" {
+        let t = &toks[k];
+        match t.text.as_str() {
+            "<" => angle += 1,
+            ">" => {
+                if k == 0 || toks[k - 1].text != "-" {
+                    angle -= 1;
+                }
+            }
+            "where" if t.is_ident && angle == 0 => stopped = true,
+            "for" if t.is_ident && angle == 0 && !is_trait && !stopped => best = None,
+            _ => {
+                if t.is_ident
+                    && angle == 0
+                    && !stopped
+                    && !matches!(t.text.as_str(), "mut" | "dyn" | "const" | "unsafe")
+                {
+                    best = Some(t.text.clone());
+                }
+            }
+        }
+        k += 1;
+    }
+    (best, k + 1)
+}
+
+/// Parse one `fn` item starting at the `fn` keyword. Returns `None` for
+/// bodiless declarations (trait method signatures).
+fn parse_fn(
+    rel: &str,
+    toks: &[Tok],
+    k: usize,
+    is_pub: bool,
+    in_test: bool,
+    qual: Option<String>,
+) -> Option<(FnInfo, usize)> {
+    let n = toks.len();
+    let name = toks[k + 1].text.clone();
+    let line = toks[k + 1].line;
+    let mut j = k + 2;
+    // generics: `>` preceded by `-` is a return arrow inside `Fn(..) -> R`
+    if j < n && toks[j].text == "<" {
+        let mut angle = 1i64;
+        j += 1;
+        while j < n && angle > 0 {
+            match toks[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => {
+                    if toks[j - 1].text != "-" {
+                        angle -= 1;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    while j < n && toks[j].text != "(" {
+        j += 1;
+    }
+    // parameter list (outermost parens excluded, nested ones kept
+    // balanced so `param_names` can track depth)
+    let mut pd = 0i64;
+    let mut param_toks: Vec<usize> = Vec::new();
+    while j < n {
+        match toks[j].text.as_str() {
+            "(" => {
+                pd += 1;
+                if pd >= 2 {
+                    param_toks.push(j);
+                }
+            }
+            ")" => {
+                pd -= 1;
+                if pd == 0 {
+                    j += 1;
+                    break;
+                }
+                param_toks.push(j);
+            }
+            _ => {
+                if pd >= 1 {
+                    param_toks.push(j);
+                }
+            }
+        }
+        j += 1;
+    }
+    let has_self = param_toks.iter().any(|&i| toks[i].is_ident && toks[i].text == "self");
+    let has_ctx = param_toks
+        .iter()
+        .any(|&i| toks[i].is_ident && (toks[i].text == "ctx" || toks[i].text == "RankCtx"));
+    let params = param_names(toks, &param_toks);
+    // return type / where clause, then body `{` or bodiless `;`
+    let mut d2 = 0i64;
+    while j < n {
+        match toks[j].text.as_str() {
+            "(" | "[" => d2 += 1,
+            ")" | "]" => d2 -= 1,
+            ";" if d2 == 0 => return None,
+            "{" if d2 == 0 => break,
+            _ => {}
+        }
+        j += 1;
+    }
+    if j >= n {
+        return None;
+    }
+    let body_start = j + 1;
+    let mut p = BodyParser { toks, k: body_start };
+    let body = p.parse_block();
+    let body_end = p.k.saturating_sub(1);
+    Some((
+        FnInfo {
+            rel: rel.to_string(),
+            name,
+            qual,
+            line,
+            is_pub,
+            has_self,
+            has_ctx,
+            in_test,
+            body,
+            body_span: (body_start, body_end),
+            params,
+        },
+        p.k,
+    ))
+}
+
+/// Pattern idents bound in a parameter list: for each comma-separated
+/// parameter, the idents before its `:` (handles `mut x`, tuple
+/// patterns; skips `self`).
+fn param_names(toks: &[Tok], param_toks: &[usize]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut d = 0i64;
+    let mut in_ty = false;
+    for &i in param_toks {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "(" | "[" | "<" => d += 1,
+            // `>` closing a return arrow (`Fn(..) -> R`) is not a generic close
+            ">" if i == 0 || toks[i - 1].text != "-" => d -= 1,
+            ")" | "]" => d -= 1,
+            ":" if d == 0 => in_ty = true,
+            "," if d == 0 => in_ty = false,
+            _ => {
+                if !in_ty && t.is_ident && !matches!(t.text.as_str(), "mut" | "ref" | "self") {
+                    out.push(t.text.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Call resolution + flattening
+// ---------------------------------------------------------------------------
+
+struct Flattener<'a> {
+    fns: &'a [FnInfo],
+    /// name → fn indices (non-test fns only).
+    index: &'a BTreeMap<String, Vec<usize>>,
+    memo: BTreeMap<usize, Vec<TraceNode>>,
+    active: Vec<usize>,
+}
+
+impl Flattener<'_> {
+    /// Resolve a call site to a fn index: dotted calls to `&self`
+    /// methods, free calls to free fns, `Qual::` to that impl (`Self::`
+    /// through the caller's impl). Same-file unique match wins, then a
+    /// globally unique one; ambiguity resolves to nothing (empty
+    /// effect — conservative for traces, silent for rules).
+    fn resolve(
+        &self,
+        caller: usize,
+        name: &str,
+        qual: Option<&str>,
+        kind: CallKind,
+    ) -> Option<usize> {
+        let cands = self.index.get(name)?;
+        let fns = self.fns;
+        let caller_rel = &fns[caller].rel;
+        let pick = |matched: &[usize]| -> Option<usize> {
+            let same: Vec<usize> =
+                matched.iter().copied().filter(|&j| &fns[j].rel == caller_rel).collect();
+            if same.len() == 1 {
+                return Some(same[0]);
+            }
+            if matched.len() == 1 {
+                return Some(matched[0]);
+            }
+            None
+        };
+        match kind {
+            CallKind::Qualified => {
+                let q = match qual {
+                    Some("Self") => fns[caller].qual.as_deref(),
+                    q => q,
+                };
+                if let Some(q) = q {
+                    let m: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&j| fns[j].qual.as_deref() == Some(q))
+                        .collect();
+                    if !m.is_empty() {
+                        return pick(&m);
+                    }
+                }
+                // module-path call (`median::distributed_median_bisect`)
+                let m: Vec<usize> = cands.iter().copied().filter(|&j| !fns[j].has_self).collect();
+                pick(&m)
+            }
+            CallKind::Dotted => {
+                let m: Vec<usize> = cands.iter().copied().filter(|&j| fns[j].has_self).collect();
+                pick(&m)
+            }
+            CallKind::Free => {
+                let m: Vec<usize> = cands.iter().copied().filter(|&j| !fns[j].has_self).collect();
+                pick(&m)
+            }
+        }
+    }
+
+    /// The callee's flattened trace for one call effect, if it resolves.
+    fn call_trace(
+        &mut self,
+        caller: usize,
+        name: &str,
+        qual: Option<&str>,
+        kind: CallKind,
+    ) -> Option<Vec<TraceNode>> {
+        let j = self.resolve(caller, name, qual, kind)?;
+        Some(self.flat_fn(j))
+    }
+
+    /// Flatten one fn to its trace; memoized, cycles cut to empty.
+    fn flat_fn(&mut self, i: usize) -> Vec<TraceNode> {
+        if let Some(t) = self.memo.get(&i) {
+            return t.clone();
+        }
+        if self.active.contains(&i) {
+            return Vec::new();
+        }
+        self.active.push(i);
+        let fns = self.fns;
+        let body: &[Effect] = &fns[i].body;
+        let vars = self.flat_list(body, i);
+        let mut traces: Vec<Vec<TraceNode>> = Vec::new();
+        for (t, _) in vars {
+            if !traces.contains(&t) {
+                traces.push(t);
+            }
+        }
+        let trace = if traces.len() == 1 {
+            traces.remove(0)
+        } else {
+            vec![TraceNode::Alt(traces)]
+        };
+        self.active.pop();
+        self.memo.insert(i, trace.clone());
+        trace
+    }
+
+    /// Flatten an effect list to its distinct trace variants, each
+    /// tagged with whether it ends in a `return` (continuation-aware:
+    /// a returning branch arm drops the rest of the sequence).
+    fn flat_list(&mut self, effects: &[Effect], me: usize) -> Vec<(Vec<TraceNode>, bool)> {
+        let Some(head) = effects.first() else {
+            return vec![(Vec::new(), false)];
+        };
+        let rest = &effects[1..];
+        match head {
+            Effect::SigSelf { .. } => {
+                let pre = vec![TraceNode::Coll(self.fns[me].name.clone())];
+                prepend(pre, self.flat_list(rest, me))
+            }
+            Effect::Call { name, qual, kind, .. } => {
+                let pre = self.call_trace(me, name, qual.as_deref(), *kind).unwrap_or_default();
+                prepend(pre, self.flat_list(rest, me))
+            }
+            Effect::Return { .. } => vec![(Vec::new(), true)],
+            Effect::Loop { body, .. } => {
+                let body_vars = self.flat_list(body, me);
+                let mut traces: Vec<Vec<TraceNode>> = Vec::new();
+                for (t, _) in body_vars {
+                    if !t.is_empty() && !traces.contains(&t) {
+                        traces.push(t);
+                    }
+                }
+                let pre: Vec<TraceNode> = if traces.is_empty() {
+                    Vec::new()
+                } else if traces.len() == 1 {
+                    vec![TraceNode::Loop(traces.remove(0))]
+                } else {
+                    vec![TraceNode::Loop(vec![TraceNode::Alt(traces)])]
+                };
+                prepend(pre, self.flat_list(rest, me))
+            }
+            Effect::Branch { arms, .. } => {
+                let rest_vars = self.flat_list(rest, me);
+                let mut out: Vec<(Vec<TraceNode>, bool)> = Vec::new();
+                for arm in arms {
+                    for (at, ret) in self.flat_list(arm, me) {
+                        if ret {
+                            push_unique(&mut out, (at, true));
+                        } else {
+                            for (rt, rret) in &rest_vars {
+                                let mut t = at.clone();
+                                t.extend(rt.iter().cloned());
+                                push_unique(&mut out, (t, *rret));
+                            }
+                        }
+                        if out.len() >= MAX_VARIANTS {
+                            break;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+fn prepend(
+    pre: Vec<TraceNode>,
+    vars: Vec<(Vec<TraceNode>, bool)>,
+) -> Vec<(Vec<TraceNode>, bool)> {
+    if pre.is_empty() {
+        return vars;
+    }
+    let mut out: Vec<(Vec<TraceNode>, bool)> = Vec::new();
+    for (t, r) in vars {
+        let mut nt = pre.clone();
+        nt.extend(t);
+        push_unique(&mut out, (nt, r));
+    }
+    out
+}
+
+fn push_unique(out: &mut Vec<(Vec<TraceNode>, bool)>, item: (Vec<TraceNode>, bool)) {
+    if !out.contains(&item) {
+        out.push(item);
+    }
+}
+
+/// Does this trace actually contain a collective anywhere?
+pub fn has_coll(trace: &[TraceNode]) -> bool {
+    trace.iter().any(|n| match n {
+        TraceNode::Coll(_) => true,
+        TraceNode::Loop(b) => has_coll(b),
+        TraceNode::Alt(arms) => arms.iter().any(|a| has_coll(a)),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// A direct dotted collective call is R1's domain; R5/R6 only report
+/// *transitive* effects so nothing is double-flagged.
+fn is_direct_collective(name: &str, kind: CallKind) -> bool {
+    kind == CallKind::Dotted && COLLECTIVES.contains(&name)
+}
+
+fn effects_have_transitive_coll(fl: &mut Flattener, me: usize, effects: &[Effect]) -> bool {
+    effects.iter().any(|e| match e {
+        Effect::SigSelf { .. } => true,
+        Effect::Call { name, qual, kind, .. } => {
+            !is_direct_collective(name, *kind)
+                && fl
+                    .call_trace(me, name, qual.as_deref(), *kind)
+                    .is_some_and(|t| has_coll(&t))
+        }
+        Effect::Return { .. } => false,
+        Effect::Loop { body, .. } => effects_have_transitive_coll(fl, me, body),
+        Effect::Branch { arms, .. } => {
+            arms.iter().any(|a| effects_have_transitive_coll(fl, me, a))
+        }
+    })
+}
+
+/// R5/R6 walk over one fn's effect tree. `rank_ctx` carries the
+/// innermost rank-local branch condition; `divergent` goes sticky once
+/// a rank-local arm returns early.
+#[allow(clippy::too_many_arguments)]
+fn walk_rules(
+    fl: &mut Flattener,
+    me: usize,
+    effects: &[Effect],
+    rank_ctx: Option<&str>,
+    divergent: &mut Option<String>,
+    raw: &mut Vec<(&'static str, usize, String)>,
+) {
+    for e in effects {
+        match e {
+            Effect::SigSelf { .. } => {}
+            Effect::Call { name, qual, kind, line } => {
+                if is_direct_collective(name, *kind) {
+                    continue;
+                }
+                let effectful = fl
+                    .call_trace(me, name, qual.as_deref(), *kind)
+                    .filter(|t| has_coll(t));
+                let Some(t) = effectful else { continue };
+                if let Some(w) = rank_ctx {
+                    raw.push((
+                        "branch-congruence",
+                        *line,
+                        format!(
+                            "`{name}` transitively issues collectives ({}) inside a \
+                             rank-local branch ({w})",
+                            trace_str(&t)
+                        ),
+                    ));
+                } else if let Some(w) = divergent.as_ref() {
+                    raw.push((
+                        "branch-congruence",
+                        *line,
+                        format!(
+                            "`{name}` transitively issues collectives ({}) after a \
+                             rank-local early return ({w})",
+                            trace_str(&t)
+                        ),
+                    ));
+                }
+            }
+            Effect::Return { .. } => {
+                if let Some(w) = rank_ctx {
+                    if divergent.is_none() {
+                        *divergent = Some(w.to_string());
+                    }
+                }
+            }
+            Effect::Loop { why, line, body } => {
+                if let Some(w) = why {
+                    if effects_have_transitive_coll(fl, me, body) {
+                        raw.push((
+                            "loop-divergence",
+                            *line,
+                            format!(
+                                "loop with a rank-local bound ({w}) has a non-empty \
+                                 transitive collective effect"
+                            ),
+                        ));
+                    }
+                }
+                walk_rules(fl, me, body, rank_ctx, divergent, raw);
+            }
+            Effect::Branch { why, line, arms } => {
+                match why {
+                    Some(w) => {
+                        for arm in arms {
+                            walk_rules(fl, me, arm, Some(w.as_str()), divergent, raw);
+                        }
+                    }
+                    None => {
+                        // arm congruence: distinct non-empty arm effects
+                        let mut distinct: Vec<Vec<TraceNode>> = Vec::new();
+                        for arm in arms {
+                            let vars = fl.flat_list(arm, me);
+                            let mut traces: Vec<Vec<TraceNode>> = Vec::new();
+                            for (t, _) in vars {
+                                if !traces.contains(&t) {
+                                    traces.push(t);
+                                }
+                            }
+                            let t = if traces.len() == 1 {
+                                traces.remove(0)
+                            } else {
+                                vec![TraceNode::Alt(traces)]
+                            };
+                            if has_coll(&t) && !distinct.contains(&t) {
+                                distinct.push(t);
+                            }
+                        }
+                        if distinct.len() >= 2 {
+                            raw.push((
+                                "branch-congruence",
+                                *line,
+                                format!(
+                                    "conditional arms have divergent collective effects \
+                                     ({} vs {})",
+                                    trace_str(&distinct[0]),
+                                    trace_str(&distinct[1])
+                                ),
+                            ));
+                        }
+                        for arm in arms {
+                            walk_rules(fl, me, arm, rank_ctx, divergent, raw);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// R7a: tag-derivation dataflow over one fn body. `derived` starts from
+/// the signature's pattern idents; every `let` whose RHS mentions
+/// `next_epoch`/`alloc_tags` or an already-derived ident extends it;
+/// every raw `fabric.send`/`fabric.recv` must pass a derived tag.
+fn r7_tag_flow(f: &FnInfo, toks: &[Tok], raw: &mut Vec<(&'static str, usize, String)>) {
+    let (lo, hi) = f.body_span;
+    let mut derived: BTreeSet<String> = f.params.iter().cloned().collect();
+    derived.insert("next_epoch".to_string());
+    derived.insert("alloc_tags".to_string());
+    let mut k = lo;
+    while k < hi {
+        if toks[k].is_ident && toks[k].text == "let" {
+            // LHS pattern idents up to the depth-0 `=`
+            let mut names: Vec<String> = Vec::new();
+            let mut d = 0i64;
+            let mut j = k + 1;
+            let mut eq: Option<usize> = None;
+            while j < hi {
+                let t = &toks[j];
+                match t.text.as_str() {
+                    "(" | "[" | "{" => d += 1,
+                    ")" | "]" | "}" => d -= 1,
+                    "=" if d == 0 && toks.get(j + 1).is_some_and(|t| t.text != "=") => {
+                        eq = Some(j);
+                        break;
+                    }
+                    ";" if d == 0 => break,
+                    _ => {
+                        if t.is_ident && !matches!(t.text.as_str(), "mut" | "ref") {
+                            names.push(t.text.clone());
+                        }
+                    }
+                }
+                j += 1;
+            }
+            if let Some(e) = eq {
+                let mut d2 = 0i64;
+                let mut m = e + 1;
+                let mut hit = false;
+                while m < hi {
+                    let t = &toks[m];
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => d2 += 1,
+                        ")" | "]" | "}" => d2 -= 1,
+                        ";" if d2 == 0 => break,
+                        _ => {}
+                    }
+                    if t.is_ident && derived.contains(&t.text) {
+                        hit = true;
+                    }
+                    m += 1;
+                }
+                if hit {
+                    for n in names {
+                        derived.insert(n);
+                    }
+                }
+                k = m;
+                continue;
+            }
+        }
+        let is_sendrecv = toks[k].is_ident
+            && matches!(toks[k].text.as_str(), "send" | "recv")
+            && k >= 2
+            && toks[k - 1].text == "."
+            && toks[k - 2].is_ident
+            && toks[k - 2].text == "fabric"
+            && toks.get(k + 1).is_some_and(|t| t.text == "(");
+        if is_sendrecv {
+            let what = toks[k].text.clone();
+            let line = toks[k].line;
+            // tag = argument index 2 of fabric.send(src, dst, tag, ..) /
+            // fabric.recv(rank, src, tag)
+            let mut d = 0i64;
+            let mut arg = 0usize;
+            let mut ok = false;
+            let mut any_ident = false;
+            let mut j = k + 1;
+            while j < toks.len() {
+                let t = &toks[j];
+                match t.text.as_str() {
+                    "(" | "[" | "{" => {
+                        d += 1;
+                        j += 1;
+                        continue;
+                    }
+                    ")" | "]" | "}" => {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                        j += 1;
+                        continue;
+                    }
+                    "," if d == 1 => {
+                        arg += 1;
+                        j += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+                if arg == 2 && t.is_ident {
+                    any_ident = true;
+                    if derived.contains(&t.text) {
+                        ok = true;
+                    }
+                }
+                j += 1;
+            }
+            if !ok {
+                let how = if any_ident {
+                    "is not derived from `next_epoch`/`alloc_tags`"
+                } else {
+                    "is a literal"
+                };
+                raw.push((
+                    "epoch-arithmetic",
+                    line,
+                    format!("`fabric.{what}` tag {how}"),
+                ));
+            }
+        }
+        k += 1;
+    }
+}
+
+/// R7b: manual `.epoch` arithmetic (`+=`, `-=`, `=`) outside `rank.rs`.
+fn r7_manual_epoch(f: &FnInfo, toks: &[Tok], raw: &mut Vec<(&'static str, usize, String)>) {
+    let (lo, hi) = f.body_span;
+    for k in lo..hi {
+        let t = &toks[k];
+        if !(t.is_ident && t.text == "epoch" && k >= 1 && toks[k - 1].text == ".") {
+            continue;
+        }
+        let n1 = toks.get(k + 1).map_or("", |t| t.text.as_str());
+        let n2 = toks.get(k + 2).map_or("", |t| t.text.as_str());
+        let assigns = ((n1 == "+" || n1 == "-") && n2 == "=") || (n1 == "=" && n2 != "=");
+        if assigns {
+            raw.push((
+                "epoch-arithmetic",
+                t.line,
+                "manual `.epoch` arithmetic outside `rank.rs` — tags must go through \
+                 `next_epoch()`/`alloc_tags(n)`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// R7c: in `runtime_sim/collectives.rs`, each collective's direct
+/// tag-allocation call count must match the EPOCH_SITES table.
+fn r7_epoch_sites(f: &FnInfo, raw: &mut Vec<(&'static str, usize, String)>) {
+    fn count_allocs(effects: &[Effect]) -> usize {
+        effects
+            .iter()
+            .map(|e| match e {
+                Effect::Call { name, .. } if name == "next_epoch" || name == "alloc_tags" => 1,
+                Effect::Loop { body, .. } => count_allocs(body),
+                Effect::Branch { arms, .. } => arms.iter().map(|a| count_allocs(a)).sum(),
+                _ => 0,
+            })
+            .sum()
+    }
+    let got = count_allocs(&f.body);
+    let documented = EPOCH_SITES.iter().find(|(n, _)| *n == f.name).map(|&(_, c)| c);
+    match documented {
+        Some(want) if want != got => {
+            raw.push((
+                "epoch-arithmetic",
+                f.line,
+                format!(
+                    "collective `{}` has {got} direct tag-allocation site(s); EPOCH_SITES \
+                     documents {want} — update the table with the round-structure change",
+                    f.name
+                ),
+            ));
+        }
+        None if got > 0 && f.body.iter().any(|e| matches!(e, Effect::SigSelf { .. })) => {
+            raw.push((
+                "epoch-arithmetic",
+                f.line,
+                format!(
+                    "collective `{}` allocates tags but has no EPOCH_SITES entry",
+                    f.name
+                ),
+            ));
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crate analysis driver
+// ---------------------------------------------------------------------------
+
+fn ends_with_any(rel: &str, suffixes: &[&str]) -> bool {
+    let norm = rel.replace('\\', "/");
+    suffixes.iter().any(|s| norm.ends_with(s))
+}
+
+/// Analyze a whole file set: `(rel_path, source)` pairs, as produced by
+/// [`crate::read_tree`]. Returns R5–R7 findings and per-entry traces.
+pub fn analyze_files(files: &[(String, String)]) -> CrateAnalysis {
+    let mut file_data: Vec<FileData> = Vec::new();
+    let mut fns: Vec<FnInfo> = Vec::new();
+    for (rel, src) in files {
+        let (toks, comments) = lex(src);
+        let code_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+        let extracted = extract_fns(rel, &toks);
+        let base = fns.len();
+        let fn_ids: Vec<usize> = (base..base + extracted.len()).collect();
+        fns.extend(extracted);
+        file_data.push(FileData { rel: rel.clone(), toks, comments, code_lines, fn_ids });
+    }
+
+    let mut index: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        if !f.in_test {
+            index.entry(f.name.clone()).or_default().push(i);
+        }
+    }
+
+    let mut fl = Flattener { fns: &fns, index: &index, memo: BTreeMap::new(), active: Vec::new() };
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for fd in &file_data {
+        let exempt_r56 = ends_with_any(&fd.rel, R1_EXEMPT_SUFFIX);
+        let is_collectives = fd.rel.replace('\\', "/").ends_with("runtime_sim/collectives.rs");
+        let exempt_r7ab = ends_with_any(&fd.rel, &["fabric.rs", "rank.rs"]);
+        let mut raw: Vec<(&'static str, usize, String)> = Vec::new();
+        for &fi in &fd.fn_ids {
+            let f = &fns[fi];
+            if f.in_test {
+                continue;
+            }
+            if !exempt_r56 {
+                let mut divergent: Option<String> = None;
+                walk_rules(&mut fl, fi, &f.body, None, &mut divergent, &mut raw);
+            }
+            if !exempt_r7ab {
+                r7_tag_flow(f, &fd.toks, &mut raw);
+                r7_manual_epoch(f, &fd.toks, &mut raw);
+            }
+            if is_collectives {
+                r7_epoch_sites(f, &mut raw);
+            }
+        }
+        raw.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        raw.dedup();
+        for (rule, line, msg) in raw {
+            push_checked(&mut findings, &fd.comments, &fd.code_lines, &fd.rel, rule, line, msg);
+        }
+    }
+
+    // entry traces: public ctx-taking fns, in (file, line) order
+    let mut entries: Vec<EntryTrace> = Vec::new();
+    for (i, f) in fns.iter().enumerate() {
+        if !(f.is_pub && f.has_ctx && !f.in_test) {
+            continue;
+        }
+        let trace = fl.flat_fn(i);
+        let name = match &f.qual {
+            Some(q) => format!("{q}::{}", f.name),
+            None => f.name.clone(),
+        };
+        entries.push(EntryTrace { file: f.rel.clone(), line: f.line, name, trace });
+    }
+    entries.sort_by(|a, b| (&a.name, &a.file, a.line).cmp(&(&b.name, &b.file, b.line)));
+
+    CrateAnalysis { findings, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal resolution target: a collective implementation whose
+    /// `coll_sig!` marks the fabric slot, so helpers calling it flatten
+    /// to a non-empty trace (mirrors `runtime_sim/collectives.rs`).
+    const COLL_STUB: (&str, &str) = (
+        "runtime_sim/collectives.rs",
+        r#"impl RankCtx {
+    pub fn allreduce_f64(&mut self, op: ReduceOp, lanes: &[f64]) -> Vec<f64> {
+        let _tag = self.next_epoch();
+        coll_sig!(self, "allreduce_f64");
+        lanes.to_vec()
+    }
+}
+"#,
+    );
+
+    fn analyze(files: &[(&str, &str)]) -> CrateAnalysis {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(r, s)| (r.to_string(), s.to_string())).collect();
+        analyze_files(&owned)
+    }
+
+    fn coll(s: &str) -> TraceNode {
+        TraceNode::Coll(s.to_string())
+    }
+
+    fn sigs(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn transitive_collective_in_rank_branch_is_flagged() {
+        let src = r#"fn helper(ctx: &mut RankCtx) {
+    ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+}
+
+pub fn entry(ctx: &mut RankCtx) {
+    if ctx.rank == 0 {
+        helper(ctx);
+    }
+}
+"#;
+        let a = analyze(&[COLL_STUB, ("partition/a.rs", src)]);
+        let f = a.findings();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("branch-congruence", 7), "{f:?}");
+    }
+
+    #[test]
+    fn early_return_makes_later_collectives_divergent() {
+        let src = r#"fn helper(ctx: &mut RankCtx) {
+    ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+}
+
+pub fn entry(ctx: &mut RankCtx) {
+    if ctx.is_root() {
+        return;
+    }
+    helper(ctx);
+}
+"#;
+        let a = analyze(&[COLL_STUB, ("partition/a.rs", src)]);
+        let f = a.findings();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("branch-congruence", 9), "{f:?}");
+        // The returning arm drops the continuation: one empty variant,
+        // one with the collective.
+        let e = a.entry_trace("entry").expect("entry trace");
+        assert_eq!(trace_str(&e.trace), "alt{ | allreduce_f64}");
+    }
+
+    #[test]
+    fn uniform_branch_and_bound_are_clean() {
+        let src = r#"fn helper(ctx: &mut RankCtx) {
+    ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+}
+
+pub fn entry(ctx: &mut RankCtx, n_ranks: usize) {
+    for _r in 0..n_ranks {
+        helper(ctx);
+    }
+    if n_ranks > 1 {
+        helper(ctx);
+    }
+}
+"#;
+        let a = analyze(&[COLL_STUB, ("partition/a.rs", src)]);
+        assert!(a.findings().is_empty(), "{:?}", a.findings());
+        let e = a.entry_trace("entry").expect("entry trace");
+        assert_eq!(
+            trace_str(&e.trace),
+            "alt{loop{allreduce_f64}, allreduce_f64 | loop{allreduce_f64}}"
+        );
+    }
+
+    #[test]
+    fn rank_local_loop_bound_with_collective_body_is_flagged() {
+        let src = r#"fn helper(ctx: &mut RankCtx) {
+    ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+}
+
+pub fn entry(ctx: &mut RankCtx, local: &[f64]) {
+    for _i in 0..local.len() {
+        helper(ctx);
+    }
+}
+"#;
+        let a = analyze(&[COLL_STUB, ("partition/a.rs", src)]);
+        let f = a.findings();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("loop-divergence", 6), "{f:?}");
+    }
+
+    #[test]
+    fn derived_tag_chain_is_clean_literal_tag_is_not() {
+        let good = r#"pub fn probe(ctx: &mut RankCtx, fabric: &Fabric, dst: usize) {
+    let base = ctx.alloc_tags(4);
+    let t = base + 1;
+    fabric.send(0, dst, t, Vec::new());
+}
+"#;
+        let a = analyze(&[("partition/a.rs", good)]);
+        assert!(a.findings().is_empty(), "{:?}", a.findings());
+        let bad = r#"pub fn probe(ctx: &mut RankCtx, fabric: &Fabric, dst: usize) {
+    fabric.send(0, dst, 7, Vec::new());
+}
+"#;
+        let a = analyze(&[("partition/a.rs", bad)]);
+        let f = a.findings();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("epoch-arithmetic", 2), "{f:?}");
+    }
+
+    #[test]
+    fn trace_matches_loop_and_alt_semantics() {
+        // loop{a}, b — the loop matches zero or more repetitions.
+        let t = vec![TraceNode::Loop(vec![coll("a")]), coll("b")];
+        assert!(trace_matches(&t, &sigs(&["b"])));
+        assert!(trace_matches(&t, &sigs(&["a", "b"])));
+        assert!(trace_matches(&t, &sigs(&["a", "a", "a", "b"])));
+        assert!(!trace_matches(&t, &sigs(&["a"])));
+        assert!(!trace_matches(&t, &sigs(&["b", "a"])));
+        // alt{x | } — either the arm or nothing.
+        let t = vec![TraceNode::Alt(vec![vec![coll("x")], vec![]])];
+        assert!(trace_matches(&t, &sigs(&["x"])));
+        assert!(trace_matches(&t, &sigs(&[])));
+        assert!(!trace_matches(&t, &sigs(&["y"])));
+        // Runtime signatures carry their argument rendering.
+        let t = vec![coll("allreduce_u64")];
+        assert!(trace_matches(&t, &sigs(&["allreduce_u64(op=Sum, lanes=3)"])));
+    }
+
+    #[test]
+    fn sig_name_strips_argument_rendering() {
+        assert_eq!(sig_name("allreduce_u64(op=Sum, lanes=3)"), "allreduce_u64");
+        assert_eq!(sig_name("barrier"), "barrier");
+    }
+
+    #[test]
+    fn traces_json_is_stable_and_line_free() {
+        let src = r#"pub fn entry(ctx: &mut RankCtx) {
+    ctx.allreduce_f64(ReduceOp::Sum, &[1.0]);
+}
+"#;
+        let a = analyze(&[COLL_STUB, ("partition/a.rs", src)]);
+        let json = a.traces_json();
+        assert_eq!(
+            json,
+            r#"{
+  "entries": [
+    {"name": "entry", "file": "partition/a.rs", "trace": ["allreduce_f64"]}
+  ]
+}
+"#
+        );
+    }
+}

@@ -19,6 +19,18 @@
 //! | `timing-in-compute`     | clock / thread-count reads in compute (R3)     |
 //! | `float-sort-order`      | `partial_cmp` comparators in sorts (R3)        |
 //! | `unsafe-missing-safety` | `unsafe` without a `// SAFETY:` comment (R4)   |
+//! | `branch-congruence`     | conditional arms with divergent *transitive*   |
+//! |                         | collective effect: calls issuing collectives   |
+//! |                         | inside rank-local branches or after rank-local |
+//! |                         | early returns; non-rank-local arms that both   |
+//! |                         | issue collectives but different ones (R5)      |
+//! | `loop-divergence`       | non-empty transitive collective effect inside  |
+//! |                         | a loop whose bound is rank-local (R6)          |
+//! | `epoch-arithmetic`      | `fabric.send/recv` tags not derived from       |
+//! |                         | `next_epoch`/`alloc_tags`; manual `epoch +=`   |
+//! |                         | outside `rank.rs`; a collective whose          |
+//! |                         | documented tag-allocation sites don't match    |
+//! |                         | its body (R7)                                  |
 //!
 //! Findings are suppressible only by an inline
 //! `// detlint: allow(<rule>) -- <justification>` on the flagged line or
@@ -28,12 +40,26 @@
 //!
 //! The scanner is a hand-rolled lexer + scope walk (no syn: the build
 //! environment is offline and this tree vendors no third-party code).
-//! It is intentionally lexical — it sees through no function calls — so
-//! rules are tuned to the repo's idioms and calibrated to zero false
-//! positives on the shipped tree; see `tests/fixtures/` for the
-//! known-bad snippets each rule must catch.
+//! R1–R4 are intentionally lexical — they see through no function calls —
+//! while R5–R7 ride the interprocedural layer in [`interproc`]: a
+//! crate-wide call graph whose per-function *collective effect
+//! signatures* (ordered collective sequences with symbolic `loop{…}` /
+//! `alt{a|b}` nodes) propagate bottom-up through call sites. The same
+//! layer powers `detlint --trace`, whose flattened per-entry-point
+//! traces the runtime test `rust/tests/trace_congruence.rs` cross-checks
+//! against the debug-build fabric congruence recorder. All rules are
+//! calibrated to zero false positives on the shipped tree; see
+//! `tests/fixtures/` for the known-bad snippets each rule must catch.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+pub mod interproc;
+
+pub use interproc::{
+    analyze_files, has_coll, sig_name, trace_matches, trace_str, CrateAnalysis, EntryTrace,
+    TraceNode, EPOCH_SITES,
+};
 
 /// Determinism-critical module directories: R3 rules apply only to
 /// files whose path contains one of these components.
@@ -117,9 +143,159 @@ pub fn hint_for(rule: &str) -> &'static str {
             "precede the unsafe block/impl with a `// SAFETY:` comment \
              stating the invariant"
         }
+        "branch-congruence" => {
+            "make every arm issue the same collective sequence (hoist the \
+             call out of the branch), or allow with the uniformity \
+             invariant stated if the condition is provably SPMD-uniform"
+        }
+        "loop-divergence" => {
+            "derive the loop bound from collective-agreed values (every \
+             rank must run the same number of collective-bearing \
+             iterations), or allow with the invariant stated"
+        }
+        "epoch-arithmetic" => {
+            "allocate tags with `next_epoch()`/`alloc_tags(n)` (and keep \
+             the EPOCH_SITES table in detlint in sync) — manual epoch \
+             arithmetic drifts the tag namespace between ranks"
+        }
         "allow-missing-justification" => "write `// detlint: allow(<rule>) -- why this is sound`",
         _ => "",
     }
+}
+
+/// Machine-readable findings (the `--format json` output): a stable
+/// array of `{file, line, rule, msg, hint}` objects, sorted like the
+/// human output.
+pub fn findings_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\": {}, \"line\": {}, \"rule\": {}, \"msg\": {}, \"hint\": {}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.msg),
+            json_str(hint_for(f.rule)),
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// The allow comment covering `findline` for `rule`, if any: on the
+/// line itself or in the contiguous comment-only block directly above.
+pub(crate) fn allow_comment(
+    comments: &BTreeMap<usize, String>,
+    code_lines: &BTreeSet<usize>,
+    findline: usize,
+    rule: &str,
+) -> Option<String> {
+    let pat = format!("detlint: allow({rule})");
+    let has = |l: usize| -> bool {
+        comments.get(&l).is_some_and(|t| t.contains(&pat) || t.contains("detlint: allow(all)"))
+    };
+    if has(findline) {
+        return comments.get(&findline).cloned();
+    }
+    let mut l = findline.saturating_sub(1);
+    while l > 0 && comments.contains_key(&l) && !code_lines.contains(&l) {
+        if has(l) {
+            return comments.get(&l).cloned();
+        }
+        l -= 1;
+    }
+    None
+}
+
+/// Push a finding unless an allow comment suppresses it; an allow
+/// without the `-- <justification>` tail is itself a finding.
+pub(crate) fn push_checked(
+    findings: &mut Vec<Finding>,
+    comments: &BTreeMap<usize, String>,
+    code_lines: &BTreeSet<usize>,
+    rel: &str,
+    rule: &'static str,
+    line: usize,
+    msg: String,
+) {
+    if let Some(just) = allow_comment(comments, code_lines, line, rule) {
+        if !just.contains("--") {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: "allow-missing-justification",
+                msg: format!("allow({rule}) has no `-- <justification>` tail"),
+            });
+        }
+        return;
+    }
+    findings.push(Finding { file: rel.to_string(), line, rule, msg });
+}
+
+/// Escape a string as a JSON string literal.
+pub(crate) fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Collect `.rs` files under `root`, sorted for deterministic output.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return;
+    }
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut children: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    children.sort();
+    for child in children {
+        if child.is_dir() {
+            collect_rs_files(&child, out);
+        } else if child.extension().is_some_and(|e| e == "rs") {
+            out.push(child);
+        }
+    }
+}
+
+/// Read every `.rs` file under `root` into `(rel_path, source)` pairs —
+/// the input shape [`analyze_files`] wants. Paths are reported relative
+/// to `root`.
+pub fn read_tree(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files);
+    let mut out = Vec::with_capacity(files.len());
+    for file in files {
+        let src = std::fs::read_to_string(&file)?;
+        let rel = match file.strip_prefix(root) {
+            Ok(r) if !r.as_os_str().is_empty() => r.display().to_string(),
+            _ => file.display().to_string(),
+        };
+        out.push((rel, src));
+    }
+    Ok(out)
 }
 
 #[derive(Debug, Clone)]
@@ -462,42 +638,16 @@ impl Analyzer {
         self.toks[k].text.as_str()
     }
 
-    /// The allow comment covering `findline`, if any: on the line itself
-    /// or in the contiguous comment-only block directly above it.
-    fn allowed(&self, findline: usize, rule: &str) -> Option<String> {
-        let pat = format!("detlint: allow({rule})");
-        let has = |l: usize| -> bool {
-            match self.comments.get(&l) {
-                Some(t) => t.contains(&pat) || t.contains("detlint: allow(all)"),
-                None => false,
-            }
-        };
-        if has(findline) {
-            return self.comments.get(&findline).cloned();
-        }
-        let mut l = findline.saturating_sub(1);
-        while l > 0 && self.comments.contains_key(&l) && !self.code_lines.contains(&l) {
-            if has(l) {
-                return self.comments.get(&l).cloned();
-            }
-            l -= 1;
-        }
-        None
-    }
-
     fn emit(&mut self, rule: &'static str, line: usize, msg: String) {
-        if let Some(just) = self.allowed(line, rule) {
-            if !just.contains("--") {
-                self.findings.push(Finding {
-                    file: self.rel.clone(),
-                    line,
-                    rule: "allow-missing-justification",
-                    msg: format!("allow({rule}) has no `-- <justification>` tail"),
-                });
-            }
-            return;
-        }
-        self.findings.push(Finding { file: self.rel.clone(), line, rule, msg });
+        push_checked(
+            &mut self.findings,
+            &self.comments,
+            &self.code_lines,
+            &self.rel,
+            rule,
+            line,
+            msg,
+        );
     }
 
     fn cond_rank_local(&self, ctoks: &[usize]) -> Option<String> {

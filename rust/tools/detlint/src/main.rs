@@ -1,13 +1,24 @@
 //! detlint CLI — scan Rust sources for SPMD determinism and
 //! collective-discipline violations.
 //!
-//! Usage: `cargo run -p detlint -- [PATH ...]` (default `rust/src`).
-//! Exits non-zero when any finding is reported, so CI can gate on it.
+//! Usage: `cargo run -p detlint -- [FLAGS] [PATH ...]` (default
+//! `rust/src`). Exits non-zero when any finding is reported, so CI can
+//! gate on it.
+//!
+//! Flags:
+//! * `--format human|json` — finding output format (default `human`;
+//!   the JSON schema is `[{file, line, rule, msg, hint}]`).
+//! * `--trace` — print the interprocedural collective traces of every
+//!   public `ctx`-taking entry point as JSON and exit 0. CI uploads
+//!   this and diffs it against the committed `traces.lock`.
+//! * `--bless` — rewrite `tools/detlint/traces.lock` with the traces of
+//!   the current tree (run after an intentional collective-structure
+//!   change), then report findings as usual.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use detlint::{hint_for, scan_source, Finding};
+use detlint::{analyze_files, findings_json, hint_for, scan_source, Finding};
 
 /// Collect `.rs` files under `root`, sorted for deterministic output.
 fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) {
@@ -32,22 +43,57 @@ fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-fn main() -> ExitCode {
-    let mut roots: Vec<PathBuf> = std::env::args().skip(1).map(PathBuf::from).collect();
-    if roots.is_empty() {
-        roots.push(PathBuf::from("rust/src"));
-    }
+struct Opts {
+    roots: Vec<PathBuf>,
+    trace: bool,
+    bless: bool,
+    json: bool,
+}
 
-    let mut findings: Vec<Finding> = Vec::new();
-    let mut scanned = 0usize;
-    for root in &roots {
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts { roots: Vec::new(), trace: false, bless: false, json: false };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--trace" => opts.trace = true,
+            "--bless" => opts.bless = true,
+            "--format" => match args.next().as_deref() {
+                Some("human") => opts.json = false,
+                Some("json") => opts.json = true,
+                other => return Err(format!("--format wants human|json, got {other:?}")),
+            },
+            "--format=human" => opts.json = false,
+            "--format=json" => opts.json = true,
+            _ if a.starts_with("--") => return Err(format!("unknown flag {a}")),
+            _ => opts.roots.push(PathBuf::from(a)),
+        }
+    }
+    if opts.roots.is_empty() {
+        opts.roots.push(PathBuf::from("rust/src"));
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(msg) => {
+            eprintln!("detlint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    // Gather the whole file set first: the interprocedural pass needs
+    // every file to resolve cross-file calls.
+    let mut files: Vec<(String, String)> = Vec::new();
+    for root in &opts.roots {
         if !root.exists() {
             eprintln!("detlint: path not found: {}", root.display());
             return ExitCode::from(2);
         }
-        let mut files = Vec::new();
-        collect_rs(root, &mut files);
-        for file in &files {
+        let mut paths = Vec::new();
+        collect_rs(root, &mut paths);
+        for file in &paths {
             let src = match std::fs::read_to_string(file) {
                 Ok(s) => s,
                 Err(err) => {
@@ -60,21 +106,50 @@ fn main() -> ExitCode {
                 Ok(r) if !r.as_os_str().is_empty() => r.display().to_string(),
                 _ => file.display().to_string(),
             };
-            scanned += 1;
-            findings.extend(scan_source(&rel, &src));
+            files.push((rel, src));
         }
     }
+    let scanned = files.len();
 
-    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
-    for f in &findings {
-        println!("{}:{} [{}] {}", f.file, f.line, f.rule, f.msg);
-        println!("  hint: {}", hint_for(f.rule));
+    let analysis = analyze_files(&files);
+
+    if opts.bless {
+        let lock = concat!(env!("CARGO_MANIFEST_DIR"), "/traces.lock");
+        if let Err(err) = std::fs::write(lock, analysis.traces_json()) {
+            eprintln!("detlint: cannot write {lock}: {err}");
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "detlint: blessed {} entry trace(s) into {lock}",
+            analysis.entry_traces().len()
+        );
+    }
+    if opts.trace {
+        print!("{}", analysis.traces_json());
+        return ExitCode::SUCCESS;
+    }
+
+    // Per-file rules (R1–R4) plus the crate-wide pass (R5–R7).
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rel, src) in &files {
+        findings.extend(scan_source(rel, src));
+    }
+    findings.extend(analysis.into_findings());
+    findings
+        .sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+
+    if opts.json {
+        print!("{}", findings_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}:{} [{}] {}", f.file, f.line, f.rule, f.msg);
+            println!("  hint: {}", hint_for(f.rule));
+        }
+        println!("detlint: {scanned} files scanned, {} finding(s)", findings.len());
     }
     if findings.is_empty() {
-        println!("detlint: {scanned} files scanned, 0 findings");
         ExitCode::SUCCESS
     } else {
-        println!("detlint: {scanned} files scanned, {} finding(s)", findings.len());
         ExitCode::from(1)
     }
 }

@@ -1,0 +1,27 @@
+//! Fixture: clean interprocedural code — zero R5–R7 findings expected.
+//! Exercises the idioms the rules must NOT flag: uniform conditionals
+//! and loop bounds around effectful helpers, and point-to-point tags
+//! derived from `next_epoch()`.
+
+fn sum_all(ctx: &mut RankCtx, s: f64) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}
+
+pub fn uniform(ctx: &mut RankCtx, n_ranks: usize, local: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    // uniform bound: every rank loops n_ranks times
+    for _r in 0..n_ranks {
+        acc += sum_all(ctx, local.first().copied().unwrap_or(0.0));
+    }
+    // uniform condition with a one-sided collective effect: fine
+    if n_ranks > 1 {
+        acc = sum_all(ctx, acc);
+    }
+    acc
+}
+
+pub fn ring_probe(ctx: &mut RankCtx, fabric: &Fabric, dst: usize, payload: Vec<u8>) {
+    let tag = ctx.next_epoch();
+    fabric.send(0, dst, tag, payload);
+    let _m = fabric.recv(dst, 0, tag);
+}

@@ -1,0 +1,19 @@
+//! Fixture: R5 branch-congruence — both arms of a data-dependent
+//! conditional issue collectives, but *different* ones. Ranks that
+//! disagree on `fast_path` present mismatched signatures to the fabric.
+
+fn sum_f64(ctx: &mut RankCtx, s: f64) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}
+
+fn sum_u64(ctx: &mut RankCtx, c: u64) -> u64 {
+    ctx.allreduce_u64(ReduceOp::Sum, &[c])[0]
+}
+
+pub fn mismatched(ctx: &mut RankCtx, fast_path: bool, s: f64, c: u64) -> f64 {
+    if fast_path {
+        sum_f64(ctx, s)
+    } else {
+        sum_u64(ctx, c) as f64
+    }
+}

@@ -1,0 +1,16 @@
+//! Fixture: R5 branch-congruence — a helper that transitively issues a
+//! collective, called from inside a rank-local branch. R1 only sees
+//! direct collective calls; the interprocedural pass must see through
+//! `sum_all`.
+
+fn sum_all(ctx: &mut RankCtx, s: f64) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}
+
+pub fn divergent(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    if ctx.rank == 0 {
+        acc = sum_all(ctx, local.iter().sum());
+    }
+    acc
+}

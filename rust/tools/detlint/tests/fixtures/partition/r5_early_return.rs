@@ -1,0 +1,14 @@
+//! Fixture: R5 branch-congruence — a rank-local early return makes every
+//! later transitive collective unreachable for some ranks: the remaining
+//! ranks block in `sum_all`'s allreduce forever.
+
+fn sum_all(ctx: &mut RankCtx, s: f64) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}
+
+pub fn skips_root(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    if ctx.rank == 0 {
+        return 0.0;
+    }
+    sum_all(ctx, local.iter().sum())
+}

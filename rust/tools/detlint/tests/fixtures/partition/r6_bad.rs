@@ -1,0 +1,15 @@
+//! Fixture: R6 loop-divergence — the loop bound is the local point
+//! count, so ranks run different iteration counts, and each iteration
+//! transitively issues a collective.
+
+fn sum_all(ctx: &mut RankCtx, s: f64) -> f64 {
+    ctx.allreduce_f64(ReduceOp::Sum, &[s])[0]
+}
+
+pub fn per_point(ctx: &mut RankCtx, local: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..local.len() {
+        acc += sum_all(ctx, local[i]);
+    }
+    acc
+}

@@ -1,0 +1,6 @@
+//! Fixture: R7 epoch-arithmetic — manual `.epoch` bumps outside
+//! `rank.rs` desynchronize the tag allocator across call sites.
+
+pub fn bump(ctx: &mut RankCtx) {
+    ctx.epoch += 1;
+}

@@ -1,0 +1,7 @@
+//! Fixture: R7 epoch-arithmetic — a raw `fabric.send` with a literal
+//! tag bypasses the epoch allocator; a colliding tag from another phase
+//! silently cross-matches messages.
+
+pub fn leak(ctx: &mut RankCtx, fabric: &Fabric, dst: usize, payload: Vec<u8>) {
+    fabric.send(0, dst, 42, payload);
+}

@@ -1,0 +1,29 @@
+//! Fixture: R7 EPOCH_SITES — `barrier` is documented as allocating zero
+//! dedicated tag blocks (it rides the congruence slot), but this version
+//! bumps the epoch anyway: exactly one mismatch finding.
+//!
+//! The compliant stubs below double as the resolution targets for the
+//! R5/R6 fixtures' transitive-collective helpers: `coll_sig!` marks the
+//! fabric slot, so flattening a helper that calls them yields a
+//! non-empty collective trace.
+
+impl RankCtx {
+    pub fn barrier(&mut self) {
+        let _tag = self.next_epoch();
+    }
+
+    pub fn allreduce_f64(&mut self, op: ReduceOp, lanes: &[f64]) -> Vec<f64> {
+        let tag = self.next_epoch();
+        coll_sig!(self, "allreduce_f64(op={op:?}, lanes={})", lanes.len());
+        let _ = tag;
+        lanes.to_vec()
+    }
+
+    pub fn allreduce_u64(&mut self, op: ReduceOp, lanes: &[u64]) -> Vec<u64> {
+        let tag = self.next_epoch();
+        coll_sig!(self, "allreduce_u64(op={op:?}, lanes={})", lanes.len());
+        let tag2 = self.next_epoch();
+        let _ = (tag, tag2);
+        lanes.to_vec()
+    }
+}

@@ -1,0 +1,122 @@
+//! Interprocedural fixture tests: each R5/R6/R7 fixture produces
+//! exactly its intended finding, the clean fixtures stay clean, and the
+//! `--format json` schema is stable.
+
+use std::path::Path;
+
+use detlint::{analyze_files, findings_json, read_tree, trace_str, Finding};
+
+fn fixture_analysis() -> Vec<Finding> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let files = read_tree(&root).expect("read fixtures tree");
+    analyze_files(&files).into_findings()
+}
+
+fn on_file<'a>(findings: &'a [Finding], rel: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.file == rel).collect()
+}
+
+fn assert_single(findings: &[Finding], rel: &str, rule: &str, line: usize) {
+    let fs = on_file(findings, rel);
+    assert_eq!(fs.len(), 1, "{rel}: expected exactly one finding, got {fs:?}");
+    assert_eq!(fs[0].rule, rule, "{rel}: wrong rule: {fs:?}");
+    assert_eq!(fs[0].line, line, "{rel}: wrong line: {fs:?}");
+}
+
+#[test]
+fn r5_transitive_collective_in_rank_local_branch() {
+    assert_single(&fixture_analysis(), "partition/r5_bad.rs", "branch-congruence", 13);
+}
+
+#[test]
+fn r5_transitive_collective_after_rank_local_early_return() {
+    assert_single(&fixture_analysis(), "partition/r5_early_return.rs", "branch-congruence", 13);
+}
+
+#[test]
+fn r5_divergent_collective_effects_across_arms() {
+    let findings = fixture_analysis();
+    assert_single(&findings, "partition/r5_arms.rs", "branch-congruence", 14);
+    let fs = on_file(&findings, "partition/r5_arms.rs");
+    assert!(
+        fs[0].msg.contains("allreduce_f64") && fs[0].msg.contains("allreduce_u64"),
+        "message should name both arm traces: {fs:?}"
+    );
+}
+
+#[test]
+fn r6_collective_loop_with_rank_local_bound() {
+    assert_single(&fixture_analysis(), "partition/r6_bad.rs", "loop-divergence", 11);
+}
+
+#[test]
+fn r7_manual_epoch_arithmetic() {
+    assert_single(&fixture_analysis(), "partition/r7_manual_epoch.rs", "epoch-arithmetic", 5);
+}
+
+#[test]
+fn r7_literal_point_to_point_tag() {
+    assert_single(&fixture_analysis(), "partition/r7_tag_literal.rs", "epoch-arithmetic", 6);
+}
+
+#[test]
+fn r7_epoch_sites_mismatch() {
+    let findings = fixture_analysis();
+    assert_single(&findings, "runtime_sim/collectives.rs", "epoch-arithmetic", 11);
+    let fs = on_file(&findings, "runtime_sim/collectives.rs");
+    assert!(fs[0].msg.contains("EPOCH_SITES"), "{fs:?}");
+}
+
+#[test]
+fn clean_fixtures_have_no_interproc_findings() {
+    let findings = fixture_analysis();
+    for rel in [
+        "partition/interproc_clean.rs",
+        "partition/clean.rs",
+        // Direct collectives under rank-local control flow are R1's
+        // domain (scan_source); the interprocedural pass must not
+        // double-report them.
+        "partition/r1_bad.rs",
+        "partition/r1_early_return.rs",
+    ] {
+        let fs = on_file(&findings, rel);
+        assert!(fs.is_empty(), "{rel}: unexpected interproc findings {fs:?}");
+    }
+}
+
+#[test]
+fn fixture_entry_traces_flatten_through_helpers() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let files = read_tree(&root).expect("read fixtures tree");
+    let analysis = analyze_files(&files);
+    let t = |name: &str| {
+        trace_str(&analysis.entry_trace(name).unwrap_or_else(|| panic!("entry {name}")).trace)
+    };
+    assert_eq!(t("mismatched"), "alt{allreduce_f64 | allreduce_u64}");
+    assert_eq!(t("per_point"), "loop{allreduce_f64}");
+    assert_eq!(t("skips_root"), "alt{ | allreduce_f64}");
+}
+
+/// Quote a hint string the way the lint's JSON writer does (hints carry
+/// no control characters, so escaping `\` and `"` suffices).
+fn json_quote(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+#[test]
+fn findings_json_schema_is_stable() {
+    let findings = vec![Finding {
+        file: "partition/a.rs".to_string(),
+        line: 7,
+        rule: "branch-congruence",
+        msg: "a \"quoted\" message".to_string(),
+    }];
+    let json = findings_json(&findings);
+    let expected = format!(
+        "[\n  {{\"file\": \"partition/a.rs\", \"line\": 7, \"rule\": \"branch-congruence\", \
+         \"msg\": \"a \\\"quoted\\\" message\", \"hint\": {}}}\n]\n",
+        // the hint rides along verbatim; its wording is free to evolve
+        json_quote(detlint::hint_for("branch-congruence")),
+    );
+    assert_eq!(json, expected);
+}
