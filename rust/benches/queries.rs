@@ -7,6 +7,13 @@
 //! * Fig 13 — approximate k-NN on 100M points (quick: 1M), K=3,
 //!   CUTOFF=1 bucket each side, with recall measured against the exact
 //!   oracle on a sample.
+//! * Distributed serving — `DistQueryEngine` over the persistent
+//!   session on the simulated fabric: queries/sec × ranks ×
+//!   threads-per-rank, batch-size sweep, wire bytes per query and kNN
+//!   spill rate, with a PASS/FAIL check that the p=4 engine beats the
+//!   p=1 engine on the same ≥100k-query stream.
+
+use std::collections::HashMap;
 
 use sfc_part::bench_util::{fmt_secs, Table};
 use sfc_part::cli::{Args, Scale};
@@ -14,9 +21,13 @@ use sfc_part::geom::bbox::BoundingBox;
 use sfc_part::geom::point::PointSet;
 use sfc_part::kdtree::builder::KdTreeBuilder;
 use sfc_part::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use sfc_part::partition::distributed::{step_ranks, DistSession, SessionConfig};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::query::distributed::{DistQueryEngine, EngineConfig, QueryBatch};
 use sfc_part::query::knn::{knn_exact, knn_sfc, recall};
 use sfc_part::query::point_location::{BucketIndex, TreeLocator};
 use sfc_part::query::router::{Query, QueryRouter};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
 use sfc_part::sfc::kernel::morton_keys_batch;
 use sfc_part::sfc::traverse::assign_sfc;
 use sfc_part::sfc::Curve;
@@ -30,6 +41,52 @@ fn build_index(ps: &PointSet, threads: usize) -> (sfc_part::kdtree::node::KdTree
     assign_sfc(&mut tree, Curve::Morton);
     let idx = BucketIndex::from_tree(&tree, BoundingBox::unit(ps.dim));
     (tree, idx)
+}
+
+/// Deal `n_loc` locate + `n_knn` kNN probes round-robin over `p`
+/// issuing ranks, chunked into epochs of at most `batch` queries.
+/// Every rank gets the **same** epoch count (trailing batches may be
+/// empty) because `serve` is collective. Locate probes hit stored
+/// points; kNN probes are uniform coordinates; kNN is diluted ~1 in 8
+/// so the O(shard) owner-side scans stay a bounded slice of each epoch.
+fn deal_batches(
+    ps: &PointSet,
+    p: usize,
+    n_loc: usize,
+    n_knn: usize,
+    k: usize,
+    batch: usize,
+) -> Vec<Vec<QueryBatch>> {
+    let counts: Vec<(usize, usize)> = (0..p)
+        .map(|r| (n_loc / p + usize::from(r < n_loc % p), n_knn / p + usize::from(r < n_knn % p)))
+        .collect();
+    let n_epochs = counts.iter().map(|&(a, b)| (a + b).div_ceil(batch)).max().unwrap().max(1);
+    let mut out = Vec::with_capacity(p);
+    for (r, &(my_loc, my_knn)) in counts.iter().enumerate() {
+        let mut rng = SplitMix64::new(1000 + r as u64);
+        let (mut left_loc, mut left_knn) = (my_loc, my_knn);
+        let mut epochs = Vec::with_capacity(n_epochs);
+        for _ in 0..n_epochs {
+            let mut b = QueryBatch::new(ps.dim, 1e-12, k);
+            for i in 0..batch {
+                if left_loc == 0 && left_knn == 0 {
+                    break;
+                }
+                if left_knn > 0 && (left_loc == 0 || i % 8 == 7) {
+                    let q: Vec<f64> = (0..ps.dim).map(|_| rng.next_f64()).collect();
+                    b.push_knn(&q);
+                    left_knn -= 1;
+                } else {
+                    b.push_locate(ps.point(rng.below(ps.len() as u64) as usize));
+                    left_loc -= 1;
+                }
+            }
+            epochs.push(b);
+        }
+        assert_eq!(left_loc + left_knn, 0, "dealing under-filled the epochs");
+        out.push(epochs);
+    }
+    out
 }
 
 fn main() {
@@ -147,4 +204,119 @@ fn main() {
     }
     t.print();
     println!("\ncheck: location is O(log buckets)/query; k-NN cost ∝ window size; recall per CUTOFF.");
+
+    // ---- Distributed serving over the persistent session ----
+    // Sessions + engines are built once per rank count, then the same
+    // states serve every (threads-per-rank × batch-size) configuration
+    // (`serve` never mutates them). Throughput is **simulated** time:
+    // max per-rank busy wall time + the cost model's network time.
+    let dn = args.usize("dist-points", scale.pick(120_000, 10_000_000));
+    let dq_loc = args.usize("dist-queries", scale.pick(100_000, 1_000_000));
+    let dq_knn = args.usize("dist-knn", scale.pick(2_000, 20_000));
+    let dk = args.usize("dist-k", 3);
+    let spill_cap = args.usize_opt("spill");
+    let ranks_sweep = args.usize_list("ranks", &[1, 2, 4, 8]);
+    let tpr_sweep = args.usize_list("tpr", &[1, 4]);
+    let batch_sweep = args.usize_list("batch", &[4096, 16384]);
+
+    let mut t = Table::new(
+        "distributed query serving (simulated fabric)",
+        &["points", "p", "tpr", "batch", "queries", "epochs", "sim-qps", "bytes/q", "spill%"],
+    );
+    let gps = PointSet::uniform(dn, 3, 17);
+    let pcfg = PartitionConfig::default();
+    let ecfg = EngineConfig {
+        spill_max_ranks: spill_cap.unwrap_or(usize::MAX),
+        ..EngineConfig::default()
+    };
+    let mut qps_by: HashMap<(usize, usize, usize), f64> = HashMap::new();
+    for &p in &ranks_sweep {
+        let (built, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+            let local = gps.mod_shard(ctx.rank, ctx.n_ranks);
+            let sess = DistSession::create(ctx, &local, &pcfg, 4 * p, SessionConfig::default());
+            let eng = DistQueryEngine::new(&sess, ecfg, ctx.threads);
+            (sess, eng)
+        });
+        let mut states = built;
+        for &tpr in &tpr_sweep {
+            for &batch in &batch_sweep {
+                let batches = deal_batches(&gps, p, dq_loc, dq_knn, dk, batch);
+                let n_epochs = batches[0].len();
+                let (mut secs, mut bytes, mut served, mut spilled) = (0.0f64, 0u64, 0u64, 0u64);
+                for e in 0..n_epochs {
+                    let bt = &batches;
+                    let (next, outs, rep) =
+                        step_ranks(p, tpr, CostModel::default(), states, |ctx, (sess, eng)| {
+                            let (ans, st) = eng.serve(ctx, &sess, &bt[ctx.rank][e]);
+                            std::hint::black_box(&ans);
+                            ((sess, eng), st)
+                        });
+                    states = next;
+                    secs += rep.sim_time();
+                    bytes += rep.total_bytes;
+                    served += outs.iter().map(|st| st.queries).sum::<u64>();
+                    spilled += outs.iter().map(|st| st.knn_spilled).sum::<u64>();
+                }
+                assert_eq!(served as usize, dq_loc + dq_knn, "every query must be dealt once");
+                let qps = served as f64 / secs.max(1e-12);
+                qps_by.insert((p, tpr, batch), qps);
+                t.row(vec![
+                    dn.to_string(),
+                    p.to_string(),
+                    tpr.to_string(),
+                    batch.to_string(),
+                    served.to_string(),
+                    n_epochs.to_string(),
+                    format!("{qps:.0}"),
+                    format!("{:.1}", bytes as f64 / (served as f64).max(1.0)),
+                    format!("{:.2}", 100.0 * spilled as f64 / (dq_knn as f64).max(1.0)),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Single-rank threaded reference: the same locate stream against one
+    // flat local index, wall clock, no fabric — context for the sim-qps.
+    let ref_threads = *tpr_sweep.iter().max().unwrap();
+    let (_, ridx) = build_index(&gps, ref_threads);
+    let mut qset = PointSet::new(gps.dim);
+    let mut rng = SplitMix64::new(1000);
+    for i in 0..dq_loc {
+        qset.push(gps.point(rng.below(dn as u64) as usize), i as u64, 1.0);
+    }
+    let sw = Stopwatch::start();
+    let rref = ridx.locate_batch_min_id_threaded(&gps, &qset, 1e-12, ref_threads);
+    let ref_secs = sw.secs();
+    assert!(rref.iter().all(|a| a.is_some()));
+    println!(
+        "\nsingle-rank threaded locate reference: {:.0} qps ({} queries, {} threads, {})",
+        dq_loc as f64 / ref_secs,
+        dq_loc,
+        ref_threads,
+        fmt_secs(ref_secs),
+    );
+
+    let mut pass = true;
+    let mut compared = false;
+    for &tpr in &tpr_sweep {
+        for &batch in &batch_sweep {
+            if let (Some(&q1), Some(&q4)) = (qps_by.get(&(1, tpr, batch)), qps_by.get(&(4, tpr, batch))) {
+                compared = true;
+                let ok = q4 >= q1;
+                pass &= ok;
+                println!(
+                    "  p=4 vs p=1 (tpr={tpr} batch={batch}): {q4:.0} vs {q1:.0} sim-qps -> {}",
+                    if ok { "ok" } else { "SLOWER" },
+                );
+            }
+        }
+    }
+    if compared {
+        println!(
+            "check: distributed >= single-rank engine throughput at p=4 on {} queries: {}",
+            dq_loc + dq_knn,
+            if pass { "PASS" } else { "FAIL" },
+        );
+    }
 }

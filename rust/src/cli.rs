@@ -75,6 +75,13 @@ impl Args {
         self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got {v:?}"))).unwrap_or(default)
     }
 
+    /// Optional integer: `None` when the flag is absent (for knobs
+    /// whose absence means something other than any fixed default,
+    /// like `--spill` where absent = unbounded).
+    pub fn usize_opt(&self, name: &str) -> Option<usize> {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+    }
+
     /// Worker-thread count from `--threads` (shared by every subcommand):
     /// absent or `0` means "all available hardware threads".
     pub fn threads(&self) -> usize {
@@ -157,6 +164,13 @@ mod tests {
         assert_eq!(parse("--threads 0").threads(), auto);
         assert_eq!(parse("").threads(), auto);
         assert!(auto >= 1);
+    }
+
+    #[test]
+    fn optional_integers() {
+        let a = parse("--spill 2");
+        assert_eq!(a.usize_opt("spill"), Some(2));
+        assert_eq!(a.usize_opt("batch"), None);
     }
 
     #[test]

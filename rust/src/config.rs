@@ -255,6 +255,42 @@ pub fn dynamic_config(cfg: &ConfigFile) -> Result<DynamicConfig> {
     Ok(out)
 }
 
+/// Knobs of the `queries-distributed` serving loop (section
+/// `[queries]`): queries per serve epoch and per issuing rank
+/// (`batch`), the total query count (`qps_points`), the kNN `k`
+/// (`knn_k`), and the optional spill cap (`spill`; absent =
+/// unbounded = exact kNN). CLI flags override file values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueriesConfig {
+    pub batch: usize,
+    pub qps_points: usize,
+    pub knn_k: usize,
+    pub spill: Option<usize>,
+}
+
+impl Default for QueriesConfig {
+    fn default() -> Self {
+        QueriesConfig { batch: 4096, qps_points: 20_000, knn_k: 8, spill: None }
+    }
+}
+
+/// Build a [`QueriesConfig`] from a config file (section `queries`),
+/// falling back to defaults for missing keys and rejecting unknown ones.
+pub fn queries_config(cfg: &ConfigFile) -> Result<QueriesConfig> {
+    let mut out = QueriesConfig::default();
+    for (key, val) in &cfg.values {
+        let Some(name) = key.strip_prefix("queries.") else { continue };
+        match name {
+            "batch" => out.batch = val.as_usize()?,
+            "qps_points" => out.qps_points = val.as_usize()?,
+            "knn_k" => out.knn_k = val.as_usize()?,
+            "spill" => out.spill = Some(val.as_usize()?),
+            other => bail!("unknown key queries.{other}"),
+        }
+    }
+    Ok(out)
+}
+
 /// Which partitioner backend to run and its knobs (section `[backend]`):
 /// key `kind` is `"sfc"` (the paper's pipeline, default), `"kmeans"`
 /// (distributed balanced k-means), or `"rectilinear"` (the SGORP-style
@@ -378,6 +414,26 @@ mod tests {
         // Integer-typed knobs reject floats.
         let bad = ConfigFile::parse("[backend]\nkmeans_max_iters = 1.5\n").unwrap();
         assert!(backend_config(&bad).is_err());
+    }
+
+    #[test]
+    fn queries_config_from_file() {
+        let cfg = ConfigFile::parse(
+            "[queries]\nbatch = 512\nqps_points = 100000\nknn_k = 4\nspill = 2\n",
+        )
+        .unwrap();
+        let qc = queries_config(&cfg).unwrap();
+        assert_eq!(qc.batch, 512);
+        assert_eq!(qc.qps_points, 100_000);
+        assert_eq!(qc.knn_k, 4);
+        assert_eq!(qc.spill, Some(2));
+        // Absent spill key means unbounded (exact kNN).
+        let qc = queries_config(&ConfigFile::parse("[queries]\nbatch = 64\n").unwrap()).unwrap();
+        assert_eq!(qc.spill, None);
+        assert_eq!(qc.qps_points, QueriesConfig::default().qps_points);
+        // Unknown keys are rejected.
+        let bad = ConfigFile::parse("[queries]\nbatches = 64\n").unwrap();
+        assert!(queries_config(&bad).is_err());
     }
 
     #[test]

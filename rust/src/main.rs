@@ -6,6 +6,7 @@
 //! sfc-part distributed --points 100000 --ranks 8
 //! sfc-part dynamic --points 50000 --iters 1000 --step 100
 //! sfc-part queries --points 100000 --queries 10000 --knn 3
+//! sfc-part queries-distributed --points 100000 --ranks 4 --qps-points 20000
 //! sfc-part graph --dataset google-like --scale 16 --procs 16,32
 //! sfc-part spmv --scale 12            (PJRT block-ELL hot path)
 //! sfc-part info                        (artifact + runtime info)
@@ -30,6 +31,7 @@ fn main() {
         "distributed-dynamic" => cmd_distributed_dynamic(&args),
         "dynamic" => cmd_dynamic(&args),
         "queries" => cmd_queries(&args),
+        "queries-distributed" => cmd_queries_distributed(&args),
         "graph" => cmd_graph(&args),
         "spmv" => cmd_spmv(&args),
         "info" => cmd_info(&args),
@@ -51,7 +53,8 @@ fn main() {
 fn print_help() {
     println!(
         "sfc-part — distributed geometric partitioner (SFC orders)\n\
-         commands: partition | distributed | distributed-dynamic | dynamic | queries | graph | spmv | info\n\
+         commands: partition | distributed | distributed-dynamic | dynamic | queries |\n\
+                   queries-distributed | graph | spmv | info\n\
          common flags: --points N --dim D --parts P --curve morton|hilbert\n\
          --threads T (0 or absent = all cores; results are identical for any T;\n\
                       under `distributed`, T = worker share per simulated rank)\n\
@@ -64,7 +67,10 @@ fn print_help() {
          distributed-dynamic: --ranks P --steps N --scenario hotspot|wave|churn\n\
          --drift-lo F --drift-hi F --imb-tol F --amplitude F --speed F --churn-frac F\n\
          --adaptive=true (EMA drift controller widens the band under static load)\n\
-         --baseline=true (also run the from-scratch-per-step comparison)"
+         --baseline=true (also run the from-scratch-per-step comparison)\n\
+         queries-distributed: --ranks P --qps-points N --batch B --knn-k K\n\
+         --spill S (cap kNN spill fan-out; absent = unbounded = exact)\n\
+         --interleave=true (repartition + routing refresh between serve epochs)"
     );
 }
 
@@ -412,7 +418,153 @@ fn cmd_queries(args: &Args) -> Result<()> {
         secs,
         results.len() as f64 / secs,
         router.stats.batches,
-        router.stats.bin_imbalance
+        router.stats.last_flush.bin_imbalance
+    );
+    Ok(())
+}
+
+/// Rank-parallel query serving over the persistent session: build the
+/// sessions once, then serve `--qps-points` queries in `--batch`-sized
+/// epochs through `DistQueryEngine::serve` (three `alltoallv_rounds`
+/// exchanges per epoch regardless of the query count). With
+/// `--interleave`, every serve epoch is followed by a hotspot
+/// repartition step and a routing refresh, exercising the
+/// refresh-from-deltas path under a moving workload.
+fn cmd_queries_distributed(args: &Args) -> Result<()> {
+    use sfc_part::partition::distributed::{step_ranks, DistSession, SessionConfig};
+    use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+    use sfc_part::query::distributed::{DistQueryEngine, EngineConfig, QueryBatch};
+    use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+    use sfc_part::util::rng::{Rng, SplitMix64};
+
+    let cfg = partition_cfg(args)?;
+    let mut qcfg = match args.get("config") {
+        Some(path) => {
+            sfc_part::config::queries_config(&ConfigFile::load(std::path::Path::new(path))?)?
+        }
+        None => sfc_part::config::QueriesConfig::default(),
+    };
+    qcfg.batch = args.usize("batch", qcfg.batch).max(1);
+    qcfg.qps_points = args.usize("qps-points", qcfg.qps_points);
+    qcfg.knn_k = args.usize("knn-k", qcfg.knn_k);
+    if let Some(s) = args.usize_opt("spill") {
+        qcfg.spill = Some(s);
+    }
+    let interleave =
+        args.flag("interleave") || matches!(args.get("interleave"), Some("true") | Some("1"));
+
+    let ps = workload(args);
+    let ranks = args.usize("ranks", 4);
+    let k1 = args.usize("k1", 4 * ranks);
+    let tpr = args.usize("threads", 0);
+    let ecfg = EngineConfig {
+        spill_max_ranks: qcfg.spill.unwrap_or(usize::MAX),
+        ..EngineConfig::default()
+    };
+    let scen = Scenario::new(ScenarioKind::Hotspot);
+
+    // Deterministic query stream (same recipe as `queries`): even slots
+    // locate a stored point, odd slots run kNN at a random coordinate.
+    // Queries are dealt round-robin to the issuing ranks and chunked
+    // into `batch`-sized serve epochs.
+    let qn = qcfg.qps_points;
+    let per_rank = qn.div_ceil(ranks.max(1));
+    let n_epochs = per_rank.div_ceil(qcfg.batch).max(1);
+    let mut batches: Vec<Vec<QueryBatch>> = (0..ranks)
+        .map(|_| (0..n_epochs).map(|_| QueryBatch::new(ps.dim, 1e-12, qcfg.knn_k)).collect())
+        .collect();
+    let mut rng = SplitMix64::new(args.u64("seed", 9));
+    for i in 0..qn {
+        let r = i % ranks;
+        let e = (i / ranks) / qcfg.batch;
+        if i % 2 == 0 {
+            let j = rng.below(ps.len() as u64) as usize;
+            batches[r][e].push_locate(ps.point(j));
+        } else {
+            let coords: Vec<f64> = (0..ps.dim).map(|_| rng.next_f64()).collect();
+            batches[r][e].push_knn(&coords);
+        }
+    }
+
+    let cfg0 = cfg.clone();
+    let scfg = SessionConfig::default();
+    let (outs0, rep0) = run_ranks_threaded(ranks, tpr, CostModel::default(), |ctx| {
+        let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+        let sess = DistSession::create(ctx, &local, &cfg0, k1, scfg);
+        let eng = DistQueryEngine::new(&sess, ecfg, ctx.threads);
+        (sess, eng)
+    });
+    let mut states: Vec<(DistSession, DistQueryEngine)> = outs0;
+    let spill_desc = match qcfg.spill {
+        Some(s) => s.to_string(),
+        None => "unbounded".to_string(),
+    };
+    println!(
+        "create: {} ranks (build msgs={}, bytes={}), k1={}, {} queries in {} epochs of ≤{}, knn k={}, spill {}{}",
+        ranks,
+        rep0.total_msgs,
+        rep0.total_bytes,
+        k1,
+        qn,
+        n_epochs,
+        qcfg.batch * ranks,
+        qcfg.knn_k,
+        spill_desc,
+        if interleave { ", interleaved repartition" } else { "" }
+    );
+
+    println!(
+        "{:>5} {:>8} {:>10} {:>9} {:>8} {:>7} {:>6} {:>6}",
+        "epoch", "queries", "sim-qps", "bytes/q", "spill%", "fwds", "tags", "hits"
+    );
+    let mut tot = (0u64, 0.0f64, 0u64, 0u64); // queries, sim secs, bytes, spilled
+    for e in 0..n_epochs {
+        let bt = &batches;
+        let sc = &scen;
+        let (next, outs, rep) =
+            step_ranks(ranks, tpr, CostModel::default(), states, |ctx, (mut sess, mut eng)| {
+                let (ans, st) = eng.serve(ctx, &sess, &bt[ctx.rank][e]);
+                if interleave {
+                    let upd = sc.update_for(sess.local(), e);
+                    sess.repartition(ctx, &upd);
+                    eng.refresh(&sess, ctx.threads);
+                }
+                let hits = ans.locate.iter().filter(|a| a.is_some()).count() as u64;
+                ((sess, eng), (st, hits))
+            });
+        states = next;
+        let q: u64 = outs.iter().map(|(s, _)| s.queries).sum();
+        let spilled: u64 = outs.iter().map(|(s, _)| s.knn_spilled).sum();
+        let fwds: u64 = outs.iter().map(|(s, _)| s.spill_forwards).sum();
+        let hits: u64 = outs.iter().map(|(_, h)| *h).sum();
+        let tags = outs.first().map(|(s, _)| s.epochs).unwrap_or(0);
+        let n_knn: u64 = (0..ranks).map(|r| batches[r][e].n_knn() as u64).sum();
+        let secs = rep.sim_time();
+        println!(
+            "{:>5} {:>8} {:>10.0} {:>9.1} {:>7.1}% {:>7} {:>6} {:>6}",
+            e,
+            q,
+            q as f64 / secs.max(1e-12),
+            rep.total_bytes as f64 / q.max(1) as f64,
+            100.0 * spilled as f64 / n_knn.max(1) as f64,
+            fwds,
+            tags,
+            hits
+        );
+        tot.0 += q;
+        tot.1 += secs;
+        tot.2 += rep.total_bytes;
+        tot.3 += spilled;
+    }
+    let refreshes: u64 = states.iter().map(|(_, eng)| eng.routing_refreshes()).sum();
+    let rebuilds: u64 = states.iter().map(|(_, eng)| eng.index_builds()).sum();
+    println!(
+        "total: {} queries, {:.0} q/s simulated, {:.1} wire bytes/query; routing refreshes {}, index rebuilds {}",
+        tot.0,
+        tot.0 as f64 / tot.1.max(1e-12),
+        tot.2 as f64 / tot.0.max(1) as f64,
+        refreshes,
+        rebuilds
     );
     Ok(())
 }

@@ -323,6 +323,12 @@ impl DistSession {
         self.local = mig.local;
         self.keys = mig.keys;
 
+        // Merges orphan arena slots (split/merge cycles would otherwise
+        // leak nodes without bound over thousands of steps); compact when
+        // the dead fraction passes 1/2. Pure function of the replicated
+        // arena — every rank compacts identically, zero collectives.
+        self.compact_arena();
+
         StepStats {
             collective_rounds: (ctx.epochs_used() - epoch0) as u64,
             migrated_out: mig.migrated_out,
@@ -507,6 +513,78 @@ impl DistSession {
     /// adaptive step).
     pub fn drift_ema(&self) -> f64 {
         self.drift_ema
+    }
+
+    /// The replicated top-tree arena — read-only routing state for the
+    /// query engine (same on every rank).
+    pub(crate) fn top_nodes(&self) -> &[TopNode] {
+        &self.nodes
+    }
+
+    /// Current leaf slots (SFC-key order, with owners) — the ownership
+    /// map the query engine routes against.
+    pub(crate) fn leaf_slots(&self) -> &[LeafSlot] {
+        &self.leaves
+    }
+
+    /// Arena slots allocated (live + dead). Bounded by
+    /// `2 ×` [`Self::arena_live`] — see `compact_arena`.
+    pub fn arena_len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Arena nodes reachable from the root (the live tree).
+    pub fn arena_live(&self) -> usize {
+        let mut live = 0usize;
+        let mut stack = vec![0u32];
+        while let Some(n) = stack.pop() {
+            live += 1;
+            let nd = &self.nodes[n as usize];
+            if nd.left >= 0 {
+                stack.push(nd.left as u32);
+                stack.push(nd.right as u32);
+            }
+        }
+        live
+    }
+
+    /// Rebuild the arena in preorder when more than half its slots are
+    /// dead (merges orphan the merged children; splits only append).
+    /// The traversal order, the remap, and the trigger all depend only
+    /// on the replicated arena, so every rank produces the identical
+    /// compacted arena without communicating. Root stays at index 0.
+    fn compact_arena(&mut self) {
+        let live = self.arena_live();
+        if self.nodes.len() <= 2 * live {
+            return;
+        }
+        let mut remap = vec![u32::MAX; self.nodes.len()];
+        let mut order = Vec::with_capacity(live);
+        let mut stack = vec![0u32];
+        while let Some(n) = stack.pop() {
+            remap[n as usize] = order.len() as u32;
+            order.push(n);
+            let nd = &self.nodes[n as usize];
+            if nd.left >= 0 {
+                stack.push(nd.right as u32);
+                stack.push(nd.left as u32);
+            }
+        }
+        self.nodes = order
+            .iter()
+            .map(|&old| {
+                let mut nd = self.nodes[old as usize].clone();
+                if nd.left >= 0 {
+                    nd.left = remap[nd.left as usize] as i32;
+                    nd.right = remap[nd.right as usize] as i32;
+                }
+                nd
+            })
+            .collect();
+        for l in &mut self.leaves {
+            l.node = remap[l.node as usize];
+            debug_assert_ne!(l.node, u32::MAX, "leaf slot pointed at a dead node");
+        }
     }
 }
 
@@ -826,6 +904,36 @@ mod tests {
         for (scale, ema) in &outs {
             assert_eq!((*scale, *ema), (1.0, 0.0));
         }
+    }
+
+    #[test]
+    fn arena_stays_compact_over_hotspot_steps() {
+        // A wandering hotspot drives continual split/merge surgery; the
+        // arena must never hold more than 2× the live tree. Without
+        // compact_arena the arena grows monotonically (merges orphan
+        // slots, splits append) and this fails within a few dozen steps.
+        use crate::partition::scenario::{Scenario, ScenarioKind};
+        let global = PointSet::uniform(600, 2, 13);
+        let (outs, _) = run_ranks(1, CostModel::default(), |ctx| {
+            let cfg = PartitionConfig::default();
+            let mut sess =
+                DistSession::create(ctx, &global, &cfg, 8, SessionConfig::default());
+            let scen = Scenario::new(ScenarioKind::Hotspot);
+            let mut surgery = 0u64;
+            for step in 0..1000usize {
+                let batch = scen.update_for(sess.local(), step);
+                let stats = sess.repartition(ctx, &batch);
+                surgery += stats.splits + stats.merges;
+                assert!(
+                    sess.arena_len() <= 2 * sess.arena_live(),
+                    "step {step}: arena {} slots vs {} live",
+                    sess.arena_len(),
+                    sess.arena_live()
+                );
+            }
+            surgery
+        });
+        assert!(outs[0] > 0, "hotspot run did no split/merge surgery — vacuous test");
     }
 
     #[test]

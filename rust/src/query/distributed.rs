@@ -1,0 +1,884 @@
+//! Rank-parallel query serving through the persistent session (paper
+//! §V-A at scale: *"input queries are presorted using their
+//! co-ordinates into bins … executed in parallel"*).
+//!
+//! [`DistQueryEngine`] turns a [`DistSession`] into a serving system.
+//! Each rank holds a *routing snapshot* of the replicated top tree
+//! (nodes + leaf→owner map + per-leaf split cells) and a local
+//! [`BucketIndex`] over its own shard. A batch of `Locate`/`Knn`
+//! queries is served with exactly **three** `alltoallv_rounds`
+//! exchanges, independent of the number of queries:
+//!
+//! ```text
+//!  issuer ──(1) query packets──▶ owner rank      (top-tree descent)
+//!  owner  ──(2) spill packets──▶ adjacent owners (kNN radius ∩ cell)
+//!  owner + spill targets ──(3) result packets──▶ issuer
+//! ```
+//!
+//! Exchange (2) runs unconditionally for SPMD congruence; with no
+//! spill every buffer is empty and `alltoallv_rounds` degenerates to a
+//! single round-count allreduce with zero data messages.
+//!
+//! **Determinism contract.** Answers are bit-identical for any
+//! threads-per-rank and any rank count:
+//! * locate returns the *minimum global id* among matches — canonical
+//!   under any placement of duplicate coordinates (exact duplicates
+//!   always co-locate: `<=`-splits cannot separate equal coordinates,
+//!   so they share a top leaf and hence an owner);
+//! * kNN keeps the k best under the `(dist2, id)` lexicographic order;
+//!   shards are id-disjoint and `PointSet::dist2_to` sums in fixed
+//!   dimension order, so every rank scores a candidate identically and
+//!   the issuer-side merge has one total order. With unbounded spill
+//!   the result equals a single-rank [`knn_exact`](crate::query::knn)
+//!   scan; capping `spill_max_ranks` trades recall for traffic.
+//!
+//! Spill exactness: the adjacency uses each leaf's **split cell** —
+//! the half-space intersection along its root path, unbounded on the
+//! outer sides — not its build-time tight bbox. Session migration
+//! routes points down the *same* split planes
+//! (`route_to_leaves`), so a rank's points lie inside its leaves'
+//! cells even after arbitrary drift, while a tight box goes stale the
+//! moment points move. Any rank holding a true top-k candidate
+//! therefore has a leaf cell with `min_dist2(q) ≤ r2` (r2 = k-th best
+//! owner-local distance, `∞` when the owner holds fewer than k
+//! points) and is forwarded to.
+
+use crate::geom::bbox::BoundingBox;
+use crate::geom::point::PointSet;
+use crate::kdtree::builder::KdTreeBuilder;
+use crate::kdtree::splitter::{DimRule, SplitterConfig, SplitterKind};
+use crate::partition::distributed::{DistSession, TopNode};
+use crate::query::knn::{knn_within_by_id, IdNeighbor};
+use crate::query::point_location::BucketIndex;
+use crate::runtime_sim::collectives::MAX_MSG_SIZE;
+use crate::runtime_sim::fabric::dec_f64;
+use crate::runtime_sim::rank::RankCtx;
+use crate::runtime_sim::threadpool::parallel_map_blocks;
+use crate::sfc::kernel::morton_keys_batch;
+use crate::sfc::traverse::assign_sfc;
+use crate::sfc::Curve;
+
+/// Fixed block sizes of the pool-parallel passes (part of the
+/// determinism contract — results are concatenated in block order).
+const QUERY_BLOCK: usize = 256;
+/// Morton depth of the routing presort (bits per dimension). Only
+/// locality matters here, not resolution: the destination re-sorts
+/// against its own index depth.
+const PRESORT_DEPTH: u16 = 16;
+
+/// Engine knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Per-message cap of the three exchanges (`alltoallv_rounds`).
+    pub max_msg: usize,
+    /// Most adjacent owners one kNN query may spill to. `usize::MAX`
+    /// (default) keeps kNN exact; a small cap bounds worst-case spill
+    /// traffic at a documented recall cost.
+    pub spill_max_ranks: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_msg: MAX_MSG_SIZE, spill_max_ranks: usize::MAX }
+    }
+}
+
+/// A batch of queries issued by one rank. Coordinates are flat
+/// (stride `dim`); `loc_eps` / `knn_k` apply to the whole batch.
+#[derive(Clone, Debug)]
+pub struct QueryBatch {
+    pub dim: usize,
+    pub loc_coords: Vec<f64>,
+    pub loc_eps: f64,
+    pub knn_coords: Vec<f64>,
+    pub knn_k: usize,
+}
+
+impl QueryBatch {
+    pub fn new(dim: usize, loc_eps: f64, knn_k: usize) -> QueryBatch {
+        QueryBatch { dim, loc_coords: Vec::new(), loc_eps, knn_coords: Vec::new(), knn_k }
+    }
+
+    pub fn push_locate(&mut self, q: &[f64]) {
+        assert_eq!(q.len(), self.dim);
+        self.loc_coords.extend_from_slice(q);
+    }
+
+    pub fn push_knn(&mut self, q: &[f64]) {
+        assert_eq!(q.len(), self.dim);
+        self.knn_coords.extend_from_slice(q);
+    }
+
+    pub fn n_locate(&self) -> usize {
+        self.loc_coords.len() / self.dim
+    }
+
+    pub fn n_knn(&self) -> usize {
+        self.knn_coords.len() / self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_locate() + self.n_knn()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-batch answers on the issuing rank, indexed by issue order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchAnswers {
+    /// `locate[i]` = minimum global id matching the i-th locate query
+    /// (within `loc_eps`), `None` if no stored point matches.
+    pub locate: Vec<Option<u64>>,
+    /// `knn[i]` = k best `(dist2, id)` neighbours of the i-th kNN query.
+    pub knn: Vec<Vec<IdNeighbor>>,
+}
+
+/// Per-rank accounting of one [`DistQueryEngine::serve`] call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Queries this rank issued.
+    pub queries: u64,
+    /// Queries this rank answered as owner (from every issuer).
+    pub answered_owner: u64,
+    /// Owner-side kNN queries whose radius crossed the leaf bbox of at
+    /// least one other rank (needed the spill round).
+    pub knn_spilled: u64,
+    /// (query, target-rank) forwardings this rank sent in the spill
+    /// round — ≥ `knn_spilled` when a query spills to several owners.
+    pub spill_forwards: u64,
+    /// Collective exchanges of the batch — always 3 (route, spill,
+    /// return); asserted against the epoch meter in the tests.
+    pub exchanges: u32,
+    /// Tag epochs the batch consumed (`RankCtx::epochs_used` delta) —
+    /// independent of the number of queries.
+    pub epochs: u32,
+    /// Wire messages/bytes this rank sent during the batch
+    /// ([`Fabric::sent_snapshot`](crate::runtime_sim::fabric::Fabric::sent_snapshot) delta).
+    pub wire_msgs: u64,
+    pub wire_bytes: u64,
+}
+
+/// Rank-parallel query engine over a [`DistSession`] (see module docs).
+pub struct DistQueryEngine {
+    cfg: EngineConfig,
+    dim: usize,
+    /// Root bbox of the top tree (replicated) — key domain of the
+    /// routing presort.
+    domain: BoundingBox,
+    /// Snapshot of the replicated top-tree arena.
+    nodes: Vec<TopNode>,
+    /// `owner_of_node[n]` = owning rank of leaf node `n` (`u32::MAX`
+    /// for interior/dead slots).
+    owner_of_node: Vec<u32>,
+    /// `(owner, split cell)` per current leaf — the spill adjacency.
+    /// Cells, not tight boxes: they stay valid under drift (module
+    /// docs, "spill exactness").
+    leaves: Vec<(u32, BoundingBox)>,
+    /// Local bucket index over this rank's shard (`None` when empty).
+    index: Option<BucketIndex>,
+    /// Signature of the shard the index was built over.
+    shard_sig: u64,
+    index_builds: u64,
+    routing_refreshes: u64,
+}
+
+impl DistQueryEngine {
+    /// Build an engine over the session's current state.
+    pub fn new(sess: &DistSession, cfg: EngineConfig, threads: usize) -> DistQueryEngine {
+        let dim = sess.local().dim;
+        let mut eng = DistQueryEngine {
+            cfg,
+            dim,
+            domain: BoundingBox::unit(dim),
+            nodes: Vec::new(),
+            owner_of_node: Vec::new(),
+            leaves: Vec::new(),
+            index: None,
+            shard_sig: !shard_signature(sess.local()),
+            index_builds: 0,
+            routing_refreshes: 0,
+        };
+        eng.refresh(sess, threads);
+        eng
+    }
+
+    /// Refresh the routing state from the session after a
+    /// `repartition` step. The top-tree snapshot and owner map are
+    /// re-derived every call (cheap: the session already holds them
+    /// replicated); the local bucket index is rebuilt **only when the
+    /// shard actually changed** — a repartition step that didn't touch
+    /// this rank's points costs no local index work.
+    pub fn refresh(&mut self, sess: &DistSession, threads: usize) {
+        self.nodes = sess.top_nodes().to_vec();
+        self.domain = self.nodes[0].bbox.clone();
+        let mut owner = vec![u32::MAX; self.nodes.len()];
+        for l in sess.leaf_slots() {
+            owner[l.node as usize] = l.owner;
+        }
+        // Split cells by one root-path walk: child cells clip the
+        // parent at the split plane; everything else stays unbounded.
+        let dim = self.dim;
+        let mut cells: Vec<Option<BoundingBox>> = vec![None; self.nodes.len()];
+        let root_cell = BoundingBox {
+            lo: vec![f64::NEG_INFINITY; dim],
+            hi: vec![f64::INFINITY; dim],
+        };
+        let mut stack = vec![(0u32, root_cell)];
+        while let Some((n, cell)) = stack.pop() {
+            let nd = &self.nodes[n as usize];
+            if nd.left < 0 {
+                cells[n as usize] = Some(cell);
+                continue;
+            }
+            let mut lc = cell.clone();
+            lc.hi[nd.split_dim] = nd.split_val;
+            let mut rc = cell;
+            rc.lo[nd.split_dim] = nd.split_val;
+            stack.push((nd.left as u32, lc));
+            stack.push((nd.right as u32, rc));
+        }
+        let mut leaves = Vec::with_capacity(sess.leaf_slots().len());
+        for l in sess.leaf_slots() {
+            let cell = cells[l.node as usize].take().expect("leaf slot points at an interior node");
+            leaves.push((l.owner, cell));
+        }
+        self.owner_of_node = owner;
+        self.leaves = leaves;
+        self.routing_refreshes += 1;
+        let sig = shard_signature(sess.local());
+        if sig != self.shard_sig {
+            self.shard_sig = sig;
+            self.index = build_local_index(sess.local(), &self.domain, threads);
+            self.index_builds += 1;
+        }
+    }
+
+    /// Local index rebuilds so far (≤ [`Self::routing_refreshes`]).
+    pub fn index_builds(&self) -> u64 {
+        self.index_builds
+    }
+
+    pub fn routing_refreshes(&self) -> u64 {
+        self.routing_refreshes
+    }
+
+    /// Owner rank of the point `q` by top-tree descent.
+    pub fn owner_rank_of(&self, q: &[f64]) -> u32 {
+        let mut cur = 0u32;
+        loop {
+            let nd = &self.nodes[cur as usize];
+            if nd.left < 0 {
+                break;
+            }
+            cur = if q[nd.split_dim] <= nd.split_val { nd.left as u32 } else { nd.right as u32 };
+        }
+        self.owner_of_node[cur as usize]
+    }
+
+    /// Serve one batch: route, answer, spill, merge (module docs).
+    /// Every rank must call this collectively with its own batch (an
+    /// empty batch is fine). The engine must be fresh for the session
+    /// (`refresh` after each `repartition`).
+    pub fn serve(
+        &self,
+        ctx: &mut RankCtx,
+        sess: &DistSession,
+        batch: &QueryBatch,
+    ) -> (BatchAnswers, ServeStats) {
+        let p = ctx.n_ranks;
+        let threads = ctx.threads;
+        let dim = self.dim;
+        assert_eq!(batch.dim, dim, "query batch dimension mismatch");
+        debug_assert_eq!(
+            shard_signature(sess.local()),
+            self.shard_sig,
+            "stale engine: call refresh() after repartition before serving"
+        );
+        let e0 = ctx.epochs_used();
+        let (m0, b0) = ctx.fabric.sent_snapshot(ctx.rank);
+        let n_loc = batch.n_locate();
+        let n_knn = batch.n_knn();
+
+        // ---- Exchange 1: route every query to its owner rank ----
+        // Destinations by top-tree descent; per-destination selections
+        // presorted by Morton key so the owner walks its buckets in
+        // curve order (the paper's bin presort, now across ranks).
+        let loc_dest = self.dests_of(&batch.loc_coords, threads);
+        let knn_dest = self.dests_of(&batch.knn_coords, threads);
+        let loc_sel = presorted_selections(&batch.loc_coords, dim, &loc_dest, p, &self.domain, threads);
+        let knn_sel = presorted_selections(&batch.knn_coords, dim, &knn_dest, p, &self.domain, threads);
+        let bufs: Vec<Vec<u8>> = (0..p)
+            .map(|d| pack_queries(batch, &loc_sel[d], &knn_sel[d]))
+            .collect();
+        let incoming = ctx.alltoallv_rounds(bufs, self.cfg.max_msg);
+
+        // ---- Owner-side answering (pool-parallel, zero collectives) ----
+        let packets: Vec<QueryPacket> = incoming.iter().map(|b| unpack_queries(b, dim)).collect();
+        let shard = sess.local();
+
+        // Locate: one presorted pool-parallel pass per issuer (each
+        // issuer carries its own eps).
+        let mut loc_answers: Vec<Vec<Option<u64>>> = Vec::with_capacity(p);
+        for pk in &packets {
+            if pk.loc_qid.is_empty() {
+                loc_answers.push(Vec::new());
+                continue;
+            }
+            let mut qps = PointSet::new(dim);
+            for (j, &qid) in pk.loc_qid.iter().enumerate() {
+                qps.push(&pk.loc_coords[j * dim..(j + 1) * dim], qid as u64, 1.0);
+            }
+            loc_answers.push(match &self.index {
+                Some(idx) => idx.locate_batch_min_id_threaded(shard, &qps, pk.eps, threads),
+                None => vec![None; pk.loc_qid.len()],
+            });
+        }
+
+        // kNN: flatten across issuers (contiguous per-issuer ranges),
+        // then blocked k-best scans over the local SFC order. Each
+        // block also derives the query's spill radius and targets.
+        let mut knn_qid: Vec<u32> = Vec::new();
+        let mut knn_kk: Vec<u32> = Vec::new();
+        let mut knn_coords: Vec<f64> = Vec::new();
+        let mut knn_range: Vec<(usize, usize)> = Vec::with_capacity(p);
+        for pk in &packets {
+            let start = knn_qid.len();
+            knn_qid.extend_from_slice(&pk.knn_qid);
+            knn_kk.resize(knn_qid.len(), pk.k as u32);
+            knn_coords.extend_from_slice(&pk.knn_coords);
+            knn_range.push((start, knn_qid.len()));
+        }
+        let nk = knn_qid.len();
+        let me = ctx.rank;
+        let owner_knn: Vec<(Vec<IdNeighbor>, f64, Vec<u32>)> =
+            parallel_map_blocks(threads, nk, QUERY_BLOCK, |lo, hi| {
+                (lo..hi)
+                    .map(|i| {
+                        let q = &knn_coords[i * dim..(i + 1) * dim];
+                        let k = knn_kk[i] as usize;
+                        let ans = knn_within_by_id(shard, q, k, f64::INFINITY);
+                        // Spill radius: the k-th best local distance; ∞
+                        // when the shard holds fewer than k points, −∞
+                        // (never spill) for the degenerate k = 0.
+                        let r2 = if k == 0 {
+                            f64::NEG_INFINITY
+                        } else if ans.len() == k {
+                            ans.last().unwrap().dist2
+                        } else {
+                            f64::INFINITY
+                        };
+                        let targets = self.spill_targets(q, r2, me, p);
+                        (ans, r2, targets)
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+
+        // ---- Exchange 2: bounded kNN spill to adjacent owners ----
+        // Unconditional for SPMD congruence; all-empty buffers cost one
+        // allreduce and zero data messages.
+        let mut fwd: Vec<Vec<u32>> = vec![Vec::new(); p];
+        for (i, (_, _, targets)) in owner_knn.iter().enumerate() {
+            for &t in targets {
+                fwd[t as usize].push(i as u32);
+            }
+        }
+        let knn_spilled = owner_knn.iter().filter(|(_, _, t)| !t.is_empty()).count() as u64;
+        let spill_forwards = fwd.iter().map(|f| f.len() as u64).sum();
+        let spill_bufs: Vec<Vec<u8>> = (0..p)
+            .map(|src| {
+                pack_spill(&fwd[src], &knn_qid, &knn_kk, &knn_coords, &knn_range, &owner_knn, dim)
+            })
+            .collect();
+        let spill_in = ctx.alltoallv_rounds(spill_bufs, self.cfg.max_msg);
+
+        // Answer spilled queries: same blocked k-best, radius-bounded.
+        let mut sp_issuer: Vec<u32> = Vec::new();
+        let mut sp_qid: Vec<u32> = Vec::new();
+        let mut sp_k: Vec<u32> = Vec::new();
+        let mut sp_r2: Vec<f64> = Vec::new();
+        let mut sp_coords: Vec<f64> = Vec::new();
+        for buf in &spill_in {
+            unpack_spill(buf, dim, &mut sp_issuer, &mut sp_qid, &mut sp_k, &mut sp_r2, &mut sp_coords);
+        }
+        let ns = sp_qid.len();
+        let spill_ans: Vec<Vec<IdNeighbor>> = parallel_map_blocks(threads, ns, QUERY_BLOCK, |lo, hi| {
+            (lo..hi)
+                .map(|i| {
+                    knn_within_by_id(shard, &sp_coords[i * dim..(i + 1) * dim], sp_k[i] as usize, sp_r2[i])
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+
+        // ---- Exchange 3: results back to the issuing ranks ----
+        let mut sp_by_issuer: Vec<Vec<u32>> = vec![Vec::new(); p];
+        for (s, &iss) in sp_issuer.iter().enumerate() {
+            sp_by_issuer[iss as usize].push(s as u32);
+        }
+        let res_bufs: Vec<Vec<u8>> = (0..p)
+            .map(|i| {
+                pack_results(
+                    &packets[i].loc_qid,
+                    &loc_answers[i],
+                    knn_range[i],
+                    &knn_qid,
+                    &owner_knn,
+                    &sp_by_issuer[i],
+                    &sp_qid,
+                    &spill_ans,
+                )
+            })
+            .collect();
+        let results_in = ctx.alltoallv_rounds(res_bufs, self.cfg.max_msg);
+
+        // ---- Issuer-side merge: deterministic by (dist2, id) ----
+        let mut locate: Vec<Option<u64>> = vec![None; n_loc];
+        let mut loc_seen = vec![false; n_loc];
+        let mut knn: Vec<Vec<IdNeighbor>> = vec![Vec::new(); n_knn];
+        for buf in &results_in {
+            merge_results(buf, &mut locate, &mut loc_seen, &mut knn);
+        }
+        assert!(loc_seen.iter().all(|&s| s), "a locate query received no answer");
+        for l in &mut knn {
+            l.sort_unstable_by(|a, b| a.dist2.total_cmp(&b.dist2).then(a.id.cmp(&b.id)));
+            l.truncate(batch.knn_k);
+        }
+
+        let (m1, b1) = ctx.fabric.sent_snapshot(ctx.rank);
+        let stats = ServeStats {
+            queries: (n_loc + n_knn) as u64,
+            answered_owner: packets.iter().map(|pk| (pk.loc_qid.len() + pk.knn_qid.len()) as u64).sum(),
+            knn_spilled,
+            spill_forwards,
+            exchanges: 3,
+            epochs: ctx.epochs_used() - e0,
+            wire_msgs: m1 - m0,
+            wire_bytes: b1 - b0,
+        };
+        (BatchAnswers { locate, knn }, stats)
+    }
+
+    /// Destination rank per query (blocked parallel descent).
+    fn dests_of(&self, coords: &[f64], threads: usize) -> Vec<u32> {
+        let dim = self.dim;
+        let n = coords.len() / dim;
+        parallel_map_blocks(threads, n, QUERY_BLOCK, |lo, hi| {
+            (lo..hi)
+                .map(|i| self.owner_rank_of(&coords[i * dim..(i + 1) * dim]))
+                .collect::<Vec<u32>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Ranks (≠ `me`) whose closest owned leaf *cell* is within `r2`
+    /// of `q`, nearest first, capped at `spill_max_ranks`. The `≤`
+    /// keeps exact ties in, so unbounded spill preserves exactness.
+    fn spill_targets(&self, q: &[f64], r2: f64, me: usize, p: usize) -> Vec<u32> {
+        let mut best = vec![f64::INFINITY; p];
+        for (owner, bbox) in &self.leaves {
+            let o = *owner as usize;
+            if o == me {
+                continue;
+            }
+            let d = bbox.min_dist2(q);
+            if d < best[o] {
+                best[o] = d;
+            }
+        }
+        let mut t: Vec<(f64, u32)> =
+            (0..p).filter(|&o| best[o] <= r2).map(|o| (best[o], o as u32)).collect();
+        t.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        t.truncate(self.cfg.spill_max_ranks);
+        t.into_iter().map(|(_, o)| o).collect()
+    }
+}
+
+/// FNV-1a over the shard's ids and coordinate bits — the engine's
+/// staleness check. Coordinates are hashed too because relocations
+/// change coords without changing the id set.
+fn shard_signature(ps: &PointSet) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    h = (h ^ ps.len() as u64).wrapping_mul(PRIME);
+    for &id in &ps.ids {
+        h = (h ^ id).wrapping_mul(PRIME);
+    }
+    for &c in &ps.coords {
+        h = (h ^ c.to_bits()).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Midpoint/cycle Morton bucket index over the shard (the geometry the
+/// key binary search is exact for). The domain is the replicated root
+/// box grown to cover the shard, so every stored point quantizes
+/// inside it.
+fn build_local_index(shard: &PointSet, domain: &BoundingBox, threads: usize) -> Option<BucketIndex> {
+    if shard.is_empty() {
+        return None;
+    }
+    let mut dom = domain.clone();
+    dom.merge(&shard.bounding_box());
+    let mut cfg = SplitterConfig::uniform(SplitterKind::Midpoint);
+    cfg.dim_rule = DimRule::Cycle;
+    let mut tree = KdTreeBuilder::new()
+        .bucket_size(32)
+        .splitter(cfg)
+        .domain(dom.clone())
+        .threads(threads)
+        .build(shard);
+    assign_sfc(&mut tree, Curve::Morton);
+    Some(BucketIndex::from_tree(&tree, dom))
+}
+
+/// Per-destination query ids in `(morton key, qid)` order — the
+/// cross-rank bin presort. One batched key pass, then p independent
+/// stable selections.
+fn presorted_selections(
+    coords: &[f64],
+    dim: usize,
+    dest: &[u32],
+    p: usize,
+    domain: &BoundingBox,
+    threads: usize,
+) -> Vec<Vec<u32>> {
+    let keys = morton_keys_batch(coords, dim, domain, PRESORT_DEPTH, threads);
+    let mut sel: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for (qi, &d) in dest.iter().enumerate() {
+        sel[d as usize].push(qi as u32);
+    }
+    for s in &mut sel {
+        s.sort_unstable_by_key(|&qi| (keys[qi as usize], qi));
+    }
+    sel
+}
+
+/// Unpacked query packet from one issuer.
+struct QueryPacket {
+    loc_qid: Vec<u32>,
+    loc_coords: Vec<f64>,
+    eps: f64,
+    k: usize,
+    knn_qid: Vec<u32>,
+    knn_coords: Vec<f64>,
+}
+
+fn rd_u32s(buf: &[u8], off: &mut usize, n: usize) -> Vec<u32> {
+    let s = &buf[*off..*off + 4 * n];
+    *off += 4 * n;
+    s.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn rd_f64s(buf: &[u8], off: &mut usize, n: usize) -> Vec<f64> {
+    let out = dec_f64(&buf[*off..*off + 8 * n]);
+    *off += 8 * n;
+    out
+}
+
+fn rd_u64(buf: &[u8], off: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    v
+}
+
+/// Query packet: `n_loc u64 · n_knn u64 · eps f64 · k u64 · loc qids
+/// u32ⁿ · loc coords f64ⁿᵈ · knn qids u32ᵐ · knn coords f64ᵐᵈ`. An
+/// all-empty selection packs to an empty buffer (nothing on the wire).
+fn pack_queries(batch: &QueryBatch, loc_sel: &[u32], knn_sel: &[u32]) -> Vec<u8> {
+    if loc_sel.is_empty() && knn_sel.is_empty() {
+        return Vec::new();
+    }
+    let dim = batch.dim;
+    let mut b = Vec::with_capacity(32 + (loc_sel.len() + knn_sel.len()) * (4 + 8 * dim));
+    b.extend_from_slice(&(loc_sel.len() as u64).to_le_bytes());
+    b.extend_from_slice(&(knn_sel.len() as u64).to_le_bytes());
+    b.extend_from_slice(&batch.loc_eps.to_le_bytes());
+    b.extend_from_slice(&(batch.knn_k as u64).to_le_bytes());
+    for &qi in loc_sel {
+        b.extend_from_slice(&qi.to_le_bytes());
+    }
+    for &qi in loc_sel {
+        let q = &batch.loc_coords[qi as usize * dim..(qi as usize + 1) * dim];
+        for &c in q {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    for &qi in knn_sel {
+        b.extend_from_slice(&qi.to_le_bytes());
+    }
+    for &qi in knn_sel {
+        let q = &batch.knn_coords[qi as usize * dim..(qi as usize + 1) * dim];
+        for &c in q {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    b
+}
+
+fn unpack_queries(buf: &[u8], dim: usize) -> QueryPacket {
+    if buf.is_empty() {
+        return QueryPacket {
+            loc_qid: Vec::new(),
+            loc_coords: Vec::new(),
+            eps: 0.0,
+            k: 0,
+            knn_qid: Vec::new(),
+            knn_coords: Vec::new(),
+        };
+    }
+    assert!(buf.len() >= 32, "truncated query packet header");
+    let mut off = 0usize;
+    let n_loc = rd_u64(buf, &mut off) as usize;
+    let n_knn = rd_u64(buf, &mut off) as usize;
+    let eps = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+    off += 8;
+    let k = rd_u64(buf, &mut off) as usize;
+    assert_eq!(
+        buf.len(),
+        32 + (n_loc + n_knn) * (4 + 8 * dim),
+        "malformed query packet: length disagrees with counts"
+    );
+    let loc_qid = rd_u32s(buf, &mut off, n_loc);
+    let loc_coords = rd_f64s(buf, &mut off, n_loc * dim);
+    let knn_qid = rd_u32s(buf, &mut off, n_knn);
+    let knn_coords = rd_f64s(buf, &mut off, n_knn * dim);
+    debug_assert_eq!(off, buf.len());
+    QueryPacket { loc_qid, loc_coords, eps, k, knn_qid, knn_coords }
+}
+
+/// Spill packet: `n u64 · issuer u32ⁿ · qid u32ⁿ · k u32ⁿ · r2 f64ⁿ ·
+/// coords f64ⁿᵈ`. The issuer travels with the query so the target can
+/// return its partial answer directly to the issuing rank.
+#[allow(clippy::too_many_arguments)]
+fn pack_spill(
+    idxs: &[u32],
+    knn_qid: &[u32],
+    knn_kk: &[u32],
+    knn_coords: &[f64],
+    knn_range: &[(usize, usize)],
+    owner_knn: &[(Vec<IdNeighbor>, f64, Vec<u32>)],
+    dim: usize,
+) -> Vec<u8> {
+    if idxs.is_empty() {
+        return Vec::new();
+    }
+    let issuer_of = |i: usize| -> u32 {
+        knn_range.iter().position(|&(s, e)| s <= i && i < e).expect("index in some range") as u32
+    };
+    let mut b = Vec::with_capacity(8 + idxs.len() * (20 + 8 * dim));
+    b.extend_from_slice(&(idxs.len() as u64).to_le_bytes());
+    for &i in idxs {
+        b.extend_from_slice(&issuer_of(i as usize).to_le_bytes());
+    }
+    for &i in idxs {
+        b.extend_from_slice(&knn_qid[i as usize].to_le_bytes());
+    }
+    for &i in idxs {
+        b.extend_from_slice(&knn_kk[i as usize].to_le_bytes());
+    }
+    for &i in idxs {
+        b.extend_from_slice(&owner_knn[i as usize].1.to_le_bytes());
+    }
+    for &i in idxs {
+        let q = &knn_coords[i as usize * dim..(i as usize + 1) * dim];
+        for &c in q {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    b
+}
+
+fn unpack_spill(
+    buf: &[u8],
+    dim: usize,
+    sp_issuer: &mut Vec<u32>,
+    sp_qid: &mut Vec<u32>,
+    sp_k: &mut Vec<u32>,
+    sp_r2: &mut Vec<f64>,
+    sp_coords: &mut Vec<f64>,
+) {
+    if buf.is_empty() {
+        return;
+    }
+    assert!(buf.len() >= 8, "truncated spill packet header");
+    let mut off = 0usize;
+    let n = rd_u64(buf, &mut off) as usize;
+    assert_eq!(
+        buf.len(),
+        8 + n * (20 + 8 * dim),
+        "malformed spill packet: length disagrees with count"
+    );
+    sp_issuer.extend(rd_u32s(buf, &mut off, n));
+    sp_qid.extend(rd_u32s(buf, &mut off, n));
+    sp_k.extend(rd_u32s(buf, &mut off, n));
+    sp_r2.extend(rd_f64s(buf, &mut off, n));
+    sp_coords.extend(rd_f64s(buf, &mut off, n * dim));
+    debug_assert_eq!(off, buf.len());
+}
+
+/// Result packet: `n_loc u64 · n_knn u64 · loc qids u32ⁿ · loc answers
+/// u64ⁿ (u64::MAX = none) · knn qids u32ᵐ · knn counts u32ᵐ · Σcount ×
+/// (id u64 · dist2 f64)`. kNN entries are the owner's answers followed
+/// by this rank's spill answers for that issuer.
+#[allow(clippy::too_many_arguments)]
+fn pack_results(
+    loc_qid: &[u32],
+    loc_ans: &[Option<u64>],
+    knn_range: (usize, usize),
+    knn_qid: &[u32],
+    owner_knn: &[(Vec<IdNeighbor>, f64, Vec<u32>)],
+    sp_idxs: &[u32],
+    sp_qid: &[u32],
+    spill_ans: &[Vec<IdNeighbor>],
+) -> Vec<u8> {
+    let (ks, ke) = knn_range;
+    let n_knn = (ke - ks) + sp_idxs.len();
+    if loc_qid.is_empty() && n_knn == 0 {
+        return Vec::new();
+    }
+    let entries: Vec<(u32, &[IdNeighbor])> = (ks..ke)
+        .map(|i| (knn_qid[i], owner_knn[i].0.as_slice()))
+        .chain(sp_idxs.iter().map(|&s| (sp_qid[s as usize], spill_ans[s as usize].as_slice())))
+        .collect();
+    let tot: usize = entries.iter().map(|(_, a)| a.len()).sum();
+    let mut b = Vec::with_capacity(16 + loc_qid.len() * 12 + n_knn * 8 + tot * 16);
+    b.extend_from_slice(&(loc_qid.len() as u64).to_le_bytes());
+    b.extend_from_slice(&(n_knn as u64).to_le_bytes());
+    for &qid in loc_qid {
+        b.extend_from_slice(&qid.to_le_bytes());
+    }
+    for a in loc_ans {
+        b.extend_from_slice(&a.unwrap_or(u64::MAX).to_le_bytes());
+    }
+    for (qid, _) in &entries {
+        b.extend_from_slice(&qid.to_le_bytes());
+    }
+    for (_, a) in &entries {
+        b.extend_from_slice(&(a.len() as u32).to_le_bytes());
+    }
+    for (_, a) in &entries {
+        for n in *a {
+            b.extend_from_slice(&n.id.to_le_bytes());
+            b.extend_from_slice(&n.dist2.to_le_bytes());
+        }
+    }
+    b
+}
+
+/// Merge one result packet into the issuer-side accumulators. Each
+/// locate qid must arrive exactly once (only the owner answers it).
+fn merge_results(
+    buf: &[u8],
+    locate: &mut [Option<u64>],
+    loc_seen: &mut [bool],
+    knn: &mut [Vec<IdNeighbor>],
+) {
+    if buf.is_empty() {
+        return;
+    }
+    assert!(buf.len() >= 16, "truncated result packet header");
+    let mut off = 0usize;
+    let n_loc = rd_u64(buf, &mut off) as usize;
+    let n_knn = rd_u64(buf, &mut off) as usize;
+    assert!(
+        buf.len() >= 16 + n_loc * 12 + n_knn * 8,
+        "malformed result packet: length disagrees with counts"
+    );
+    let lq = rd_u32s(buf, &mut off, n_loc);
+    for &qid in &lq {
+        let a = rd_u64(buf, &mut off);
+        let qi = qid as usize;
+        assert!(!loc_seen[qi], "locate query {qid} answered twice");
+        loc_seen[qi] = true;
+        locate[qi] = (a != u64::MAX).then_some(a);
+    }
+    let kq = rd_u32s(buf, &mut off, n_knn);
+    let cnts = rd_u32s(buf, &mut off, n_knn);
+    let tot: usize = cnts.iter().map(|&c| c as usize).sum();
+    assert_eq!(
+        buf.len(),
+        16 + n_loc * 12 + n_knn * 8 + tot * 16,
+        "malformed result packet: neighbour section length"
+    );
+    for (&qid, &cnt) in kq.iter().zip(&cnts) {
+        let l = &mut knn[qid as usize];
+        l.reserve(cnt as usize);
+        for _ in 0..cnt {
+            let id = rd_u64(buf, &mut off);
+            let dist2 = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+            off += 8;
+            l.push(IdNeighbor { id, dist2 });
+        }
+    }
+    debug_assert_eq!(off, buf.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_packet_roundtrips_and_validates_length() {
+        let mut batch = QueryBatch::new(2, 1e-9, 3);
+        batch.push_locate(&[0.1, 0.2]);
+        batch.push_locate(&[0.7, 0.8]);
+        batch.push_knn(&[0.5, 0.5]);
+        let buf = pack_queries(&batch, &[1, 0], &[0]);
+        let pk = unpack_queries(&buf, 2);
+        assert_eq!(pk.loc_qid, vec![1, 0]);
+        assert_eq!(pk.loc_coords, vec![0.7, 0.8, 0.1, 0.2]);
+        assert_eq!(pk.knn_qid, vec![0]);
+        assert_eq!((pk.eps, pk.k), (1e-9, 3));
+        assert!(pack_queries(&batch, &[], &[]).is_empty());
+        let r = std::panic::catch_unwind(|| unpack_queries(&buf[..buf.len() - 1], 2));
+        assert!(r.is_err(), "truncated packet must fail validation");
+    }
+
+    #[test]
+    fn spill_packet_roundtrips() {
+        let knn_qid = vec![5u32, 9];
+        let knn_kk = vec![2u32, 4];
+        let knn_coords = vec![0.1, 0.2, 0.3, 0.4];
+        let ranges = vec![(0usize, 1usize), (1, 2)];
+        let owner_knn = vec![
+            (Vec::new(), 0.25f64, vec![1u32]),
+            (Vec::new(), f64::INFINITY, vec![0u32]),
+        ];
+        let buf = pack_spill(&[0, 1], &knn_qid, &knn_kk, &knn_coords, &ranges, &owner_knn, 2);
+        let (mut iss, mut qid, mut k, mut r2, mut co) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        unpack_spill(&buf, 2, &mut iss, &mut qid, &mut k, &mut r2, &mut co);
+        assert_eq!(iss, vec![0, 1]);
+        assert_eq!(qid, vec![5, 9]);
+        assert_eq!(k, vec![2, 4]);
+        assert_eq!(r2[0], 0.25);
+        assert!(r2[1].is_infinite());
+        assert_eq!(co, knn_coords);
+    }
+
+    #[test]
+    fn result_packet_merges_with_none_sentinel() {
+        let loc_qid = vec![0u32, 2];
+        let loc_ans = vec![Some(7u64), None];
+        let knn_qid = vec![1u32];
+        let owner_knn = vec![(vec![IdNeighbor { id: 3, dist2: 0.5 }], 0.5, Vec::new())];
+        let buf = pack_results(&loc_qid, &loc_ans, (0, 1), &knn_qid, &owner_knn, &[], &[], &[]);
+        let mut locate = vec![None; 3];
+        let mut seen = vec![false; 3];
+        let mut knn = vec![Vec::new(); 2];
+        merge_results(&buf, &mut locate, &mut seen, &mut knn);
+        assert_eq!(locate, vec![Some(7), None, None]);
+        assert_eq!(seen, vec![true, false, true]);
+        assert_eq!(knn[1], vec![IdNeighbor { id: 3, dist2: 0.5 }]);
+    }
+}

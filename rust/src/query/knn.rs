@@ -37,6 +37,54 @@ pub fn knn_exact(ps: &PointSet, q: &[f64], k: usize) -> Vec<Neighbor> {
     best
 }
 
+/// One neighbour hit identified by its *global* point id — the form
+/// results take on the wire, where local indices are meaningless to the
+/// issuing rank. Ordered lexicographically by `(dist2, id)` so merges
+/// across ranks are deterministic regardless of which rank answered.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IdNeighbor {
+    pub id: u64,
+    pub dist2: f64,
+}
+
+/// Exact k-best within radius² `r2` by linear scan, keyed by global id.
+///
+/// Ties at equal distance are broken by the *smaller id* — a total order
+/// on `(dist2, id)` — so the result is independent of scan order and of
+/// which rank holds which points. Candidates with `dist2 > r2` are
+/// excluded (pass `f64::INFINITY` for an unbounded search).
+pub fn knn_within_by_id(ps: &PointSet, q: &[f64], k: usize, r2: f64) -> Vec<IdNeighbor> {
+    let mut best: Vec<IdNeighbor> = Vec::with_capacity(k + 1);
+    if k == 0 {
+        return best;
+    }
+    for i in 0..ps.len() {
+        let d2 = ps.dist2_to(i, q);
+        if d2 > r2 {
+            continue;
+        }
+        let id = ps.ids[i];
+        let full = best.len() == k;
+        if full {
+            let last = best.last().unwrap();
+            if (d2, id) >= (last.dist2, last.id) {
+                continue;
+            }
+        }
+        let pos = best.partition_point(|n| (n.dist2, n.id) < (d2, id));
+        best.insert(pos, IdNeighbor { id, dist2: d2 });
+        if best.len() > k {
+            best.pop();
+        }
+    }
+    best
+}
+
+/// Exact k-NN keyed by global id (unbounded radius).
+pub fn knn_exact_by_id(ps: &PointSet, q: &[f64], k: usize) -> Vec<IdNeighbor> {
+    knn_within_by_id(ps, q, k, f64::INFINITY)
+}
+
 /// Approximate k-NN over the bucket window (`cutoff` buckets on each
 /// side of the query's bucket on the curve).
 pub fn knn_sfc(ps: &PointSet, idx: &BucketIndex, q: &[f64], k: usize, cutoff: usize) -> Vec<Neighbor> {
@@ -167,5 +215,45 @@ mod tests {
         let ps = PointSet::uniform(3, 2, 3);
         let nn = knn_exact(&ps, &[0.5, 0.5], 10);
         assert_eq!(nn.len(), 3);
+    }
+
+    #[test]
+    fn by_id_matches_exact_when_ids_are_indices() {
+        let ps = PointSet::uniform(400, 3, 7);
+        use crate::util::rng::{Rng, SplitMix64};
+        let mut s = SplitMix64::new(19);
+        for _ in 0..20 {
+            let q = [s.next_f64(), s.next_f64(), s.next_f64()];
+            let by_idx = knn_exact(&ps, &q, 6);
+            let by_id = knn_exact_by_id(&ps, &q, 6);
+            assert_eq!(by_idx.len(), by_id.len());
+            for (a, b) in by_idx.iter().zip(&by_id) {
+                assert_eq!(a.index as u64, b.id);
+                assert_eq!(a.dist2.to_bits(), b.dist2.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn by_id_breaks_distance_ties_by_smaller_id() {
+        // Four exact duplicates at the same spot, pushed in shuffled id
+        // order: the k-best must pick the smallest ids.
+        let mut ps = PointSet::new(2);
+        for id in [30u64, 10, 40, 20] {
+            ps.push(&[0.25, 0.75], id, 1.0);
+        }
+        let nn = knn_within_by_id(&ps, &[0.25, 0.75], 2, f64::INFINITY);
+        assert_eq!(nn.iter().map(|n| n.id).collect::<Vec<_>>(), vec![10, 20]);
+    }
+
+    #[test]
+    fn within_radius_excludes_far_points() {
+        let mut ps = PointSet::new(1);
+        ps.push(&[0.0], 0, 1.0);
+        ps.push(&[0.5], 1, 1.0);
+        ps.push(&[2.0], 2, 1.0);
+        let nn = knn_within_by_id(&ps, &[0.0], 3, 0.25 + 1e-12);
+        assert_eq!(nn.iter().map(|n| n.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(knn_within_by_id(&ps, &[0.0], 0, f64::INFINITY).is_empty());
     }
 }

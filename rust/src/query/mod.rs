@@ -1,4 +1,5 @@
 //! Parallel query processing (paper §V-A).
+pub mod distributed;
 pub mod knn;
 pub mod point_location;
 pub mod router;

@@ -86,6 +86,54 @@ impl BucketIndex {
             .find(|&pi| ps.dist2_to(pi as usize, q) <= e2)
     }
 
+    /// Exact point location returning the *minimum global id* among the
+    /// bucket's matches. [`BucketIndex::locate_point`] returns the first
+    /// hit in curve order, which depends on the local permutation — fine
+    /// on one rank, but ambiguous once duplicate coordinates can live on
+    /// any rank. The minimum id is a canonical answer every placement
+    /// agrees on, so it is what goes on the wire.
+    pub fn locate_min_id(&self, ps: &PointSet, q: &[f64], eps: f64) -> Option<u64> {
+        let b = self.locate_bucket(q);
+        let (lo, hi) = (self.offsets[b] as usize, self.offsets[b + 1] as usize);
+        let e2 = eps * eps;
+        self.perm[lo..hi]
+            .iter()
+            .filter(|&&pi| ps.dist2_to(pi as usize, q) <= e2)
+            .map(|&pi| ps.ids[pi as usize])
+            .min()
+    }
+
+    /// Batched min-id location with query presorting, key generation on
+    /// the batched SWAR kernel and the bucket walks on `threads` pool
+    /// workers over fixed blocks of the sorted order — bit-identical for
+    /// any thread count. This is the local answer path of the
+    /// distributed query engine.
+    pub fn locate_batch_min_id_threaded(
+        &self,
+        ps: &PointSet,
+        queries: &PointSet,
+        eps: f64,
+        threads: usize,
+    ) -> Vec<Option<u64>> {
+        use crate::runtime_sim::threadpool::parallel_map_blocks;
+        let n = queries.len();
+        let keys = morton_keys_batch(&queries.coords, queries.dim, &self.domain, self.depth, threads);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&i| keys[i as usize]);
+        const LOC_BLOCK: usize = 1024;
+        let hits = parallel_map_blocks(threads, n, LOC_BLOCK, |lo, hi| {
+            order[lo..hi]
+                .iter()
+                .map(|&qi| self.locate_min_id(ps, queries.point(qi as usize), eps))
+                .collect::<Vec<_>>()
+        });
+        let mut out = vec![None; n];
+        for (&qi, hit) in order.iter().zip(hits.into_iter().flatten()) {
+            out[qi as usize] = hit;
+        }
+        out
+    }
+
     /// Batched location with query presorting (the paper presorts queries
     /// into bins before the parallel walk). Returns per-query results.
     /// Key generation runs on the batched SWAR kernel with the default
@@ -218,6 +266,42 @@ mod tests {
         let queries = ps.gather(&[5, 17, 999, 3]);
         let got = idx.locate_batch(&ps, &queries, 1e-12);
         assert_eq!(got, vec![Some(5), Some(17), Some(999), Some(3)]);
+    }
+
+    #[test]
+    fn min_id_picks_smallest_duplicate() {
+        // Three exact duplicates with shuffled ids: locate_point returns
+        // whichever comes first in curve order; locate_min_id must always
+        // return id 11.
+        let mut ps = PointSet::new(2);
+        ps.push(&[0.3, 0.3], 55, 1.0);
+        ps.push(&[0.3, 0.3], 11, 1.0);
+        ps.push(&[0.3, 0.3], 42, 1.0);
+        ps.push(&[0.9, 0.1], 7, 1.0);
+        let (_, idx) = morton_index(&ps, 2);
+        assert_eq!(idx.locate_min_id(&ps, &[0.3, 0.3], 1e-12), Some(11));
+        assert_eq!(idx.locate_min_id(&ps, &[0.9, 0.1], 1e-12), Some(7));
+        assert_eq!(idx.locate_min_id(&ps, &[0.6, 0.6], 1e-12), None);
+    }
+
+    #[test]
+    fn min_id_batch_is_thread_invariant_and_matches_single() {
+        let ps = PointSet::uniform(1500, 3, 83);
+        let (_, idx) = morton_index(&ps, 16);
+        let sel: Vec<u32> = (0..1500u32).step_by(5).collect();
+        let queries = ps.gather(&sel);
+        let base = idx.locate_batch_min_id_threaded(&ps, &queries, 1e-12, 1);
+        for (qi, got) in base.iter().enumerate() {
+            assert_eq!(*got, idx.locate_min_id(&ps, queries.point(qi), 1e-12));
+            assert_eq!(*got, Some(sel[qi] as u64));
+        }
+        for th in [2usize, 4, 8] {
+            assert_eq!(
+                idx.locate_batch_min_id_threaded(&ps, &queries, 1e-12, th),
+                base,
+                "diverged at {th} threads"
+            );
+        }
     }
 
     #[test]

@@ -29,14 +29,37 @@ pub enum QueryResult {
     Neighbors(Vec<Neighbor>),
 }
 
-/// Routing + batching statistics.
+/// Statistics of a single flush — recomputed from scratch every
+/// [`QueryRouter::flush`], so each field describes exactly one flush.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FlushStats {
+    /// Queries executed by this flush.
+    pub queries: u64,
+    /// Non-empty bin batches this flush dispatched.
+    pub batches: u64,
+    /// Largest bin batch of this flush.
+    pub max_batch: usize,
+    /// Bin occupancy imbalance (max/mean − 1) of this flush.
+    pub bin_imbalance: f64,
+}
+
+/// Routing + batching statistics: lifetime totals plus the last
+/// flush's own figures. Keeping the two apart is deliberate — the old
+/// single struct silently mixed scopes (`max_batch` never reset while
+/// `bin_imbalance` was overwritten per flush), so no field could be
+/// read as either per-flush or cumulative with confidence.
 #[derive(Clone, Debug, Default)]
 pub struct RouterStats {
+    /// Queries submitted over the router's lifetime.
     pub queries: u64,
+    /// Flushes that dispatched at least one query.
+    pub flushes: u64,
+    /// Non-empty bin batches dispatched over the lifetime.
     pub batches: u64,
+    /// Largest bin batch ever dispatched.
     pub max_batch: usize,
-    /// Bin occupancy imbalance (max/mean − 1) of the last flush.
-    pub bin_imbalance: f64,
+    /// The most recent non-empty flush's own figures.
+    pub last_flush: FlushStats,
 }
 
 /// The router: bins are contiguous bucket ranges of the SFC order, one
@@ -107,14 +130,18 @@ impl<'d> QueryRouter<'d> {
         if total == 0 {
             return Vec::new();
         }
-        self.stats.batches += batches.iter().filter(|b| !b.is_empty()).count() as u64;
-        self.stats.max_batch = self.stats.max_batch.max(sizes.iter().copied().max().unwrap_or(0));
+        let nonempty = batches.iter().filter(|b| !b.is_empty()).count() as u64;
+        let largest = sizes.iter().copied().max().unwrap_or(0);
         let mean = total as f64 / self.workers as f64;
-        self.stats.bin_imbalance = if mean > 0.0 {
-            sizes.iter().copied().max().unwrap_or(0) as f64 / mean - 1.0
-        } else {
-            0.0
+        self.stats.last_flush = FlushStats {
+            queries: total as u64,
+            batches: nonempty,
+            max_batch: largest,
+            bin_imbalance: if mean > 0.0 { largest as f64 / mean - 1.0 } else { 0.0 },
         };
+        self.stats.flushes += 1;
+        self.stats.batches += nonempty;
+        self.stats.max_batch = self.stats.max_batch.max(largest);
 
         let data = self.data;
         let index = self.index;
@@ -205,6 +232,35 @@ mod tests {
         assert!(router.stats.max_batch > 0);
         // Empty flush is a no-op.
         assert!(router.flush().is_empty());
+    }
+
+    #[test]
+    fn per_flush_stats_are_separate_from_cumulative() {
+        // A big flush followed by a small one: last_flush must describe
+        // only the second, the cumulative fields must cover both.
+        let (ps, idx) = setup(1000);
+        let mut router = QueryRouter::new(&ps, &idx, 4);
+        for i in 0..200 {
+            router.submit(Query::Locate { coords: ps.point(i).to_vec(), eps: 1e-12 });
+        }
+        let _ = router.flush();
+        let big = router.stats.last_flush;
+        assert_eq!(big.queries, 200);
+        assert!(big.max_batch > 1);
+
+        router.submit(Query::Locate { coords: ps.point(0).to_vec(), eps: 1e-12 });
+        let _ = router.flush();
+        let small = router.stats.last_flush;
+        assert_eq!(small.queries, 1, "last_flush leaked the previous flush");
+        assert_eq!(small.max_batch, 1, "per-flush max_batch must reset");
+        assert_eq!(small.batches, 1);
+        // One bin holds the single query, the other three are empty.
+        assert!((small.bin_imbalance - 3.0).abs() < 1e-12, "got {}", small.bin_imbalance);
+
+        assert_eq!(router.stats.queries, 201);
+        assert_eq!(router.stats.flushes, 2);
+        assert_eq!(router.stats.max_batch, big.max_batch, "cumulative max_batch lost the peak");
+        assert_eq!(router.stats.batches, big.batches + 1);
     }
 
     #[test]

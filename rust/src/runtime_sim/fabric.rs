@@ -214,6 +214,17 @@ impl Fabric {
         self.traffic[rank].busy_us.store((secs * 1e6) as u64, Ordering::Relaxed);
     }
 
+    /// Snapshot of `rank`'s cumulative sent traffic as `(msgs, bytes)`.
+    /// Phase code reads it before and after a stage for exact per-phase
+    /// wire accounting (e.g. the query engine's bytes-per-batch). A
+    /// rank's own sends are deterministic, so deltas taken by the
+    /// sending rank are too — unlike a global sum mid-run, which races
+    /// with peers still inside the phase.
+    pub fn sent_snapshot(&self, rank: usize) -> (u64, u64) {
+        let t = &self.traffic[rank];
+        (t.msgs_sent.load(Ordering::Relaxed), t.bytes_sent.load(Ordering::Relaxed))
+    }
+
     /// Out-degree of `rank`: number of distinct destinations it sent to.
     pub fn out_degree(&self, rank: usize) -> usize {
         (0..self.p)
@@ -329,6 +340,18 @@ mod tests {
         assert_eq!(t.max_msg_bytes.load(Ordering::Relaxed), 300);
         assert_eq!(f.out_degree(0), 2);
         assert_eq!(f.out_degree(1), 0);
+    }
+
+    #[test]
+    fn sent_snapshot_deltas_track_a_phase() {
+        let f = Fabric::new(2);
+        f.send(0, 1, 0, vec![0; 64]);
+        let before = f.sent_snapshot(0);
+        f.send(0, 1, 1, vec![0; 100]);
+        f.send(0, 1, 2, vec![0; 28]);
+        f.send(0, 0, 3, vec![0; 999]); // self-send stays off the wire
+        let after = f.sent_snapshot(0);
+        assert_eq!((after.0 - before.0, after.1 - before.1), (2, 128));
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! Property suite for the distributed query engine
+//! ([`DistQueryEngine::serve`]):
+//!
+//! * **locate** — distributed answers equal the single-set oracle
+//!   (minimum global id within `eps`) for every probe;
+//! * **kNN** — with unbounded spill, distributed answers equal
+//!   `knn_exact_by_id` bit-for-bit (ids and `dist2` bits); capping
+//!   `spill_max_ranks` degrades *monotonically* (a larger cap is never
+//!   worse at any result position) and a cap of 0 puts zero spill
+//!   forwardings on the wire;
+//! * **1:1** — every query in a batch receives exactly one answer slot,
+//!   in issue order;
+//! * **determinism** — answers are bit-identical across threads-per-rank
+//!   and across how the stream is chunked into batches;
+//! * **accounting** — each `serve` costs 3 collective exchanges and a
+//!   tag-epoch count *independent of the number of queries* (no
+//!   per-query collectives);
+//! * **sessions** — serving interleaved with `repartition` + `refresh`
+//!   stays exact against an independently evolved replica, and a no-op
+//!   step refreshes routing without rebuilding the local index.
+//!
+//! Sweeps run over `SFC_TEST_RANKS` × dataset shapes (uniform,
+//! clustered, duplicate-heavy) × thread counts, mirroring the other
+//! distributed suites so CI partitions them identically.
+
+use sfc_part::geom::point::PointSet;
+use sfc_part::partition::distributed::{
+    step_ranks, DistSession, SessionConfig, UpdateBatch,
+};
+use sfc_part::partition::partitioner::PartitionConfig;
+use sfc_part::partition::scenario::{Scenario, ScenarioKind};
+use sfc_part::query::distributed::{DistQueryEngine, EngineConfig, QueryBatch, ServeStats};
+use sfc_part::query::knn::{knn_exact_by_id, IdNeighbor};
+use sfc_part::runtime_sim::{run_ranks_threaded, CostModel};
+use sfc_part::util::prop::forall;
+use sfc_part::util::rng::{Rng, SplitMix64};
+
+const EPS: f64 = 1e-12;
+
+/// Rank counts to sweep (`SFC_TEST_RANKS=2` or a comma list narrows it;
+/// CI partitions {1,4} / {2} / {8}).
+fn rank_sweep() -> Vec<usize> {
+    match std::env::var("SFC_TEST_RANKS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SFC_TEST_RANKS wants integers"))
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// Datasets: 0 = uniform, 1 = clustered, 2 = duplicate-heavy (every
+/// coordinate appears ~4× under distinct ids — the placement-ambiguity
+/// stressor for min-id locate and (dist2, id) tie-breaks).
+fn dataset(kind: usize, n: usize, seed: u32) -> PointSet {
+    match kind {
+        0 => PointSet::uniform(n, 3, seed),
+        1 => PointSet::clustered(n, 3, 0.7, seed),
+        _ => {
+            let base = PointSet::uniform(n.div_ceil(4).max(1), 3, seed);
+            let mut ps = PointSet::new(3);
+            let mut id = 0u64;
+            'fill: for _ in 0..4 {
+                for i in 0..base.len() {
+                    if ps.len() == n {
+                        break 'fill;
+                    }
+                    ps.push(base.point(i), id, 1.0);
+                    id += 1;
+                }
+            }
+            ps
+        }
+    }
+}
+
+/// A dealt query stream: per rank the stored points it probes (locate),
+/// the coordinates it asks kNN for (half stored points, for distance
+/// ties; half fresh), and the same stream chunked into serve batches.
+struct Dealt {
+    batches: Vec<Vec<QueryBatch>>,
+    loc_probes: Vec<Vec<usize>>,
+    knn_probes: Vec<Vec<Vec<f64>>>,
+}
+
+/// Deal `n_loc` + `n_knn` queries round-robin over `p` issuing ranks,
+/// chunked into epochs of ≤ `batch` queries. Every rank gets the same
+/// epoch count (`serve` is collective; trailing batches may be empty)
+/// and the per-rank probe order is independent of `batch`.
+fn deal(
+    global: &PointSet,
+    p: usize,
+    n_loc: usize,
+    n_knn: usize,
+    k: usize,
+    batch: usize,
+    seed: u64,
+) -> Dealt {
+    let mut per_rank: Vec<(Vec<usize>, Vec<Vec<f64>>)> = Vec::with_capacity(p);
+    let mut n_epochs = 1usize;
+    for r in 0..p {
+        let mut rng = SplitMix64::new(seed.wrapping_mul(31).wrapping_add(r as u64));
+        let my_loc = n_loc / p + usize::from(r < n_loc % p);
+        let my_knn = n_knn / p + usize::from(r < n_knn % p);
+        let locs: Vec<usize> =
+            (0..my_loc).map(|_| rng.below(global.len() as u64) as usize).collect();
+        let knns: Vec<Vec<f64>> = (0..my_knn)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    global.point(rng.below(global.len() as u64) as usize).to_vec()
+                } else {
+                    (0..global.dim).map(|_| rng.next_f64()).collect()
+                }
+            })
+            .collect();
+        n_epochs = n_epochs.max((my_loc + my_knn).div_ceil(batch));
+        per_rank.push((locs, knns));
+    }
+    let mut batches = Vec::with_capacity(p);
+    let mut loc_probes = Vec::with_capacity(p);
+    let mut knn_probes = Vec::with_capacity(p);
+    for (locs, knns) in per_rank {
+        let mut eps_b = Vec::with_capacity(n_epochs);
+        let (mut li, mut ki) = (0usize, 0usize);
+        for _ in 0..n_epochs {
+            let mut b = QueryBatch::new(global.dim, EPS, k);
+            let mut room = batch;
+            while room > 0 && li < locs.len() {
+                b.push_locate(global.point(locs[li]));
+                li += 1;
+                room -= 1;
+            }
+            while room > 0 && ki < knns.len() {
+                b.push_knn(&knns[ki]);
+                ki += 1;
+                room -= 1;
+            }
+            eps_b.push(b);
+        }
+        assert!(li == locs.len() && ki == knns.len(), "dealing under-filled the epochs");
+        batches.push(eps_b);
+        loc_probes.push(locs);
+        knn_probes.push(knns);
+    }
+    Dealt { batches, loc_probes, knn_probes }
+}
+
+/// Per-rank served output: concatenated locate answers, concatenated
+/// kNN answers (both in issue order), per-epoch stats.
+type RankOut = (Vec<Option<u64>>, Vec<Vec<IdNeighbor>>, Vec<ServeStats>);
+
+/// Create sessions + engines at `p` ranks and serve every dealt epoch.
+fn serve_dealt(
+    global: &PointSet,
+    p: usize,
+    tpr: usize,
+    ecfg: EngineConfig,
+    dealt: &Dealt,
+) -> Vec<RankOut> {
+    let cfg = PartitionConfig::default();
+    let (built, _) = run_ranks_threaded(p, tpr, CostModel::default(), |ctx| {
+        let local = global.mod_shard(ctx.rank, ctx.n_ranks);
+        let sess = DistSession::create(ctx, &local, &cfg, 4 * p, SessionConfig::default());
+        let eng = DistQueryEngine::new(&sess, ecfg, ctx.threads);
+        (sess, eng)
+    });
+    let mut states = built;
+    let n_epochs = dealt.batches[0].len();
+    let mut out: Vec<RankOut> = (0..p).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+    for e in 0..n_epochs {
+        let bt = &dealt.batches;
+        let (next, res, _) =
+            step_ranks(p, tpr, CostModel::default(), states, |ctx, (sess, eng)| {
+                let r = eng.serve(ctx, &sess, &bt[ctx.rank][e]);
+                ((sess, eng), r)
+            });
+        states = next;
+        for (r, (ans, st)) in res.into_iter().enumerate() {
+            // 1:1 — one answer slot per query, in issue order.
+            assert_eq!(ans.locate.len(), bt[r][e].n_locate());
+            assert_eq!(ans.knn.len(), bt[r][e].n_knn());
+            out[r].0.extend(ans.locate);
+            out[r].1.extend(ans.knn);
+            out[r].2.push(st);
+        }
+    }
+    out
+}
+
+/// Single-set locate oracle: minimum global id within `eps` of `q`.
+fn locate_oracle(ps: &PointSet, q: &[f64]) -> Option<u64> {
+    let e2 = EPS * EPS;
+    (0..ps.len()).filter(|&i| ps.dist2_to(i, q) <= e2).map(|i| ps.ids[i]).min()
+}
+
+fn same_neighbors(a: &[IdNeighbor], b: &[IdNeighbor]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.id == y.id && x.dist2.to_bits() == y.dist2.to_bits())
+}
+
+#[test]
+fn prop_distributed_answers_match_single_set_oracles() {
+    forall("distributed-query-oracles", 2, |g| {
+        let n = g.usize_in(500, 900);
+        let seed = g.u64_below(1000) as u32;
+        let k = g.usize_in(1, 6);
+        for kind in 0..3usize {
+            let ps = dataset(kind, n, seed);
+            for &p in &rank_sweep() {
+                let dealt = deal(&ps, p, 96, 32, k, 40, 7 + kind as u64);
+                let outs = serve_dealt(&ps, p, 1, EngineConfig::default(), &dealt);
+                for r in 0..p {
+                    let (locs, knns, _) = &outs[r];
+                    for (j, &pi) in dealt.loc_probes[r].iter().enumerate() {
+                        let want = locate_oracle(&ps, ps.point(pi));
+                        if locs[j] != want {
+                            return (
+                                false,
+                                format!(
+                                    "kind={kind} p={p} rank={r} locate[{j}]: got {:?} want {want:?}",
+                                    locs[j]
+                                ),
+                            );
+                        }
+                    }
+                    for (j, q) in dealt.knn_probes[r].iter().enumerate() {
+                        let want = knn_exact_by_id(&ps, q, k);
+                        if !same_neighbors(&knns[j], &want) {
+                            return (
+                                false,
+                                format!(
+                                    "kind={kind} p={p} rank={r} knn[{j}]: got {:?} want {want:?}",
+                                    knns[j]
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn prop_answers_bit_identical_across_threads_and_batching() {
+    let ps = dataset(1, 800, 5);
+    let k = 4;
+    for &p in &rank_sweep() {
+        let dealt = deal(&ps, p, 80, 24, k, 33, 11);
+        let base = serve_dealt(&ps, p, 1, EngineConfig::default(), &dealt);
+        for tpr in [2usize, 5] {
+            let alt = serve_dealt(&ps, p, tpr, EngineConfig::default(), &dealt);
+            for r in 0..p {
+                assert_eq!(alt[r].0, base[r].0, "locate diverged at p={p} tpr={tpr} rank={r}");
+                assert_eq!(alt[r].1.len(), base[r].1.len());
+                for (a, b) in alt[r].1.iter().zip(&base[r].1) {
+                    assert!(same_neighbors(a, b), "knn diverged at p={p} tpr={tpr} rank={r}");
+                }
+            }
+        }
+        // Re-chunking the same stream into tiny batches changes the
+        // epoch structure but not a single answer bit.
+        let fine = deal(&ps, p, 80, 24, k, 7, 11);
+        let alt = serve_dealt(&ps, p, 3, EngineConfig::default(), &fine);
+        for r in 0..p {
+            assert_eq!(alt[r].0, base[r].0, "locate changed under re-batching at p={p} rank={r}");
+            for (a, b) in alt[r].1.iter().zip(&base[r].1) {
+                assert!(same_neighbors(a, b), "knn changed under re-batching at p={p} rank={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_spill_cap_is_monotone_and_unbounded_is_exact() {
+    let ps = dataset(0, 700, 9);
+    let k = 5;
+    for &p in &rank_sweep() {
+        let dealt = deal(&ps, p, 16, 48, k, 32, 13);
+        let caps = [0usize, 1, usize::MAX];
+        let runs: Vec<Vec<RankOut>> = caps
+            .iter()
+            .map(|&c| {
+                let ecfg = EngineConfig { spill_max_ranks: c, ..EngineConfig::default() };
+                serve_dealt(&ps, p, 1, ecfg, &dealt)
+            })
+            .collect();
+        // Cap 0 = owner-only answers: nothing may be forwarded.
+        let fwd0: u64 =
+            runs[0].iter().flat_map(|r| r.2.iter()).map(|st| st.spill_forwards).sum();
+        assert_eq!(fwd0, 0, "spill cap 0 still forwarded queries at p={p}");
+        // Unbounded spill equals the exact single-set oracle.
+        for r in 0..p {
+            for (j, q) in dealt.knn_probes[r].iter().enumerate() {
+                let want = knn_exact_by_id(&ps, q, k);
+                assert!(
+                    same_neighbors(&runs[2][r].1[j], &want),
+                    "unbounded spill not exact at p={p} rank={r} q={j}"
+                );
+            }
+        }
+        // The documented recall bound: spill targets are nearest-first
+        // truncations of one fixed order, so a larger cap consults a
+        // superset of owners and its k-best dominates position-wise.
+        for w in runs.windows(2) {
+            for r in 0..p {
+                for (small, big) in w[0][r].1.iter().zip(&w[1][r].1) {
+                    assert!(big.len() >= small.len(), "larger cap returned fewer hits");
+                    for (s, b) in small.iter().zip(big) {
+                        assert!(
+                            (b.dist2, b.id) <= (s.dist2, s.id),
+                            "smaller spill cap beat a larger one at p={p} rank={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-epoch stats of a locate/kNN run at fixed `p`, for the
+/// collective-accounting assertions below.
+fn stats_of(global: &PointSet, p: usize, n_loc: usize, n_knn: usize, k: usize) -> Vec<ServeStats> {
+    let dealt = deal(global, p, n_loc, n_knn, k, n_loc + n_knn + 1, 17);
+    let outs = serve_dealt(global, p, 1, EngineConfig::default(), &dealt);
+    assert!(outs.iter().all(|o| o.2.len() == 1), "expected a single epoch");
+    outs.into_iter().map(|o| o.2[0]).collect()
+}
+
+#[test]
+fn serve_collective_cost_is_independent_of_batch_size() {
+    let ps = dataset(0, 600, 3);
+    let p = 4;
+    // Locate-only: 8 vs 400 queries must cost identical tag epochs —
+    // 3 exchanges (route, spill, return), no per-query collectives.
+    let small = stats_of(&ps, p, 8, 0, 3);
+    let large = stats_of(&ps, p, 400, 0, 3);
+    for st in small.iter().chain(&large) {
+        assert_eq!(st.exchanges, 3);
+    }
+    // Epochs are collective-congruent: equal across ranks…
+    assert!(small.iter().all(|st| st.epochs == small[0].epochs));
+    assert!(large.iter().all(|st| st.epochs == large[0].epochs));
+    // …and independent of how many queries the batch carries.
+    assert_eq!(small[0].epochs, large[0].epochs, "tag epochs scaled with the batch");
+    // With k > |shard| every kNN probe forwards to all other ranks
+    // (radius ∞), so both sizes exercise a non-empty spill round and
+    // must still agree on epochs.
+    let sk = stats_of(&ps, p, 8, 2, 200);
+    let lk = stats_of(&ps, p, 400, 2, 200);
+    assert!(sk.iter().map(|st| st.spill_forwards).sum::<u64>() >= 2 * (p as u64 - 1));
+    assert_eq!(sk[0].epochs, lk[0].epochs, "spill round epochs scaled with the batch");
+    assert!(sk.iter().all(|st| st.epochs == sk[0].epochs));
+    // Conservation of answering: owner-side answer counts sum to the
+    // issued total on both sides of the exchange.
+    let issued: u64 = large.iter().map(|st| st.queries).sum();
+    let answered: u64 = large.iter().map(|st| st.answered_owner).sum();
+    assert_eq!(issued, answered);
+}
+
+#[test]
+fn prop_serving_interleaves_with_repartition_steps() {
+    let scen = Scenario::new(ScenarioKind::Hotspot);
+    let k = 4;
+    for &p in &rank_sweep() {
+        let ps = dataset(0, 900, 21);
+        let cfg = PartitionConfig::default();
+        let (built, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+            let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+            let sess = DistSession::create(ctx, &local, &cfg, 4 * p, SessionConfig::default());
+            let eng = DistQueryEngine::new(&sess, EngineConfig::default(), ctx.threads);
+            (sess, eng)
+        });
+        let mut states = built;
+        let mut replica = ps.clone();
+        for step in 0..2usize {
+            // Serve against the current state, then repartition under
+            // the scenario's drift and refresh the routing snapshot.
+            let dealt = deal(&replica, p, 48, 16, k, 64, 31 + step as u64);
+            let bt = &dealt.batches;
+            let sc = &scen;
+            let (next, outs, _) =
+                step_ranks(p, 1, CostModel::default(), states, |ctx, (mut sess, mut eng)| {
+                    let (ans, _) = eng.serve(ctx, &sess, &bt[ctx.rank][0]);
+                    let upd = sc.update_for(sess.local(), step);
+                    sess.repartition(ctx, &upd);
+                    eng.refresh(&sess, ctx.threads);
+                    ((sess, eng), ans)
+                });
+            states = next;
+            for (r, ans) in outs.iter().enumerate() {
+                for (j, &pi) in dealt.loc_probes[r].iter().enumerate() {
+                    assert_eq!(
+                        ans.locate[j],
+                        locate_oracle(&replica, replica.point(pi)),
+                        "locate drifted at p={p} step={step} rank={r}"
+                    );
+                }
+                for (j, q) in dealt.knn_probes[r].iter().enumerate() {
+                    assert!(
+                        same_neighbors(&ans.knn[j], &knn_exact_by_id(&replica, q, k)),
+                        "knn drifted at p={p} step={step} rank={r}"
+                    );
+                }
+            }
+            // Evolve the replica by the same pure per-point rules.
+            let upd = scen.update_for(&replica, step);
+            upd.apply_to(&mut replica);
+        }
+        // After two repartitions the refreshed engine must still be
+        // exact against the evolved replica — including kNN spill,
+        // whose cell adjacency survives the drift.
+        let dealt = deal(&replica, p, 48, 16, k, 64, 77);
+        let bt = &dealt.batches;
+        let (_states, outs, _) =
+            step_ranks(p, 1, CostModel::default(), states, |ctx, (sess, eng)| {
+                let (ans, _) = eng.serve(ctx, &sess, &bt[ctx.rank][0]);
+                ((sess, eng), ans)
+            });
+        for (r, ans) in outs.iter().enumerate() {
+            for (j, &pi) in dealt.loc_probes[r].iter().enumerate() {
+                assert_eq!(ans.locate[j], locate_oracle(&replica, replica.point(pi)));
+            }
+            for (j, q) in dealt.knn_probes[r].iter().enumerate() {
+                assert!(
+                    same_neighbors(&ans.knn[j], &knn_exact_by_id(&replica, q, k)),
+                    "knn wrong after repartition at p={p} rank={r} q={j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn noop_step_refreshes_routing_without_index_rebuild() {
+    // The delta-refresh contract: `refresh` re-derives the routing
+    // snapshot every call but rebuilds the local bucket index only when
+    // the shard's signature changed. A repartition with no updates on a
+    // balanced session migrates nothing, so the index must survive.
+    let ps = dataset(0, 700, 33);
+    let p = 4;
+    let k = 3;
+    let cfg = PartitionConfig::default();
+    let (built, _) = run_ranks_threaded(p, 1, CostModel::default(), |ctx| {
+        let local = ps.mod_shard(ctx.rank, ctx.n_ranks);
+        let sess = DistSession::create(ctx, &local, &cfg, 4 * p, SessionConfig::default());
+        let eng = DistQueryEngine::new(&sess, EngineConfig::default(), ctx.threads);
+        (sess, eng)
+    });
+    let (states, _, _) = step_ranks(p, 1, CostModel::default(), built, |ctx, (mut sess, mut eng)| {
+        sess.repartition(ctx, &UpdateBatch::new(3));
+        eng.refresh(&sess, ctx.threads);
+        ((sess, eng), ())
+    });
+    for (r, (_, eng)) in states.iter().enumerate() {
+        assert_eq!(eng.routing_refreshes(), 2, "routing not refreshed at rank {r}");
+        assert_eq!(eng.index_builds(), 1, "no-op step rebuilt the index at rank {r}");
+    }
+    // And the refreshed engine still answers exactly.
+    let dealt = deal(&ps, p, 32, 8, k, 40, 3);
+    let bt = &dealt.batches;
+    let (_, outs, _) = step_ranks(p, 1, CostModel::default(), states, |ctx, (sess, eng)| {
+        let (ans, _) = eng.serve(ctx, &sess, &bt[ctx.rank][0]);
+        ((sess, eng), ans)
+    });
+    for (r, ans) in outs.iter().enumerate() {
+        for (j, &pi) in dealt.loc_probes[r].iter().enumerate() {
+            assert_eq!(ans.locate[j], locate_oracle(&ps, ps.point(pi)));
+        }
+        for (j, q) in dealt.knn_probes[r].iter().enumerate() {
+            assert!(same_neighbors(&ans.knn[j], &knn_exact_by_id(&ps, q, k)));
+        }
+    }
+}
